@@ -1,0 +1,92 @@
+//! Design-choice ablations called out in DESIGN.md §6c:
+//! multiball merge policies, the §6.2 ellipsoid prototype vs the ball,
+//! and sharded one-pass training.
+
+use std::time::Instant;
+
+use streamsvm::bench_util::Table;
+use streamsvm::coordinator::sharded::train_sharded;
+use streamsvm::data::registry::load_dataset_sized;
+use streamsvm::eval::accuracy;
+use streamsvm::svm::ellipsoid::EllipsoidSvm;
+use streamsvm::svm::lookahead::LookaheadSvm;
+use streamsvm::svm::multiball::{MergePolicy, MultiBallSvm};
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn multiball_policies() {
+    println!("\n-- multiball (§4.3): merge policies vs lookahead --");
+    let ds = load_dataset_sized("mnist89", 42, 0.2).expect("dataset");
+    let c = streamsvm::exp::table1::c_for("mnist89");
+    let opts = TrainOptions::default().with_c(c);
+    let mut t = Table::new(&["variant", "L", "acc %", "state floats"]);
+    for l in [1usize, 4, 8] {
+        for (name, policy) in [
+            ("nearest-ball", MergePolicy::NearestBall),
+            ("new+collapse", MergePolicy::NewBallMergeClosest),
+        ] {
+            let m = MultiBallSvm::fit(ds.train.iter(), ds.dim, l, policy, &opts);
+            t.row(&[
+                name.into(),
+                l.to_string(),
+                format!("{:.2}", accuracy(&m, &ds.test) * 100.0),
+                format!("{}", l * (ds.dim + 1)),
+            ]);
+        }
+        let la = LookaheadSvm::fit(ds.train.iter(), ds.dim, &opts.with_lookahead(l));
+        t.row(&[
+            "lookahead".into(),
+            l.to_string(),
+            format!("{:.2}", accuracy(&la, &ds.test) * 100.0),
+            format!("{}", l * (ds.dim + 1)),
+        ]);
+    }
+    t.print();
+}
+
+fn ellipsoid_vs_ball() {
+    println!("\n-- ellipsoid prototype (§6.2) vs ball on anisotropic data --");
+    let mut t = Table::new(&["dataset", "ball acc %", "ellipsoid acc %"]);
+    for name in ["synthC", "waveform", "ijcnn"] {
+        let ds = load_dataset_sized(name, 42, 0.25).expect("dataset");
+        let c = streamsvm::exp::table1::c_for(name);
+        let opts = TrainOptions::default().with_c(c);
+        let ball = StreamSvm::fit(ds.train.iter(), ds.dim, &opts);
+        let ell = EllipsoidSvm::fit(ds.train.iter(), ds.dim, &opts);
+        t.row(&[
+            name.into(),
+            format!("{:.2}", accuracy(&ball, &ds.test) * 100.0),
+            format!("{:.2}", accuracy(&ell, &ds.test) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+fn sharding() {
+    println!("\n-- sharded one-pass training (distributed extension) --");
+    let ds = load_dataset_sized("w3a", 42, 0.5).expect("dataset");
+    let c = streamsvm::exp::table1::c_for("w3a");
+    let opts = TrainOptions::default().with_c(c);
+    let mut t = Table::new(&["shards", "acc %", "wall ms", "max shard R", "merged R"]);
+    for s in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let rep = train_sharded(ds.train.clone().into_iter(), ds.dim, s, opts, 64).unwrap();
+        let wall = t0.elapsed();
+        let max_r = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
+        t.row(&[
+            s.to_string(),
+            format!("{:.2}", accuracy(&rep.model, &ds.test) * 100.0),
+            format!("{:.1}", wall.as_secs_f64() * 1e3),
+            format!("{max_r:.3}"),
+            format!("{:.3}", rep.model.radius()),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    println!("== design-choice ablations ==");
+    multiball_policies();
+    ellipsoid_vs_ball();
+    sharding();
+}

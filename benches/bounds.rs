@@ -1,0 +1,31 @@
+//! Bench harness for **§6.1 / Figure 4**: the adversarial and random
+//! stream constructions showing lookahead cannot beat the (1+√2)/2 lower
+//! bound, and the universal 3/2 upper bound.
+
+use streamsvm::bench_util::time_once;
+use streamsvm::exp::bounds;
+
+fn main() {
+    let full = std::env::var("STREAMSVM_BENCH_FULL").is_ok();
+    let (n, trials) = if full { (2001, 100) } else { (501, 25) };
+    println!("== Bounds study (Fig. 4 construction, N={n}, {trials} trials) ==");
+    let (pts, wall) = time_once(|| bounds::run(n, &[1, 2, 5, 10, 50], trials, 42));
+    bounds::print(&pts);
+    println!("\n(wall time {wall:?})");
+    println!("shape checks:");
+    let mut ok_upper = true;
+    let mut ok_lower = true;
+    for p in &pts {
+        if p.max_ratio > bounds::UPPER_BOUND + 0.05 {
+            ok_upper = false;
+        }
+        if p.order == "adversarial" && p.mean_ratio < bounds::LOWER_BOUND - 0.15 {
+            ok_lower = false;
+        }
+    }
+    println!("  all ratios ≤ 3/2 (+tol): {}", if ok_upper { "✓" } else { "✗" });
+    println!(
+        "  adversarial order pinned near (1+√2)/2 regardless of L: {}",
+        if ok_lower { "✓" } else { "✗" }
+    );
+}

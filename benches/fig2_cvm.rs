@@ -1,0 +1,31 @@
+//! Bench harness regenerating **Figure 2**: passes the batch CVM needs
+//! over MNIST 8vs9 before it reaches the single-pass StreamSVM accuracy.
+//!
+//! `STREAMSVM_BENCH_FULL=1` runs the full split with a 512-pass budget.
+
+use streamsvm::bench_util::time_once;
+use streamsvm::exp::{fig2, ExpScale};
+
+fn main() {
+    let full = std::env::var("STREAMSVM_BENCH_FULL").is_ok();
+    let (scale, max_passes) = if full {
+        (ExpScale::default(), 512)
+    } else {
+        (ExpScale { train_frac: 0.15, runs: 1, seed: 42 }, 160)
+    };
+    println!(
+        "== Figure 2: CVM passes vs one StreamSVM pass (mnist89, frac={}) ==",
+        scale.train_frac
+    );
+    let (f, wall) = time_once(|| fig2::run("mnist89", max_passes, &scale).expect("fig2"));
+    fig2::print(&f);
+    println!("\n(wall time {wall:?})");
+    println!(
+        "shape check: CVM needs many passes (paper: hundreds) — {}",
+        match f.passes_to_beat {
+            Some(p) if p > 10 => format!("✓ ({p} passes)"),
+            Some(p) => format!("✗ (only {p} passes)"),
+            None => format!("✓ (> {} passes)", f.cvm_curve.len()),
+        }
+    );
+}

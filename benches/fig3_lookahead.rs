@@ -1,0 +1,49 @@
+//! Bench harness regenerating **Figure 3**: lookahead sweep on MNIST
+//! 8vs9 — mean ± std accuracy over random stream permutations per L.
+//!
+//! `STREAMSVM_BENCH_FULL=1` → 100 permutations on the full split.
+
+use streamsvm::bench_util::time_once;
+use streamsvm::exp::{fig3, ExpScale};
+
+fn main() {
+    let full = std::env::var("STREAMSVM_BENCH_FULL").is_ok();
+    let (scale, perms, ls): (_, usize, &[usize]) = if full {
+        (ExpScale::default(), 100, &fig3::DEFAULT_LS)
+    } else {
+        (
+            ExpScale { train_frac: 0.15, runs: 1, seed: 42 },
+            20,
+            &[1, 2, 5, 10, 20, 50],
+        )
+    };
+    println!(
+        "== Figure 3: lookahead sweep (mnist89, frac={}, {perms} permutations/L) ==",
+        scale.train_frac
+    );
+    let (pts, wall) = time_once(|| fig3::run("mnist89", ls, perms, &scale).expect("fig3"));
+    fig3::print(&pts);
+    println!("\n(wall time {wall:?})");
+
+    let first = &pts[0];
+    let best = pts.iter().map(|p| p.mean).fold(f64::MIN, f64::max);
+    let l10 = pts.iter().find(|p| p.l == 10);
+    println!("shape checks vs the paper:");
+    println!(
+        "  accuracy rises with L: {}",
+        if best >= first.mean { "✓" } else { "✗" }
+    );
+    if let Some(p10) = l10 {
+        println!(
+            "  converged by L≈10 (within 1% of best): {}",
+            if p10.mean + 0.01 >= best { "✓" } else { "✗" }
+        );
+    }
+    let (s1, sl) = (first.std, pts.last().unwrap().std);
+    println!(
+        "  std shrinks with L ({:.2}% → {:.2}%): {}",
+        s1 * 100.0,
+        sl * 100.0,
+        if sl <= s1 + 0.002 { "✓" } else { "✗" }
+    );
+}

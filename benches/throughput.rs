@@ -1,0 +1,161 @@
+//! Performance benches (EXPERIMENTS.md §Perf): pipeline throughput per
+//! execution mode, block-size ablation, per-example update cost, and
+//! serving latency.
+//!
+//! Not a paper table — this is the systems ablation for the three-layer
+//! architecture: how much the block filter (one PJRT distance call per
+//! block) buys over pure sequential Rust, and what the all-XLA scan
+//! costs.
+
+use streamsvm::bench_util::{bench, Table};
+use streamsvm::coordinator::pipeline::{train_stream, ExecMode, PipelineConfig};
+use streamsvm::coordinator::service::{PredictService, ServiceConfig};
+use streamsvm::data::registry::load_dataset_sized;
+use streamsvm::data::Example;
+use streamsvm::runtime::Runtime;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn pipeline_throughput(ds_name: &str, frac: f64) {
+    let ds = load_dataset_sized(ds_name, 42, frac).expect("dataset");
+    println!(
+        "\n-- pipeline throughput: {} ({} examples, dim {}) --",
+        ds.name,
+        ds.train.len(),
+        ds.dim
+    );
+    let mut t = Table::new(&[
+        "mode", "kernels", "block", "examples/s", "filter %", "xla ms", "rust ms", "updates",
+    ]);
+    // (mode, prefer_fast, block override)
+    let rows: &[(ExecMode, bool, Option<usize>)] = &[
+        (ExecMode::Pure, true, None),
+        (ExecMode::Filter, false, None),  // Pallas-interpret artifacts
+        (ExecMode::Filter, true, None),   // native-jnp artifacts (kernel selection)
+        (ExecMode::Filter, true, Some(1024)), // call-overhead amortization
+        (ExecMode::Scan, true, None),
+    ];
+    for &(mode, fast, block) in rows {
+        let mut rt = if mode == ExecMode::Pure { None } else { Runtime::open_default().ok() };
+        if rt.is_none() && mode != ExecMode::Pure {
+            println!("   ({mode:?}: no artifacts, skipped)");
+            continue;
+        }
+        if let Some(rt) = rt.as_mut() {
+            rt.set_prefer_fast(fast);
+        }
+        let cfg = PipelineConfig {
+            train: TrainOptions::default().with_c(10.0),
+            mode,
+            block,
+            queue: 4,
+        };
+        let train = ds.train.clone();
+        // one warm run (compile), one measured run
+        let _ = train_stream(rt.as_mut(), train.clone().into_iter(), ds.dim, cfg);
+        let report = train_stream(rt.as_mut(), train.into_iter(), ds.dim, cfg).expect("train");
+        let m = &report.metrics;
+        t.row(&[
+            format!("{mode:?}"),
+            if mode == ExecMode::Pure {
+                "-".into()
+            } else if fast {
+                "jnp".into()
+            } else {
+                "pallas".into()
+            },
+            block.map(|b| b.to_string()).unwrap_or_else(|| "256".into()),
+            format!("{:.0}", m.throughput()),
+            format!("{:.1}", m.filter_rate() * 100.0),
+            format!("{:.1}", m.xla_ns as f64 * 1e-6),
+            format!("{:.1}", m.rust_ns as f64 * 1e-6),
+            m.updates.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn per_example_update_cost() {
+    println!("\n-- per-example Algorithm-1 cost (pure Rust hot loop) --");
+    let mut t = Table::new(&["dim", "ns/example"]);
+    for d in [21usize, 300, 784] {
+        let ds_name = match d {
+            21 => "waveform",
+            300 => "w3a",
+            _ => "mnist89",
+        };
+        let ds = load_dataset_sized(ds_name, 42, 0.2).expect("dataset");
+        let train: Vec<Example> = ds.train;
+        let opts = TrainOptions::default();
+        let stats = bench(1, 5, || {
+            let m = StreamSvm::fit(train.iter(), ds.dim, &opts);
+            std::hint::black_box(m.radius());
+        });
+        t.row(&[
+            d.to_string(),
+            format!("{:.0}", stats.mean.as_nanos() as f64 / train.len() as f64),
+        ]);
+    }
+    t.print();
+}
+
+fn serving_latency() {
+    println!("\n-- serving latency (predict service, 4 clients) --");
+    let ds = load_dataset_sized("mnist01", 42, 0.1).expect("dataset");
+    let model = StreamSvm::fit(ds.train.iter(), ds.dim, &TrainOptions::default().with_c(10.0));
+    let mut t = Table::new(&["backend", "batch", "req/s", "p50", "p99", "mean fill"]);
+    for (label, use_rt, batch) in [
+        ("pure", false, 64usize),
+        ("pjrt", true, 64),
+        ("pjrt", true, 256),
+    ] {
+        let mut rt = if use_rt { Runtime::open_default().ok() } else { None };
+        if use_rt && rt.is_none() {
+            continue;
+        }
+        let svc = PredictService::new(
+            model.weights().to_vec(),
+            ServiceConfig { batch, ..Default::default() },
+        );
+        let client = svc.client();
+        let test = std::sync::Arc::new(ds.test.clone());
+        let n = 4000usize;
+        let t0 = std::time::Instant::now();
+        let workers: Vec<_> = (0..4)
+            .map(|k| {
+                let c = client.clone();
+                let test = test.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n / 4 {
+                        let e = &test[(k * 31 + i * 7) % test.len()];
+                        let _ = c.score(e.x.clone()).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(client);
+        let stats = svc.run(rt.as_mut()).expect("service");
+        for w in workers {
+            w.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        t.row(&[
+            label.to_string(),
+            batch.to_string(),
+            format!("{:.0}", n as f64 / wall.as_secs_f64()),
+            format!("{:?}", stats.latency.quantile(0.5)),
+            format!("{:?}", stats.latency.quantile(0.99)),
+            format!("{:.1}", stats.mean_batch_fill()),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let full = std::env::var("STREAMSVM_BENCH_FULL").is_ok();
+    println!("== throughput / latency ablations (full={full}) ==");
+    pipeline_throughput("mnist89", if full { 1.0 } else { 0.2 });
+    pipeline_throughput("ijcnn", if full { 1.0 } else { 0.2 });
+    per_example_update_cost();
+    serving_latency();
+}

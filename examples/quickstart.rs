@@ -1,0 +1,58 @@
+//! Quickstart: train a one-pass StreamSVM on Synthetic A and compare
+//! Algorithm 1 vs Algorithm 2 (lookahead) vs a batch solver.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use streamsvm::baselines::batch_l2svm::{BatchL2Svm, BatchL2SvmOptions};
+use streamsvm::data::registry::load_dataset;
+use streamsvm::eval::accuracy;
+use streamsvm::svm::lookahead::LookaheadSvm;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn main() -> streamsvm::Result<()> {
+    let ds = load_dataset("synthA", 42)?;
+    println!(
+        "dataset {}: {} train / {} test, dim {}",
+        ds.name,
+        ds.train.len(),
+        ds.test.len(),
+        ds.dim
+    );
+
+    // Algorithm 1: one pass, O(D) state.
+    let opts = TrainOptions::default();
+    let t = std::time::Instant::now();
+    let algo1 = StreamSvm::fit(ds.train.iter(), ds.dim, &opts);
+    println!(
+        "Algorithm 1: acc {:.2}%  (R={:.3}, {} core vectors, {:?})",
+        accuracy(&algo1, &ds.test) * 100.0,
+        algo1.radius(),
+        algo1.num_support(),
+        t.elapsed()
+    );
+
+    // Algorithm 2: one pass with a lookahead buffer of 10.
+    let t = std::time::Instant::now();
+    let algo2 = LookaheadSvm::fit(ds.train.iter(), ds.dim, &opts.with_lookahead(10));
+    println!(
+        "Algorithm 2 (L=10): acc {:.2}%  (R={:.3}, {} merges, {:?})",
+        accuracy(&algo2, &ds.test) * 100.0,
+        algo2.radius(),
+        algo2.num_merges(),
+        t.elapsed()
+    );
+
+    // Batch reference (all data in memory, multiple epochs).
+    let t = std::time::Instant::now();
+    let batch = BatchL2Svm::fit(&ds.train, ds.dim, &BatchL2SvmOptions::default());
+    println!(
+        "batch l2-SVM: acc {:.2}%  ({} epochs, {:?})",
+        accuracy(&batch, &ds.test) * 100.0,
+        batch.epochs_run(),
+        t.elapsed()
+    );
+    Ok(())
+}

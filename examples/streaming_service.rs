@@ -1,0 +1,106 @@
+//! End-to-end driver: the full three-layer system on a real small
+//! workload.
+//!
+//! 1. **Train** on the MNIST-like 0vs1 stream through the coordinator
+//!    pipeline — reader thread → bounded channel → block filter (one PJRT
+//!    call per 256-row block running the L1 Pallas distance kernel) →
+//!    sequential updater. One pass, exact Algorithm-1 semantics.
+//! 2. **Serve** batched prediction requests from 8 client threads through
+//!    the dynamic batcher, scoring each batch with the AOT `predict`
+//!    artifact; report latency percentiles, throughput and accuracy.
+//!
+//! Requires `make artifacts` (falls back to pure-Rust with a warning).
+//!
+//! ```sh
+//! cargo run --release --example streaming_service
+//! ```
+
+use std::time::Instant;
+
+use streamsvm::coordinator::pipeline::{train_stream, ExecMode, PipelineConfig};
+use streamsvm::coordinator::service::{PredictService, ServiceConfig};
+use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::registry::load_dataset;
+use streamsvm::eval::accuracy;
+use streamsvm::runtime::Runtime;
+use streamsvm::svm::TrainOptions;
+
+fn main() -> streamsvm::Result<()> {
+    let ds = load_dataset("mnist01", 42)?;
+    println!(
+        "== StreamSVM end-to-end: {} ({} train / {} test, dim {}) ==",
+        ds.name,
+        ds.train.len(),
+        ds.test.len(),
+        ds.dim
+    );
+
+    let mut rt = match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("warning: {e}\n         running in pure-Rust mode");
+            None
+        }
+    };
+
+    // ---- phase 1: one-pass streaming training
+    let mode = if rt.is_some() { ExecMode::Filter } else { ExecMode::Pure };
+    let cfg = PipelineConfig {
+        train: TrainOptions::default().with_c(10.0),
+        mode,
+        block: None,
+        queue: 4,
+    };
+    let stream = VecStream::of_train(&ds, Some(7));
+    let report = train_stream(rt.as_mut(), stream, ds.dim, cfg)?;
+    println!("train pipeline [{mode:?}]: {}", report.metrics.summary());
+    let test_acc = accuracy(&report.model, &ds.test);
+    println!(
+        "model: R={:.4}, {} core vectors | single-pass test acc {:.2}%",
+        report.model.radius(),
+        report.model.num_support(),
+        test_acc * 100.0
+    );
+
+    // ---- phase 2: batched serving
+    let svc = PredictService::new(
+        report.model.weights().to_vec(),
+        ServiceConfig { batch: 64, ..Default::default() },
+    );
+    let client = svc.client();
+    let test = std::sync::Arc::new(ds.test.clone());
+    let n_workers = 8;
+    let reqs_per_worker = 2000;
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..n_workers)
+        .map(|k| {
+            let c = client.clone();
+            let test = test.clone();
+            std::thread::spawn(move || {
+                let mut correct = 0usize;
+                for i in 0..reqs_per_worker {
+                    let e = &test[(k * 97 + i * 13) % test.len()];
+                    let s = c.score(e.x.clone()).unwrap();
+                    if (s >= 0.0) == (e.y > 0.0) {
+                        correct += 1;
+                    }
+                }
+                correct
+            })
+        })
+        .collect();
+    drop(client);
+    let stats = svc.run(rt.as_mut())?;
+    let correct: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    let wall = t0.elapsed();
+    let total = n_workers * reqs_per_worker;
+    println!(
+        "served {total} requests in {wall:?} ({:.0} req/s, {} batches, mean fill {:.1})",
+        total as f64 / wall.as_secs_f64(),
+        stats.batches,
+        stats.mean_batch_fill()
+    );
+    println!("latency: {}", stats.latency.summary());
+    println!("serving accuracy: {:.2}%", correct as f64 / total as f64 * 100.0);
+    Ok(())
+}

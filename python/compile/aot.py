@@ -1,0 +1,146 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT lowered.compiler_ir('hlo').serialize()) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids, so text round-trips cleanly. Lowered with
+return_tuple=True; the Rust side unwraps the tuple.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--dims 2,3,...]
+
+Emits one HLO file per (entry point, shape bucket) plus a plain-text
+manifest (`entry b d file` rows — no JSON so the Rust side needs no serde):
+
+  distance_{B}x{D}.hlo.txt   in: w[D] x[B,D] y[B] xi2[] invc[]      out: d[B]
+  predict_{B}x{D}.hlo.txt    in: w[D] x[B,D]                        out: s[B]
+  update_{B}x{D}.hlo.txt     in: w[D] r[] xi2[] x[B,D] y[B] v[B] invc[] s2[]
+                             out: w'[D] r'[] xi2'[] m[] upd[B] d0[B]
+  merge_{L}x{D}.hlo.txt      in: w[D] r[] xi2[] xs[L,D] ys[L] v[L] s2[]
+                             out: w'[D] r'[] xi2'[] mu[L]
+
+Shape buckets: B (block) and L (lookahead buffer) fixed per artifact; the
+feature dim D is used exactly when D <= 128 and padded to a multiple of
+128 above that (the Pallas tiles are (64, min(D,128))). The Rust batcher
+zero-pads rows/columns and masks with `valid`.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Feature dims of the paper's eight datasets (Table 1): Synthetic A/B/C,
+# Waveform, IJCNN, w3a, MNIST pairs.
+DEFAULT_DIMS = [2, 3, 5, 21, 22, 300, 784]
+TRAIN_BLOCK = 256
+PREDICT_BLOCKS = [64, 256]
+MERGE_LS = [16, 128]
+
+
+def pad_dim(d: int) -> int:
+    """Feature-dim padding rule (mirrored by the Rust batcher)."""
+    if d <= 128:
+        return d
+    return ((d + 127) // 128) * 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _s():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _v(n):
+    return jax.ShapeDtypeStruct((n,), jnp.float32)
+
+
+def _m(b, d):
+    return jax.ShapeDtypeStruct((b, d), jnp.float32)
+
+
+def entry_specs(b, d, l):
+    """(name, fn, example_args) for every artifact at this bucket.
+
+    The `*f` entries are the CPU-optimized native-jnp variants of the same
+    math (backend kernel selection — see model.py); the unsuffixed entries
+    embed the Pallas kernels.
+    """
+    dist_args = (_v(d), _m(b, d), _v(b), _s(), _s())
+    upd_args = (_v(d), _s(), _s(), _m(b, d), _v(b), _v(b), _s(), _s())
+    return [
+        (f"distance_{b}x{d}", model.distance_graph, dist_args),
+        (f"predict_{b}x{d}", model.predict_graph, (_v(d), _m(b, d))),
+        (f"update_{b}x{d}", model.update_graph, upd_args),
+        (
+            f"merge_{l}x{d}",
+            functools.partial(model.merge_graph, n_iters=128),
+            (_v(d), _s(), _s(), _m(l, d), _v(l), _v(l), _s()),
+        ),
+        (f"distancef_{b}x{d}", model.distance_fast_graph, dist_args),
+        (f"predictf_{b}x{d}", model.predict_fast_graph, (_v(d), _m(b, d))),
+        (f"updatef_{b}x{d}", model.update_fast_graph, upd_args),
+    ]
+
+
+def lower_one(fn, args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--dims",
+        default=",".join(str(d) for d in DEFAULT_DIMS),
+        help="comma-separated raw feature dims (padded per pad_dim)",
+    )
+    ap.add_argument("--train-block", type=int, default=TRAIN_BLOCK)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    dims = sorted({pad_dim(int(t)) for t in args.dims.split(",") if t})
+    manifest = []
+    seen = set()
+    for d in dims:
+        specs = []
+        for pb in PREDICT_BLOCKS:
+            e = entry_specs(pb, d, MERGE_LS[0])
+            specs.extend([e[1], e[5]])  # predict + predictf
+        # train blocks: the compiled default plus a 4x block for the
+        # call-overhead-amortization ablation (benches/throughput.rs)
+        for tb in [args.train_block, args.train_block * 4]:
+            e = entry_specs(tb, d, MERGE_LS[0])
+            specs.extend([e[0], e[2], e[4], e[6]])  # distance/update ×2 variants
+        base = entry_specs(args.train_block, d, MERGE_LS[0])
+        specs.append(base[3])  # merge L=16
+        specs.append(entry_specs(args.train_block, d, MERGE_LS[1])[3])  # merge L=128
+        for name, fn, ex in specs:
+            if name in seen:
+                continue
+            seen.add(name)
+            text = lower_one(fn, ex)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entry, shape = name.rsplit("_", 1)
+            b, dd = shape.split("x")
+            manifest.append(f"{entry} {b} {dd} {fname}")
+            print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

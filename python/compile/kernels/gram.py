@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: signed Gram matrix for the lookahead MEB solve.
+
+Algorithm 2 of the paper buffers up to L non-enclosed points and merges
+(ball ∪ buffer) into one ball. The merge operates entirely on augmented
+inner products, whose data-dependent part is the *signed Gram matrix*
+
+    G_ij = y_i y_j <x_i, x_j>
+
+(the mutually-orthogonal slack coordinates contribute a diagonal constant
+added outside the kernel). Tiled as a classic (i, j, k) matmul: grid =
+(B/bb, B/bb, D/bd), K-axis innermost, output tile revisited across K.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(xa_ref, xb_ref, ya_ref, yb_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    xa = xa_ref[...]  # (bb, bd)
+    xb = xb_ref[...]  # (bb, bd)
+    sign = ya_ref[...][:, None] * yb_ref[...][None, :]
+    out_ref[...] += sign * (xa @ xb.T)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d"))
+def signed_gram(x, y, *, block_b=64, block_d=128):
+    """G_ij = y_i y_j <x_i, x_j>, shape (B, B). B % bb == 0, D % bd == 0."""
+    b, d = x.shape
+    bb = min(block_b, b)
+    bd = min(block_d, d)
+    assert b % bb == 0 and d % bd == 0, (x.shape, bb, bd)
+    grid = (b // bb, b // bb, d // bd)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bb, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bb,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bb,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, b), jnp.float32),
+        interpret=True,
+    )(x, x, y, y)

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernel: batched linear scoring for the serving path.
+
+After training, the Rust coordinator's prediction service batches requests
+and scores them with one PJRT call: scores = X @ w (the sign is taken by
+the caller, which also wants the raw margin for metrics). Tiled exactly
+like the distance kernel: grid = (B/bb, D/bd), D innermost, accumulate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _predict_kernel(w_ref, x_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    out_ref[...] += x_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d"))
+def block_scores(w, x, *, block_b=64, block_d=128):
+    """scores_b = <x_b, w>, shape (B,). B % bb == 0, D % bd == 0."""
+    b, d = x.shape
+    bb = min(block_b, b)
+    bd = min(block_d, d)
+    assert b % bb == 0 and d % bd == 0, (x.shape, bb, bd)
+    grid = (b // bb, d // bd)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(w, x)

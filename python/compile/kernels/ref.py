@@ -1,0 +1,99 @@
+"""Pure-jnp / pure-Python oracles for every Pallas kernel and L2 graph.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+and the lowered graphs agree with these to float32 tolerance, over a
+sweep of shapes and seeds (see python/tests/).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_sqdist(w, x, y, xi2, invc):
+    """d^2_b = ||w - y_b x_b||^2 + xi2 + invc (dense, no tiling)."""
+    diff = w[None, :] - y[:, None] * x
+    return jnp.sum(diff * diff, axis=1) + xi2 + invc
+
+
+def ref_distance(w, x, y, xi2, invc):
+    return jnp.sqrt(jnp.maximum(ref_sqdist(w, x, y, xi2, invc), 0.0))
+
+
+def ref_signed_gram(x, y):
+    return (y[:, None] * y[None, :]) * (x @ x.T)
+
+
+def ref_scores(w, x):
+    return x @ w
+
+
+def ref_streamsvm(xs, ys, c, *, slack_mode="consistent", w0=None):
+    """Pure-Python/NumPy Algorithm 1 (StreamSVM), the L2 scan oracle.
+
+    slack_mode:
+      "paper"      — verbatim pseudocode: xi2 init 1, update adds beta^2.
+      "consistent" — slack coordinate C^{-1/2}e_n carried exactly: xi2
+                     init 1/C, update adds beta^2/C. Identical when C=1.
+    Returns (w, R, xi2, m) after one pass.
+    """
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    invc = 1.0 / c
+    s2 = 1.0 if slack_mode == "paper" else invc
+    w = ys[0] * xs[0] if w0 is None else np.array(w0, dtype=np.float64)
+    r = 0.0
+    xi2 = s2
+    m = 1
+    for x, y in zip(xs[1:], ys[1:]):
+        diff = w - y * x
+        d = np.sqrt(diff @ diff + xi2 + invc)
+        if d >= r:
+            beta = 0.5 * (1.0 - r / d)
+            w = w + beta * (y * x - w)
+            r = r + 0.5 * (d - r)
+            xi2 = xi2 * (1.0 - beta) ** 2 + beta**2 * s2
+            m += 1
+    return w, r, xi2, m
+
+
+def ref_merge_gram(w, xi2, xs, ys, s2):
+    """Gram of v_i = p_i - c0 in augmented space.
+
+    <p_i, p_j> = y_i y_j <x_i, x_j> + [i==j] s2   (fresh orthogonal slacks)
+    <c0,  p_i> = y_i <w, x_i>                     (c0 slack ⟂ fresh slacks)
+    <c0,  c0 > = ||w||^2 + xi2
+    """
+    w = np.asarray(w, dtype=np.float64)
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    pp = (ys[:, None] * ys[None, :]) * (xs @ xs.T) + s2 * np.eye(len(ys))
+    cp = ys * (xs @ w)
+    cc = w @ w + xi2
+    return pp - cp[:, None] - cp[None, :] + cc
+
+
+def merge_objective(mu, g, r0):
+    """max( ||V mu|| + r0, max_i ||V mu - v_i|| ) from the Gram g."""
+    q = g @ mu
+    mgm = float(mu @ q)
+    ball = np.sqrt(max(mgm, 0.0)) + r0
+    pts = np.sqrt(np.maximum(mgm - 2.0 * q + np.diag(g), 0.0))
+    return max(ball, float(pts.max()))
+
+
+def ref_merge_bruteforce(w, r, xi2, xs, ys, s2, n_draws=4000, seed=0):
+    """Brute-force reference for the lookahead merge: random search over
+    convex coefficients mu for the center c = c0 + sum_i mu_i (p_i - c0).
+    Used only by tests on tiny instances to sanity-check near-optimality."""
+    rng = np.random.default_rng(seed)
+    ys = np.asarray(ys, dtype=np.float64)
+    L = len(ys)
+    g = ref_merge_gram(w, xi2, xs, ys, s2)
+    best_mu = np.zeros(L)
+    best = merge_objective(best_mu, g, r)
+    for _ in range(n_draws):
+        mu = rng.dirichlet(np.ones(L + 1))[:L] * rng.uniform(0.0, 1.2)
+        v = merge_objective(mu, g, r)
+        if v < best:
+            best, best_mu = v, mu.copy()
+    return best_mu, best

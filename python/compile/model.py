@@ -1,0 +1,207 @@
+"""Layer-2 JAX graphs for StreamSVM (IJCAI'09), calling the L1 Pallas kernels.
+
+Four AOT entry points, each lowered to HLO text by aot.py and executed from
+the Rust coordinator via PJRT (Python never runs at request time):
+
+  distance_graph  — block distance d_b to the current MEB center (L1 kernel).
+  predict_graph   — batched linear scores for the serving path (L1 kernel).
+  update_graph    — exact Algorithm-1 semantics over a block: an L1
+                    prefilter distance pass + a lax.scan that applies the
+                    sequential center/radius/slack updates. Because the
+                    ball only ever grows, a point enclosed by the ball at
+                    block entry stays enclosed forever — the scan re-checks
+                    d >= R per step, so in-block orderings are exact.
+  merge_graph     — Algorithm-2 lookahead merge: minimum enclosing ball of
+                    (current ball ∪ L buffered points), solved in the
+                    coefficient space of the augmented-feature Gram matrix
+                    (L1 gram + scores kernels) with a fixed-iteration
+                    Badoiu-Clarkson farthest-point loop. The returned
+                    radius is the exact max-distance at the final center,
+                    so enclosure holds unconditionally.
+
+Slack-coordinate bookkeeping: the augmented map is phi(z_n) = [y_n x_n ;
+C^{-1/2} e_n]. The paper's pseudocode initializes xi^2 = 1 and adds
+beta^2 per update (an implicit unit-slack convention); carrying the
+C^{-1/2} coordinate exactly gives init 1/C and increments beta^2/C. Both
+are supported through the runtime scalar `s2` (paper: s2=1, consistent:
+s2=1/C); the two coincide at C=1. See DESIGN.md §3.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.distance import block_distance
+from .kernels.gram import signed_gram
+from .kernels.predict import block_scores
+
+_EPS = 1e-12
+
+
+def distance_graph(w, x, y, xi2, invc):
+    """d_b = sqrt(||w - y_b x_b||^2 + xi2 + invc) for a (B, D) block."""
+    return (block_distance(w, x, y, xi2, invc),)
+
+
+def predict_graph(w, x):
+    """Raw margins <x_b, w> for a (B, D) block (sign taken by the caller)."""
+    return (block_scores(w, x),)
+
+
+def update_graph(w, r, xi2, x, y, valid, invc, s2):
+    """One-pass Algorithm-1 updates over a block, exactly.
+
+    Inputs:  w[D], r[], xi2[], x[B,D], y[B], valid[B] (1.0 = real row,
+             0.0 = padding), invc[] = 1/C, s2[] = slack self-norm.
+    Returns: (w', r', xi2', m_added[], upd_mask[B], d0[B]) where d0 is the
+             L1-kernel distance of every row to the *entry* ball (used by
+             the Rust coordinator for filter statistics).
+    """
+    d0 = block_distance(w, x, y, xi2, invc)
+
+    def step(carry, inp):
+        wc, rc, xc = carry
+        xb, yb, vb = inp
+        diff = wc - yb * xb
+        d = jnp.sqrt(jnp.maximum(diff @ diff + xc + invc, _EPS))
+        upd = (vb > 0.5) & (d >= rc)
+        beta = 0.5 * (1.0 - rc / d)
+        w2 = wc + beta * (yb * xb - wc)
+        r2 = rc + 0.5 * (d - rc)
+        x2 = xc * (1.0 - beta) ** 2 + beta**2 * s2
+        uf = upd.astype(jnp.float32)
+        carry2 = (
+            jnp.where(upd, w2, wc),
+            jnp.where(upd, r2, rc),
+            jnp.where(upd, x2, xc),
+        )
+        return carry2, uf
+
+    (w1, r1, xi1), upd_mask = jax.lax.scan(step, (w, r, xi2), (x, y, valid))
+    return w1, r1, xi1, jnp.sum(upd_mask), upd_mask, d0
+
+
+def _merge_gram(w, xi2, xs, ys, s2):
+    """Gram of v_i = p_i - c0 in augmented space, via the L1 kernels.
+
+    <p_i,p_j> = y_i y_j <x_i,x_j> + [i==j] s2 ; <c0,p_i> = y_i <w,x_i> ;
+    <c0,c0>   = ||w||^2 + xi2.
+    """
+    L = ys.shape[0]
+    pp = signed_gram(xs, ys) + s2 * jnp.eye(L, dtype=jnp.float32)
+    cp = ys * block_scores(w, xs)
+    cc = w @ w + xi2
+    return pp - cp[:, None] - cp[None, :] + cc
+
+
+def merge_graph(w, r, xi2, xs, ys, valid, s2, *, n_iters=128):
+    """Algorithm-2 merge: MEB of (ball(w, r, xi2) ∪ buffered points).
+
+    Center parametrized as c = c0 + V mu with V = [p_i - c0]; all norms
+    come from the Gram G = V^T V. Badoiu-Clarkson: repeatedly step the
+    center 1/(t+2) of the way toward the farthest entity (a buffered point,
+    or the far pole of the old ball). Invalid (padding) rows are masked out
+    of the farthest-point selection and never receive weight.
+
+    Note there is no `invc` input: in the consistent slack convention the
+    point self-norm `s2` carries the 1/C term, so the merge geometry is
+    fully determined by (w, r, xi2, s2) — an `invc` argument would be dead
+    and MLIR lowering would prune it from the HLO signature.
+
+    Returns (w', r', xi2', mu[L]).
+    """
+    g = _merge_gram(w, xi2, xs, ys, s2)
+    gdiag = jnp.diag(g)
+    L = ys.shape[0]
+    vmask = valid > 0.5
+
+    def dists(mu):
+        q = g @ mu
+        mgm = jnp.maximum(mu @ q, 0.0)
+        dball = jnp.sqrt(mgm) + r
+        dpts = jnp.sqrt(jnp.maximum(mgm - 2.0 * q + gdiag, 0.0))
+        dpts = jnp.where(vmask, dpts, -1.0)
+        return mgm, dball, dpts
+
+    def body(t, mu):
+        mgm, dball, dpts = dists(mu)
+        i = jnp.argmax(dpts)
+        step = 1.0 / (t.astype(jnp.float32) + 2.0)
+        to_pt = mu + step * (jax.nn.one_hot(i, L, dtype=jnp.float32) - mu)
+        # far pole of the old ball: q_mu = -mu * r / ||V mu||
+        scale = jnp.where(mgm > _EPS, r * jax.lax.rsqrt(jnp.maximum(mgm, _EPS)), 0.0)
+        to_ball = mu * (1.0 - step) - step * scale * mu
+        ball_farther = dball > dpts[i]
+        stay = ball_farther & (mgm <= _EPS)
+        mu2 = jnp.where(ball_farther, to_ball, to_pt)
+        return jnp.where(stay, mu, mu2)
+
+    mu = jax.lax.fori_loop(0, n_iters, body, jnp.zeros((L,), jnp.float32))
+    _, dball, dpts = dists(mu)
+    r1 = jnp.maximum(dball, jnp.max(dpts))  # exact radius at final center
+    tot = jnp.sum(mu)
+    w1 = (1.0 - tot) * w + (mu * ys) @ xs
+    xi1 = (1.0 - tot) ** 2 * xi2 + jnp.sum(mu * mu) * s2
+    return w1, r1, xi1, mu
+
+
+# ---------------------------------------------------------------------------
+# CPU-optimized "fast" variants: identical math lowered through native jnp
+# ops instead of the interpret-mode Pallas kernels. On the CPU PJRT backend
+# the interpret-lowered grid (a sequence of dynamic-slice steps) compiles to
+# loops that XLA cannot fuse into one GEMV; the jnp form lowers to a single
+# dot. The coordinator selects the backend-appropriate artifact at runtime
+# (kernel selection, not a semantic change); the Pallas kernels remain the
+# TPU-structured path and both are pytest-checked against the same oracle.
+# ---------------------------------------------------------------------------
+
+
+def _fast_sqdist(w, x, y, xi2, invc):
+    xw = x @ w
+    return (w @ w) - 2.0 * y * xw + jnp.sum(x * x, axis=1) + xi2 + invc
+
+
+def distance_fast_graph(w, x, y, xi2, invc):
+    return (jnp.sqrt(jnp.maximum(_fast_sqdist(w, x, y, xi2, invc), 0.0)),)
+
+
+def predict_fast_graph(w, x):
+    return (x @ w,)
+
+
+def update_fast_graph(w, r, xi2, x, y, valid, invc, s2):
+    """update_graph with the prefilter distance in native jnp."""
+    d0 = jnp.sqrt(jnp.maximum(_fast_sqdist(w, x, y, xi2, invc), 0.0))
+
+    def step(carry, inp):
+        wc, rc, xc = carry
+        xb, yb, vb = inp
+        diff = wc - yb * xb
+        d = jnp.sqrt(jnp.maximum(diff @ diff + xc + invc, _EPS))
+        upd = (vb > 0.5) & (d >= rc)
+        beta = 0.5 * (1.0 - rc / d)
+        w2 = wc + beta * (yb * xb - wc)
+        r2 = rc + 0.5 * (d - rc)
+        x2 = xc * (1.0 - beta) ** 2 + beta**2 * s2
+        uf = upd.astype(jnp.float32)
+        carry2 = (
+            jnp.where(upd, w2, wc),
+            jnp.where(upd, r2, rc),
+            jnp.where(upd, x2, xc),
+        )
+        return carry2, uf
+
+    (w1, r1, xi1), upd_mask = jax.lax.scan(step, (w, r, xi2), (x, y, valid))
+    return w1, r1, xi1, jnp.sum(upd_mask), upd_mask, d0
+
+
+def streamsvm_reference(xs, ys, c, *, slack_mode="consistent"):
+    """Full-pass Algorithm 1 as a single jit-able scan (testing/validation
+    convenience; the production path is Rust driving update_graph blocks)."""
+    invc = jnp.float32(1.0 / c)
+    s2 = jnp.float32(1.0 if slack_mode == "paper" else 1.0 / c)
+    w0 = ys[0] * xs[0]
+    valid = jnp.ones(ys.shape[0] - 1, jnp.float32)
+    w1, r1, xi1, m, _, _ = update_graph(
+        w0, jnp.float32(0.0), s2, xs[1:], ys[1:], valid, invc, s2
+    )
+    return w1, r1, xi1, m + 1.0

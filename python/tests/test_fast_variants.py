@@ -1,0 +1,64 @@
+"""The CPU-optimized native-jnp artifact variants must agree exactly with
+the Pallas-kernel graphs and the oracles (same math, different lowering —
+backend kernel selection must never change semantics)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SHAPES = [(64, 5), (64, 21), (128, 128), (64, 896)]
+SEEDS = [0, 1]
+
+
+def draw(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=b).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32)
+    return w, x, y
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_distance_fast_matches_pallas_and_ref(shape, seed):
+    b, d = shape
+    w, x, y = draw(b, d, seed)
+    xi2, invc = jnp.float32(0.7), jnp.float32(0.5)
+    (fast,) = model.distance_fast_graph(w, x, y, xi2, invc)
+    (pallas,) = model.distance_graph(w, x, y, xi2, invc)
+    want = ref.ref_distance(w, x, y, xi2, invc)
+    np.testing.assert_allclose(fast, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(fast, pallas, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_predict_fast_matches_pallas(shape, seed):
+    b, d = shape
+    w, x, _ = draw(b, d, seed)
+    (fast,) = model.predict_fast_graph(w, x)
+    (pallas,) = model.predict_graph(w, x)
+    np.testing.assert_allclose(fast, pallas, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_update_fast_matches_update(seed):
+    b, d = 64, 21
+    w, x, y = draw(b, d, seed)
+    args = (
+        jnp.asarray(w),
+        jnp.float32(1.0),
+        jnp.float32(0.5),
+        jnp.asarray(x),
+        jnp.asarray(y),
+        jnp.ones(b, jnp.float32),
+        jnp.float32(0.5),
+        jnp.float32(0.5),
+    )
+    slow = model.update_graph(*args)
+    fast = model.update_fast_graph(*args)
+    for a, b_ in zip(slow, fast):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,13 @@
+"""Kept for the Makefile contract: the real kernel tests live in
+test_kernels.py (kernels), test_model.py (graphs), test_aot.py (lowering)."""
+
+from compile.kernels import ref
+import numpy as np
+
+
+def test_ref_streamsvm_radius_monotone():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 5))
+    y = rng.choice([-1.0, 1.0], size=200)
+    w, r, xi2, m = ref.ref_streamsvm(x, y, 1.0)
+    assert r > 0 and xi2 > 0 and 1 <= m <= 200

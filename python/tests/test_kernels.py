@@ -1,0 +1,102 @@
+"""L1 Pallas kernels vs pure-jnp oracles.
+
+hypothesis is unavailable in this offline image; the sweep below is the
+explicit equivalent of the hypothesis strategies we would have used:
+a grid of (B, D) tile-edge cases (D < tile, D == tile, D > tile and
+multi-tile, B single/multi tile) crossed with seeded random draws and
+scalar parameters.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels.distance import block_distance, block_sqdist
+from compile.kernels.gram import signed_gram
+from compile.kernels.predict import block_scores
+from compile.kernels import ref
+
+SHAPES = [
+    (64, 2),
+    (64, 3),
+    (64, 5),
+    (64, 21),
+    (64, 22),
+    (128, 64),
+    (64, 128),
+    (128, 256),
+    (256, 384),
+    (64, 896),
+]
+SEEDS = [0, 1, 2]
+
+
+def draw(b, d, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d), scale=scale).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=b).astype(np.float32)
+    w = rng.normal(size=d, scale=scale).astype(np.float32)
+    return w, x, y
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_distance_matches_ref(shape, seed):
+    b, d = shape
+    w, x, y = draw(b, d, seed)
+    xi2 = jnp.float32(0.5 + seed)
+    invc = jnp.float32(1.0 / (1.0 + seed))
+    got = block_distance(w, x, y, xi2, invc)
+    want = ref.ref_distance(w, x, y, xi2, invc)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_sqdist_matches_ref(shape, seed):
+    b, d = shape
+    w, x, y = draw(b, d, seed, scale=3.0)
+    xi2 = jnp.float32(2.0)
+    invc = jnp.float32(0.1)
+    got = block_sqdist(w, x, y, xi2, invc)
+    want = ref.ref_sqdist(w, x, y, xi2, invc)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-4)
+
+
+@pytest.mark.parametrize("shape", [(16, 2), (16, 21), (64, 128), (128, 256), (16, 896)])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_gram_matches_ref(shape, seed):
+    b, d = shape
+    w, x, y = draw(b, d, seed)
+    got = signed_gram(x, y, block_b=min(64, b))
+    want = ref.ref_signed_gram(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_predict_matches_ref(shape, seed):
+    b, d = shape
+    w, x, _ = draw(b, d, seed)
+    got = block_scores(w, x)
+    want = ref.ref_scores(w, x)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_gram_symmetry_and_psd_shift():
+    """Signed gram is symmetric; adding the slack diagonal keeps it PSD."""
+    w, x, y = draw(32, 22, 7)
+    g = np.asarray(signed_gram(x, y, block_b=32))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
+    eig = np.linalg.eigvalsh(g + np.eye(32, dtype=np.float32))
+    assert eig.min() > -1e-3
+
+
+def test_distance_zero_padding_rows():
+    """Zero rows (the batcher's padding) give d^2 = ||w||^2 + xi2 + invc."""
+    w, x, y = draw(64, 21, 3)
+    x[32:] = 0.0
+    y[32:] = 0.0
+    d2 = np.asarray(block_sqdist(w, x, y, jnp.float32(1.0), jnp.float32(0.5)))
+    want = float(w @ w) + 1.5
+    np.testing.assert_allclose(d2[32:], want, rtol=1e-5)

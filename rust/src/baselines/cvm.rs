@@ -1,0 +1,291 @@
+//! Core Vector Machine (Tsang et al. 2005) — the batch MEB comparator of
+//! Figure 2.
+//!
+//! CVM solves the same augmented-space MEB as StreamSVM but in *batch*
+//! mode with core sets: repeatedly (a) scan the full dataset for the
+//! point farthest from the current center — **one pass over the data per
+//! core vector** — (b) stop if everything is within `(1+ε)R`, else (c)
+//! add the farthest point to the core set and re-solve the MEB over the
+//! core set (warm-started Badoiu-Clarkson). Figure 2 asks how many such
+//! passes are needed to match one StreamSVM pass; [`Cvm::fit_tracked`]
+//! snapshots the weight vector after every pass for exactly that plot.
+
+use crate::data::Example;
+use crate::eval::Classifier;
+use crate::linalg;
+use crate::svm::TrainOptions;
+
+/// CVM configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CvmOptions {
+    pub train: TrainOptions,
+    /// (1+ε) approximation target.
+    pub eps: f64,
+    /// Hard cap on data passes (= core vectors added + 1).
+    pub max_passes: usize,
+    /// Badoiu-Clarkson refinement iterations per core-set re-solve.
+    pub solve_iters: usize,
+}
+
+impl Default for CvmOptions {
+    fn default() -> Self {
+        CvmOptions {
+            train: TrainOptions::default(),
+            eps: 1e-3,
+            max_passes: 100,
+            solve_iters: 60,
+        }
+    }
+}
+
+/// Snapshot of the model after one full data pass.
+#[derive(Clone, Debug)]
+pub struct PassSnapshot {
+    pub pass: usize,
+    pub w: Vec<f32>,
+    pub r: f64,
+    pub coreset: usize,
+}
+
+/// A trained CVM model.
+#[derive(Clone, Debug)]
+pub struct Cvm {
+    pub w: Vec<f32>,
+    pub r: f64,
+    pub xi2: f64,
+    coreset: Vec<usize>,
+    alpha: Vec<f64>,
+    passes: usize,
+    converged: bool,
+}
+
+impl Cvm {
+    pub fn fit(examples: &[Example], dim: usize, opts: &CvmOptions) -> Self {
+        Self::fit_tracked(examples, dim, opts, |_| {})
+    }
+
+    /// Train, invoking `on_pass` with a snapshot after every data pass.
+    pub fn fit_tracked<F: FnMut(&PassSnapshot)>(
+        examples: &[Example],
+        dim: usize,
+        opts: &CvmOptions,
+        mut on_pass: F,
+    ) -> Self {
+        assert!(!examples.is_empty());
+        let s2 = opts.train.s2();
+        let mut coreset: Vec<usize> = vec![0];
+        let mut alpha: Vec<f64> = vec![1.0];
+        let mut w: Vec<f32> = vec![0.0; dim];
+        linalg::blend_into(&mut w, &examples[0].x, examples[0].y, 1.0);
+        let mut a2 = 1.0f64; // Σ α²
+        let mut r = 0.0f64;
+        let mut passes = 0usize;
+        let mut converged = false;
+
+        // d²(center, example i) with coefficient a_i (0 if not in core set)
+        let sqdist = |w: &[f32], a2: f64, ai: f64, e: &Example| -> f64 {
+            linalg::sqdist_scaled(w, &e.x, e.y) + s2 * (a2 - 2.0 * ai + 1.0)
+        };
+
+        while passes < opts.max_passes {
+            passes += 1;
+            // ---- one full pass: farthest point from the current center
+            let mut far_i = 0usize;
+            let mut far_d2 = f64::NEG_INFINITY;
+            for (i, e) in examples.iter().enumerate() {
+                let ai = coreset
+                    .iter()
+                    .position(|&c| c == i)
+                    .map(|k| alpha[k])
+                    .unwrap_or(0.0);
+                let d2 = sqdist(&w, a2, ai, e);
+                if d2 > far_d2 {
+                    far_d2 = d2;
+                    far_i = i;
+                }
+            }
+            let far_d = far_d2.max(0.0).sqrt();
+            on_pass(&PassSnapshot { pass: passes, w: w.clone(), r, coreset: coreset.len() });
+            if far_d <= r * (1.0 + opts.eps) {
+                converged = true;
+                break;
+            }
+            // ---- grow the core set
+            if !coreset.contains(&far_i) {
+                coreset.push(far_i);
+                alpha.push(0.0);
+            }
+            // warm insert: blend toward the new point like a stream update
+            let d = far_d.max(1e-12);
+            let beta = if r > 0.0 { 0.5 * (1.0 - r / d) } else { 0.5 };
+            let last = alpha.len() - 1;
+            for a in alpha.iter_mut() {
+                *a *= 1.0 - beta;
+            }
+            alpha[last] += beta;
+            linalg::scale(&mut w, (1.0 - beta) as f32);
+            linalg::axpy(
+                &mut w,
+                (beta * examples[far_i].y as f64) as f32,
+                &examples[far_i].x,
+            );
+            a2 = alpha.iter().map(|a| a * a).sum();
+
+            // ---- re-solve MEB over the core set (warm-started BC).
+            // The inner solve must be much tighter than the outer (1+ε)
+            // test, or the inflated radius terminates the outer loop
+            // prematurely (the real CVM solves the inner QP exactly);
+            // scale the iteration budget with the core-set size.
+            let inner_iters = opts.solve_iters.max(25 * coreset.len());
+            for t in 0..inner_iters {
+                let (mut fi, mut fd2) = (0usize, f64::NEG_INFINITY);
+                for (k, &i) in coreset.iter().enumerate() {
+                    let d2 = sqdist(&w, a2, alpha[k], &examples[i]);
+                    if d2 > fd2 {
+                        fd2 = d2;
+                        fi = k;
+                    }
+                }
+                let eta = 1.0 / (t as f64 + 2.0);
+                for a in alpha.iter_mut() {
+                    *a *= 1.0 - eta;
+                }
+                alpha[fi] += eta;
+                linalg::scale(&mut w, (1.0 - eta) as f32);
+                let e = &examples[coreset[fi]];
+                linalg::axpy(&mut w, (eta * e.y as f64) as f32, &e.x);
+                a2 = alpha.iter().map(|a| a * a).sum();
+            }
+            // radius = max over core set at the refined center
+            r = coreset
+                .iter()
+                .enumerate()
+                .map(|(k, &i)| sqdist(&w, a2, alpha[k], &examples[i]))
+                .fold(0.0f64, f64::max)
+                .sqrt();
+        }
+
+        Cvm { w, r, xi2: s2 * a2, coreset, alpha, passes, converged }
+    }
+
+    pub fn passes(&self) -> usize {
+        self.passes
+    }
+
+    /// Core-set convex coefficients (center = Σ αₖ φ̃(z_{coreset[k]})).
+    pub fn alphas(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Training indices of the core vectors.
+    pub fn coreset_indices(&self) -> &[usize] {
+        &self.coreset
+    }
+
+    pub fn coreset_size(&self) -> usize {
+        self.coreset.len()
+    }
+
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+}
+
+impl Classifier for Cvm {
+    fn score(&self, x: &[f32]) -> f64 {
+        linalg::dot(&self.w, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::accuracy;
+    use crate::prop::gen;
+    use crate::rng::Pcg32;
+
+    fn toy(n: usize, d: usize, sep: f64, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, sep);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    #[test]
+    fn converges_and_encloses_everything() {
+        let exs = toy(400, 5, 1.0, 1);
+        let opts = CvmOptions { max_passes: 400, eps: 0.05, ..Default::default() };
+        let m = Cvm::fit(&exs, 5, &opts);
+        assert!(m.converged(), "no convergence in {} passes", m.passes());
+        // every point within (1+eps+slack) R
+        let s2 = opts.train.s2();
+        let a2 = m.alpha.iter().map(|a| a * a).sum::<f64>();
+        for (i, e) in exs.iter().enumerate() {
+            let ai = m
+                .coreset
+                .iter()
+                .position(|&c| c == i)
+                .map(|k| m.alpha[k])
+                .unwrap_or(0.0);
+            let d2 = crate::linalg::sqdist_scaled(&m.w, &e.x, e.y) + s2 * (a2 - 2.0 * ai + 1.0);
+            assert!(
+                d2.sqrt() <= m.r * (1.0 + opts.eps) + 1e-6,
+                "point {i}: {} > {}",
+                d2.sqrt(),
+                m.r * (1.0 + opts.eps)
+            );
+        }
+    }
+
+    #[test]
+    fn coreset_much_smaller_than_data() {
+        let exs = toy(2000, 4, 1.0, 2);
+        let m = Cvm::fit(&exs, 4, &CvmOptions { max_passes: 300, eps: 0.05, ..Default::default() });
+        assert!(m.coreset_size() < 200, "coreset {}", m.coreset_size());
+    }
+
+    #[test]
+    fn tracked_passes_monotone_and_complete() {
+        let exs = toy(300, 3, 0.8, 3);
+        let mut snaps = Vec::new();
+        let m = Cvm::fit_tracked(
+            &exs,
+            3,
+            &CvmOptions { max_passes: 50, ..Default::default() },
+            |s| snaps.push(s.clone()),
+        );
+        assert_eq!(snaps.len(), m.passes());
+        for (k, s) in snaps.iter().enumerate() {
+            assert_eq!(s.pass, k + 1);
+        }
+        // core set never shrinks
+        for w in snaps.windows(2) {
+            assert!(w[1].coreset >= w[0].coreset);
+        }
+    }
+
+    #[test]
+    fn accuracy_grows_with_passes() {
+        let exs = toy(1500, 6, 1.2, 4);
+        let mut acc_by_pass = Vec::new();
+        let _ = Cvm::fit_tracked(
+            &exs,
+            6,
+            &CvmOptions { max_passes: 40, eps: 1e-4, ..Default::default() },
+            |s| {
+                let probe = ProbeW(&s.w);
+                acc_by_pass.push(accuracy(&probe, &exs));
+            },
+        );
+        let early = acc_by_pass[1.min(acc_by_pass.len() - 1)];
+        let late = *acc_by_pass.last().unwrap();
+        assert!(late >= early - 0.02, "early {early} late {late}");
+        assert!(late > 0.85, "late acc {late}");
+    }
+
+    struct ProbeW<'a>(&'a [f32]);
+    impl Classifier for ProbeW<'_> {
+        fn score(&self, x: &[f32]) -> f64 {
+            crate::linalg::dot(self.0, x)
+        }
+    }
+}

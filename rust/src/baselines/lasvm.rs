@@ -1,0 +1,222 @@
+//! LASVM-style online SVM (Bordes et al. 2005) — Table 1 baseline.
+//!
+//! LASVM interleaves PROCESS (insert the new example with a dual
+//! coordinate step) and REPROCESS (revisit stored support vectors,
+//! growing or shrinking their coefficients, removing those driven to
+//! zero). For the paper's linear-kernel experiments we maintain the
+//! primal image `w = Σ αᵢ yᵢ xᵢ` so each dual step costs O(D).
+//!
+//! Faithful simplification (documented in DESIGN.md): the original
+//! selects τ-violating *pairs*; with the unbiased hinge dual (no equality
+//! constraint) single-coordinate Newton steps optimize the same dual, so
+//! PROCESS = a clipped Newton step on the new α, REPROCESS = the same on
+//! the currently most-violating stored SV. One pass, `reprocess` revisits
+//! per example.
+
+use crate::data::Example;
+use crate::eval::Classifier;
+use crate::linalg;
+
+/// LASVM configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LasvmOptions {
+    /// Box constraint `0 ≤ α ≤ C`.
+    pub c: f64,
+    /// REPROCESS steps after each PROCESS.
+    pub reprocess: usize,
+    /// Drop SVs whose α falls below this.
+    pub sv_eps: f64,
+    /// Cap on SVs scanned per REPROCESS violation search (round-robin
+    /// window). Keeps the pass O(N·cap·D) on large noisy streams where
+    /// the SV set grows into the thousands.
+    pub scan_cap: usize,
+}
+
+impl Default for LasvmOptions {
+    fn default() -> Self {
+        LasvmOptions { c: 1.0, reprocess: 2, sv_eps: 1e-8, scan_cap: 256 }
+    }
+}
+
+/// One stored support vector.
+#[derive(Clone, Debug)]
+struct Sv {
+    x: Vec<f32>,
+    y: f32,
+    alpha: f64,
+    /// cached ||x||² (Newton denominator)
+    xnorm2: f64,
+}
+
+/// Online LASVM model (linear kernel).
+#[derive(Clone, Debug)]
+pub struct Lasvm {
+    pub w: Vec<f32>,
+    svs: Vec<Sv>,
+    opts: LasvmOptions,
+    seen: usize,
+    /// Round-robin cursor for the capped REPROCESS scan.
+    scan_pos: usize,
+}
+
+impl Lasvm {
+    pub fn new(dim: usize, opts: LasvmOptions) -> Self {
+        Lasvm { w: vec![0.0; dim], svs: Vec::new(), opts, seen: 0, scan_pos: 0 }
+    }
+
+    /// Clipped Newton step on the dual coordinate of `sv`; updates `w`.
+    fn coordinate_step(w: &mut [f32], sv: &mut Sv, c: f64) -> f64 {
+        // dual gradient: 1 - y w·x ; Hessian: ||x||²
+        let g = 1.0 - sv.y as f64 * linalg::dot(w, &sv.x);
+        if sv.xnorm2 <= 0.0 {
+            return 0.0;
+        }
+        let new_alpha = (sv.alpha + g / sv.xnorm2).clamp(0.0, c);
+        let delta = new_alpha - sv.alpha;
+        if delta != 0.0 {
+            linalg::axpy(w, (delta * sv.y as f64) as f32, &sv.x);
+            sv.alpha = new_alpha;
+        }
+        delta
+    }
+
+    /// PROCESS: insert a new example with one dual step.
+    fn process(&mut self, x: &[f32], y: f32) {
+        let mut sv = Sv { x: x.to_vec(), y, alpha: 0.0, xnorm2: linalg::norm2(x) };
+        Self::coordinate_step(&mut self.w, &mut sv, self.opts.c);
+        if sv.alpha > self.opts.sv_eps {
+            self.svs.push(sv);
+        }
+    }
+
+    /// REPROCESS: revisit the most-violating stored SV.
+    fn reprocess(&mut self) {
+        if self.svs.is_empty() {
+            return;
+        }
+        // most-violating within a round-robin window of at most scan_cap
+        let n = self.svs.len();
+        let window = n.min(self.opts.scan_cap.max(1));
+        let start = if n > window { self.scan_pos % n } else { 0 };
+        self.scan_pos = self.scan_pos.wrapping_add(window);
+        let mut best = 0usize;
+        let mut best_v = 0.0f64;
+        for k in 0..window {
+            let i = (start + k) % n;
+            let sv = &self.svs[i];
+            let g = 1.0 - sv.y as f64 * linalg::dot(&self.w, &sv.x);
+            // violation if g > 0 with alpha < C, or g < 0 with alpha > 0
+            let v = if g > 0.0 {
+                if sv.alpha < self.opts.c { g } else { 0.0 }
+            } else if sv.alpha > 0.0 {
+                -g
+            } else {
+                0.0
+            };
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        if best_v <= 1e-12 {
+            return;
+        }
+        let c = self.opts.c;
+        Self::coordinate_step(&mut self.w, &mut self.svs[best], c);
+        if self.svs[best].alpha <= self.opts.sv_eps {
+            self.svs.swap_remove(best);
+        }
+    }
+
+    /// Stream one example: PROCESS + `reprocess` REPROCESS steps.
+    pub fn observe(&mut self, x: &[f32], y: f32) {
+        self.seen += 1;
+        self.process(x, y);
+        for _ in 0..self.opts.reprocess {
+            self.reprocess();
+        }
+    }
+
+    /// Single-pass training.
+    pub fn fit<'a, I: IntoIterator<Item = &'a Example>>(
+        stream: I,
+        dim: usize,
+        opts: &LasvmOptions,
+    ) -> Self {
+        let mut m = Lasvm::new(dim, *opts);
+        for e in stream {
+            m.observe(&e.x, e.y);
+        }
+        m
+    }
+
+    pub fn num_support(&self) -> usize {
+        self.svs.len()
+    }
+
+    pub fn examples_seen(&self) -> usize {
+        self.seen
+    }
+}
+
+impl Classifier for Lasvm {
+    fn score(&self, x: &[f32]) -> f64 {
+        linalg::dot(&self.w, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::accuracy;
+    use crate::prop::gen;
+    use crate::rng::Pcg32;
+
+    fn toy(n: usize, d: usize, sep: f64, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, sep);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    #[test]
+    fn learns_separable() {
+        let exs = toy(3000, 8, 1.2, 1);
+        let m = Lasvm::fit(exs.iter(), 8, &LasvmOptions::default());
+        assert!(accuracy(&m, &exs) > 0.9);
+        assert!(m.num_support() > 0);
+    }
+
+    #[test]
+    fn alphas_respect_box() {
+        let exs = toy(500, 4, 0.3, 2);
+        let opts = LasvmOptions { c: 0.5, ..Default::default() };
+        let m = Lasvm::fit(exs.iter(), 4, &opts);
+        for sv in &m.svs {
+            assert!(sv.alpha >= 0.0 && sv.alpha <= 0.5 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn w_is_sum_of_alpha_y_x() {
+        let exs = toy(200, 3, 0.8, 3);
+        let m = Lasvm::fit(exs.iter(), 3, &LasvmOptions::default());
+        // Reconstruct w from the SV expansion; REPROCESS removals zero
+        // their contribution exactly, so the identity is tight.
+        let mut w = vec![0.0f32; 3];
+        for sv in &m.svs {
+            crate::linalg::axpy(&mut w, (sv.alpha * sv.y as f64) as f32, &sv.x);
+        }
+        for (a, b) in w.iter().zip(&m.w) {
+            assert!((a - b).abs() < 2e-3, "{w:?} vs {:?}", m.w);
+        }
+    }
+
+    #[test]
+    fn beats_perceptron_on_noisy_data() {
+        // The Table-1 regime: LASVM ≥ perceptron nearly everywhere.
+        let exs = toy(4000, 10, 0.5, 4);
+        let l = accuracy(&Lasvm::fit(exs.iter(), 10, &LasvmOptions::default()), &exs);
+        let p = accuracy(&crate::baselines::perceptron::Perceptron::fit(exs.iter(), 10), &exs);
+        assert!(l + 0.03 >= p, "lasvm {l} vs perceptron {p}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Every baseline from the paper's evaluation (§5), implemented from
+//! scratch:
+//!
+//! * [`perceptron`] — Rosenblatt's perceptron, single pass.
+//! * [`pegasos`] — single-sweep Pegasos with block size `k` (paper runs
+//!   k = 1 and k = 20).
+//! * [`lasvm`] — LASVM-style online dual SVM with active revisits
+//!   (linear kernel; see module docs for the faithful-simplification
+//!   note).
+//! * [`cvm`] — the Core Vector Machine: batch (1+ε) MEB via core sets,
+//!   one pass over the data per core vector (the Figure-2 comparator).
+//! * [`batch_l2svm`] — exact batch ℓ₂-SVM by dual coordinate descent:
+//!   the in-memory, multi-pass "libSVM (batch)" stand-in of Table 1.
+
+pub mod batch_l2svm;
+pub mod cvm;
+pub mod lasvm;
+pub mod pegasos;
+pub mod perceptron;

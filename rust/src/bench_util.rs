@@ -1,0 +1,124 @@
+//! Timing harness for the benches (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the custom-harness binaries in `benches/`; they use
+//! this module for warmup + repeated measurement with mean/p50/p99, and
+//! aligned table printing for the paper-shaped outputs.
+
+use std::time::{Duration, Instant};
+
+/// Statistics from a measured run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub reps: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  (n={}, min {:.3?}, max {:.3?})",
+            self.mean, self.p50, self.p99, self.reps, self.min, self.max
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `reps` measured iterations.
+pub fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    BenchStats {
+        reps,
+        mean: total / reps.max(1) as u32,
+        p50: times[reps / 2],
+        p99: times[(reps * 99 / 100).min(reps - 1)],
+        min: times[0],
+        max: times[reps - 1],
+    }
+}
+
+/// Time a single closure invocation.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Fixed-width table printer for paper-shaped outputs.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_orders_percentiles() {
+        let mut i = 0u64;
+        let stats = bench(2, 50, || {
+            i = i.wrapping_add(1);
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        assert!(stats.p50 <= stats.p99);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max.max(stats.mean));
+        assert_eq!(stats.reps, 50);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "22".into()]);
+        t.print(); // should not panic
+    }
+}

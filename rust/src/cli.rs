@@ -1,0 +1,99 @@
+//! Minimal `--key value` CLI argument parsing, shared by `main.rs` and
+//! unit-tested here (no clap in the offline image).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: a subcommand plus `--key value` pairs.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn from_iter<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter();
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut kv = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| Error::config(format!("expected --flag, got `{k}`")))?
+                .to_string();
+            let v = it
+                .next()
+                .ok_or_else(|| Error::config(format!("--{key} needs a value")))?;
+            kv.insert(key, v);
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Result<Self> {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    /// Typed lookup with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("bad value for --{key}: `{v}`"))),
+        }
+    }
+
+    /// String lookup with default.
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    /// Was the flag given explicitly?
+    pub fn has(&self, key: &str) -> bool {
+        self.kv.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Result<Args> {
+        Args::from_iter(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_pairs() {
+        let a = parse(&["train", "--dataset", "mnist89", "--c", "0.5"]).unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.str("dataset", "x"), "mnist89");
+        assert_eq!(a.get("c", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get("lookahead", 7usize).unwrap(), 7);
+        assert!(a.has("c") && !a.has("lookahead"));
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.cmd, "help");
+    }
+
+    #[test]
+    fn rejects_bare_token() {
+        assert!(parse(&["train", "dataset"]).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(parse(&["train", "--dataset"]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_typed_value() {
+        let a = parse(&["train", "--c", "abc"]).unwrap();
+        assert!(a.get("c", 1.0).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Shape-bucketed batching: turns an example stream into padded blocks
+//! matching the AOT artifact buckets, with a bounded-channel reader
+//! thread for backpressure.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use crate::data::Example;
+
+/// One padded block, laid out exactly as the AOT entry points expect:
+/// row-major `(b, d_pad)` features, `y`/`valid` of length `b`. Padding
+/// rows have `valid = 0` and zero features; padding columns are zero.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub valid: Vec<f32>,
+    /// Real rows in this block (≤ b; the final block may be partial).
+    pub n_real: usize,
+    pub b: usize,
+    pub d_pad: usize,
+    /// Logical feature dimension (≤ d_pad).
+    pub d: usize,
+}
+
+impl Block {
+    /// Row `i`'s logical features (un-padded view).
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d_pad..i * self.d_pad + self.d]
+    }
+}
+
+/// Assemble blocks of `b` rows padded to `d_pad` columns.
+pub struct Batcher<I: Iterator<Item = Example>> {
+    source: I,
+    b: usize,
+    d: usize,
+    d_pad: usize,
+    done: bool,
+}
+
+impl<I: Iterator<Item = Example>> Batcher<I> {
+    pub fn new(source: I, b: usize, d: usize, d_pad: usize) -> Self {
+        assert!(d_pad >= d && b > 0);
+        Batcher { source, b, d, d_pad, done: false }
+    }
+}
+
+impl<I: Iterator<Item = Example>> Iterator for Batcher<I> {
+    type Item = Block;
+
+    fn next(&mut self) -> Option<Block> {
+        if self.done {
+            return None;
+        }
+        let mut block = Block {
+            x: vec![0.0; self.b * self.d_pad],
+            y: vec![0.0; self.b],
+            valid: vec![0.0; self.b],
+            n_real: 0,
+            b: self.b,
+            d_pad: self.d_pad,
+            d: self.d,
+        };
+        for i in 0..self.b {
+            match self.source.next() {
+                Some(e) => {
+                    debug_assert_eq!(e.x.len(), self.d);
+                    block.x[i * self.d_pad..i * self.d_pad + self.d].copy_from_slice(&e.x);
+                    block.y[i] = e.y;
+                    block.valid[i] = 1.0;
+                    block.n_real += 1;
+                }
+                None => {
+                    self.done = true;
+                    break;
+                }
+            }
+        }
+        if block.n_real == 0 {
+            None
+        } else {
+            Some(block)
+        }
+    }
+}
+
+/// Run the batcher on a reader thread, returning a bounded receiver —
+/// the backpressure boundary: at most `queue` blocks are in flight, so a
+/// slow trainer throttles a fast source instead of buffering the stream
+/// (the streaming model's storage constraint).
+pub fn spawn_reader<I>(
+    source: I,
+    b: usize,
+    d: usize,
+    d_pad: usize,
+    queue: usize,
+) -> (Receiver<Block>, JoinHandle<usize>)
+where
+    I: Iterator<Item = Example> + Send + 'static,
+{
+    let (tx, rx) = sync_channel(queue.max(1));
+    let handle = std::thread::spawn(move || {
+        let mut sent = 0usize;
+        for block in Batcher::new(source, b, d, d_pad) {
+            sent += block.n_real;
+            if tx.send(block).is_err() {
+                break; // trainer hung up (early stop)
+            }
+        }
+        sent
+    });
+    (rx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::check_default;
+
+    fn exs(n: usize, d: usize) -> Vec<Example> {
+        (0..n)
+            .map(|i| {
+                Example::new(
+                    (0..d).map(|j| (i * d + j) as f32).collect(),
+                    if i % 2 == 0 { 1.0 } else { -1.0 },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocks_cover_stream_exactly() {
+        let blocks: Vec<Block> = Batcher::new(exs(10, 3).into_iter(), 4, 3, 5).collect();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks.iter().map(|b| b.n_real).sum::<usize>(), 10);
+        assert_eq!(blocks[2].n_real, 2);
+        // padding rows are invalid and zeroed
+        assert_eq!(blocks[2].valid[2..], [0.0, 0.0]);
+        assert!(blocks[2].x[2 * 5..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn column_padding_zeroed_row_content_preserved() {
+        let blocks: Vec<Block> = Batcher::new(exs(2, 3).into_iter(), 2, 3, 8).collect();
+        let b = &blocks[0];
+        assert_eq!(b.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(b.row(1), &[3.0, 4.0, 5.0]);
+        assert!(b.x[3..8].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_stream_yields_nothing() {
+        let blocks: Vec<Block> = Batcher::new(exs(0, 2).into_iter(), 4, 2, 2).collect();
+        assert!(blocks.is_empty());
+    }
+
+    #[test]
+    fn batcher_never_drops_or_duplicates_property() {
+        check_default("batcher-conservation", |rng, _| {
+            let n = rng.below(200);
+            let d = 1 + rng.below(8);
+            let b = 1 + rng.below(16);
+            let src = exs(n, d);
+            let blocks: Vec<Block> = Batcher::new(src.clone().into_iter(), b, d, d + rng.below(4)).collect();
+            let mut recon = Vec::new();
+            for blk in &blocks {
+                for i in 0..blk.n_real {
+                    recon.push((blk.row(i).to_vec(), blk.y[i]));
+                }
+                // trailing rows must be invalid
+                for i in blk.n_real..blk.b {
+                    if blk.valid[i] != 0.0 {
+                        return Err("padding row marked valid".into());
+                    }
+                }
+            }
+            if recon.len() != n {
+                return Err(format!("{} rows reconstructed of {n}", recon.len()));
+            }
+            for (e, (x, y)) in src.iter().zip(&recon) {
+                if &e.x != x || e.y != *y {
+                    return Err("row mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reader_thread_backpressure_and_total() {
+        let (rx, handle) = spawn_reader(exs(100, 2).into_iter(), 8, 2, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // with queue=2 the reader can be at most ~3 blocks ahead
+        let mut total = 0;
+        for blk in rx.iter() {
+            total += blk.n_real;
+        }
+        assert_eq!(total, 100);
+        assert_eq!(handle.join().unwrap(), 100);
+    }
+
+    #[test]
+    fn reader_handles_early_hangup() {
+        let (rx, handle) = spawn_reader(exs(1000, 2).into_iter(), 8, 2, 2, 1);
+        let first = rx.recv().unwrap();
+        assert_eq!(first.n_real, 8);
+        drop(rx); // trainer aborts
+        let sent = handle.join().unwrap();
+        assert!(sent < 1000, "reader should stop early, sent {sent}");
+    }
+}

@@ -1,0 +1,197 @@
+//! Pipeline and service metrics: counters, nanosecond timers, and a
+//! log-bucketed latency histogram (p50/p90/p99 without storing samples).
+
+use std::time::{Duration, Instant};
+
+/// Training-pipeline counters.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    pub examples: usize,
+    pub blocks: usize,
+    /// Rows that escaped the block filter and needed sequential checks.
+    pub survivors: usize,
+    /// Actual ball updates (core-set growth).
+    pub updates: usize,
+    /// Lookahead merge solves.
+    pub merges: usize,
+    /// Time inside PJRT execute calls.
+    pub xla_ns: u64,
+    /// Time in the sequential Rust updater.
+    pub rust_ns: u64,
+    /// End-to-end wall time of the training loop.
+    pub wall_ns: u64,
+}
+
+impl PipelineMetrics {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.examples as f64 / (self.wall_ns as f64 * 1e-9)
+        }
+    }
+
+    /// Fraction of rows discarded by the block filter alone.
+    pub fn filter_rate(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            1.0 - self.survivors as f64 / self.examples as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "examples={} blocks={} survivors={} updates={} merges={} \
+             filter={:.1}% throughput={:.0}/s xla={:.1}ms rust={:.1}ms wall={:.1}ms",
+            self.examples,
+            self.blocks,
+            self.survivors,
+            self.updates,
+            self.merges,
+            self.filter_rate() * 100.0,
+            self.throughput(),
+            self.xla_ns as f64 * 1e-6,
+            self.rust_ns as f64 * 1e-6,
+            self.wall_ns as f64 * 1e-6,
+        )
+    }
+}
+
+/// Scope timer adding elapsed nanos to a counter on drop.
+pub struct ScopeTimer<'a> {
+    start: Instant,
+    sink: &'a mut u64,
+}
+
+impl<'a> ScopeTimer<'a> {
+    pub fn new(sink: &'a mut u64) -> Self {
+        ScopeTimer { start: Instant::now(), sink }
+    }
+}
+
+impl Drop for ScopeTimer<'_> {
+    fn drop(&mut self) {
+        *self.sink += self.start.elapsed().as_nanos() as u64;
+    }
+}
+
+/// Log₂-bucketed latency histogram: buckets at [1µs·2ⁱ).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; 32],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; 32], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        let us = (ns / 1000).max(1);
+        let idx = (63 - us.leading_zeros() as usize).min(31);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Upper edge of the bucket holding quantile `q` (0..1).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50≤{:?} p90≤{:?} p99≤{:?} max={:?}",
+            self.count,
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_rate_and_throughput() {
+        let m = PipelineMetrics {
+            examples: 1000,
+            survivors: 100,
+            wall_ns: 1_000_000_000,
+            ..Default::default()
+        };
+        assert!((m.filter_rate() - 0.9).abs() < 1e-12);
+        assert!((m.throughput() - 1000.0).abs() < 1e-9);
+        assert_eq!(PipelineMetrics::default().throughput(), 0.0);
+    }
+
+    #[test]
+    fn scope_timer_accumulates() {
+        let mut sink = 0u64;
+        {
+            let _t = ScopeTimer::new(&mut sink);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(sink >= 1_000_000, "sink = {sink}");
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= Duration::from_micros(256) && p50 <= Duration::from_micros(1024));
+        assert!(h.mean() > Duration::from_micros(400));
+        assert!(h.max() >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 streaming coordinator.
+//!
+//! The paper's system is a *one-pass streaming learner*, so the
+//! coordinator is a streaming orchestrator:
+//!
+//! ```text
+//!   reader thread                     trainer thread (owns PJRT)
+//!   ┌───────────┐   bounded channel   ┌──────────────────────────────┐
+//!   │ source →  │ ──── Blocks ──────▶ │ block filter (L1 distance    │
+//!   │ batcher   │   (backpressure)    │ kernel, 1 PJRT call/block) → │
+//!   └───────────┘                     │ sequential updater (rare)    │
+//!                                     └──────────────────────────────┘
+//! ```
+//!
+//! The block filter is **exact**: every Algorithm-1 update grows the ball
+//! (old ball ⊆ new ball — property-tested in `svm::ball`), so a point
+//! inside the ball at block entry can never escape later; points outside
+//! are re-checked sequentially against the live ball. Discard decisions
+//! batch into one MXU-friendly PJRT call while update semantics stay
+//! bit-equivalent to the paper's sequential algorithm.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod service;
+pub mod sharded;
+pub mod stream;

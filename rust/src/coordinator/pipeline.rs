@@ -1,0 +1,427 @@
+//! The one-pass training pipeline: reader → batcher → block filter →
+//! sequential updater, with the PJRT artifacts on the hot path.
+//!
+//! Three execution modes (ablated in `benches/throughput.rs`):
+//!
+//! * [`ExecMode::Filter`] — the default hot path: one PJRT `distance`
+//!   call per block (the L1 Pallas kernel), then Rust-side sequential
+//!   updates for the (rare) survivors. Exact: the ball only grows, so a
+//!   row enclosed at block entry stays enclosed forever; survivors are
+//!   re-checked against the live ball.
+//! * [`ExecMode::Scan`] — pushes the whole Algorithm-1 block scan into
+//!   the AOT `update` graph (an XLA `While`), proving all three layers
+//!   compose; slower on CPU PJRT but the faithful all-XLA path.
+//! * [`ExecMode::Pure`] — no PJRT at all (pure Rust); the fallback when
+//!   artifacts are absent and the baseline for the ablation.
+//!
+//! Lookahead (Algorithm 2) composes with all modes: survivors go to a
+//! buffer that merges through the AOT `merge` graph (Filter/Scan) or the
+//! Rust solver (Pure).
+
+use std::time::Instant;
+
+use crate::coordinator::batcher::{spawn_reader, Block};
+use crate::coordinator::metrics::{PipelineMetrics, ScopeTimer};
+use crate::data::Example;
+use crate::error::{Error, Result};
+use crate::runtime::{pad_dim, Runtime};
+use crate::svm::ball::BallState;
+use crate::svm::meb::solve_merge;
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::TrainOptions;
+
+/// Which engine advances the ball.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Filter,
+    Scan,
+    Pure,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub train: TrainOptions,
+    pub mode: ExecMode,
+    /// Rows per block; `None` → the artifact's compiled train block.
+    pub block: Option<usize>,
+    /// Bounded channel capacity (blocks in flight).
+    pub queue: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            train: TrainOptions::default(),
+            mode: ExecMode::Filter,
+            block: None,
+            queue: 4,
+        }
+    }
+}
+
+/// Result of a pipeline run.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub model: StreamSvm,
+    pub metrics: PipelineMetrics,
+}
+
+/// Internal mutable trainer state.
+struct Trainer<'rt> {
+    rt: Option<&'rt mut Runtime>,
+    cfg: PipelineConfig,
+    ball: Option<BallState>,
+    /// Lookahead buffer (logical-dim rows).
+    buf_x: Vec<Vec<f32>>,
+    buf_y: Vec<f32>,
+    /// Padded scratch for the current center.
+    w_pad: Vec<f32>,
+    dim: usize,
+    d_pad: usize,
+    metrics: PipelineMetrics,
+}
+
+impl<'rt> Trainer<'rt> {
+    fn new(rt: Option<&'rt mut Runtime>, cfg: PipelineConfig, dim: usize) -> Self {
+        let d_pad = pad_dim(dim);
+        Trainer {
+            rt,
+            cfg,
+            ball: None,
+            buf_x: Vec::new(),
+            buf_y: Vec::new(),
+            w_pad: vec![0.0; d_pad],
+            dim,
+            d_pad,
+            metrics: PipelineMetrics::default(),
+        }
+    }
+
+    fn sync_w_pad(&mut self) {
+        if let Some(b) = &self.ball {
+            self.w_pad[..self.dim].copy_from_slice(&b.w);
+        }
+    }
+
+    /// Sequentially check-and-absorb one (logical-dim) row.
+    fn absorb(&mut self, x: &[f32], y: f32) {
+        let opts = self.cfg.train;
+        match &mut self.ball {
+            None => {
+                self.ball = Some(BallState::init(x, y, &opts));
+                self.metrics.updates += 1;
+            }
+            Some(ball) => {
+                if opts.lookahead <= 1 {
+                    if ball.try_update(x, y, &opts) {
+                        self.metrics.updates += 1;
+                    }
+                } else {
+                    let d = ball.distance(x, y, &opts);
+                    if d >= ball.r {
+                        self.buf_x.push(x.to_vec());
+                        self.buf_y.push(y);
+                        if self.buf_x.len() >= opts.lookahead {
+                            self.flush_buffer();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Merge the lookahead buffer into the ball.
+    fn flush_buffer(&mut self) {
+        if self.buf_x.is_empty() {
+            return;
+        }
+        let opts = self.cfg.train;
+        let ball = self.ball.as_mut().expect("buffer implies ball");
+        let l = self.buf_x.len();
+        // Prefer the AOT merge graph when a bucket fits (Filter/Scan).
+        let mut merged_on_device = false;
+        if self.cfg.mode != ExecMode::Pure {
+            if let Some(rt) = self.rt.as_deref_mut() {
+                // smallest merge bucket >= l
+                let bucket = rt
+                    .available()
+                    .into_iter()
+                    .filter(|(e, b, d)| e == "merge" && *d == self.d_pad && *b >= l)
+                    .map(|(_, b, _)| b)
+                    .min();
+                if let Some(lb) = bucket {
+                    let mut xs = vec![0.0f32; lb * self.d_pad];
+                    let mut ys = vec![0.0f32; lb];
+                    let mut valid = vec![0.0f32; lb];
+                    for i in 0..l {
+                        xs[i * self.d_pad..i * self.d_pad + self.dim]
+                            .copy_from_slice(&self.buf_x[i]);
+                        ys[i] = self.buf_y[i];
+                        valid[i] = 1.0;
+                    }
+                    self.w_pad[..self.dim].copy_from_slice(&ball.w);
+                    let t = ScopeTimer::new(&mut self.metrics.xla_ns);
+                    let out = rt.merge(
+                        &self.w_pad,
+                        ball.r as f32,
+                        ball.xi2 as f32,
+                        &xs,
+                        &ys,
+                        &valid,
+                        opts.s2() as f32,
+                        lb,
+                        self.d_pad,
+                    );
+                    drop(t);
+                    if let Ok(out) = out {
+                        ball.w.copy_from_slice(&out.w[..self.dim]);
+                        ball.r = out.r;
+                        ball.xi2 = out.xi2;
+                        ball.m += l;
+                        merged_on_device = true;
+                    }
+                }
+            }
+        }
+        if !merged_on_device {
+            let t = ScopeTimer::new(&mut self.metrics.rust_ns);
+            let xrefs: Vec<&[f32]> = self.buf_x.iter().map(|v| v.as_slice()).collect();
+            let res = solve_merge(ball, &xrefs, &self.buf_y, &opts);
+            *ball = res.ball;
+            drop(t);
+        }
+        self.metrics.updates += l;
+        self.metrics.merges += 1;
+        self.buf_x.clear();
+        self.buf_y.clear();
+    }
+
+    /// Process one block through the configured engine.
+    fn process_block(&mut self, block: &Block) -> Result<()> {
+        self.metrics.blocks += 1;
+        self.metrics.examples += block.n_real;
+        let opts = self.cfg.train;
+
+        let mut start_row = 0usize;
+        if self.ball.is_none() {
+            // Initialize from the first real row, then continue in-block.
+            self.absorb(block.row(0), block.y[0]);
+            start_row = 1;
+        }
+
+        match self.cfg.mode {
+            ExecMode::Pure => {
+                let t = Instant::now();
+                for i in start_row..block.n_real {
+                    self.metrics.survivors += 1; // no filter: all rows sequential
+                    let (x, y) = (block.row(i).to_vec(), block.y[i]);
+                    self.absorb(&x, y);
+                }
+                self.metrics.rust_ns += t.elapsed().as_nanos() as u64;
+            }
+            ExecMode::Filter => {
+                let ball = self.ball.as_ref().expect("initialized above");
+                let (r, xi2) = (ball.r, ball.xi2);
+                self.sync_w_pad();
+                let rt = self
+                    .rt
+                    .as_deref_mut()
+                    .ok_or_else(|| Error::config("Filter mode requires a Runtime"))?;
+                let t = ScopeTimer::new(&mut self.metrics.xla_ns);
+                let d0 = rt.distance(
+                    &self.w_pad,
+                    &block.x,
+                    &block.y,
+                    xi2 as f32,
+                    opts.invc() as f32,
+                    block.b,
+                    block.d_pad,
+                )?;
+                drop(t);
+                let t = Instant::now();
+                for i in start_row..block.n_real {
+                    // exact filter: enclosed at block entry => enclosed forever
+                    if (d0[i] as f64) < r {
+                        continue;
+                    }
+                    self.metrics.survivors += 1;
+                    let (x, y) = (block.row(i).to_vec(), block.y[i]);
+                    self.absorb(&x, y);
+                }
+                self.metrics.rust_ns += t.elapsed().as_nanos() as u64;
+            }
+            ExecMode::Scan => {
+                if opts.lookahead > 1 {
+                    return Err(Error::config(
+                        "Scan mode supports lookahead=1 only (the scan graph \
+                         encodes Algorithm 1); use Filter for Algorithm 2",
+                    ));
+                }
+                let ball = self.ball.as_mut().expect("initialized above");
+                let r_before = ball.r;
+                self.w_pad[..ball.w.len()].copy_from_slice(&ball.w);
+                let mut valid = block.valid.clone();
+                for v in valid.iter_mut().take(start_row) {
+                    *v = 0.0;
+                }
+                let rt = self
+                    .rt
+                    .as_deref_mut()
+                    .ok_or_else(|| Error::config("Scan mode requires a Runtime"))?;
+                let t = ScopeTimer::new(&mut self.metrics.xla_ns);
+                let out = rt.update(
+                    &self.w_pad,
+                    ball.r as f32,
+                    ball.xi2 as f32,
+                    &block.x,
+                    &block.y,
+                    &valid,
+                    opts.invc() as f32,
+                    opts.s2() as f32,
+                    block.b,
+                    block.d_pad,
+                )?;
+                drop(t);
+                ball.w.copy_from_slice(&out.w[..self.dim]);
+                ball.r = out.r;
+                ball.xi2 = out.xi2;
+                ball.m += out.m_added;
+                self.metrics.updates += out.m_added;
+                // survivors := rows whose distance at block entry cleared
+                // the entry radius (informational in Scan mode)
+                self.metrics.survivors += (start_row..block.n_real)
+                    .filter(|&i| out.d0[i] as f64 >= r_before)
+                    .count();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Train one pass over `source` with the streaming pipeline.
+///
+/// `runtime` may be `None` only in [`ExecMode::Pure`].
+pub fn train_stream<I>(
+    runtime: Option<&mut Runtime>,
+    source: I,
+    dim: usize,
+    cfg: PipelineConfig,
+) -> Result<PipelineReport>
+where
+    I: Iterator<Item = Example> + Send + 'static,
+{
+    let d_pad = pad_dim(dim);
+    let block = cfg
+        .block
+        .or_else(|| runtime.as_ref().and_then(|rt| rt.train_block(d_pad)))
+        .unwrap_or(256);
+    let wall = Instant::now();
+    let (rx, reader) = spawn_reader(source, block, dim, d_pad, cfg.queue);
+    let mut trainer = Trainer::new(runtime, cfg, dim);
+    for blk in rx.iter() {
+        trainer.process_block(&blk)?;
+    }
+    trainer.flush_buffer();
+    reader
+        .join()
+        .map_err(|_| Error::Pipeline("reader thread panicked".into()))?;
+    trainer.metrics.wall_ns = wall.elapsed().as_nanos() as u64;
+
+    let mut model = StreamSvm::new(dim, trainer.cfg.train);
+    if let Some(ball) = trainer.ball {
+        model.set_ball(ball, trainer.metrics.examples);
+    }
+    Ok(PipelineReport { model, metrics: trainer.metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check_default, gen};
+    use crate::rng::Pcg32;
+
+    fn toy(n: usize, d: usize, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, 0.8);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    #[test]
+    fn pure_mode_equals_direct_algorithm1() {
+        check_default("pipeline-pure-equiv", |rng, _| {
+            let d = gen::dim(rng);
+            let n = 1 + rng.below(300);
+            let (xs, ys) = gen::labeled_points(rng, n, d, 1.0, 0.5);
+            let exs: Vec<Example> =
+                xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect();
+            let cfg = PipelineConfig {
+                mode: ExecMode::Pure,
+                block: Some(1 + rng.below(64)),
+                ..Default::default()
+            };
+            let report = train_stream(None, exs.clone().into_iter(), d, cfg).unwrap();
+            let direct = StreamSvm::fit(exs.iter(), d, &cfg.train);
+            if report.model.weights() != direct.weights()
+                || report.model.radius() != direct.radius()
+                || report.model.num_support() != direct.num_support()
+            {
+                return Err("pipeline diverged from direct Algorithm 1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pure_mode_lookahead_equals_direct_algorithm2() {
+        check_default("pipeline-pure-algo2-equiv", |rng, _| {
+            let d = gen::dim(rng);
+            let n = 1 + rng.below(200);
+            let l = 2 + rng.below(8);
+            let (xs, ys) = gen::labeled_points(rng, n, d, 1.0, 0.5);
+            let exs: Vec<Example> =
+                xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect();
+            let train = TrainOptions::default().with_lookahead(l);
+            let cfg = PipelineConfig {
+                mode: ExecMode::Pure,
+                train,
+                block: Some(1 + rng.below(32)),
+                ..Default::default()
+            };
+            let report = train_stream(None, exs.clone().into_iter(), d, cfg).unwrap();
+            let direct = crate::svm::lookahead::LookaheadSvm::fit(exs.iter(), d, &train);
+            let (a, b) = (report.model.radius(), direct.radius());
+            if (a - b).abs() > 1e-9 * b.max(1.0) {
+                return Err(format!("algo2 pipeline radius {a} vs direct {b}"));
+            }
+            if report.model.weights() != direct.weights() {
+                return Err("algo2 pipeline weights diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn filter_mode_without_runtime_errors() {
+        let exs = toy(10, 3, 1);
+        let err = train_stream(
+            None,
+            exs.into_iter(),
+            3,
+            PipelineConfig { mode: ExecMode::Filter, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("requires a Runtime"));
+    }
+
+    #[test]
+    fn metrics_count_examples() {
+        let exs = toy(100, 4, 2);
+        let cfg = PipelineConfig { mode: ExecMode::Pure, block: Some(16), ..Default::default() };
+        let report = train_stream(None, exs.into_iter(), 4, cfg).unwrap();
+        assert_eq!(report.metrics.examples, 100);
+        assert_eq!(report.metrics.blocks, 7);
+        assert!(report.metrics.updates >= 1);
+        assert!(report.metrics.wall_ns > 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Batched prediction service: the post-training serving path.
+//!
+//! Requests arrive on a channel from any number of client threads; the
+//! service loop drains up to one artifact block per iteration (dynamic
+//! batching with a fill timeout), scores the batch with a single PJRT
+//! `predict` call (the L1 Pallas matvec kernel), and replies through
+//! per-request channels. Latency is tracked per request admission →
+//! reply in a log-bucketed histogram.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::error::{Error, Result};
+use crate::linalg;
+use crate::runtime::{pad_dim, Runtime};
+
+/// One scoring request.
+pub struct Request {
+    pub x: Vec<f32>,
+    pub reply: Sender<Reply>,
+    admitted: Instant,
+}
+
+/// Scoring response: raw margin (sign = predicted label).
+#[derive(Clone, Copy, Debug)]
+pub struct Reply {
+    pub score: f32,
+}
+
+/// Client handle for submitting requests.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: Sender<Request>,
+}
+
+impl ServiceClient {
+    /// Submit and wait for the score.
+    pub fn score(&self, x: Vec<f32>) -> Result<f32> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request { x, reply: reply_tx, admitted: Instant::now() })
+            .map_err(|_| Error::Pipeline("service stopped".into()))?;
+        reply_rx
+            .recv()
+            .map(|r| r.score)
+            .map_err(|_| Error::Pipeline("service dropped request".into()))
+    }
+}
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Max rows per PJRT call (must match a compiled predict bucket).
+    pub batch: usize,
+    /// How long to wait to fill a batch before flushing a partial one.
+    pub fill_timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { batch: 64, fill_timeout: Duration::from_micros(200) }
+    }
+}
+
+/// Serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl ServiceStats {
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The service: owns the model weights and the PJRT runtime reference.
+pub struct PredictService {
+    w: Vec<f32>,
+    dim: usize,
+    d_pad: usize,
+    cfg: ServiceConfig,
+    rx: Receiver<Request>,
+    tx: Sender<Request>,
+    stats: ServiceStats,
+}
+
+impl PredictService {
+    pub fn new(w: Vec<f32>, cfg: ServiceConfig) -> Self {
+        let dim = w.len();
+        let d_pad = pad_dim(dim);
+        let mut w_pad = w;
+        w_pad.resize(d_pad, 0.0);
+        let (tx, rx) = channel();
+        PredictService { w: w_pad, dim, d_pad, cfg, rx, tx, stats: ServiceStats::default() }
+    }
+
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient { tx: self.tx.clone() }
+    }
+
+    /// Run until all clients hang up. `runtime = None` falls back to the
+    /// pure-Rust matvec (used for the ablation and artifact-less runs).
+    pub fn run(mut self, mut runtime: Option<&mut Runtime>) -> Result<ServiceStats> {
+        // Drop our own sender so the loop ends when clients do.
+        let rx = self.rx;
+        drop(self.tx);
+        let mut batch: Vec<Request> = Vec::with_capacity(self.cfg.batch);
+        let mut x = vec![0.0f32; self.cfg.batch * self.d_pad];
+        loop {
+            batch.clear();
+            // block for the first request
+            match rx.recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break, // all clients gone
+            }
+            // fill the batch up to the timeout
+            let deadline = Instant::now() + self.cfg.fill_timeout;
+            while batch.len() < self.cfg.batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // score
+            x[..batch.len() * self.d_pad].fill(0.0);
+            for (i, r) in batch.iter().enumerate() {
+                debug_assert_eq!(r.x.len(), self.dim);
+                x[i * self.d_pad..i * self.d_pad + self.dim].copy_from_slice(&r.x);
+            }
+            let scores: Vec<f32> = match runtime.as_deref_mut() {
+                Some(rt) => rt.predict(&self.w, &x, self.cfg.batch, self.d_pad)?,
+                None => {
+                    let mut out = vec![0.0f32; self.cfg.batch];
+                    linalg::matvec(&x, self.cfg.batch, self.d_pad, &self.w, &mut out);
+                    out
+                }
+            };
+            self.stats.batches += 1;
+            for (i, r) in batch.drain(..).enumerate() {
+                self.stats.requests += 1;
+                self.stats.latency.record(r.admitted.elapsed());
+                let _ = r.reply.send(Reply { score: scores[i] });
+            }
+        }
+        Ok(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_pure_rust_batches() {
+        let svc = PredictService::new(vec![1.0, -2.0], ServiceConfig::default());
+        let client = svc.client();
+        let workers: Vec<_> = (0..4)
+            .map(|k| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0;
+                    for i in 0..50 {
+                        let v = (k * 50 + i) as f32;
+                        let s = c.score(vec![v, 1.0]).unwrap();
+                        if (s - (v - 2.0)).abs() < 1e-5 {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        drop(client);
+        let stats = svc.run(None).unwrap();
+        let total: usize = workers.into_iter().map(|w| w.join().unwrap()).sum();
+        assert_eq!(total, 200);
+        assert_eq!(stats.requests, 200);
+        assert!(stats.batches <= 200);
+        assert!(stats.latency.count() == 200);
+    }
+
+    #[test]
+    fn batch_fill_metric() {
+        let mut s = ServiceStats { requests: 100, batches: 10, ..Default::default() };
+        assert_eq!(s.mean_batch_fill(), 10.0);
+        s.batches = 0;
+        assert_eq!(s.mean_batch_fill(), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Sharded one-pass training: S worker threads each consume a disjoint
+//! sub-stream with Algorithm 1, and the final balls merge pairwise into
+//! one model (closed-form two-ball MEB) — the natural distributed
+//! extension of the streaming coordinator.
+//!
+//! Slack masses of distinct shards live on disjoint stream indices, so
+//! the two-ball merge geometry of `svm::multiball` applies exactly. The
+//! merged ball encloses every shard ball, hence (transitively) every
+//! streamed point in the augmented space; the price is the same kind of
+//! radius slack the lookahead analysis bounds.
+
+use std::sync::mpsc::sync_channel;
+
+use crate::data::Example;
+use crate::error::{Error, Result};
+use crate::svm::ball::BallState;
+use crate::svm::multiball::merge_balls;
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::TrainOptions;
+
+/// Report of a sharded run.
+#[derive(Debug)]
+pub struct ShardedReport {
+    pub model: StreamSvm,
+    /// Final per-shard balls (pre-merge), for diagnostics.
+    pub shard_radii: Vec<f64>,
+    pub examples: usize,
+}
+
+/// Train over `source` with `shards` parallel one-pass learners
+/// (round-robin dispatch, bounded per-shard queues for backpressure).
+pub fn train_sharded<I>(
+    source: I,
+    dim: usize,
+    shards: usize,
+    opts: TrainOptions,
+    queue: usize,
+) -> Result<ShardedReport>
+where
+    I: Iterator<Item = Example>,
+{
+    assert!(shards >= 1);
+    let mut senders = Vec::with_capacity(shards);
+    let mut workers = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = sync_channel::<Example>(queue.max(1));
+        senders.push(tx);
+        workers.push(std::thread::spawn(move || {
+            let mut model: Option<StreamSvm> = None;
+            for e in rx.iter() {
+                let m = model.get_or_insert_with(|| StreamSvm::new(e.x.len(), opts));
+                m.observe(&e.x, e.y);
+            }
+            model
+        }));
+    }
+    let mut n = 0usize;
+    for (i, e) in source.enumerate() {
+        n += 1;
+        senders[i % shards]
+            .send(e)
+            .map_err(|_| Error::Pipeline("shard worker hung up".into()))?;
+    }
+    drop(senders);
+    let mut balls: Vec<BallState> = Vec::new();
+    for w in workers {
+        let model = w.join().map_err(|_| Error::Pipeline("shard worker panicked".into()))?;
+        if let Some(m) = model {
+            if let Some(b) = m.ball() {
+                balls.push(b.clone());
+            }
+        }
+    }
+    if balls.is_empty() {
+        return Err(Error::Pipeline("empty stream".into()));
+    }
+    let shard_radii: Vec<f64> = balls.iter().map(|b| b.r).collect();
+    let merged = merge_balls(&balls).expect("non-empty");
+    let mut model = StreamSvm::new(dim, opts);
+    model.set_ball(merged, n);
+    Ok(ShardedReport { model, shard_radii, examples: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::accuracy;
+    use crate::prop::gen;
+    use crate::rng::Pcg32;
+
+    fn toy(n: usize, d: usize, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, 1.0);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    #[test]
+    fn sharded_matches_single_shard_semantics() {
+        let exs = toy(500, 6, 1);
+        let opts = TrainOptions::default();
+        let one = train_sharded(exs.clone().into_iter(), 6, 1, opts, 8).unwrap();
+        let direct = StreamSvm::fit(exs.iter(), 6, &opts);
+        assert_eq!(one.model.weights(), direct.weights());
+        assert_eq!(one.examples, 500);
+    }
+
+    #[test]
+    fn sharded_accuracy_close_to_single() {
+        let exs = toy(4000, 8, 2);
+        let opts = TrainOptions::default();
+        let single = train_sharded(exs.clone().into_iter(), 8, 1, opts, 8).unwrap();
+        let four = train_sharded(exs.clone().into_iter(), 8, 4, opts, 8).unwrap();
+        let (a1, a4) = (accuracy(&single.model, &exs), accuracy(&four.model, &exs));
+        assert_eq!(four.shard_radii.len(), 4);
+        assert!(a4 > a1 - 0.08, "sharded {a4:.3} vs single {a1:.3}");
+    }
+
+    #[test]
+    fn merged_radius_dominates_shards() {
+        let exs = toy(1000, 4, 3);
+        let rep = train_sharded(exs.into_iter(), 4, 3, TrainOptions::default(), 4).unwrap();
+        let max_shard = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
+        assert!(rep.model.radius() + 1e-9 >= max_shard);
+    }
+
+    #[test]
+    fn empty_stream_errors() {
+        let err = train_sharded(std::iter::empty(), 3, 2, TrainOptions::default(), 2);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Stream sources: in-memory (with deterministic permutation), lazy
+//! LIBSVM file streaming, and rate metering hooks.
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use crate::data::{Dataset, Example};
+use crate::error::Result;
+use crate::rng::Pcg32;
+
+/// An owned in-memory stream, optionally order-permuted (the paper
+/// averages every experiment over random stream orders).
+pub struct VecStream {
+    examples: Vec<Example>,
+    order: Vec<usize>,
+    pos: usize,
+}
+
+impl VecStream {
+    /// Stream in stored order.
+    pub fn new(examples: Vec<Example>) -> Self {
+        let order = (0..examples.len()).collect();
+        VecStream { examples, order, pos: 0 }
+    }
+
+    /// Stream in a seeded random permutation of the stored order.
+    pub fn permuted(examples: Vec<Example>, seed: u64) -> Self {
+        let order = Pcg32::new(seed, 0x0DE8).permutation(examples.len());
+        VecStream { examples, order, pos: 0 }
+    }
+
+    /// Borrowing constructor over a dataset's training split.
+    pub fn of_train(ds: &Dataset, perm_seed: Option<u64>) -> Self {
+        match perm_seed {
+            Some(s) => Self::permuted(ds.train.clone(), s),
+            None => Self::new(ds.train.clone()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+}
+
+impl Iterator for VecStream {
+    type Item = Example;
+
+    fn next(&mut self) -> Option<Example> {
+        let i = *self.order.get(self.pos)?;
+        self.pos += 1;
+        Some(self.examples[i].clone())
+    }
+}
+
+/// Lazy one-pass LIBSVM file stream — the genuinely disk-resident case
+/// from the paper's motivation (§1). Lines parse on demand; the file is
+/// never materialized. Dimension must be known up front (`dim`).
+pub struct FileStream<R: std::io::Read> {
+    reader: BufReader<R>,
+    dim: usize,
+    line: String,
+    lineno: usize,
+}
+
+impl FileStream<std::fs::File> {
+    pub fn open(path: &Path, dim: usize) -> Result<Self> {
+        Ok(FileStream {
+            reader: BufReader::new(std::fs::File::open(path)?),
+            dim,
+            line: String::new(),
+            lineno: 0,
+        })
+    }
+}
+
+impl<R: std::io::Read> FileStream<R> {
+    pub fn from_reader(r: R, dim: usize) -> Self {
+        FileStream { reader: BufReader::new(r), dim, line: String::new(), lineno: 0 }
+    }
+}
+
+impl<R: std::io::Read> Iterator for FileStream<R> {
+    type Item = Example;
+
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            self.line.clear();
+            self.lineno += 1;
+            if self.reader.read_line(&mut self.line).ok()? == 0 {
+                return None;
+            }
+            let t = self.line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let label: f64 = it.next()?.parse().ok()?;
+            let mut x = vec![0.0f32; self.dim];
+            for tok in it {
+                let (i, v) = tok.split_once(':')?;
+                let idx: usize = i.parse().ok()?;
+                if idx == 0 || idx > self.dim {
+                    continue;
+                }
+                x[idx - 1] = v.parse().ok()?;
+            }
+            return Some(Example::new(x, if label > 0.0 { 1.0 } else { -1.0 }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exs(n: usize) -> Vec<Example> {
+        (0..n)
+            .map(|i| Example::new(vec![i as f32], if i % 2 == 0 { 1.0 } else { -1.0 }))
+            .collect()
+    }
+
+    #[test]
+    fn vec_stream_preserves_order() {
+        let got: Vec<f32> = VecStream::new(exs(5)).map(|e| e.x[0]).collect();
+        assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn permuted_stream_is_permutation() {
+        let mut got: Vec<f32> = VecStream::permuted(exs(50), 3).map(|e| e.x[0]).collect();
+        assert_ne!(got, (0..50).map(|i| i as f32).collect::<Vec<_>>());
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, (0..50).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn permutation_deterministic_per_seed() {
+        let a: Vec<f32> = VecStream::permuted(exs(20), 7).map(|e| e.x[0]).collect();
+        let b: Vec<f32> = VecStream::permuted(exs(20), 7).map(|e| e.x[0]).collect();
+        let c: Vec<f32> = VecStream::permuted(exs(20), 8).map(|e| e.x[0]).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn file_stream_parses_lazily() {
+        let text = "+1 1:0.5 3:1.5\n# comment\n-1 2:2.0\n";
+        let got: Vec<Example> = FileStream::from_reader(text.as_bytes(), 3).collect();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].x, vec![0.5, 0.0, 1.5]);
+        assert_eq!(got[1].y, -1.0);
+    }
+
+    #[test]
+    fn file_stream_ignores_out_of_range_indices() {
+        let got: Vec<Example> = FileStream::from_reader("+1 99:1.0 1:2.0\n".as_bytes(), 2).collect();
+        assert_eq!(got[0].x, vec![2.0, 0.0]);
+    }
+}

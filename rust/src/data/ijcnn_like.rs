@@ -1,0 +1,97 @@
+//! Simulated IJCNN-2001-like dataset: 22 dims, 35,000/91,701, ~9.7%
+//! positives.
+//!
+//! The real IJCNN task (engine misfire detection from time-series-derived
+//! features) is unavailable offline. The regime that matters for Table 1:
+//! heavy class imbalance (majority rate ≈ 90.3%), a mildly *nonlinear*
+//! positive region so that a good linear batch solver only just beats the
+//! majority class (paper: 91.64), while order-sensitive single-pass
+//! learners land anywhere between 64 and 89. We simulate with an AR(1)
+//! latent process (temporal correlation — it *is* a stream) whose
+//! positives fire when a quadratic radius condition holds.
+
+use super::{Dataset, Example};
+use crate::rng::Pcg32;
+
+const DIM: usize = 22;
+
+fn gen_split(rng: &mut Pcg32, n: usize) -> Vec<Example> {
+    let mut state = vec![0.0f64; DIM];
+    for s in state.iter_mut() {
+        *s = rng.normal();
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // AR(1) evolution: consecutive stream examples are correlated.
+        for s in state.iter_mut() {
+            *s = 0.6 * *s + 0.8 * rng.normal();
+        }
+        // Positive region: a shifted shell in the first few coordinates,
+        // plus a linear tilt so a linear model captures *part* of it.
+        let r2: f64 = state[..4].iter().map(|v| v * v).sum();
+        let tilt: f64 = state[..8].iter().sum::<f64>() / 8.0;
+        let score = 0.8 * (r2 - 5.2) + 1.4 * tilt + 0.35 * rng.normal();
+        let y = if score > 2.1 { 1.0 } else { -1.0 };
+        // Physical-sensor scaling: the real IJCNN features are bounded
+        // (LIBSVM-scaled) measurements with a non-zero mean. Both
+        // properties matter: the offset lets an *unbiased* linear model
+        // (the paper's setting) express the 90%-negative majority class,
+        // and the bounded range keeps the rare positives from being
+        // geometric norm-outliers that would hijack any MEB-based
+        // learner (they are not outliers in the real data either).
+        let x: Vec<f32> = state.iter().map(|&v| (1.5 + 1.2 * (v * 0.5).tanh()) as f32).collect();
+        out.push(Example::new(x, y));
+    }
+    out
+}
+
+/// IJCNN-like: 35,000 train / 91,701 test, ≈9–10% positives.
+pub fn ijcnn_like(seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x13C);
+    let train = gen_split(&mut rng, 35_000);
+    let test = gen_split(&mut rng, 91_701);
+    Dataset::new("ijcnn", DIM, train, test)
+}
+
+/// Reduced-size variant for tests.
+pub fn ijcnn_small(seed: u64, n_train: usize, n_test: usize) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x13C);
+    let train = gen_split(&mut rng, n_train);
+    let test = gen_split(&mut rng, n_test);
+    Dataset::new("ijcnn_s", DIM, train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_matches_regime() {
+        let ds = ijcnn_small(1, 20_000, 1000);
+        let rate = ds.positive_rate();
+        assert!((0.06..0.14).contains(&rate), "positive rate {rate}");
+    }
+
+    #[test]
+    fn temporal_correlation_exists() {
+        // Adjacent examples share the AR(1) state: feature-0 lag-1
+        // autocorrelation should be clearly positive.
+        let ds = ijcnn_small(2, 5000, 10);
+        let xs: Vec<f64> = ds.train.iter().map(|e| e.x[0] as f64).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|v| (v - mean) * (v - mean)).sum();
+        let cov: f64 = xs.windows(2).map(|w| (w[0] - mean) * (w[1] - mean)).sum();
+        let rho = cov / var;
+        assert!(rho > 0.3, "lag-1 autocorrelation {rho}");
+    }
+
+    #[test]
+    fn full_sizes() {
+        // Just the arithmetic, not the full allocation: sizes come from
+        // Table 1.
+        let ds = ijcnn_small(3, 350, 917);
+        assert_eq!(ds.dim, 22);
+        assert_eq!(ds.train.len(), 350);
+        assert_eq!(ds.test.len(), 917);
+    }
+}

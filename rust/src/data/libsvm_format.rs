@@ -1,0 +1,168 @@
+//! LIBSVM sparse-format parser, so real MNIST/IJCNN/w3a files can replace
+//! the simulated generators without code changes.
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with 1-based
+//! indices. Labels are mapped to ±1 (`0`/`-1` → −1, anything positive →
+//! +1, two-class multi-label files can be filtered with [`parse_pair`]).
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use super::{Dataset, Example};
+use crate::error::{Error, Result};
+
+/// Parse one LIBSVM line into `(raw_label, sparse pairs)`.
+fn parse_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(usize, f32)>)>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut it = line.split_whitespace();
+    let label: f64 = it
+        .next()
+        .unwrap()
+        .parse()
+        .map_err(|e| Error::data(format!("line {lineno}: bad label ({e})")))?;
+    let mut pairs = Vec::new();
+    for tok in it {
+        let (i, v) = tok
+            .split_once(':')
+            .ok_or_else(|| Error::data(format!("line {lineno}: token `{tok}` lacks `:`")))?;
+        let idx: usize = i
+            .parse()
+            .map_err(|e| Error::data(format!("line {lineno}: bad index ({e})")))?;
+        if idx == 0 {
+            return Err(Error::data(format!("line {lineno}: LIBSVM indices are 1-based")));
+        }
+        let val: f32 = v
+            .parse()
+            .map_err(|e| Error::data(format!("line {lineno}: bad value ({e})")))?;
+        pairs.push((idx - 1, val));
+    }
+    Ok(Some((label, pairs)))
+}
+
+/// Read all examples from a LIBSVM reader; densifies to the max index
+/// (or `force_dim` if larger).
+pub fn read_examples<R: Read>(r: R, force_dim: Option<usize>) -> Result<Vec<Example>> {
+    let reader = BufReader::new(r);
+    let mut rows: Vec<(f64, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_dim = force_dim.unwrap_or(0);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if let Some((label, pairs)) = parse_line(&line, lineno + 1)? {
+            if let Some(&(idx, _)) = pairs.iter().max_by_key(|&&(i, _)| i) {
+                max_dim = max_dim.max(idx + 1);
+            }
+            rows.push((label, pairs));
+        }
+    }
+    Ok(rows
+        .into_iter()
+        .map(|(label, pairs)| {
+            let mut x = vec![0.0f32; max_dim];
+            for (i, v) in pairs {
+                x[i] = v;
+            }
+            Example::new(x, if label > 0.0 { 1.0 } else { -1.0 })
+        })
+        .collect())
+}
+
+/// Load a train/test pair of LIBSVM files as a [`Dataset`].
+pub fn load_files(
+    name: &str,
+    train_path: &Path,
+    test_path: &Path,
+    force_dim: Option<usize>,
+) -> Result<Dataset> {
+    let train = read_examples(std::fs::File::open(train_path)?, force_dim)?;
+    let dim = force_dim
+        .unwrap_or_else(|| train.iter().map(|e| e.dim()).max().unwrap_or(0));
+    let mut train = train;
+    pad_to(&mut train, dim);
+    let mut test = read_examples(std::fs::File::open(test_path)?, Some(dim))?;
+    pad_to(&mut test, dim);
+    Ok(Dataset::new(name, dim, train, test))
+}
+
+/// For multi-class files: keep labels `a` (→ +1) and `b` (→ −1) only.
+pub fn parse_pair<R: Read>(r: R, a: f64, b: f64, force_dim: Option<usize>) -> Result<Vec<Example>> {
+    let reader = BufReader::new(r);
+    let mut rows = Vec::new();
+    let mut max_dim = force_dim.unwrap_or(0);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if let Some((label, pairs)) = parse_line(&line, lineno + 1)? {
+            if label != a && label != b {
+                continue;
+            }
+            if let Some(&(idx, _)) = pairs.iter().max_by_key(|&&(i, _)| i) {
+                max_dim = max_dim.max(idx + 1);
+            }
+            rows.push((label, pairs));
+        }
+    }
+    Ok(rows
+        .into_iter()
+        .map(|(label, pairs)| {
+            let mut x = vec![0.0f32; max_dim];
+            for (i, v) in pairs {
+                x[i] = v;
+            }
+            Example::new(x, if label == a { 1.0 } else { -1.0 })
+        })
+        .collect())
+}
+
+fn pad_to(examples: &mut [Example], dim: usize) {
+    for e in examples.iter_mut() {
+        if e.x.len() < dim {
+            e.x.resize(dim, 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n\n# comment\n+1 1:1.0\n";
+        let ex = read_examples(text.as_bytes(), None).unwrap();
+        assert_eq!(ex.len(), 3);
+        assert_eq!(ex[0].x, vec![0.5, 0.0, 1.5]);
+        assert_eq!(ex[0].y, 1.0);
+        assert_eq!(ex[1].x, vec![0.0, 2.0, 0.0]);
+        assert_eq!(ex[1].y, -1.0);
+    }
+
+    #[test]
+    fn zero_label_is_negative() {
+        let ex = read_examples("0 1:1\n".as_bytes(), None).unwrap();
+        assert_eq!(ex[0].y, -1.0);
+    }
+
+    #[test]
+    fn force_dim_pads() {
+        let ex = read_examples("+1 1:1\n".as_bytes(), Some(5)).unwrap();
+        assert_eq!(ex[0].x.len(), 5);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read_examples("+1 nocolon\n".as_bytes(), None).is_err());
+        assert!(read_examples("+1 0:1\n".as_bytes(), None).is_err());
+        assert!(read_examples("notanumber 1:1\n".as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn pair_filter() {
+        let text = "8 1:1\n9 2:1\n3 3:1\n8 1:2\n";
+        let ex = parse_pair(text.as_bytes(), 8.0, 9.0, None).unwrap();
+        assert_eq!(ex.len(), 3);
+        assert_eq!(ex[0].y, 1.0);
+        assert_eq!(ex[1].y, -1.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Dataset substrates for the paper's evaluation (Table 1).
+//!
+//! The paper evaluates on Synthetic A/B/C, Waveform, two MNIST digit
+//! pairs, IJCNN and w3a. Synthetic A/B/C and Waveform are generators by
+//! definition and are regenerated faithfully; MNIST/IJCNN/w3a are not
+//! available in this offline environment, so `mnist_like` / `ijcnn_like` /
+//! `w3a_like` build structured simulated equivalents that preserve the
+//! dimensionality, class balance and difficulty regime (see DESIGN.md §2).
+//! Real data in LIBSVM format can be substituted via [`libsvm_format`].
+
+pub mod ijcnn_like;
+pub mod libsvm_format;
+pub mod mnist_like;
+pub mod registry;
+pub mod synthetic;
+pub mod w3a_like;
+pub mod waveform;
+
+/// One labeled example: a dense feature vector and a ±1 label.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub x: Vec<f32>,
+    pub y: f32,
+}
+
+impl Example {
+    pub fn new(x: Vec<f32>, y: f32) -> Self {
+        debug_assert!(y == 1.0 || y == -1.0, "labels must be ±1, got {y}");
+        Example { x, y }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+}
+
+/// A train/test split with metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, dim: usize, train: Vec<Example>, test: Vec<Example>) -> Self {
+        let ds = Dataset { name: name.into(), dim, train, test };
+        debug_assert!(ds.train.iter().chain(ds.test.iter()).all(|e| e.dim() == ds.dim));
+        ds
+    }
+
+    /// Fraction of positive labels in the training split.
+    pub fn positive_rate(&self) -> f64 {
+        let pos = self.train.iter().filter(|e| e.y > 0.0).count();
+        pos as f64 / self.train.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_dim() {
+        let e = Example::new(vec![1.0, 2.0], 1.0);
+        assert_eq!(e.dim(), 2);
+    }
+
+    #[test]
+    fn positive_rate() {
+        let mk = |y| Example::new(vec![0.0], y);
+        let ds = Dataset::new("t", 1, vec![mk(1.0), mk(-1.0), mk(-1.0), mk(-1.0)], vec![]);
+        assert_eq!(ds.positive_rate(), 0.25);
+    }
+}

@@ -1,0 +1,71 @@
+//! Name-based dataset registry shared by the CLI, examples and benches.
+//!
+//! `load_dataset("mnist89", seed)` returns the Table-1 sized dataset;
+//! `load_dataset_sized` scales the split down for fast tests. Real LIBSVM
+//! files can be injected with `file:<name>:<train>:<test>` specs.
+
+use std::path::Path;
+
+use super::{
+    ijcnn_like, libsvm_format, mnist_like, synthetic, w3a_like, waveform, Dataset,
+};
+use crate::error::{Error, Result};
+
+/// All built-in Table-1 dataset names, in the paper's row order.
+pub const TABLE1_NAMES: [&str; 8] = [
+    "synthA", "synthB", "synthC", "waveform", "mnist01", "mnist89", "ijcnn", "w3a",
+];
+
+/// Load a dataset by registry name at the paper's full size.
+pub fn load_dataset(name: &str, seed: u64) -> Result<Dataset> {
+    if let Some(rest) = name.strip_prefix("file:") {
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() != 3 {
+            return Err(Error::config(format!(
+                "file spec must be file:<name>:<train>:<test>, got `{name}`"
+            )));
+        }
+        return libsvm_format::load_files(parts[0], Path::new(parts[1]), Path::new(parts[2]), None);
+    }
+    match name {
+        "synthA" => Ok(synthetic::synth_a(seed)),
+        "synthB" => Ok(synthetic::synth_b(seed)),
+        "synthC" => Ok(synthetic::synth_c(seed)),
+        "waveform" => Ok(waveform::waveform(seed)),
+        "mnist01" => Ok(mnist_like::mnist01(seed)),
+        "mnist89" => Ok(mnist_like::mnist89(seed)),
+        "ijcnn" => Ok(ijcnn_like::ijcnn_like(seed)),
+        "w3a" => Ok(w3a_like::w3a_like(seed)),
+        other => Err(Error::data(format!("unknown dataset `{other}`"))),
+    }
+}
+
+/// Load a size-reduced variant (for tests and smoke runs): `frac` scales
+/// the train split, test capped at 1000.
+pub fn load_dataset_sized(name: &str, seed: u64, frac: f64) -> Result<Dataset> {
+    let mut ds = load_dataset(name, seed)?;
+    let n_train = ((ds.train.len() as f64 * frac) as usize).max(16);
+    ds.train.truncate(n_train);
+    ds.test.truncate(1000);
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve_small() {
+        for name in TABLE1_NAMES {
+            let ds = load_dataset_sized(name, 7, 0.01).unwrap();
+            assert!(!ds.train.is_empty(), "{name}");
+            assert!(!ds.test.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(load_dataset("nope", 1).is_err());
+        assert!(load_dataset("file:bad", 1).is_err());
+    }
+}

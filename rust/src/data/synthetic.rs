@@ -1,0 +1,118 @@
+//! Synthetic A / B / C: the paper's own generators.
+//!
+//! Table 1 describes them as "normally distributed clusters ... of about
+//! 85% separability" with dims 2 / 3 / 5 and 20,000 train / 200 test.
+//! The three reported accuracy spreads differ sharply (A: everything
+//! ≈96%, B: everything ≈66%, C: batch 93 but single-pass baselines
+//! 55–77), so we tune the three constructions to land in those regimes:
+//!
+//! * **A (2-d)** — two well-separated isotropic Gaussians: easy for every
+//!   method.
+//! * **B (3-d)** — heavily overlapping Gaussians: Bayes-limited around
+//!   two-thirds accuracy for every method.
+//! * **C (5-d)** — separable mean shift confined to one direction, with
+//!   large-variance distractor directions and a small label flip: linear
+//!   batch solvers reach the low 90s, while aggressive single-pass
+//!   updates get dragged by the distractor variance.
+
+use super::{Dataset, Example};
+use crate::rng::Pcg32;
+
+fn gaussian_pair(
+    rng: &mut Pcg32,
+    n: usize,
+    mean: &[f64],
+    sds: &[f64],
+    flip: f64,
+) -> Vec<Example> {
+    let d = mean.len();
+    (0..n)
+        .map(|_| {
+            let mut y = rng.label(0.5);
+            let x: Vec<f32> = (0..d)
+                .map(|j| (rng.normal() * sds[j] + y as f64 * mean[j]) as f32)
+                .collect();
+            if rng.bernoulli(flip) {
+                y = -y;
+            }
+            Example::new(x, y)
+        })
+        .collect()
+}
+
+/// Synthetic A: 2-d, 20k/200, ≈96% linearly attainable.
+pub fn synth_a(seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0xA);
+    let mean = [1.25, 1.25];
+    let sds = [1.0, 1.0];
+    let train = gaussian_pair(&mut rng, 20_000, &mean, &sds, 0.0);
+    let test = gaussian_pair(&mut rng, 200, &mean, &sds, 0.0);
+    Dataset::new("synthA", 2, train, test)
+}
+
+/// Synthetic B: 3-d, 20k/200, Bayes-limited ≈66%.
+pub fn synth_b(seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0xB);
+    let mean = [0.25, 0.25, 0.25];
+    let sds = [1.0, 1.0, 1.0];
+    let train = gaussian_pair(&mut rng, 20_000, &mean, &sds, 0.0);
+    let test = gaussian_pair(&mut rng, 200, &mean, &sds, 0.0);
+    Dataset::new("synthB", 3, train, test)
+}
+
+/// Synthetic C: 5-d, 20k/200 — separable along one axis, noisy elsewhere.
+pub fn synth_c(seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0xC);
+    let mean = [1.6, 0.0, 0.0, 0.0, 0.0];
+    let sds = [1.0, 2.4, 2.4, 2.4, 2.4];
+    let train = gaussian_pair(&mut rng, 20_000, &mean, &sds, 0.03);
+    let test = gaussian_pair(&mut rng, 200, &mean, &sds, 0.03);
+    Dataset::new("synthC", 5, train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        for (ds, d) in [(synth_a(1), 2), (synth_b(1), 3), (synth_c(1), 5)] {
+            assert_eq!(ds.train.len(), 20_000);
+            assert_eq!(ds.test.len(), 200);
+            assert_eq!(ds.dim, d);
+            let rate = ds.positive_rate();
+            assert!((rate - 0.5).abs() < 0.03, "{}: rate={rate}", ds.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a1 = synth_a(9);
+        let a2 = synth_a(9);
+        assert_eq!(a1.train[17], a2.train[17]);
+        let a3 = synth_a(10);
+        assert_ne!(a1.train[17], a3.train[17]);
+    }
+
+    #[test]
+    fn a_is_easier_than_b() {
+        // The oracle direction (all-ones mean) classifies A far better
+        // than B — the regimes of Table 1 depend on this gap.
+        let acc = |ds: &Dataset, mean: &[f64]| {
+            let ok = ds
+                .test
+                .iter()
+                .filter(|e| {
+                    let s: f64 = e.x.iter().zip(mean).map(|(&xi, &m)| xi as f64 * m).sum();
+                    (s > 0.0) == (e.y > 0.0)
+                })
+                .count();
+            ok as f64 / ds.test.len() as f64
+        };
+        let a = synth_a(2);
+        let b = synth_b(2);
+        assert!(acc(&a, &[1.0, 1.0]) > 0.92);
+        let accb = acc(&b, &[1.0, 1.0, 1.0]);
+        assert!(accb > 0.55 && accb < 0.78, "b oracle acc={accb}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Simulated w3a-like dataset: 300 binary bag-of-words features,
+//! 44,837 train / 4,912 test, ≈3% positives, ~12 active features per row.
+//!
+//! w3a (web page categorization) is unavailable offline. The Table-1
+//! regime: sparse binary high-dim input with severe class skew, where the
+//! positive class is identified by a handful of indicator words that also
+//! occur (more rarely) in the background. Batch ℓ₂-SVM reaches ~98%,
+//! LASVM ~97, while unnormalized single-pass gradient methods (Pegasos
+//! k=1: 57.4!) collapse — driven by the skew, which this generator
+//! preserves.
+
+use super::{Dataset, Example};
+use crate::rng::Pcg32;
+
+const DIM: usize = 300;
+const POS_RATE: f64 = 0.03;
+/// Words 0..24 are positive indicators.
+const N_INDIC: usize = 25;
+
+fn gen_row(rng: &mut Pcg32, y: f32) -> Vec<f32> {
+    let mut x = vec![0.0f32; DIM];
+    // Background words: Zipf-ish — word w fires with prob ~ 3.5/(w+10),
+    // giving ≈12 active words per document in expectation.
+    let mut active = 0usize;
+    for w in 0..DIM {
+        let p = (3.5 / (w as f64 + 10.0)).min(0.30);
+        if rng.bernoulli(p) {
+            x[w] = 1.0;
+            active += 1;
+        }
+        if active > 24 {
+            break;
+        }
+    }
+    if y > 0.0 {
+        // Positive docs contain 2–5 indicator words.
+        let k = 2 + rng.below(4);
+        for _ in 0..k {
+            x[rng.below(N_INDIC)] = 1.0;
+        }
+    } else if rng.bernoulli(0.08) {
+        // Indicators appear occasionally in the background too.
+        x[rng.below(N_INDIC)] = 1.0;
+    }
+    x
+}
+
+fn gen_split(rng: &mut Pcg32, n: usize) -> Vec<Example> {
+    (0..n)
+        .map(|_| {
+            let y = rng.label(POS_RATE);
+            Example::new(gen_row(rng, y), y)
+        })
+        .collect()
+}
+
+/// w3a-like: 44,837 / 4,912, ≈3% positives.
+pub fn w3a_like(seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x3A);
+    let train = gen_split(&mut rng, 44_837);
+    let test = gen_split(&mut rng, 4_912);
+    Dataset::new("w3a", DIM, train, test)
+}
+
+/// Reduced-size variant for tests.
+pub fn w3a_small(seed: u64, n_train: usize, n_test: usize) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x3A);
+    let train = gen_split(&mut rng, n_train);
+    let test = gen_split(&mut rng, n_test);
+    Dataset::new("w3a_s", DIM, train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_and_sparsity() {
+        let ds = w3a_small(1, 10_000, 100);
+        let rate = ds.positive_rate();
+        assert!((0.02..0.05).contains(&rate), "positive rate {rate}");
+        let avg_active: f64 = ds
+            .train
+            .iter()
+            .map(|e| e.x.iter().filter(|&&v| v > 0.0).count() as f64)
+            .sum::<f64>()
+            / ds.train.len() as f64;
+        assert!((6.0..20.0).contains(&avg_active), "avg active {avg_active}");
+    }
+
+    #[test]
+    fn binary_features() {
+        let ds = w3a_small(2, 200, 10);
+        for e in &ds.train {
+            assert!(e.x.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn indicators_discriminate() {
+        let ds = w3a_small(3, 20_000, 10);
+        let mass = |y: f32| -> f64 {
+            let sel: Vec<_> = ds.train.iter().filter(|e| e.y == y).collect();
+            sel.iter()
+                .map(|e| e.x[..N_INDIC].iter().sum::<f32>() as f64)
+                .sum::<f64>()
+                / sel.len() as f64
+        };
+        assert!(mass(1.0) > mass(-1.0) + 1.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+/// Unified error for the StreamSVM crate.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Errors bubbling up from the PJRT runtime (`xla` crate).
+    #[error("xla runtime: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O (artifact files, dataset files).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Artifact registry problems: missing manifest entries, shape
+    /// mismatches between the requested block and the compiled bucket.
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Malformed dataset input (LIBSVM parser, registry names).
+    #[error("data: {0}")]
+    Data(String),
+
+    /// Invalid configuration (CLI, TrainOptions).
+    #[error("config: {0}")]
+    Config(String),
+
+    /// A pipeline stage disappeared (channel closed unexpectedly).
+    #[error("pipeline: {0}")]
+    Pipeline(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn data(msg: impl Into<String>) -> Self {
+        Error::Data(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}

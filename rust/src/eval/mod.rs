@@ -1,0 +1,141 @@
+//! Evaluation: classifier trait, accuracy/confusion metrics, and
+//! mean/std aggregation used by all experiment harnesses.
+
+use crate::data::Example;
+
+/// Anything that scores an example (sign of the score = predicted label).
+pub trait Classifier {
+    /// Raw margin; the predicted label is `score(x).signum()`.
+    fn score(&self, x: &[f32]) -> f64;
+
+    fn predict(&self, x: &[f32]) -> f32 {
+        if self.score(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// Accuracy of `model` over a slice of examples.
+pub fn accuracy<M: Classifier + ?Sized>(model: &M, examples: &[Example]) -> f64 {
+    if examples.is_empty() {
+        return 0.0;
+    }
+    let ok = examples
+        .iter()
+        .filter(|e| model.predict(&e.x) == e.y)
+        .count();
+    ok as f64 / examples.len() as f64
+}
+
+/// 2×2 confusion counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub tn: usize,
+    pub fp: usize,
+    pub fneg: usize,
+}
+
+impl Confusion {
+    pub fn of<M: Classifier + ?Sized>(model: &M, examples: &[Example]) -> Self {
+        let mut c = Confusion::default();
+        for e in examples {
+            match (model.predict(&e.x) > 0.0, e.y > 0.0) {
+                (true, true) => c.tp += 1,
+                (false, false) => c.tn += 1,
+                (true, false) => c.fp += 1,
+                (false, true) => c.fneg += 1,
+            }
+        }
+        c
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let n = self.tp + self.tn + self.fp + self.fneg;
+        if n == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / n as f64
+        }
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fneg == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fneg) as f64
+        }
+    }
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(f64);
+    impl Classifier for Fixed {
+        fn score(&self, _x: &[f32]) -> f64 {
+            self.0
+        }
+    }
+
+    struct FirstCoord;
+    impl Classifier for FirstCoord {
+        fn score(&self, x: &[f32]) -> f64 {
+            x[0] as f64
+        }
+    }
+
+    fn exs() -> Vec<Example> {
+        vec![
+            Example::new(vec![1.0], 1.0),
+            Example::new(vec![-1.0], -1.0),
+            Example::new(vec![2.0], -1.0),
+            Example::new(vec![-2.0], 1.0),
+        ]
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&FirstCoord, &exs()), 0.5);
+        assert_eq!(accuracy(&Fixed(1.0), &exs()), 0.5);
+        assert_eq!(accuracy(&Fixed(1.0), &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let c = Confusion::of(&FirstCoord, &exs());
+        assert_eq!(c, Confusion { tp: 1, tn: 1, fp: 1, fneg: 1 });
+        assert_eq!(c.accuracy(), 0.5);
+        assert_eq!(c.precision(), 0.5);
+        assert_eq!(c.recall(), 0.5);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,159 @@
+//! §6.1 / Figure 4: the adversarial and random-stream constructions
+//! showing that lookahead cannot beat the (1+√2)/2 lower bound or the
+//! 3/2 upper bound of the streaming MEB.
+//!
+//! Construction (Figure 4): (N−1)/2 points near (0, 1), (N−1)/2 near
+//! (0, −1), one singleton at (1+√2, 0). The streaming algorithm only
+//! beats the (1+√2)/2 ratio if the singleton arrives among the first L
+//! points — vanishingly unlikely as N grows with polylog L. We run the
+//! pure MEB case (slack disabled: C → ∞ so the augmented geometry
+//! degenerates to the plain ball) and report achieved-radius / optimal-
+//! radius ratios.
+
+use crate::bench_util::Table;
+use crate::eval::mean_std;
+use crate::rng::Pcg32;
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::{SlackMode, TrainOptions};
+
+/// Ratio statistics for one (algo, L) configuration.
+#[derive(Clone, Debug)]
+pub struct BoundsPoint {
+    pub l: usize,
+    pub order: &'static str,
+    pub mean_ratio: f64,
+    pub std_ratio: f64,
+    pub max_ratio: f64,
+}
+
+pub const LOWER_BOUND: f64 = 1.2071067811865475; // (1+√2)/2
+pub const UPPER_BOUND: f64 = 1.5;
+
+/// Near-slackless options: C huge ⇒ 1/C and s² ≈ 0, so the augmented MEB
+/// is the plain geometric MEB of the points.
+fn meb_opts(l: usize) -> TrainOptions {
+    TrainOptions::default()
+        .with_c(1e9)
+        .with_slack_mode(SlackMode::Consistent)
+        .with_lookahead(l)
+}
+
+/// The Figure-4 instance, all labels +1 (pure MEB).
+fn adversarial_instance(n: usize, jitter: f64, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+    let mut pts = Vec::with_capacity(n);
+    let half = (n - 1) / 2;
+    for _ in 0..half {
+        pts.push(vec![rng.normal_ms(0.0, jitter) as f32, (1.0 + rng.normal_ms(0.0, jitter)) as f32]);
+    }
+    for _ in 0..half {
+        pts.push(vec![rng.normal_ms(0.0, jitter) as f32, (-1.0 + rng.normal_ms(0.0, jitter)) as f32]);
+    }
+    pts.push(vec![(1.0 + std::f64::consts::SQRT_2) as f32, 0.0]);
+    pts
+}
+
+/// Exact optimal MEB radius of a small 2-d point set (dense search on the
+/// x-axis exploiting the construction's symmetry is NOT valid once points
+/// are jittered, so use Welzl-style exact solve via three-point
+/// circumscribed circles — n here is small).
+fn optimal_radius_2d(pts: &[Vec<f32>]) -> f64 {
+    // Badoiu-Clarkson with many iterations on raw points (s2 = 0) is
+    // accurate to ~1e-3 relative; sufficient for the ratio study.
+    let ys = vec![1.0f32; pts.len()];
+    let xrefs: Vec<&[f32]> = pts.iter().map(|p| p.as_slice()).collect();
+    let meb = crate::svm::meb::solve_meb_points(&xrefs, &ys, 0.0, 4000);
+    meb.r
+}
+
+/// Run the bounds study: adversarial order (singleton last) vs random
+/// order, for each lookahead L.
+pub fn run(n: usize, ls: &[usize], trials: usize, seed: u64) -> Vec<BoundsPoint> {
+    let mut out = Vec::new();
+    for &l in ls {
+        for order in ["adversarial", "random"] {
+            let mut ratios = Vec::with_capacity(trials);
+            for t in 0..trials {
+                let mut rng = Pcg32::new(seed + t as u64, 0xB0);
+                let mut pts = adversarial_instance(n, 0.01, &mut rng);
+                let opt = optimal_radius_2d(&pts);
+                match order {
+                    // singleton already last in construction; shuffle the
+                    // cloud only
+                    "adversarial" => {
+                        let last = pts.len() - 1;
+                        // shuffle all but the singleton
+                        for i in (1..last).rev() {
+                            let j = rng.below(i + 1);
+                            pts.swap(i, j);
+                        }
+                    }
+                    _ => rng.shuffle(&mut pts),
+                }
+                let opts = meb_opts(l);
+                let mut m = LookaheadSvm::new(2, opts);
+                for p in &pts {
+                    m.observe(p, 1.0);
+                }
+                m.finish();
+                ratios.push(m.radius() / opt);
+            }
+            let (mean, std) = mean_std(&ratios);
+            let max = ratios.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            out.push(BoundsPoint { l, order, mean_ratio: mean, std_ratio: std, max_ratio: max });
+        }
+    }
+    out
+}
+
+/// Print with the theoretical lines.
+pub fn print(points: &[BoundsPoint]) {
+    println!(
+        "theory: lower bound (1+√2)/2 = {LOWER_BOUND:.4}, upper bound 3/2 = {UPPER_BOUND}"
+    );
+    let mut t = Table::new(&["L", "order", "mean ratio", "std", "max ratio"]);
+    for p in points {
+        t.row(&[
+            p.l.to_string(),
+            p.order.to_string(),
+            format!("{:.4}", p.mean_ratio),
+            format!("{:.4}", p.std_ratio),
+            format!("{:.4}", p.max_ratio),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversarial_ratio_in_theory_band() {
+        let pts = run(201, &[1, 8], 4, 7);
+        for p in &pts {
+            // BC-approximate optimum + float noise: generous band around
+            // [1, 3/2]. The adversarial singleton-last order should sit
+            // near or above the lower bound.
+            assert!(
+                p.mean_ratio > 0.95 && p.mean_ratio < UPPER_BOUND + 0.08,
+                "{p:?}"
+            );
+            if p.order == "adversarial" {
+                assert!(p.mean_ratio > LOWER_BOUND - 0.12, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn instance_shape() {
+        let mut rng = Pcg32::seeded(1);
+        let pts = adversarial_instance(101, 0.0, &mut rng);
+        assert_eq!(pts.len(), 101);
+        let last = pts.last().unwrap();
+        assert!((last[0] as f64 - (1.0 + std::f64::consts::SQRT_2)).abs() < 1e-6);
+        // optimal radius: MEB of {(0,±1), (1+√2, 0)} — all three on the
+        // boundary; radius ≈ 1.414 (circumradius), sanity check > 1.2
+        let opt = optimal_radius_2d(&pts);
+        assert!(opt > 1.2 && opt < 1.7, "opt {opt}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Figure 2: how many passes over MNIST 8vs9 the batch CVM needs before
+//! it beats one StreamSVM pass.
+//!
+//! X axis: CVM passes (one pass per core vector). Y axis: test accuracy.
+//! Horizontal reference lines: single-pass StreamSVM Algo-1 and Algo-2.
+
+use crate::baselines::cvm::{Cvm, CvmOptions};
+use crate::bench_util::Table;
+use crate::data::registry::load_dataset_sized;
+use crate::error::Result;
+use crate::eval::{accuracy, Classifier};
+use crate::exp::ExpScale;
+use crate::linalg;
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::TrainOptions;
+
+/// Accuracy of a raw weight vector.
+struct W<'a>(&'a [f32]);
+impl Classifier for W<'_> {
+    fn score(&self, x: &[f32]) -> f64 {
+        linalg::dot(self.0, x)
+    }
+}
+
+/// The figure's data: CVM accuracy per pass + the StreamSVM lines.
+#[derive(Clone, Debug)]
+pub struct Fig2 {
+    pub dataset: String,
+    pub algo1_acc: f64,
+    pub algo2_acc: f64,
+    /// (pass, test accuracy, core-set size)
+    pub cvm_curve: Vec<(usize, f64, usize)>,
+    /// First pass where CVM ≥ Algo-2's single-pass accuracy (None if never).
+    pub passes_to_beat: Option<usize>,
+}
+
+/// Run Figure 2 on `dataset` (paper: mnist89) with a pass budget.
+pub fn run(dataset: &str, max_passes: usize, scale: &ExpScale) -> Result<Fig2> {
+    let ds = load_dataset_sized(dataset, scale.seed, scale.train_frac)?;
+    let c = crate::exp::table1::c_for(dataset);
+    let opts = TrainOptions::default().with_c(c);
+
+    let algo1 = StreamSvm::fit(ds.train.iter(), ds.dim, &opts);
+    let algo2 = LookaheadSvm::fit(ds.train.iter(), ds.dim, &opts.with_lookahead(10));
+    let algo1_acc = accuracy(&algo1, &ds.test);
+    let algo2_acc = accuracy(&algo2, &ds.test);
+
+    let mut curve = Vec::new();
+    let _ = Cvm::fit_tracked(
+        &ds.train,
+        ds.dim,
+        &CvmOptions {
+            train: opts,
+            eps: 1e-6,
+            max_passes,
+            ..Default::default()
+        },
+        |snap| {
+            let acc = accuracy(&W(&snap.w), &ds.test);
+            curve.push((snap.pass, acc, snap.coreset));
+        },
+    );
+    // CVM's accuracy oscillates while the core set grows; the paper's
+    // question is when it *sustainably* matches one StreamSVM pass, so we
+    // report the first pass after which it never drops below the target.
+    let target = algo2_acc;
+    let passes_to_beat = curve
+        .iter()
+        .rev()
+        .take_while(|(_, a, _)| *a >= target)
+        .last()
+        .map(|(p, _, _)| *p)
+        .filter(|&p| p < curve.last().map(|(q, _, _)| *q).unwrap_or(0) || curve.len() == 1);
+    Ok(Fig2 { dataset: ds.name, algo1_acc, algo2_acc, cvm_curve: curve, passes_to_beat })
+}
+
+/// Print the figure as a table (plus the headline number).
+pub fn print(f: &Fig2) {
+    println!(
+        "single-pass StreamSVM on {}: Algo-1 {:.2}%, Algo-2(L=10) {:.2}%",
+        f.dataset,
+        f.algo1_acc * 100.0,
+        f.algo2_acc * 100.0
+    );
+    let mut t = Table::new(&["CVM passes", "coreset", "accuracy %"]);
+    // thin the curve for printing: powers-of-two-ish passes + the last
+    let mut printed = 0usize;
+    for (p, a, cs) in &f.cvm_curve {
+        let show = p.is_power_of_two() || *p == f.cvm_curve.len() || *p <= 4;
+        if show {
+            t.row(&[p.to_string(), cs.to_string(), format!("{:.2}", a * 100.0)]);
+            printed += 1;
+        }
+    }
+    let _ = printed;
+    t.print();
+    match f.passes_to_beat {
+        Some(p) => println!(
+            "CVM needs {p} passes to reach StreamSVM's single-pass accuracy \
+             ({:.2}%)",
+            f.algo2_acc * 100.0
+        ),
+        None => println!(
+            "CVM did NOT reach StreamSVM's single-pass accuracy ({:.2}%) within \
+             the {}-pass budget",
+            f.algo2_acc * 100.0,
+            f.cvm_curve.len()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_curve_shape() {
+        let f = run("mnist89", 8, &ExpScale { train_frac: 0.02, runs: 1, seed: 3 }).unwrap();
+        assert!(!f.cvm_curve.is_empty());
+        assert!(f.cvm_curve.len() <= 8);
+        for w in f.cvm_curve.windows(2) {
+            assert_eq!(w[1].0, w[0].0 + 1); // consecutive passes
+            assert!(w[1].2 >= w[0].2); // core set grows
+        }
+        assert!((0.0..=1.0).contains(&f.algo1_acc));
+        assert!((0.0..=1.0).contains(&f.algo2_acc));
+    }
+}

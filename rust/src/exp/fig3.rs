@@ -1,0 +1,89 @@
+//! Figure 3: effect of the lookahead L on MNIST 8vs9 — mean ± std test
+//! accuracy over random permutations of the stream order, still one pass.
+//!
+//! The paper's two observations to reproduce: accuracy rises with L and
+//! converges by L ≈ 10, and the std over stream orders *shrinks* as L
+//! grows (lookahead buys robustness to bad orderings).
+
+use crate::bench_util::Table;
+use crate::data::registry::load_dataset_sized;
+use crate::data::Example;
+use crate::error::Result;
+use crate::eval::{accuracy, mean_std};
+use crate::exp::ExpScale;
+use crate::rng::Pcg32;
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::TrainOptions;
+
+/// Default L sweep (paper sweeps into the tens; 1 = Algorithm 1).
+pub const DEFAULT_LS: [usize; 8] = [1, 2, 3, 5, 10, 20, 50, 100];
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub l: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub mean_support: f64,
+}
+
+/// Run the sweep on `dataset` (paper: mnist89) with `perms` permutations
+/// per L (paper: 100).
+pub fn run(dataset: &str, ls: &[usize], perms: usize, scale: &ExpScale) -> Result<Vec<SweepPoint>> {
+    let ds = load_dataset_sized(dataset, scale.seed, scale.train_frac)?;
+    let c = crate::exp::table1::c_for(dataset);
+    let mut out = Vec::new();
+    for &l in ls {
+        let opts = TrainOptions::default().with_c(c).with_lookahead(l);
+        let mut accs = Vec::with_capacity(perms);
+        let mut supports = Vec::with_capacity(perms);
+        for p in 0..perms {
+            let mut order: Vec<usize> = (0..ds.train.len()).collect();
+            Pcg32::new(scale.seed + p as u64, 0xF16_3).shuffle(&mut order);
+            let stream: Vec<Example> = order.iter().map(|&i| ds.train[i].clone()).collect();
+            let model = LookaheadSvm::fit(stream.iter(), ds.dim, &opts);
+            accs.push(accuracy(&model, &ds.test));
+            supports.push(model.num_support() as f64);
+        }
+        let (mean, std) = mean_std(&accs);
+        let (mean_support, _) = mean_std(&supports);
+        out.push(SweepPoint { l, mean, std, mean_support });
+    }
+    Ok(out)
+}
+
+/// Print the sweep as the figure's table.
+pub fn print(points: &[SweepPoint]) {
+    let mut t = Table::new(&["L", "acc mean %", "acc std %", "mean #SV"]);
+    for p in points {
+        t.row(&[
+            p.l.to_string(),
+            format!("{:.2}", p.mean * 100.0),
+            format!("{:.2}", p.std * 100.0),
+            format!("{:.0}", p.mean_support),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweep() {
+        let pts = run(
+            "mnist89",
+            &[1, 5],
+            3,
+            &ExpScale { train_frac: 0.02, runs: 1, seed: 5 },
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!((0.0..=1.0).contains(&p.mean));
+            assert!(p.std >= 0.0);
+            assert!(p.mean_support >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Experiment harnesses regenerating every table and figure of the
+//! paper's evaluation (§5) plus the §6.1 bounds study. Shared between
+//! the CLI (`streamsvm table1` etc.) and the benches.
+
+pub mod bounds;
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+
+/// Global scale knobs so experiments run at paper size from the CLI and
+/// at smoke size from tests/benches.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpScale {
+    /// Fraction of each training split to use (1.0 = paper size).
+    pub train_frac: f64,
+    /// Stream-order repetitions to average over.
+    pub runs: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for ExpScale {
+    fn default() -> Self {
+        ExpScale { train_frac: 1.0, runs: 20, seed: 42 }
+    }
+}
+
+impl ExpScale {
+    pub fn smoke() -> Self {
+        ExpScale { train_frac: 0.05, runs: 3, seed: 42 }
+    }
+}

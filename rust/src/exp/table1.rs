@@ -1,0 +1,147 @@
+//! Table 1: single-pass classification accuracies of every algorithm on
+//! every dataset, averaged over random stream orders.
+//!
+//! Columns mirror the paper: libSVM(batch) [our dual-CD batch ℓ₂-SVM],
+//! Perceptron, Pegasos k=1, Pegasos k=20, LASVM, StreamSVM Algo-1,
+//! StreamSVM Algo-2 (L≈10).
+
+use crate::baselines::batch_l2svm::{BatchL2Svm, BatchL2SvmOptions};
+use crate::baselines::lasvm::{Lasvm, LasvmOptions};
+use crate::baselines::pegasos::{Pegasos, PegasosOptions};
+use crate::baselines::perceptron::Perceptron;
+use crate::bench_util::Table;
+use crate::data::registry::{load_dataset_sized, TABLE1_NAMES};
+use crate::data::{Dataset, Example};
+use crate::error::Result;
+use crate::eval::{accuracy, mean_std};
+use crate::exp::ExpScale;
+use crate::rng::Pcg32;
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::TrainOptions;
+
+/// All Table-1 columns.
+pub const ALGOS: [&str; 7] =
+    ["libSVM(b)", "Perceptron", "Pegasos k=1", "Pegasos k=20", "LASVM", "Algo-1", "Algo-2"];
+
+/// One dataset row: mean accuracy (and std over stream orders) per algo.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub dataset: String,
+    pub dim: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub acc: Vec<(f64, f64)>, // (mean, std) per ALGOS entry
+}
+
+fn permuted(train: &[Example], seed: u64) -> Vec<Example> {
+    let mut order: Vec<usize> = (0..train.len()).collect();
+    Pcg32::new(seed, 0x7AB1).shuffle(&mut order);
+    order.iter().map(|&i| train[i].clone()).collect()
+}
+
+/// Per-dataset C for the streaming algorithms (the paper tunes C per
+/// dataset; these were selected once on seed-0 training data only).
+pub fn c_for(name: &str) -> f64 {
+    match name {
+        "mnist01" | "mnist89" => 0.1,
+        "w3a" => 10.0,
+        _ => 1.0,
+    }
+}
+
+/// Run one dataset row.
+pub fn run_dataset(ds: &Dataset, scale: &ExpScale) -> Row {
+    let dim = ds.dim;
+    let c = c_for(&ds.name);
+    let opts1 = TrainOptions::default().with_c(c);
+    let opts2 = opts1.with_lookahead(10);
+
+    // batch solver sees the data once, in memory (order-insensitive).
+    let batch = BatchL2Svm::fit(
+        &ds.train,
+        dim,
+        &BatchL2SvmOptions { c, max_epochs: 200, tol: 1e-3, ..Default::default() },
+    );
+    let batch_acc = accuracy(&batch, &ds.test);
+
+    let mut per_algo: Vec<Vec<f64>> = vec![Vec::new(); ALGOS.len()];
+    per_algo[0].push(batch_acc);
+    for run in 0..scale.runs {
+        let stream = permuted(&ds.train, scale.seed + run as u64);
+        per_algo[1].push(accuracy(&Perceptron::fit(stream.iter(), dim), &ds.test));
+        // Pegasos regularization tied to the same per-dataset C the
+        // SVM solvers use: lambda = 1/(C N).
+        let lambda = Some(1.0 / (c * stream.len() as f64));
+        per_algo[2].push(accuracy(
+            &Pegasos::fit(&stream, dim, &PegasosOptions { k: 1, lambda }),
+            &ds.test,
+        ));
+        per_algo[3].push(accuracy(
+            &Pegasos::fit(&stream, dim, &PegasosOptions { k: 20, lambda }),
+            &ds.test,
+        ));
+        per_algo[4].push(accuracy(
+            &Lasvm::fit(stream.iter(), dim, &LasvmOptions { c, ..Default::default() }),
+            &ds.test,
+        ));
+        per_algo[5].push(accuracy(&StreamSvm::fit(stream.iter(), dim, &opts1), &ds.test));
+        per_algo[6].push(accuracy(&LookaheadSvm::fit(stream.iter(), dim, &opts2), &ds.test));
+    }
+    Row {
+        dataset: ds.name.clone(),
+        dim,
+        n_train: ds.train.len(),
+        n_test: ds.test.len(),
+        acc: per_algo.iter().map(|v| mean_std(v)).collect(),
+    }
+}
+
+/// Run the full table (all eight datasets).
+pub fn run(scale: &ExpScale) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for name in TABLE1_NAMES {
+        let ds = load_dataset_sized(name, scale.seed, scale.train_frac)?;
+        rows.push(run_dataset(&ds, scale));
+    }
+    Ok(rows)
+}
+
+/// Print rows in the paper's format.
+pub fn print(rows: &[Row]) {
+    let mut headers = vec!["Data Set", "Dim", "Train", "Test"];
+    headers.extend(ALGOS);
+    let mut t = Table::new(&headers);
+    for r in rows {
+        let mut cells = vec![
+            r.dataset.clone(),
+            r.dim.to_string(),
+            r.n_train.to_string(),
+            r.n_test.to_string(),
+        ];
+        cells.extend(r.acc.iter().map(|(m, _)| format!("{:.2}", m * 100.0)));
+        t.row(&cells);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry::load_dataset_sized;
+
+    #[test]
+    fn smoke_row_has_expected_shape_and_regime() {
+        let ds = load_dataset_sized("synthA", 1, 0.02).unwrap();
+        let row = run_dataset(&ds, &ExpScale { train_frac: 0.02, runs: 2, seed: 1 });
+        assert_eq!(row.acc.len(), ALGOS.len());
+        // On easy synthA even smoke-scale runs should separate well for
+        // the batch solver and StreamSVM.
+        assert!(row.acc[0].0 > 0.85, "batch acc {}", row.acc[0].0);
+        assert!(row.acc[5].0 > 0.80, "algo1 acc {}", row.acc[5].0);
+        for (m, s) in &row.acc {
+            assert!((0.0..=1.0).contains(m));
+            assert!(*s >= 0.0);
+        }
+    }
+}

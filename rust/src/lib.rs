@@ -1,0 +1,51 @@
+//! # StreamSVM — one-pass streaming ℓ₂-SVMs via minimum enclosing balls
+//!
+//! A production-shaped reproduction of *Rai, Daumé III, Venkatasubramanian:
+//! "Streamed Learning: One-Pass SVMs", IJCAI 2009*, built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — the distance / Gram / predict hot-spots
+//!   are Pallas kernels embedded in JAX graphs, AOT-lowered to HLO text
+//!   (`python/compile/`, `make artifacts`).
+//! * **Layer 3 (this crate)** — the streaming coordinator: stream sources,
+//!   shape-bucketed batching with backpressure, a block-filter training
+//!   pipeline, a batched prediction service, all the paper's algorithms
+//!   (Algorithm 1, Algorithm 2 with lookahead, kernelized, multiball) as
+//!   pure-Rust reference implementations, every baseline from the
+//!   evaluation (Perceptron, Pegasos, LASVM, CVM, batch ℓ₂-SVM), the
+//!   dataset substrates, and the experiment harnesses for Table 1 and
+//!   Figures 2–4.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary loads the HLO artifacts via PJRT (`xla` crate) and is
+//! self-contained.
+//!
+//! Quickstart (see also `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use streamsvm::data::registry::load_dataset;
+//! use streamsvm::svm::streamsvm::StreamSvm;
+//! use streamsvm::svm::TrainOptions;
+//! use streamsvm::eval::accuracy;
+//!
+//! let ds = load_dataset("synthA", 42).unwrap();
+//! let opts = TrainOptions::default();
+//! let model = StreamSvm::fit(ds.train.iter(), ds.dim, &opts);
+//! println!("test acc = {:.3}", accuracy(&model, &ds.test));
+//! ```
+
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod svm;
+
+pub use error::{Error, Result};

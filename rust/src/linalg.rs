@@ -1,0 +1,146 @@
+//! Dense f32 vector kernels for the Rust-side hot paths.
+//!
+//! The per-example StreamSVM update is O(D) vector work; these helpers are
+//! written so LLVM auto-vectorizes them (simple indexed loops over equal
+//! length slices, no bounds checks after the explicit `assert_eq!`).
+
+/// Dot product `<a, b>` in f64 accumulation (streamed sums over hundreds of
+/// f32 terms lose precision fast in f32; the ball geometry is sensitive
+/// near `d ≈ R`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// `||w - y x||^2` without materializing the difference (the inner loop of
+/// Algorithm 1, line 5).
+#[inline]
+pub fn sqdist_scaled(w: &[f32], x: &[f32], y: f32) -> f64 {
+    assert_eq!(w.len(), x.len());
+    let y = y as f64;
+    let mut acc = 0.0f64;
+    for i in 0..w.len() {
+        let d = w[i] as f64 - y * x[i] as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// `w += beta * (y x - w)`, i.e. `w = (1-beta) w + beta y x` (Algorithm 1,
+/// line 7).
+#[inline]
+pub fn blend_into(w: &mut [f32], x: &[f32], y: f32, beta: f32) {
+    assert_eq!(w.len(), x.len());
+    let omb = 1.0 - beta;
+    let by = beta * y;
+    for i in 0..w.len() {
+        w[i] = omb * w[i] + by * x[i];
+    }
+}
+
+/// `a += s * b`.
+#[inline]
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += s * b[i];
+    }
+}
+
+/// `a *= s`.
+#[inline]
+pub fn scale(a: &mut [f32], s: f32) {
+    for v in a.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Dense matvec `out[i] = <m[i], v>` for a row-major `(rows, cols)` matrix
+/// stored contiguously. Used by the pure-Rust fallback of the predict
+/// path and by tests that cross-check the PJRT executables.
+pub fn matvec(m: &[f32], rows: usize, cols: usize, v: &[f32], out: &mut [f32]) {
+    assert_eq!(m.len(), rows * cols);
+    assert_eq!(v.len(), cols);
+    assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        out[r] = dot(&m[r * cols..(r + 1) * cols], v) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sqdist_matches_naive() {
+        let w = [1.0f32, -2.0, 0.5];
+        let x = [0.5f32, 1.0, -1.0];
+        for y in [-1.0f32, 1.0] {
+            let naive: f64 = w
+                .iter()
+                .zip(x.iter())
+                .map(|(&wi, &xi)| (wi as f64 - y as f64 * xi as f64).powi(2))
+                .sum();
+            assert!((sqdist_scaled(&w, &x, y) - naive).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blend_into_convex() {
+        let mut w = vec![1.0f32, 1.0];
+        blend_into(&mut w, &[3.0, 5.0], 1.0, 0.5);
+        assert_eq!(w, vec![2.0, 3.0]);
+        // beta = 0 is a no-op
+        let mut w2 = vec![0.25f32, -0.75];
+        blend_into(&mut w2, &[9.0, 9.0], -1.0, 0.0);
+        assert_eq!(w2, vec![0.25, -0.75]);
+        // beta = 1 lands exactly on y x
+        let mut w3 = vec![0.0f32, 0.0];
+        blend_into(&mut w3, &[2.0, 4.0], -1.0, 1.0);
+        assert_eq!(w3, vec![-2.0, -4.0]);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = vec![1.0f32, 2.0];
+        axpy(&mut a, 2.0, &[3.0, 4.0]);
+        assert_eq!(a, vec![7.0, 10.0]);
+        scale(&mut a, 0.5);
+        assert_eq!(a, vec![3.5, 5.0]);
+    }
+
+    #[test]
+    fn matvec_small() {
+        let m = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let mut out = [0.0f32; 2];
+        matvec(&m, 2, 3, &[1.0, 0.0, -1.0], &mut out);
+        assert_eq!(out, [-2.0, -2.0]);
+    }
+
+    #[test]
+    fn f64_accumulation_beats_f32() {
+        // A catastrophic-cancellation-ish case: large equal components.
+        let n = 4096;
+        let a = vec![1000.0f32; n];
+        let b = vec![1e-3f32; n];
+        let got = dot(&a, &b);
+        assert!((got - n as f64).abs() < 1e-6 * n as f64);
+    }
+}

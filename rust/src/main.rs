@@ -1,0 +1,223 @@
+//! StreamSVM CLI — the leader entrypoint.
+//!
+//! ```text
+//! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
+//! streamsvm serve    --dataset mnist01 [--requests 5000] [--batch 64]
+//! streamsvm table1   [--frac 1.0] [--runs 20]
+//! streamsvm fig2     [--dataset mnist89] [--max-passes 512] [--frac 1.0]
+//! streamsvm fig3     [--dataset mnist89] [--perms 100] [--frac 1.0]
+//! streamsvm bounds   [--n 2001] [--trials 50]
+//! streamsvm gen-data --dataset synthA --out dir/
+//! streamsvm artifacts
+//! ```
+
+use std::io::Write as _;
+
+use streamsvm::cli::Args;
+use streamsvm::coordinator::pipeline::{train_stream, ExecMode, PipelineConfig};
+use streamsvm::coordinator::service::{PredictService, ServiceConfig};
+use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::registry::{load_dataset, load_dataset_sized};
+use streamsvm::error::{Error, Result};
+use streamsvm::eval::accuracy;
+use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
+use streamsvm::runtime::Runtime;
+use streamsvm::svm::{SlackMode, TrainOptions};
+
+fn train_opts(args: &Args) -> Result<TrainOptions> {
+    let mut o = TrainOptions::default()
+        .with_c(args.get("c", 1.0)?)
+        .with_lookahead(args.get("lookahead", 1usize)?);
+    o.slack_mode = match args.str("slack", "consistent").as_str() {
+        "paper" => SlackMode::Paper,
+        "consistent" => SlackMode::Consistent,
+        other => return Err(Error::config(format!("unknown slack mode `{other}`"))),
+    };
+    Ok(o)
+}
+
+fn open_runtime_opt(mode: ExecMode) -> Option<Runtime> {
+    if mode == ExecMode::Pure {
+        return None;
+    }
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("warning: {e}; falling back to pure mode");
+            None
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.str("dataset", "synthA");
+    let frac: f64 = args.get("frac", 1.0)?;
+    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, frac)?;
+    let mode = match args.str("mode", "filter").as_str() {
+        "filter" => ExecMode::Filter,
+        "scan" => ExecMode::Scan,
+        "pure" => ExecMode::Pure,
+        other => return Err(Error::config(format!("unknown mode `{other}`"))),
+    };
+    let train = train_opts(args)?;
+    // C defaults per dataset unless explicitly given
+    let train = if args.has("c") {
+        train
+    } else {
+        train.with_c(table1::c_for(&name))
+    };
+    let cfg = PipelineConfig { train, mode, block: None, queue: args.get("queue", 4usize)? };
+    let mut rt = open_runtime_opt(mode);
+    let cfg = if rt.is_none() && mode != ExecMode::Pure {
+        PipelineConfig { mode: ExecMode::Pure, ..cfg }
+    } else {
+        cfg
+    };
+    let perm: i64 = args.get("perm-seed", -1i64)?;
+    let stream = VecStream::of_train(&ds, (perm >= 0).then_some(perm as u64));
+    let report = train_stream(rt.as_mut(), stream, ds.dim, cfg)?;
+    println!("pipeline: {}", report.metrics.summary());
+    println!(
+        "model: R={:.4} supports={} | test acc = {:.2}%",
+        report.model.radius(),
+        report.model.num_support(),
+        accuracy(&report.model, &ds.test) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.str("dataset", "mnist01");
+    let ds = load_dataset_sized(&name, 42, args.get("frac", 0.25)?)?;
+    let train = TrainOptions::default().with_c(table1::c_for(&name));
+    let model = streamsvm::svm::streamsvm::StreamSvm::fit(ds.train.iter(), ds.dim, &train);
+    println!("trained on {}: {} supports", ds.name, model.num_support());
+    let n_req: usize = args.get("requests", 5000)?;
+    let batch: usize = args.get("batch", 64)?;
+    let svc = PredictService::new(
+        model.weights().to_vec(),
+        ServiceConfig { batch, ..Default::default() },
+    );
+    let client = svc.client();
+    let test = std::sync::Arc::new(ds.test.clone());
+    let workers: Vec<_> = (0..4)
+        .map(|k| {
+            let c = client.clone();
+            let test = test.clone();
+            std::thread::spawn(move || {
+                let mut correct = 0usize;
+                let mut total = 0usize;
+                for i in 0..n_req / 4 {
+                    let e = &test[(k * 31 + i * 7) % test.len()];
+                    let s = c.score(e.x.clone()).unwrap();
+                    total += 1;
+                    if (s >= 0.0) == (e.y > 0.0) {
+                        correct += 1;
+                    }
+                }
+                (correct, total)
+            })
+        })
+        .collect();
+    drop(client);
+    let mut rt = open_runtime_opt(ExecMode::Filter);
+    let stats = svc.run(rt.as_mut())?;
+    let (mut correct, mut total) = (0, 0);
+    for w in workers {
+        let (c, t) = w.join().unwrap();
+        correct += c;
+        total += t;
+    }
+    println!(
+        "served {} requests in {} batches (mean fill {:.1})",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch_fill()
+    );
+    println!("latency: {}", stats.latency.summary());
+    println!("serving accuracy: {:.2}%", correct as f64 / total as f64 * 100.0);
+    Ok(())
+}
+
+fn scale_from(args: &Args) -> Result<ExpScale> {
+    Ok(ExpScale {
+        train_frac: args.get("frac", 1.0)?,
+        runs: args.get("runs", 20)?,
+        seed: args.get("seed", 42)?,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args)?,
+        "serve" => cmd_serve(&args)?,
+        "table1" => {
+            let rows = table1::run(&scale_from(&args)?)?;
+            table1::print(&rows);
+        }
+        "fig2" => {
+            let f = fig2::run(
+                &args.str("dataset", "mnist89"),
+                args.get("max-passes", 512)?,
+                &scale_from(&args)?,
+            )?;
+            fig2::print(&f);
+        }
+        "fig3" => {
+            let mut scale = scale_from(&args)?;
+            scale.runs = 1;
+            let pts = fig3::run(
+                &args.str("dataset", "mnist89"),
+                &fig3::DEFAULT_LS,
+                args.get("perms", 100)?,
+                &scale,
+            )?;
+            fig3::print(&pts);
+        }
+        "bounds" => {
+            let pts = bounds::run(
+                args.get("n", 2001)?,
+                &[1, 2, 5, 10, 50],
+                args.get("trials", 50)?,
+                args.get("seed", 42)?,
+            );
+            bounds::print(&pts);
+        }
+        "gen-data" => {
+            let name = args.str("dataset", "synthA");
+            let out = args.str("out", ".");
+            let ds = load_dataset(&name, args.get("seed", 42)?)?;
+            std::fs::create_dir_all(&out)?;
+            for (split, exs) in [("train", &ds.train), ("test", &ds.test)] {
+                let path = format!("{out}/{name}.{split}.libsvm");
+                let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+                for e in exs {
+                    write!(f, "{}", if e.y > 0.0 { "+1" } else { "-1" })?;
+                    for (i, &v) in e.x.iter().enumerate() {
+                        if v != 0.0 {
+                            write!(f, " {}:{}", i + 1, v)?;
+                        }
+                    }
+                    writeln!(f)?;
+                }
+                println!("wrote {path} ({} examples)", exs.len());
+            }
+        }
+        "artifacts" => match Runtime::open_default() {
+            Ok(rt) => {
+                println!("artifact dir: {}", rt.artifact_dir().display());
+                for (e, b, d) in rt.available() {
+                    println!("  {e:<10} b={b:<4} d={d}");
+                }
+            }
+            Err(e) => println!("{e}"),
+        },
+        "help" | _ => {
+            println!("streamsvm — one-pass streaming l2-SVM (IJCAI'09 reproduction)");
+            println!("commands: train serve table1 fig2 fig3 bounds gen-data artifacts");
+            println!("see README.md for flags");
+        }
+    }
+    Ok(())
+}

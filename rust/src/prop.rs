@@ -1,0 +1,119 @@
+//! Minimal seeded property-testing driver.
+//!
+//! The offline image has no `proptest`; this module provides the subset we
+//! need: run a property over `n` generated cases from a deterministic
+//! seed, and on failure report the case index and seed so the exact case
+//! replays. Invariant suites across the crate (ball growth, enclosure,
+//! batcher conservation, pipeline equivalence, ...) are built on this.
+
+use crate::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(case_rng, case_index)` for `cfg.cases` cases. The property
+/// returns `Err(msg)` to signal failure. Panics with a replayable report.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Each case gets an independent, replayable stream.
+        let mut rng = Pcg32::new(cfg.seed.wrapping_add(case as u64), 1000 + case as u64);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property `{name}` failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand: `check` with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop)
+}
+
+/// Generator helpers used by the invariant suites.
+pub mod gen {
+    use crate::rng::Pcg32;
+
+    /// A random dense example matrix: `n` rows of dimension `d`, entries
+    /// N(0, scale²), optional per-class mean shift `sep` on labels.
+    pub fn labeled_points(
+        rng: &mut Pcg32,
+        n: usize,
+        d: usize,
+        scale: f64,
+        sep: f64,
+    ) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mu: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let y = rng.label(0.5);
+            let x: Vec<f32> = (0..d)
+                .map(|j| (rng.normal() * scale + y as f64 * sep * mu[j]) as f32)
+                .collect();
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    /// Random dimension from a menu of tile-edge cases.
+    pub fn dim(rng: &mut Pcg32) -> usize {
+        const MENU: [usize; 7] = [1, 2, 3, 5, 21, 64, 130];
+        MENU[rng.below(MENU.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check_default("trivial", |rng, _| {
+            let v = rng.uniform();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn check_reports_failure() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, seed: 1 },
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn labeled_points_shapes() {
+        let mut rng = Pcg32::seeded(1);
+        let (xs, ys) = gen::labeled_points(&mut rng, 10, 4, 1.0, 0.5);
+        assert_eq!(xs.len(), 10);
+        assert_eq!(ys.len(), 10);
+        assert!(xs.iter().all(|x| x.len() == 4));
+        assert!(ys.iter().all(|&y| y == 1.0 || y == -1.0));
+    }
+}

@@ -1,0 +1,351 @@
+//! The executor: manifest parsing, compile cache, typed entry points.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Key into the artifact manifest: `(entry, block, dim)`.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+struct Key {
+    entry: String,
+    b: usize,
+    d: usize,
+}
+
+/// Outputs of the `update` entry point (Algorithm-1 semantics over one
+/// block).
+#[derive(Clone, Debug)]
+pub struct UpdateOut {
+    pub w: Vec<f32>,
+    pub r: f64,
+    pub xi2: f64,
+    /// Updates applied within the block.
+    pub m_added: usize,
+    /// Per-row update mask.
+    pub upd_mask: Vec<f32>,
+    /// Per-row distance to the *entry* ball (the L1 kernel's output).
+    pub d0: Vec<f32>,
+}
+
+/// Outputs of the `merge` entry point (Algorithm-2 lookahead merge).
+#[derive(Clone, Debug)]
+pub struct MergeOut {
+    pub w: Vec<f32>,
+    pub r: f64,
+    pub xi2: f64,
+    pub mu: Vec<f32>,
+}
+
+
+/// Build a `(rows, cols)` f32 literal from a row-major slice with a single
+/// host copy (`vec1().reshape()` copies twice — measurable at 1 MB/block
+/// on the training hot path).
+fn matrix_literal(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[rows, cols],
+        bytes,
+    )
+    .map_err(Into::into)
+}
+
+/// PJRT runtime with artifact registry and compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<Key, PathBuf>,
+    cache: HashMap<Key, xla::PjRtLoadedExecutable>,
+    /// Prefer the CPU-optimized native-jnp artifact variants (`*f`) when
+    /// the manifest carries them. The Pallas-kernel artifacts stay
+    /// available for the TPU-structured path and the backend ablation.
+    prefer_fast: bool,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`; artifacts
+    /// compile lazily on first use).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest_path.display()
+            ))
+        })?;
+        let mut manifest = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                return Err(Error::artifact(format!(
+                    "manifest line {}: expected `entry b d file`, got `{line}`",
+                    lineno + 1
+                )));
+            }
+            let key = Key {
+                entry: parts[0].to_string(),
+                b: parts[1].parse().map_err(|e| Error::artifact(format!("bad b: {e}")))?,
+                d: parts[2].parse().map_err(|e| Error::artifact(format!("bad d: {e}")))?,
+            };
+            manifest.insert(key, dir.join(parts[3]));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+            prefer_fast: true,
+        })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&super::default_artifact_dir())
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All `(entry, b, d)` triples in the manifest.
+    pub fn available(&self) -> Vec<(String, usize, usize)> {
+        let mut v: Vec<_> = self.manifest.keys().map(|k| (k.entry.clone(), k.b, k.d)).collect();
+        v.sort();
+        v
+    }
+
+    /// Does the manifest have this bucket?
+    pub fn has(&self, entry: &str, b: usize, d: usize) -> bool {
+        self.manifest.contains_key(&Key { entry: entry.into(), b, d })
+    }
+
+    /// The default training block size compiled for dimension `d` (the
+    /// batcher asks this before shaping blocks). Returns the *smallest*
+    /// compiled bucket: small blocks keep the filter radius fresh on
+    /// short streams; the larger buckets are reachable via
+    /// [`Self::train_blocks`] for the amortization ablation.
+    pub fn train_block(&self, d: usize) -> Option<usize> {
+        self.train_blocks(d).first().copied()
+    }
+
+    /// All compiled training block sizes for dimension `d`, ascending.
+    pub fn train_blocks(&self, d: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .keys()
+            .filter(|k| k.entry == "update" && k.d == d)
+            .map(|k| k.b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Toggle backend kernel selection (see `prefer_fast`); returns the
+    /// previous value. Used by the throughput ablation.
+    pub fn set_prefer_fast(&mut self, on: bool) -> bool {
+        std::mem::replace(&mut self.prefer_fast, on)
+    }
+
+    /// Resolve `entry` to the backend-preferred variant present in the
+    /// manifest (`<entry>f` when prefer_fast and compiled, else `entry`).
+    fn resolve_entry(&self, entry: &str, b: usize, d: usize) -> String {
+        if self.prefer_fast {
+            let fast = format!("{entry}f");
+            if self.manifest.contains_key(&Key { entry: fast.clone(), b, d }) {
+                return fast;
+            }
+        }
+        entry.to_string()
+    }
+
+    fn exe(&mut self, entry: &str, b: usize, d: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let entry = self.resolve_entry(entry, b, d);
+        let key = Key { entry, b, d };
+        if !self.cache.contains_key(&key) {
+            let path = self.manifest.get(&key).ok_or_else(|| {
+                Error::artifact(format!(
+                    "no artifact for {} b={b} d={d}; run `make artifacts` \
+                     with --dims covering this dataset",
+                    key.entry
+                ))
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Pre-compile a set of entries (pipeline warmup; keeps first-block
+    /// latency out of the steady-state measurements).
+    pub fn warmup(&mut self, entries: &[(&str, usize, usize)]) -> Result<()> {
+        for &(e, b, d) in entries {
+            self.exe(e, b, d)?;
+        }
+        Ok(())
+    }
+
+    /// `distance` entry: d_b for a padded block.
+    ///
+    /// `x` is row-major `(b, d)`, `w`/`y` match the bucket; returns `d[b]`.
+    pub fn distance(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        y: &[f32],
+        xi2: f32,
+        invc: f32,
+        b: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(x.len(), b * d);
+        debug_assert_eq!(w.len(), d);
+        debug_assert_eq!(y.len(), b);
+        let exe = self.exe("distance", b, d)?;
+        let lw = xla::Literal::vec1(w);
+        let lx = matrix_literal(x, b, d)?;
+        let ly = xla::Literal::vec1(y);
+        let lxi = xla::Literal::from(xi2);
+        let lc = xla::Literal::from(invc);
+        let res = exe.execute::<xla::Literal>(&[lw, lx, ly, lxi, lc])?[0][0]
+            .to_literal_sync()?;
+        let mut parts = res.to_tuple()?;
+        parts.remove(0).to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// `predict` entry: raw margins for a padded block.
+    pub fn predict(&mut self, w: &[f32], x: &[f32], b: usize, d: usize) -> Result<Vec<f32>> {
+        debug_assert_eq!(x.len(), b * d);
+        let exe = self.exe("predict", b, d)?;
+        let lw = xla::Literal::vec1(w);
+        let lx = matrix_literal(x, b, d)?;
+        let res = exe.execute::<xla::Literal>(&[lw, lx])?[0][0].to_literal_sync()?;
+        let mut parts = res.to_tuple()?;
+        parts.remove(0).to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// `update` entry: Algorithm-1 scan over a padded block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        w: &[f32],
+        r: f32,
+        xi2: f32,
+        x: &[f32],
+        y: &[f32],
+        valid: &[f32],
+        invc: f32,
+        s2: f32,
+        b: usize,
+        d: usize,
+    ) -> Result<UpdateOut> {
+        debug_assert_eq!(x.len(), b * d);
+        let exe = self.exe("update", b, d)?;
+        let args = [
+            xla::Literal::vec1(w),
+            xla::Literal::from(r),
+            xla::Literal::from(xi2),
+            matrix_literal(x, b, d)?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(valid),
+            xla::Literal::from(invc),
+            xla::Literal::from(s2),
+        ];
+        let res = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = res.to_tuple()?;
+        let [w1, r1, xi1, m, upd, d0]: [xla::Literal; 6] = parts
+            .try_into()
+            .map_err(|_| Error::artifact("update: expected 6 outputs"))?;
+        Ok(UpdateOut {
+            w: w1.to_vec::<f32>()?,
+            r: r1.get_first_element::<f32>()? as f64,
+            xi2: xi1.get_first_element::<f32>()? as f64,
+            m_added: m.get_first_element::<f32>()? as usize,
+            upd_mask: upd.to_vec::<f32>()?,
+            d0: d0.to_vec::<f32>()?,
+        })
+    }
+
+    /// `merge` entry: Algorithm-2 lookahead merge over a padded buffer.
+    ///
+    /// No `invc` argument: the consistent slack convention folds 1/C into
+    /// `s2`, and the AOT graph has no (dead) invc parameter.
+    #[allow(clippy::too_many_arguments)]
+    pub fn merge(
+        &mut self,
+        w: &[f32],
+        r: f32,
+        xi2: f32,
+        xs: &[f32],
+        ys: &[f32],
+        valid: &[f32],
+        s2: f32,
+        l: usize,
+        d: usize,
+    ) -> Result<MergeOut> {
+        debug_assert_eq!(xs.len(), l * d);
+        let exe = self.exe("merge", l, d)?;
+        let args = [
+            xla::Literal::vec1(w),
+            xla::Literal::from(r),
+            xla::Literal::from(xi2),
+            matrix_literal(xs, l, d)?,
+            xla::Literal::vec1(ys),
+            xla::Literal::vec1(valid),
+            xla::Literal::from(s2),
+        ];
+        let res = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = res.to_tuple()?;
+        let [w1, r1, xi1, mu]: [xla::Literal; 4] = parts
+            .try_into()
+            .map_err(|_| Error::artifact("merge: expected 4 outputs"))?;
+        Ok(MergeOut {
+            w: w1.to_vec::<f32>()?,
+            r: r1.get_first_element::<f32>()? as f64,
+            xi2: xi1.get_first_element::<f32>()? as f64,
+            mu: mu.to_vec::<f32>()?,
+        })
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.len())
+            .field("compiled", &self.cache.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_is_artifact_error() {
+        let err = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_parse_rejects_malformed() {
+        let dir = std::env::temp_dir().join(format!("ssvm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "distance 256\n").unwrap();
+        let err = Runtime::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("expected `entry b d file`"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

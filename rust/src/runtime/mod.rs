@@ -1,0 +1,44 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! One [`Runtime`] owns the PJRT CPU client, the parsed artifact
+//! manifest, and a compile cache (each artifact compiles once, on first
+//! use). The typed wrappers ([`Runtime::distance`], [`Runtime::update`],
+//! [`Runtime::predict`], [`Runtime::merge`]) mirror the four AOT entry
+//! points; shapes must match the compiled (B, D) bucket exactly — the
+//! coordinator's batcher owns padding (see `coordinator::batcher`).
+
+pub mod exec;
+
+pub use exec::{MergeOut, Runtime, UpdateOut};
+
+/// Feature-dim padding rule — must mirror `aot.pad_dim` on the Python
+/// side: exact below 128, then the next multiple of 128.
+pub fn pad_dim(d: usize) -> usize {
+    if d <= 128 {
+        d
+    } else {
+        d.div_ceil(128) * 128
+    }
+}
+
+/// Default artifact directory, overridable with `STREAMSVM_ARTIFACTS`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("STREAMSVM_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_dim_mirrors_python() {
+        assert_eq!(pad_dim(2), 2);
+        assert_eq!(pad_dim(128), 128);
+        assert_eq!(pad_dim(129), 256);
+        assert_eq!(pad_dim(300), 384);
+        assert_eq!(pad_dim(784), 896);
+    }
+}

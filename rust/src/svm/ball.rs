@@ -1,0 +1,181 @@
+//! The streaming ball state and the closed-form Algorithm-1 update.
+//!
+//! The MEB center in the augmented space `φ̃(z) = [y x ; C^{-1/2} e]`
+//! splits into an explicit part `w ∈ R^D` (the SVM weight vector) and an
+//! implicit slack mass `ξ²` (the squared norm of the center's component
+//! in the mutually-orthogonal slack subspace — never materialized because
+//! one pass touches each `e_n` at most once).
+
+use crate::linalg;
+use crate::svm::TrainOptions;
+
+/// Streaming MEB / StreamSVM state: `(w, R, ξ², M)`.
+#[derive(Clone, Debug)]
+pub struct BallState {
+    /// Explicit center part = SVM weight vector.
+    pub w: Vec<f32>,
+    /// Ball radius.
+    pub r: f64,
+    /// Slack mass of the center.
+    pub xi2: f64,
+    /// Number of core-set points absorbed (= SV count upper bound).
+    pub m: usize,
+}
+
+impl BallState {
+    /// Initialize from the first streamed example (Algorithm 1 line 3).
+    pub fn init(x: &[f32], y: f32, opts: &TrainOptions) -> Self {
+        let mut w = vec![0.0f32; x.len()];
+        linalg::blend_into(&mut w, x, y, 1.0);
+        BallState { w, r: 0.0, xi2: opts.s2(), m: 1 }
+    }
+
+    /// A zero-radius ball at the origin (used by pipeline warm starts).
+    pub fn zero(dim: usize, opts: &TrainOptions) -> Self {
+        BallState { w: vec![0.0; dim], r: 0.0, xi2: opts.s2(), m: 0 }
+    }
+
+    /// Distance of `φ̃((x, y))` to the center (Algorithm 1 line 5):
+    /// `d = sqrt(||w - y x||² + ξ² + 1/C)`.
+    pub fn distance(&self, x: &[f32], y: f32, opts: &TrainOptions) -> f64 {
+        (linalg::sqdist_scaled(&self.w, x, y) + self.xi2 + opts.invc()).sqrt()
+    }
+
+    /// Algorithm 1 lines 5–10: absorb `(x, y)` if it falls outside the
+    /// current ball. Returns `true` if an update happened.
+    pub fn try_update(&mut self, x: &[f32], y: f32, opts: &TrainOptions) -> bool {
+        let d = self.distance(x, y, opts);
+        if d < self.r {
+            return false;
+        }
+        let beta = 0.5 * (1.0 - self.r / d);
+        linalg::blend_into(&mut self.w, x, y, beta as f32);
+        self.r += 0.5 * (d - self.r);
+        let omb = 1.0 - beta;
+        self.xi2 = self.xi2 * omb * omb + beta * beta * opts.s2();
+        self.m += 1;
+        true
+    }
+
+    /// `||c||²` in the augmented space.
+    pub fn center_norm2(&self) -> f64 {
+        linalg::norm2(&self.w) + self.xi2
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check_default, gen};
+    use crate::svm::SlackMode;
+
+    fn opts() -> TrainOptions {
+        TrainOptions::default()
+    }
+
+    #[test]
+    fn init_state() {
+        let b = BallState::init(&[2.0, -1.0], -1.0, &opts());
+        assert_eq!(b.w, vec![-2.0, 1.0]);
+        assert_eq!(b.r, 0.0);
+        assert_eq!(b.xi2, 1.0); // consistent mode at C=1 → 1/C = 1
+        assert_eq!(b.m, 1);
+    }
+
+    #[test]
+    fn first_update_moves_halfway() {
+        // From a zero-radius ball, beta = 1/2: center lands midway, radius
+        // at half the distance.
+        let o = opts();
+        let mut b = BallState::init(&[0.0, 0.0], 1.0, &o);
+        let d0 = b.distance(&[2.0, 0.0], 1.0, &o);
+        assert!(b.try_update(&[2.0, 0.0], 1.0, &o));
+        assert_eq!(b.w, vec![1.0, 0.0]);
+        assert!((b.r - 0.5 * d0).abs() < 1e-12);
+        assert_eq!(b.m, 2);
+    }
+
+    #[test]
+    fn enclosed_point_is_discarded() {
+        let o = opts();
+        let mut b = BallState::init(&[0.0], 1.0, &o);
+        b.try_update(&[10.0], 1.0, &o);
+        let r_before = b.r;
+        // A point between the two: must be enclosed after the first grow.
+        assert!(!b.try_update(&[5.0], 1.0, &o));
+        assert_eq!(b.r, r_before);
+        assert_eq!(b.m, 2);
+    }
+
+    #[test]
+    fn radius_never_shrinks_property() {
+        check_default("ball-radius-monotone", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 64, d, 2.0, 0.5);
+            let o = TrainOptions::default().with_c(0.5 + rng.uniform() * 4.0);
+            let mut b = BallState::init(&xs[0], ys[0], &o);
+            let mut prev = 0.0;
+            for (x, y) in xs[1..].iter().zip(&ys[1..]) {
+                b.try_update(x, *y, &o);
+                if b.r < prev - 1e-9 {
+                    return Err(format!("radius shrank: {prev} -> {}", b.r));
+                }
+                prev = b.r;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn old_ball_always_enclosed_property() {
+        // After an update, the new ball must contain the old ball:
+        // ||c' - c|| + r <= r' (within float tolerance). This is the
+        // invariant that makes the coordinator's block filter exact.
+        check_default("ball-grows", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 48, d, 1.5, 0.3);
+            let o = TrainOptions::default();
+            let mut b = BallState::init(&xs[0], ys[0], &o);
+            for (x, y) in xs[1..].iter().zip(&ys[1..]) {
+                let before = b.clone();
+                if b.try_update(x, *y, &o) {
+                    // ||c' - c||² in augmented space: explicit diff plus
+                    // slack-mass displacement. With beta the blend weight,
+                    // slack displacement² = beta²(ξ²_old + s²).
+                    let mut diff2 = 0.0f64;
+                    for i in 0..b.w.len() {
+                        let dd = b.w[i] as f64 - before.w[i] as f64;
+                        diff2 += dd * dd;
+                    }
+                    // recover beta from the radius update: r' = r + (d-r)/2
+                    // and beta = (1 - r/d)/2 → d = 2 r' - r ... use defs:
+                    let dist = 2.0 * b.r - before.r;
+                    let beta = 0.5 * (1.0 - before.r / dist);
+                    let slack_disp2 = beta * beta * (before.xi2 + o.s2());
+                    let move_len = (diff2 + slack_disp2).sqrt();
+                    if move_len + before.r > b.r + 1e-6 {
+                        return Err(format!(
+                            "old ball sticks out: move {move_len} + r {} > r' {}",
+                            before.r, b.r
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_mode_xi2_init() {
+        let o = TrainOptions::default().with_c(10.0).with_slack_mode(SlackMode::Paper);
+        let b = BallState::init(&[1.0], 1.0, &o);
+        assert_eq!(b.xi2, 1.0);
+        let oc = o.with_slack_mode(SlackMode::Consistent);
+        let bc = BallState::init(&[1.0], 1.0, &oc);
+        assert!((bc.xi2 - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Kernelized StreamSVM (paper §4.2).
+//!
+//! Instead of the explicit weight vector, stores the signed Lagrange
+//! coefficients α over the absorbed core set (α includes the label sign:
+//! init `α = [y₁]`). Distance to a new candidate (paper's d² formula):
+//!
+//!   d² = Σ αₙαₘ K(xₙ,xₘ) + K(x,x) − 2 y Σ αₘ K(xₘ,x) + ξ² + 1/C
+//!
+//! The quadratic term (the center's feature-space norm) is maintained
+//! incrementally across updates, so each example costs O(M·cost(K))
+//! rather than O(M²).
+
+use crate::data::Example;
+use crate::eval::Classifier;
+use crate::svm::kernelfn::Kernel;
+use crate::svm::TrainOptions;
+
+/// Kernelized Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct KernelStreamSvm {
+    kernel: Kernel,
+    /// Stored core vectors.
+    svs: Vec<(Vec<f32>, f32)>,
+    /// Signed coefficients (include the label factor).
+    alpha: Vec<f64>,
+    /// `||feature part of center||²`, maintained incrementally.
+    feat_norm2: f64,
+    r: f64,
+    xi2: f64,
+    opts: TrainOptions,
+    seen: usize,
+}
+
+impl KernelStreamSvm {
+    pub fn new(kernel: Kernel, opts: TrainOptions) -> Self {
+        KernelStreamSvm {
+            kernel,
+            svs: Vec::new(),
+            alpha: Vec::new(),
+            feat_norm2: 0.0,
+            r: 0.0,
+            xi2: opts.s2(),
+            opts,
+            seen: 0,
+        }
+    }
+
+    /// `f(x) = Σ αₘ K(xₘ, x)` — the raw decision value.
+    fn f(&self, x: &[f32]) -> f64 {
+        self.svs
+            .iter()
+            .zip(&self.alpha)
+            .map(|((sx, _), &a)| a * self.kernel.eval(sx, x))
+            .sum()
+    }
+
+    /// Distance of `φ̃((x, y))` to the current center.
+    pub fn distance(&self, x: &[f32], y: f32) -> f64 {
+        let kxx = self.kernel.self_eval(x);
+        let d2 = self.feat_norm2 + kxx - 2.0 * y as f64 * self.f(x) + self.xi2 + self.opts.invc();
+        d2.max(0.0).sqrt()
+    }
+
+    /// Stream one example.
+    pub fn observe(&mut self, x: &[f32], y: f32) -> bool {
+        self.seen += 1;
+        if self.svs.is_empty() {
+            self.feat_norm2 = self.kernel.self_eval(x);
+            self.svs.push((x.to_vec(), y));
+            self.alpha.push(y as f64);
+            return true;
+        }
+        let d = self.distance(x, y);
+        if d < self.r {
+            return false;
+        }
+        let beta = 0.5 * (1.0 - self.r / d);
+        let fx = self.f(x);
+        let kxx = self.kernel.self_eval(x);
+        // α ← (1−β) α ; α_new = β y   (paper §4.2)
+        for a in self.alpha.iter_mut() {
+            *a *= 1.0 - beta;
+        }
+        self.alpha.push(beta * y as f64);
+        self.svs.push((x.to_vec(), y));
+        // ||c'||² = (1−β)²||c||² + 2(1−β)β y f(x) + β² K(x,x)
+        let omb = 1.0 - beta;
+        self.feat_norm2 =
+            omb * omb * self.feat_norm2 + 2.0 * omb * beta * y as f64 * fx + beta * beta * kxx;
+        self.r += 0.5 * (d - self.r);
+        self.xi2 = self.xi2 * omb * omb + beta * beta * self.opts.s2();
+        true
+    }
+
+    pub fn fit<'a, I: IntoIterator<Item = &'a Example>>(
+        stream: I,
+        kernel: Kernel,
+        opts: &TrainOptions,
+    ) -> Self {
+        let mut m = KernelStreamSvm::new(kernel, *opts);
+        for e in stream {
+            m.observe(&e.x, e.y);
+        }
+        m
+    }
+
+    pub fn num_support(&self) -> usize {
+        self.svs.len()
+    }
+
+    pub fn radius(&self) -> f64 {
+        self.r
+    }
+
+    pub fn examples_seen(&self) -> usize {
+        self.seen
+    }
+}
+
+impl Classifier for KernelStreamSvm {
+    fn score(&self, x: &[f32]) -> f64 {
+        self.f(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::accuracy;
+    use crate::prop::{check_default, gen};
+    use crate::rng::Pcg32;
+    use crate::svm::streamsvm::StreamSvm;
+
+    #[test]
+    fn linear_kernel_matches_explicit_streamsvm() {
+        // The kernelized path with a linear kernel must reproduce the
+        // explicit-w Algorithm 1 exactly (same updates, same radius).
+        check_default("kernelized-linear-equiv", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 48, d, 1.0, 0.4);
+            let opts = TrainOptions::default().with_c(2.0);
+            let mut lin = StreamSvm::new(d, opts);
+            let mut ker = KernelStreamSvm::new(Kernel::Linear, opts);
+            for (x, y) in xs.iter().zip(&ys) {
+                let u1 = lin.observe(x, *y);
+                let u2 = ker.observe(x, *y);
+                if u1 != u2 {
+                    return Err("update decisions diverged".into());
+                }
+            }
+            if (lin.radius() - ker.radius()).abs() > 1e-6 * lin.radius().max(1.0) {
+                return Err(format!("radius {} vs {}", lin.radius(), ker.radius()));
+            }
+            // scores agree on random probes
+            for _ in 0..8 {
+                let probe: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let s1 = lin.score(&probe);
+                let s2 = ker.score(&probe);
+                if (s1 - s2).abs() > 1e-4 * s1.abs().max(1.0) {
+                    return Err(format!("scores {s1} vs {s2}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rbf_solves_xor() {
+        // XOR: linearly inseparable, RBF-separable — the point of §4.2.
+        let mut rng = Pcg32::seeded(5);
+        let mut train = Vec::new();
+        for _ in 0..400 {
+            let a = rng.bernoulli(0.5);
+            let b = rng.bernoulli(0.5);
+            let y = if a ^ b { 1.0 } else { -1.0 };
+            let x = vec![
+                (if a { 1.0 } else { -1.0 }) + rng.normal() as f32 * 0.15,
+                (if b { 1.0 } else { -1.0 }) + rng.normal() as f32 * 0.15,
+            ];
+            train.push(Example::new(x, y));
+        }
+        let opts = TrainOptions::default().with_c(100.0);
+        let ker = KernelStreamSvm::fit(train.iter(), Kernel::Rbf { gamma: 1.0 }, &opts);
+        let lin = StreamSvm::fit(train.iter(), 2, &opts);
+        let acc_k = accuracy(&ker, &train);
+        let acc_l = accuracy(&lin, &train);
+        assert!(acc_k > 0.9, "rbf acc {acc_k}");
+        assert!(acc_l < 0.7, "linear should fail on xor, got {acc_l}");
+    }
+
+    #[test]
+    fn radius_monotone() {
+        let mut rng = Pcg32::seeded(6);
+        let (xs, ys) = gen::labeled_points(&mut rng, 100, 4, 1.0, 0.2);
+        let mut m = KernelStreamSvm::new(Kernel::Rbf { gamma: 0.3 }, TrainOptions::default());
+        let mut prev = 0.0;
+        for (x, y) in xs.iter().zip(&ys) {
+            m.observe(x, *y);
+            assert!(m.radius() >= prev - 1e-9);
+            prev = m.radius();
+        }
+    }
+}

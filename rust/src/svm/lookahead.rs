@@ -1,0 +1,242 @@
+//! Algorithm 2: StreamSVM with lookahead L.
+//!
+//! Buffers up to `L` points that fall outside the current ball; when the
+//! buffer fills, merges (ball ∪ buffer) into a single ball via the MEB
+//! solve of [`crate::svm::meb::solve_merge`] (the paper solves a small
+//! QP; we use the equivalent Badoiu-Clarkson coefficient solve, whose
+//! enclosure is guaranteed by construction). `L = 1` short-circuits to
+//! the closed-form Algorithm-1 update, exactly as the paper notes.
+
+use crate::data::Example;
+use crate::eval::Classifier;
+use crate::linalg;
+use crate::svm::ball::BallState;
+use crate::svm::meb::solve_merge;
+use crate::svm::TrainOptions;
+
+/// A StreamSVM-with-lookahead model (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct LookaheadSvm {
+    ball: Option<BallState>,
+    buf_x: Vec<Vec<f32>>,
+    buf_y: Vec<f32>,
+    opts: TrainOptions,
+    dim: usize,
+    seen: usize,
+    merges: usize,
+}
+
+impl LookaheadSvm {
+    pub fn new(dim: usize, opts: TrainOptions) -> Self {
+        assert!(opts.lookahead >= 1, "lookahead must be >= 1");
+        LookaheadSvm {
+            ball: None,
+            buf_x: Vec::with_capacity(opts.lookahead),
+            buf_y: Vec::with_capacity(opts.lookahead),
+            opts,
+            dim,
+            seen: 0,
+        merges: 0,
+        }
+    }
+
+    /// Stream one example (Algorithm 2 lines 3–9).
+    pub fn observe(&mut self, x: &[f32], y: f32) {
+        debug_assert_eq!(x.len(), self.dim);
+        self.seen += 1;
+        let Some(ball) = &mut self.ball else {
+            self.ball = Some(BallState::init(x, y, &self.opts));
+            return;
+        };
+        let d = ball.distance(x, y, &self.opts);
+        if d < ball.r {
+            return; // enclosed: discard
+        }
+        if self.opts.lookahead == 1 {
+            // L = 1 degenerates to the closed-form Algorithm-1 update.
+            ball.try_update(x, y, &self.opts);
+            return;
+        }
+        self.buf_x.push(x.to_vec());
+        self.buf_y.push(y);
+        if self.buf_x.len() == self.opts.lookahead {
+            self.flush();
+        }
+    }
+
+    /// Merge any buffered points into the ball (Algorithm 2 lines 12–14;
+    /// called automatically when the buffer fills and by [`Self::finish`]).
+    pub fn flush(&mut self) {
+        if self.buf_x.is_empty() {
+            return;
+        }
+        let ball = self.ball.as_mut().expect("buffer implies an initialized ball");
+        let xrefs: Vec<&[f32]> = self.buf_x.iter().map(|v| v.as_slice()).collect();
+        let res = solve_merge(ball, &xrefs, &self.buf_y, &self.opts);
+        *ball = res.ball;
+        self.buf_x.clear();
+        self.buf_y.clear();
+        self.merges += 1;
+    }
+
+    /// End-of-stream: flush the partial buffer. Idempotent.
+    pub fn finish(&mut self) {
+        self.flush();
+    }
+
+    /// One-pass training over a slice/iterator.
+    pub fn fit<'a, I: IntoIterator<Item = &'a Example>>(
+        stream: I,
+        dim: usize,
+        opts: &TrainOptions,
+    ) -> Self {
+        let mut model = LookaheadSvm::new(dim, *opts);
+        for e in stream {
+            model.observe(&e.x, e.y);
+        }
+        model.finish();
+        model
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        self.ball.as_ref().map(|b| b.w.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn radius(&self) -> f64 {
+        self.ball.as_ref().map(|b| b.r).unwrap_or(0.0)
+    }
+
+    /// Upper bound on SV count (M in Algorithm 2).
+    pub fn num_support(&self) -> usize {
+        self.ball.as_ref().map(|b| b.m).unwrap_or(0) + self.buf_x.len()
+    }
+
+    /// Number of QP/merge solves performed (the paper's O(N/L) bound).
+    pub fn num_merges(&self) -> usize {
+        self.merges
+    }
+
+    pub fn examples_seen(&self) -> usize {
+        self.seen
+    }
+
+    pub fn ball(&self) -> Option<&BallState> {
+        self.ball.as_ref()
+    }
+
+    /// Number of points currently buffered (for tests / introspection).
+    pub fn buffered(&self) -> usize {
+        self.buf_x.len()
+    }
+}
+
+impl Classifier for LookaheadSvm {
+    fn score(&self, x: &[f32]) -> f64 {
+        match &self.ball {
+            Some(b) => linalg::dot(&b.w, x),
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check_default, gen};
+    use crate::rng::Pcg32;
+    use crate::svm::streamsvm::StreamSvm;
+
+    fn stream(n: usize, d: usize, sep: f64, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, sep);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    #[test]
+    fn l1_equals_algorithm1_exactly() {
+        check_default("algo2-l1-equals-algo1", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 64, d, 1.0, 0.3);
+            let opts = TrainOptions::default().with_lookahead(1);
+            let mut a1 = StreamSvm::new(d, opts);
+            let mut a2 = LookaheadSvm::new(d, opts);
+            for (x, y) in xs.iter().zip(&ys) {
+                a1.observe(x, *y);
+                a2.observe(x, *y);
+            }
+            a2.finish();
+            if a1.weights() != a2.weights() || a1.radius() != a2.radius() {
+                return Err("L=1 diverged from Algorithm 1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn buffer_flushes_at_l() {
+        // Adversarial stream where every point escapes the ball: the
+        // buffer must flush exactly every L points.
+        let opts = TrainOptions::default().with_lookahead(4);
+        let mut m = LookaheadSvm::new(1, opts);
+        for i in 0..13 {
+            // exponentially growing points always escape
+            m.observe(&[2.0f32.powi(i)], 1.0);
+        }
+        assert!(m.buffered() < 4);
+        assert!(m.num_merges() >= 2, "merges = {}", m.num_merges());
+        m.finish();
+        assert_eq!(m.buffered(), 0);
+    }
+
+    #[test]
+    fn finish_is_idempotent() {
+        let train = stream(200, 3, 0.5, 1);
+        let mut m = LookaheadSvm::new(3, TrainOptions::default().with_lookahead(8));
+        for e in &train {
+            m.observe(&e.x, e.y);
+        }
+        m.finish();
+        let w = m.weights().to_vec();
+        let r = m.radius();
+        m.finish();
+        assert_eq!(m.weights(), w.as_slice());
+        assert_eq!(m.radius(), r);
+    }
+
+    #[test]
+    fn radius_monotone_across_merges() {
+        check_default("algo2-radius-monotone", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 96, d, 1.5, 0.3);
+            let opts = TrainOptions::default().with_lookahead(1 + rng.below(10));
+            let mut m = LookaheadSvm::new(d, opts);
+            let mut prev = 0.0;
+            for (x, y) in xs.iter().zip(&ys) {
+                m.observe(x, *y);
+                let r = m.radius();
+                if r < prev - 1e-9 {
+                    return Err(format!("radius shrank {prev} -> {r}"));
+                }
+                prev = r;
+            }
+            m.finish();
+            if m.radius() < prev - 1e-9 {
+                return Err("finish shrank the radius".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_count_bounded_by_n_over_l() {
+        let train = stream(1000, 5, 0.5, 2);
+        for l in [2usize, 5, 10, 50] {
+            let m = LookaheadSvm::fit(train.iter(), 5, &TrainOptions::default().with_lookahead(l));
+            assert!(
+                m.num_merges() <= train.len() / l + 1,
+                "L={l}: merges {} > N/L",
+                m.num_merges()
+            );
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Minimum-enclosing-ball solvers shared by Algorithm 2 and CVM.
+//!
+//! Two solvers, both Badoiu-Clarkson (farthest-point) style:
+//!
+//! * [`solve_merge`] — MEB of *(existing ball ∪ L buffered points)* in the
+//!   augmented feature space, operating entirely in the coefficient space
+//!   of the Gram matrix of `v_i = p_i − c0` (mirrors the AOT
+//!   `merge_graph`; the PJRT path and this pure-Rust path are
+//!   cross-checked in integration tests). The returned radius is the
+//!   exact max-distance at the final center, so enclosure of the old ball
+//!   and all buffered points holds unconditionally.
+//!
+//! * [`solve_meb_points`] — MEB of a set of augmented points, center kept
+//!   as an explicit convex combination (used by the CVM baseline where
+//!   the point set is the growing core set).
+
+use crate::linalg;
+use crate::svm::ball::BallState;
+use crate::svm::TrainOptions;
+
+const EPS: f64 = 1e-12;
+
+/// Result of a ball∪points merge.
+#[derive(Clone, Debug)]
+pub struct MergeResult {
+    pub ball: BallState,
+    /// Convex coefficients over the buffered points (c = c0 + Σ μᵢ (pᵢ−c0)).
+    pub mu: Vec<f64>,
+}
+
+/// Gram matrix of `v_i = p_i − c0` in the augmented space (row-major L×L).
+///
+/// `<p_i,p_j> = y_i y_j <x_i,x_j> + [i==j]·s²` (fresh orthogonal slacks),
+/// `<c0,p_i> = y_i <w,x_i>` (the old center's slack mass is supported on
+/// earlier stream indices, orthogonal to the buffer's), and
+/// `<c0,c0> = ||w||² + ξ²`.
+pub fn merge_gram(ball: &BallState, xs: &[&[f32]], ys: &[f32], s2: f64) -> Vec<f64> {
+    let l = ys.len();
+    let cc = ball.center_norm2();
+    let cp: Vec<f64> = (0..l)
+        .map(|i| ys[i] as f64 * linalg::dot(&ball.w, xs[i]))
+        .collect();
+    let mut g = vec![0.0f64; l * l];
+    for i in 0..l {
+        for j in 0..=i {
+            let mut v = ys[i] as f64 * ys[j] as f64 * linalg::dot(xs[i], xs[j]);
+            if i == j {
+                v += s2;
+            }
+            v += cc - cp[i] - cp[j];
+            g[i * l + j] = v;
+            g[j * l + i] = v;
+        }
+    }
+    g
+}
+
+/// `max(||Vμ|| + r0, maxᵢ ||Vμ − vᵢ||)` evaluated from the Gram.
+pub fn merge_objective(mu: &[f64], g: &[f64], r0: f64) -> f64 {
+    let l = mu.len();
+    let q: Vec<f64> = (0..l)
+        .map(|i| (0..l).map(|j| g[i * l + j] * mu[j]).sum())
+        .collect();
+    let mgm: f64 = mu.iter().zip(&q).map(|(m, qi)| m * qi).sum::<f64>().max(0.0);
+    let mut best = mgm.sqrt() + r0;
+    for i in 0..l {
+        let d2 = (mgm - 2.0 * q[i] + g[i * l + i]).max(0.0);
+        best = best.max(d2.sqrt());
+    }
+    best
+}
+
+/// MEB of (ball ∪ points) via Badoiu-Clarkson in μ-space.
+///
+/// Exactly mirrors the AOT `merge_graph`: at each step move 1/(t+2) of the
+/// way toward the farthest entity — a buffered point, or the far pole of
+/// the old ball (`q_μ = −μ·r0/||Vμ||`).
+pub fn solve_merge(
+    ball: &BallState,
+    xs: &[&[f32]],
+    ys: &[f32],
+    opts: &TrainOptions,
+) -> MergeResult {
+    let l = ys.len();
+    assert_eq!(xs.len(), l);
+    let s2 = opts.s2();
+    let g = merge_gram(ball, xs, ys, s2);
+    let r0 = ball.r;
+    let mut mu = vec![0.0f64; l];
+    let mut q = vec![0.0f64; l];
+
+    for t in 0..opts.merge_iters {
+        // q = G μ, mgm = μᵀ G μ
+        for i in 0..l {
+            q[i] = (0..l).map(|j| g[i * l + j] * mu[j]).sum();
+        }
+        let mgm: f64 = mu.iter().zip(&q).map(|(m, qi)| m * qi).sum::<f64>().max(0.0);
+        let dball = mgm.sqrt() + r0;
+        let (mut far_i, mut far_d) = (0usize, f64::NEG_INFINITY);
+        for i in 0..l {
+            let d = (mgm - 2.0 * q[i] + g[i * l + i]).max(0.0).sqrt();
+            if d > far_d {
+                far_d = d;
+                far_i = i;
+            }
+        }
+        let step = 1.0 / (t as f64 + 2.0);
+        if dball > far_d {
+            if mgm <= EPS {
+                continue; // center == c0 and the ball is farthest: stay
+            }
+            let scale = (1.0 - step) - step * r0 / mgm.sqrt();
+            for m in mu.iter_mut() {
+                *m *= scale;
+            }
+        } else {
+            for (i, m) in mu.iter_mut().enumerate() {
+                *m += step * ((i == far_i) as u8 as f64 - *m);
+            }
+        }
+    }
+
+    let r1 = merge_objective(&mu, &g, r0);
+    let tot: f64 = mu.iter().sum();
+    let mut w1: Vec<f32> = ball.w.iter().map(|&v| (1.0 - tot) as f32 * v).collect();
+    for i in 0..l {
+        linalg::axpy(&mut w1, (mu[i] * ys[i] as f64) as f32, xs[i]);
+    }
+    let xi1 = (1.0 - tot) * (1.0 - tot) * ball.xi2
+        + mu.iter().map(|m| m * m).sum::<f64>() * s2;
+    MergeResult {
+        ball: BallState { w: w1, r: r1, xi2: xi1, m: ball.m + l },
+        mu,
+    }
+}
+
+/// MEB of a set of augmented points `φ̃(zᵢ)` via Badoiu-Clarkson with an
+/// explicit convex-combination center. Returns the final state plus the
+/// coefficients α (center = Σ αᵢ φ̃(zᵢ), Σα = 1, α ≥ 0).
+///
+/// Distances use the orthogonal-slack identity:
+/// `d²(c, pᵢ) = ||w − yᵢxᵢ||² + ξ² − 2 s² αᵢ + s²` with `ξ² = s²·Σα²`.
+pub struct PointsMeb {
+    pub w: Vec<f32>,
+    pub alpha: Vec<f64>,
+    pub xi2: f64,
+    pub r: f64,
+}
+
+pub fn solve_meb_points(
+    xs: &[&[f32]],
+    ys: &[f32],
+    s2: f64,
+    iters: usize,
+) -> PointsMeb {
+    let n = ys.len();
+    assert!(n > 0);
+    let dim = xs[0].len();
+    let mut alpha = vec![0.0f64; n];
+    alpha[0] = 1.0;
+    let mut w = vec![0.0f32; dim];
+    linalg::blend_into(&mut w, xs[0], ys[0], 1.0);
+    let mut a2: f64 = 1.0; // Σ α²
+
+    let sqdist = |w: &[f32], a2: f64, ai: f64, i: usize| -> f64 {
+        linalg::sqdist_scaled(w, xs[i], ys[i]) + s2 * (a2 - 2.0 * ai + 1.0)
+    };
+
+    for t in 0..iters {
+        let (mut far_i, mut far_d2) = (0usize, f64::NEG_INFINITY);
+        for i in 0..n {
+            let d2 = sqdist(&w, a2, alpha[i], i);
+            if d2 > far_d2 {
+                far_d2 = d2;
+                far_i = i;
+            }
+        }
+        let eta = 1.0 / (t as f64 + 2.0);
+        // α ← (1−η) α + η e_far
+        a2 = 0.0;
+        for (i, a) in alpha.iter_mut().enumerate() {
+            *a *= 1.0 - eta;
+            if i == far_i {
+                *a += eta;
+            }
+            a2 += *a * *a;
+        }
+        linalg::scale(&mut w, (1.0 - eta) as f32);
+        linalg::axpy(&mut w, (eta * ys[far_i] as f64) as f32, xs[far_i]);
+    }
+
+    let xi2 = s2 * a2;
+    let mut r2: f64 = 0.0;
+    for i in 0..n {
+        r2 = r2.max(sqdist(&w, a2, alpha[i], i));
+    }
+    PointsMeb { w, alpha, xi2, r: r2.sqrt() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check_default, gen};
+    use crate::rng::Pcg32;
+
+    fn mk_ball(dim: usize, rng: &mut Pcg32) -> BallState {
+        let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        BallState { w, r: 1.0 + rng.uniform(), xi2: 0.5, m: 3 }
+    }
+
+    /// Explicit-space verification of the merge: materialize c0 and the
+    /// points in (D + L + 1) dims (one slack dim per point + one for the
+    /// old center's aggregated mass) and check enclosure.
+    fn verify_enclosure(
+        ball: &BallState,
+        xs: &[&[f32]],
+        ys: &[f32],
+        s2: f64,
+        res: &MergeResult,
+        tol: f64,
+    ) -> Result<(), String> {
+        let d = ball.w.len();
+        let l = ys.len();
+        let mut c0 = vec![0.0f64; d + l + 1];
+        for i in 0..d {
+            c0[i] = ball.w[i] as f64;
+        }
+        c0[d + l] = ball.xi2.sqrt();
+        let mut pts = Vec::new();
+        for i in 0..l {
+            let mut p = vec![0.0f64; d + l + 1];
+            for j in 0..d {
+                p[j] = ys[i] as f64 * xs[i][j] as f64;
+            }
+            p[d + i] = s2.sqrt();
+            pts.push(p);
+        }
+        let tot: f64 = res.mu.iter().sum();
+        let mut c1: Vec<f64> = c0.iter().map(|v| v * (1.0 - tot)).collect();
+        for (i, p) in pts.iter().enumerate() {
+            for (c, pv) in c1.iter_mut().zip(p) {
+                *c += res.mu[i] * pv;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+        };
+        if dist(&c1, &c0) + ball.r > res.ball.r + tol {
+            return Err(format!(
+                "old ball not enclosed: {} + {} > {}",
+                dist(&c1, &c0),
+                ball.r,
+                res.ball.r
+            ));
+        }
+        for (i, p) in pts.iter().enumerate() {
+            if dist(&c1, p) > res.ball.r + tol {
+                return Err(format!("point {i} outside: {} > {}", dist(&c1, p), res.ball.r));
+            }
+        }
+        // explicit-part & slack bookkeeping agree
+        for j in 0..d {
+            if (c1[j] - res.ball.w[j] as f64).abs() > 1e-3 {
+                return Err(format!("w mismatch at {j}"));
+            }
+        }
+        let slack2: f64 = c1[d..].iter().map(|v| v * v).sum();
+        if (slack2 - res.ball.xi2).abs() > 1e-3 * slack2.max(1.0) {
+            return Err(format!("xi2 mismatch: {slack2} vs {}", res.ball.xi2));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn merge_encloses_ball_and_points_property() {
+        check_default("merge-enclosure", |rng, _| {
+            let d = gen::dim(rng);
+            let l = 1 + rng.below(12);
+            let (xs, ys) = gen::labeled_points(rng, l, d, 1.5, 0.4);
+            let ball = mk_ball(d, rng);
+            let opts = TrainOptions::default().with_c(2.0);
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let res = solve_merge(&ball, &xrefs, &ys, &opts);
+            verify_enclosure(&ball, &xrefs, &ys, opts.s2(), &res, 1e-3 * res.ball.r.max(1.0))
+        });
+    }
+
+    #[test]
+    fn merge_radius_at_least_r0() {
+        check_default("merge-monotone", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 4, d, 1.0, 0.0);
+            let ball = mk_ball(d, rng);
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let res = solve_merge(&ball, &xrefs, &ys, &TrainOptions::default());
+            if res.ball.r + 1e-9 < ball.r {
+                return Err(format!("radius shrank {} -> {}", ball.r, res.ball.r));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_l1_close_to_closed_form() {
+        // Algorithm 2 with L=1 should be near the closed-form Algorithm-1
+        // update (BC approximates the same two-entity MEB).
+        check_default("merge-l1-vs-algo1", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 1, d, 1.0, 0.0);
+            let ball = mk_ball(d, rng);
+            let opts = TrainOptions { merge_iters: 512, ..TrainOptions::default() };
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let res = solve_merge(&ball, &xrefs, &ys, &opts);
+            let mut closed = ball.clone();
+            closed.try_update(&xs[0], ys[0], &opts);
+            let rel = (res.ball.r - closed.r).abs() / closed.r.max(1e-9);
+            if rel > 0.05 {
+                return Err(format!("BC r {} vs closed-form {}", res.ball.r, closed.r));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn points_meb_encloses_all() {
+        check_default("points-meb-enclosure", |rng, _| {
+            let d = gen::dim(rng);
+            let n = 2 + rng.below(30);
+            let (xs, ys) = gen::labeled_points(rng, n, d, 2.0, 0.3);
+            let s2 = 0.5;
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let meb = solve_meb_points(&xrefs, &ys, s2, 256);
+            let a2: f64 = meb.alpha.iter().map(|a| a * a).sum();
+            for i in 0..n {
+                let d2 = linalg::sqdist_scaled(&meb.w, &xs[i], ys[i])
+                    + s2 * (a2 - 2.0 * meb.alpha[i] + 1.0);
+                if d2.sqrt() > meb.r + 1e-6 {
+                    return Err(format!("point {i} outside: {} > {}", d2.sqrt(), meb.r));
+                }
+            }
+            // convexity of alpha
+            let tot: f64 = meb.alpha.iter().sum();
+            if (tot - 1.0).abs() > 1e-9 || meb.alpha.iter().any(|&a| a < -1e-12) {
+                return Err(format!("alpha not convex: sum {tot}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn points_meb_two_points_midpoint() {
+        // MEB of two antipodal points (slack off): center at midpoint.
+        let xs: Vec<&[f32]> = vec![&[1.0, 0.0], &[-1.0, 0.0]];
+        let ys = [1.0f32, 1.0];
+        let meb = solve_meb_points(&xs, &ys, 0.0, 2048);
+        assert!((meb.w[0]).abs() < 0.02, "w = {:?}", meb.w);
+        assert!((meb.r - 1.0).abs() < 0.02, "r = {}", meb.r);
+    }
+}

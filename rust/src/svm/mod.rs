@@ -1,0 +1,102 @@
+//! The paper's algorithms: StreamSVM (Algorithm 1), the lookahead variant
+//! (Algorithm 2), the kernelized variant, and the multiball extension,
+//! plus the MEB machinery they share.
+
+pub mod ball;
+pub mod ellipsoid;
+pub mod kernelfn;
+pub mod kernelized;
+pub mod lookahead;
+pub mod meb;
+pub mod multiball;
+pub mod streamsvm;
+
+/// Slack-coordinate bookkeeping convention (see DESIGN.md §3).
+///
+/// The augmented map is `φ̃(z_n) = [y_n x_n ; C^{-1/2} e_n]`. The paper's
+/// pseudocode initializes `ξ² = 1` and adds `β²` per update — an implicit
+/// *unit*-slack convention; carrying the `C^{-1/2}` coordinate exactly
+/// gives init `1/C` and increments `β²/C`. The two coincide at `C = 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlackMode {
+    /// Verbatim paper pseudocode (Algorithm 1 lines 3 and 9).
+    Paper,
+    /// Exact `C^{-1/2}` slack-coordinate geometry.
+    Consistent,
+}
+
+/// Shared training options for all StreamSVM variants.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOptions {
+    /// Misclassification cost `C` of the ℓ₂-SVM.
+    pub c: f64,
+    /// Slack bookkeeping convention.
+    pub slack_mode: SlackMode,
+    /// Lookahead buffer size `L` for Algorithm 2 (`1` = Algorithm 1).
+    pub lookahead: usize,
+    /// Badoiu-Clarkson iterations for the lookahead merge solve.
+    pub merge_iters: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            c: 1.0,
+            slack_mode: SlackMode::Consistent,
+            lookahead: 1,
+            merge_iters: 128,
+        }
+    }
+}
+
+impl TrainOptions {
+    pub fn with_c(mut self, c: f64) -> Self {
+        self.c = c;
+        self
+    }
+
+    pub fn with_lookahead(mut self, l: usize) -> Self {
+        self.lookahead = l;
+        self
+    }
+
+    pub fn with_slack_mode(mut self, m: SlackMode) -> Self {
+        self.slack_mode = m;
+        self
+    }
+
+    /// `1/C`, the constant term inside every distance computation.
+    pub fn invc(&self) -> f64 {
+        1.0 / self.c
+    }
+
+    /// Slack self-norm `s² = ||slack part of φ̃(z)||²` under the chosen
+    /// convention.
+    pub fn s2(&self) -> f64 {
+        match self.slack_mode {
+            SlackMode::Paper => 1.0,
+            SlackMode::Consistent => 1.0 / self.c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s2_conventions() {
+        let p = TrainOptions::default().with_c(4.0).with_slack_mode(SlackMode::Paper);
+        assert_eq!(p.s2(), 1.0);
+        assert_eq!(p.invc(), 0.25);
+        let c = p.with_slack_mode(SlackMode::Consistent);
+        assert_eq!(c.s2(), 0.25);
+    }
+
+    #[test]
+    fn conventions_coincide_at_c1() {
+        let p = TrainOptions::default().with_slack_mode(SlackMode::Paper);
+        let c = TrainOptions::default().with_slack_mode(SlackMode::Consistent);
+        assert_eq!(p.s2(), c.s2());
+    }
+}

@@ -1,0 +1,128 @@
+//! End-to-end integration over pure-Rust paths (always runnable, no
+//! artifacts needed): dataset generators → streaming pipeline →
+//! evaluation, plus the Table-1 regime sanity checks at smoke scale.
+
+use streamsvm::baselines::batch_l2svm::{BatchL2Svm, BatchL2SvmOptions};
+use streamsvm::baselines::pegasos::{Pegasos, PegasosOptions};
+use streamsvm::coordinator::pipeline::{train_stream, ExecMode, PipelineConfig};
+use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::registry::{load_dataset_sized, TABLE1_NAMES};
+use streamsvm::eval::accuracy;
+use streamsvm::svm::lookahead::LookaheadSvm;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+#[test]
+fn every_dataset_trains_and_beats_chance() {
+    for name in TABLE1_NAMES {
+        let ds = load_dataset_sized(name, 42, 0.05).unwrap();
+        let c = streamsvm::exp::table1::c_for(name);
+        let model = StreamSvm::fit(ds.train.iter(), ds.dim, &TrainOptions::default().with_c(c));
+        let acc = accuracy(&model, &ds.test);
+        // majority-class rate on the test split
+        let pos = ds.test.iter().filter(|e| e.y > 0.0).count() as f64 / ds.test.len() as f64;
+        let majority = pos.max(1.0 - pos);
+        // one pass at 5% scale: demand above-chance behaviour everywhere,
+        // and near-majority on the skewed sets
+        assert!(
+            acc > 0.5 * majority + 0.2,
+            "{name}: acc {acc:.3} vs majority {majority:.3}"
+        );
+    }
+}
+
+#[test]
+fn easy_datasets_reach_regime_accuracy() {
+    // synthA and mnist01 are the paper's near-separable rows (≥95%).
+    for (name, floor) in [("synthA", 0.90), ("mnist01", 0.95)] {
+        let ds = load_dataset_sized(name, 42, 0.2).unwrap();
+        let c = streamsvm::exp::table1::c_for(name);
+        let algo2 = LookaheadSvm::fit(
+            ds.train.iter(),
+            ds.dim,
+            &TrainOptions::default().with_c(c).with_lookahead(10),
+        );
+        let acc = accuracy(&algo2, &ds.test);
+        assert!(acc > floor, "{name}: algo2 acc {acc:.3} < {floor}");
+    }
+}
+
+#[test]
+fn lookahead_beats_or_matches_algo1_on_hard_data() {
+    // The Table-1 shape: Algo-2 ≥ Algo-1 (averaged over orders).
+    let ds = load_dataset_sized("mnist89", 42, 0.15).unwrap();
+    let c = streamsvm::exp::table1::c_for("mnist89");
+    let mut a1_sum = 0.0;
+    let mut a2_sum = 0.0;
+    let runs = 5;
+    for seed in 0..runs {
+        let stream: Vec<_> = VecStream::of_train(&ds, Some(seed)).collect();
+        let a1 = StreamSvm::fit(stream.iter(), ds.dim, &TrainOptions::default().with_c(c));
+        let a2 = LookaheadSvm::fit(
+            stream.iter(),
+            ds.dim,
+            &TrainOptions::default().with_c(c).with_lookahead(10),
+        );
+        a1_sum += accuracy(&a1, &ds.test);
+        a2_sum += accuracy(&a2, &ds.test);
+    }
+    let (a1, a2) = (a1_sum / runs as f64, a2_sum / runs as f64);
+    assert!(a2 + 0.02 >= a1, "algo2 {a2:.3} should be >= algo1 {a1:.3}");
+}
+
+#[test]
+fn single_pass_streamsvm_competitive_with_single_sweep_pegasos() {
+    // Table-1 shape: StreamSVM(Algo-2) is competitive with a single sweep
+    // of Pegasos everywhere. (On the paper's real datasets Algo-2 wins
+    // outright; our simulated generators are better-conditioned for SGD,
+    // so the check is "within a few points", documented in EXPERIMENTS.md.)
+    let mut ok = 0;
+    let mut total = 0;
+    for name in ["synthA", "synthC", "waveform", "mnist89"] {
+        let ds = load_dataset_sized(name, 42, 0.1).unwrap();
+        let c = streamsvm::exp::table1::c_for(name);
+        let stream: Vec<_> = VecStream::of_train(&ds, Some(3)).collect();
+        let a2 = LookaheadSvm::fit(
+            stream.iter(),
+            ds.dim,
+            &TrainOptions::default().with_c(c).with_lookahead(10),
+        );
+        let lambda = Some(1.0 / (c * stream.len() as f64));
+        let peg = Pegasos::fit(&stream, ds.dim, &PegasosOptions { k: 1, lambda });
+        total += 1;
+        if accuracy(&a2, &ds.test) >= accuracy(&peg, &ds.test) - 0.06 {
+            ok += 1;
+        }
+    }
+    assert!(ok >= total - 1, "StreamSVM competitive on only {ok}/{total} vs Pegasos k=1");
+}
+
+#[test]
+fn batch_solver_is_the_upper_reference() {
+    let ds = load_dataset_sized("waveform", 42, 0.5).unwrap();
+    let batch = BatchL2Svm::fit(
+        &ds.train,
+        ds.dim,
+        &BatchL2SvmOptions { max_epochs: 80, ..Default::default() },
+    );
+    let algo1 = StreamSvm::fit(ds.train.iter(), ds.dim, &TrainOptions::default());
+    let (ab, a1) = (accuracy(&batch, &ds.test), accuracy(&algo1, &ds.test));
+    assert!(ab + 0.02 >= a1, "batch {ab:.3} should be >= algo1 {a1:.3}");
+    assert!(ab > 0.8, "batch acc {ab:.3} out of regime");
+}
+
+#[test]
+fn pipeline_pure_mode_end_to_end_with_permutation() {
+    let ds = load_dataset_sized("ijcnn", 42, 0.05).unwrap();
+    let cfg = PipelineConfig {
+        train: TrainOptions::default(),
+        mode: ExecMode::Pure,
+        block: Some(128),
+        queue: 2,
+    };
+    let stream = VecStream::of_train(&ds, Some(11));
+    let report = train_stream(None, stream, ds.dim, cfg).unwrap();
+    assert_eq!(report.metrics.examples, ds.train.len());
+    let acc = accuracy(&report.model, &ds.test);
+    assert!(acc > 0.5, "pipeline model acc {acc:.3}");
+}

@@ -1,0 +1,268 @@
+//! Integration tests: the AOT artifacts (L1 Pallas kernels inside L2 JAX
+//! graphs, executed via PJRT) against the pure-Rust reference
+//! implementations. Skipped with a notice when `artifacts/` is absent
+//! (run `make artifacts`).
+
+use streamsvm::coordinator::batcher::Batcher;
+use streamsvm::coordinator::pipeline::{train_stream, ExecMode, PipelineConfig};
+use streamsvm::data::Example;
+use streamsvm::linalg;
+use streamsvm::prop::gen;
+use streamsvm::rng::Pcg32;
+use streamsvm::runtime::{pad_dim, Runtime};
+use streamsvm::svm::ball::BallState;
+use streamsvm::svm::meb::solve_merge;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn open_runtime() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn toy(n: usize, d: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Pcg32::seeded(seed);
+    let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, 0.6);
+    xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+}
+
+/// Pad a logical-dim weight vector to the artifact bucket.
+fn padded(w: &[f32], d_pad: usize) -> Vec<f32> {
+    let mut v = w.to_vec();
+    v.resize(d_pad, 0.0);
+    v
+}
+
+#[test]
+fn distance_artifact_matches_rust() {
+    let Some(mut rt) = open_runtime() else { return };
+    for d in [2usize, 21, 300, 784] {
+        let d_pad = pad_dim(d);
+        let b = rt.train_block(d_pad).expect("train bucket");
+        let exs = toy(b, d, 7 + d as u64);
+        let mut blocks = Batcher::new(exs.clone().into_iter(), b, d, d_pad);
+        let block = blocks.next().unwrap();
+        let mut rng = Pcg32::seeded(d as u64);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let (xi2, invc) = (0.7f64, 0.5f64);
+        let got = rt
+            .distance(&padded(&w, d_pad), &block.x, &block.y, xi2 as f32, invc as f32, b, d_pad)
+            .unwrap();
+        for (i, e) in exs.iter().enumerate() {
+            let want = (linalg::sqdist_scaled(&w, &e.x, e.y) + xi2 + invc).sqrt();
+            assert!(
+                (got[i] as f64 - want).abs() < 1e-3 * want.max(1.0),
+                "d={d} row {i}: artifact {} vs rust {want}",
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn predict_artifact_matches_rust() {
+    let Some(mut rt) = open_runtime() else { return };
+    let (d, b) = (300usize, 64usize);
+    let d_pad = pad_dim(d);
+    let exs = toy(b, d, 11);
+    let block = Batcher::new(exs.clone().into_iter(), b, d, d_pad).next().unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let got = rt.predict(&padded(&w, d_pad), &block.x, b, d_pad).unwrap();
+    for (i, e) in exs.iter().enumerate() {
+        let want = linalg::dot(&w, &e.x);
+        assert!(
+            (got[i] as f64 - want).abs() < 1e-3 * want.abs().max(1.0),
+            "row {i}: {} vs {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn update_artifact_matches_algorithm1() {
+    let Some(mut rt) = open_runtime() else { return };
+    let d = 21usize;
+    let d_pad = pad_dim(d);
+    let b = rt.train_block(d_pad).expect("train bucket");
+    let exs = toy(b + 40, d, 13); // more than one block's worth; use first block
+    let opts = TrainOptions::default().with_c(2.0);
+
+    // rust reference over the block, starting from example 0's init
+    let mut ball = BallState::init(&exs[0].x, exs[0].y, &opts);
+    let block = Batcher::new(exs.clone().into_iter(), b, d, d_pad).next().unwrap();
+    let mut valid = block.valid.clone();
+    valid[0] = 0.0; // consumed by init
+    let out = rt
+        .update(
+            &padded(&ball.w, d_pad),
+            ball.r as f32,
+            ball.xi2 as f32,
+            &block.x,
+            &block.y,
+            &valid,
+            opts.invc() as f32,
+            opts.s2() as f32,
+            b,
+            d_pad,
+        )
+        .unwrap();
+    let mut updates = 0usize;
+    for e in exs.iter().take(b).skip(1) {
+        if ball.try_update(&e.x, e.y, &opts) {
+            updates += 1;
+        }
+    }
+    assert_eq!(out.m_added, updates, "update counts diverge");
+    assert!((out.r - ball.r).abs() < 1e-3 * ball.r.max(1.0), "r {} vs {}", out.r, ball.r);
+    assert!((out.xi2 - ball.xi2).abs() < 1e-3 * ball.xi2.max(1.0));
+    for i in 0..d {
+        assert!(
+            (out.w[i] as f64 - ball.w[i] as f64).abs() < 2e-3,
+            "w[{i}] {} vs {}",
+            out.w[i],
+            ball.w[i]
+        );
+    }
+}
+
+#[test]
+fn merge_artifact_matches_rust_solver() {
+    let Some(mut rt) = open_runtime() else { return };
+    let d = 21usize;
+    let d_pad = pad_dim(d);
+    let l = 16usize;
+    let opts = TrainOptions::default().with_c(2.0);
+    let exs = toy(l, d, 17);
+    let mut rng = Pcg32::seeded(5);
+    let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let ball = BallState { w: w.clone(), r: 2.5, xi2: 0.6, m: 3 };
+
+    let mut xs = vec![0.0f32; l * d_pad];
+    let mut ys = vec![0.0f32; l];
+    let valid = vec![1.0f32; l];
+    for (i, e) in exs.iter().enumerate() {
+        xs[i * d_pad..i * d_pad + d].copy_from_slice(&e.x);
+        ys[i] = e.y;
+    }
+    let got = rt
+        .merge(
+            &padded(&w, d_pad),
+            ball.r as f32,
+            ball.xi2 as f32,
+            &xs,
+            &ys,
+            &valid,
+            opts.s2() as f32,
+            l,
+            d_pad,
+        )
+        .unwrap();
+    let xrefs: Vec<&[f32]> = exs.iter().map(|e| e.x.as_slice()).collect();
+    let want = solve_merge(&ball, &xrefs, &ys, &opts);
+    // Same Badoiu-Clarkson schedule on both sides → near-identical radii.
+    assert!(
+        (got.r - want.ball.r).abs() < 1e-3 * want.ball.r.max(1.0),
+        "merge r {} vs {}",
+        got.r,
+        want.ball.r
+    );
+    assert!((got.xi2 - want.ball.xi2).abs() < 1e-2 * want.ball.xi2.max(1.0));
+    for i in 0..d {
+        assert!(
+            (got.w[i] as f64 - want.ball.w[i] as f64).abs() < 5e-3,
+            "w[{i}] {} vs {}",
+            got.w[i],
+            want.ball.w[i]
+        );
+    }
+}
+
+#[test]
+fn pipeline_filter_mode_equals_pure() {
+    let Some(mut rt) = open_runtime() else { return };
+    let d = 21usize;
+    let exs = toy(900, d, 23);
+    let base = PipelineConfig {
+        train: TrainOptions::default().with_c(2.0),
+        queue: 2,
+        block: None,
+        mode: ExecMode::Pure,
+    };
+    let pure = train_stream(None, exs.clone().into_iter(), d, base).unwrap();
+    let filt = train_stream(
+        Some(&mut rt),
+        exs.clone().into_iter(),
+        d,
+        PipelineConfig { mode: ExecMode::Filter, ..base },
+    )
+    .unwrap();
+    assert_eq!(pure.model.num_support(), filt.model.num_support());
+    assert!(
+        (pure.model.radius() - filt.model.radius()).abs() < 1e-5 * pure.model.radius().max(1.0),
+        "radius {} vs {}",
+        pure.model.radius(),
+        filt.model.radius()
+    );
+    // the filter must have discarded a meaningful share on-device
+    assert!(filt.metrics.survivors < filt.metrics.examples);
+    // and weights agree
+    let direct = StreamSvm::fit(exs.iter(), d, &base.train);
+    for (a, b) in filt.model.weights().iter().zip(direct.weights()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pipeline_scan_mode_close_to_pure() {
+    let Some(mut rt) = open_runtime() else { return };
+    let d = 21usize;
+    let exs = toy(600, d, 29);
+    let base = PipelineConfig {
+        train: TrainOptions::default(),
+        queue: 2,
+        block: None,
+        mode: ExecMode::Pure,
+    };
+    let pure = train_stream(None, exs.clone().into_iter(), d, base).unwrap();
+    let scan = train_stream(
+        Some(&mut rt),
+        exs.clone().into_iter(),
+        d,
+        PipelineConfig { mode: ExecMode::Scan, ..base },
+    )
+    .unwrap();
+    // Scan runs the whole Algorithm-1 recurrence in f32 on-device vs the
+    // f64 Rust path: same update count, radii within float tolerance.
+    assert_eq!(pure.model.num_support(), scan.model.num_support());
+    assert!(
+        (pure.model.radius() - scan.model.radius()).abs() < 1e-3 * pure.model.radius().max(1.0),
+        "radius {} vs {}",
+        pure.model.radius(),
+        scan.model.radius()
+    );
+}
+
+#[test]
+fn pipeline_filter_lookahead_reasonable() {
+    let Some(mut rt) = open_runtime() else { return };
+    let d = 21usize;
+    let exs = toy(800, d, 31);
+    let cfg = PipelineConfig {
+        train: TrainOptions::default().with_lookahead(10),
+        queue: 2,
+        block: None,
+        mode: ExecMode::Filter,
+    };
+    let report = train_stream(Some(&mut rt), exs.clone().into_iter(), d, cfg).unwrap();
+    assert!(report.metrics.merges >= 1, "no on-device merges happened");
+    assert!(report.model.radius() > 0.0);
+    // accuracy sanity on its own training data
+    let acc = streamsvm::eval::accuracy(&report.model, &exs);
+    assert!(acc > 0.7, "acc {acc}");
+}
