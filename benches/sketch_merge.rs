@@ -1,0 +1,126 @@
+//! Bench harness for the sketch subsystem: merge-and-reduce tree
+//! throughput vs shard count, and codec encode/decode throughput.
+//!
+//! The tree is the hot path of distributed training hand-off (N shard
+//! sketches → one model), so the question is how cheap the reduce stays
+//! as the fleet grows: at D floats per merge and ⌈log₂ N⌉ depth the
+//! whole fold is O(N·D) — microseconds even at hundreds of shards.
+//!
+//! `STREAMSVM_BENCH_FULL=1` extends the sweep to 1024 shards.
+
+use streamsvm::bench_util::{bench, Table};
+use streamsvm::rng::Pcg32;
+use streamsvm::sketch::codec::MebSketch;
+use streamsvm::sketch::merge::{merge_ball_tree, merge_sketches};
+use streamsvm::svm::ball::BallState;
+use streamsvm::svm::TrainOptions;
+
+fn random_ball(d: usize, rng: &mut Pcg32) -> BallState {
+    BallState {
+        w: (0..d).map(|_| (rng.normal() * 2.0) as f32).collect(),
+        r: 1.0 + rng.uniform() * 3.0,
+        xi2: rng.uniform(),
+        m: 1 + rng.below(200),
+    }
+}
+
+fn merge_tree_throughput(dims: &[usize], shard_counts: &[usize]) {
+    println!("\n-- merge-and-reduce tree throughput --");
+    let mut t = Table::new(&["dim", "shards", "mean/merge-tree", "sketches/s", "merged R"]);
+    for &d in dims {
+        for &n in shard_counts {
+            let mut rng = Pcg32::seeded(d as u64 * 1000 + n as u64);
+            let balls: Vec<BallState> = (0..n).map(|_| random_ball(d, &mut rng)).collect();
+            let max_r = balls.iter().map(|b| b.r).fold(0.0f64, f64::max);
+            let stats = bench(3, 30, || {
+                let root = merge_ball_tree(balls.clone()).unwrap();
+                std::hint::black_box(root.r);
+            });
+            let root = merge_ball_tree(balls.clone()).unwrap();
+            assert!(root.r + 1e-9 >= max_r, "tree root must dominate shard radii");
+            t.row(&[
+                d.to_string(),
+                n.to_string(),
+                format!("{:?}", stats.mean),
+                format!("{:.0}", n as f64 / stats.mean.as_secs_f64()),
+                format!("{:.3}", root.r),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn sketch_level_merge(shard_counts: &[usize]) {
+    println!("\n-- sketch-level merge (validation + tree + provenance) --");
+    let d = 128;
+    let opts = TrainOptions::default();
+    let mut t = Table::new(&["shards", "mean/merge", "sketches/s"]);
+    for &n in shard_counts {
+        let mut rng = Pcg32::seeded(n as u64);
+        let sketches: Vec<MebSketch> = (0..n)
+            .map(|i| {
+                MebSketch::new(
+                    d,
+                    Some(random_ball(d, &mut rng)),
+                    1000 + i,
+                    opts,
+                    format!("shard{i}"),
+                )
+            })
+            .collect();
+        let stats = bench(3, 30, || {
+            let m = merge_sketches(&sketches).unwrap();
+            std::hint::black_box(m.seen);
+        });
+        t.row(&[
+            n.to_string(),
+            format!("{:?}", stats.mean),
+            format!("{:.0}", n as f64 / stats.mean.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn codec_throughput(dims: &[usize]) {
+    println!("\n-- codec encode/decode throughput --");
+    let mut t = Table::new(&["dim", "bytes", "encode", "decode", "MB/s (dec)"]);
+    for &d in dims {
+        let mut rng = Pcg32::seeded(d as u64);
+        let sk = MebSketch::new(
+            d,
+            Some(random_ball(d, &mut rng)),
+            123_456,
+            TrainOptions::default().with_c(10.0),
+            "bench",
+        );
+        let bytes = sk.encode();
+        let enc = bench(10, 200, || {
+            std::hint::black_box(sk.encode().len());
+        });
+        let dec = bench(10, 200, || {
+            let back = MebSketch::decode(&bytes).unwrap();
+            std::hint::black_box(back.seen);
+        });
+        t.row(&[
+            d.to_string(),
+            bytes.len().to_string(),
+            format!("{:?}", enc.mean),
+            format!("{:?}", dec.mean),
+            format!("{:.0}", bytes.len() as f64 / dec.mean.as_secs_f64() / 1e6),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let full = std::env::var("STREAMSVM_BENCH_FULL").is_ok();
+    println!("== sketch subsystem benches (full={full}) ==");
+    let shard_counts: &[usize] = if full {
+        &[2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+    } else {
+        &[2, 4, 8, 16, 32, 64, 128, 256]
+    };
+    merge_tree_throughput(&[21, 128, 784], shard_counts);
+    sketch_level_merge(shard_counts);
+    codec_throughput(&[21, 128, 784]);
+}

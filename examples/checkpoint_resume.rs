@@ -1,0 +1,98 @@
+//! Checkpoint / resume / merge walkthrough: the sketch subsystem
+//! end-to-end on a real dataset.
+//!
+//! 1. Train one pass over Synthetic A, checkpointing every 2,000
+//!    examples through the streaming pipeline.
+//! 2. "Crash": throw the trained model away, reload the last checkpoint
+//!    file, replay the remaining stream — and verify the resumed weights
+//!    are **bit-identical** to the uninterrupted run.
+//! 3. Split the same stream across 4 shards, snapshot each shard to its
+//!    own sketch file, merge the files through the merge-and-reduce
+//!    tree, and compare accuracies.
+//!
+//! ```sh
+//! cargo run --release --example checkpoint_resume
+//! ```
+
+use std::path::PathBuf;
+
+use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
+use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::registry::load_dataset_sized;
+use streamsvm::eval::accuracy;
+use streamsvm::sketch::checkpoint::{resume_fit, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::codec::MebSketch;
+use streamsvm::sketch::merge::merge_sketches;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn main() -> streamsvm::Result<()> {
+    let dir = std::env::temp_dir().join(format!("streamsvm_demo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let ds = load_dataset_sized("synthA", 42, 0.5)?;
+    let opts = TrainOptions::default();
+    println!(
+        "== checkpoint/resume on {} ({} train, dim {}) ==",
+        ds.name,
+        ds.train.len(),
+        ds.dim
+    );
+
+    // ---- 1. checkpointed one-pass training through the pipeline
+    let ckpt_path: PathBuf = dir.join("run.meb");
+    let mut ck = Checkpointer::new(CheckpointConfig {
+        every: 2_000,
+        path: ckpt_path.clone(),
+        tag: ds.name.clone(),
+    });
+    let cfg = PipelineConfig { train: opts, mode: ExecMode::Pure, ..Default::default() };
+    let stream = VecStream::of_train(&ds, None);
+    let report = train_stream_ckpt(None, stream, ds.dim, cfg, Some(&mut ck))?;
+    println!(
+        "trained: R={:.4}, {} core vectors | {} checkpoints, last at example {}",
+        report.model.radius(),
+        report.model.num_support(),
+        ck.saves(),
+        ck.last_saved()
+    );
+
+    // ---- 2. crash + resume from the last sketch on disk
+    let sk = MebSketch::read_from(&ckpt_path)?;
+    println!("reloaded {}: {}", ckpt_path.display(), sk.summary());
+    let resumed = resume_fit(&sk, VecStream::of_train(&ds, None));
+    let identical = resumed.weights() == report.model.weights()
+        && resumed.radius().to_bits() == report.model.radius().to_bits();
+    println!(
+        "resumed from example {}: weights bit-identical to uninterrupted run: {}",
+        sk.seen,
+        if identical { "YES" } else { "NO (bug!)" }
+    );
+    assert!(identical);
+
+    // ---- 3. shard, snapshot each shard, merge the sketch files
+    let shards = 4usize;
+    let mut files = Vec::new();
+    for s in 0..shards {
+        let mut m = StreamSvm::new(ds.dim, opts);
+        for e in ds.train.iter().skip(s).step_by(shards) {
+            m.observe(&e.x, e.y);
+        }
+        let path = dir.join(format!("shard{s}.meb"));
+        MebSketch::from_model(&m, format!("shard{s}")).write_to(&path)?;
+        files.push(path);
+    }
+    let sketches: streamsvm::Result<Vec<MebSketch>> =
+        files.iter().map(|p| MebSketch::read_from(p)).collect();
+    let merged = merge_sketches(&sketches?)?;
+    let merged_model = merged.to_model();
+    println!(
+        "merged {} shard files: {} | single-pass acc {:.2}% vs merged acc {:.2}%",
+        shards,
+        merged.summary(),
+        accuracy(&report.model, &ds.test) * 100.0,
+        accuracy(&merged_model, &ds.test) * 100.0
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

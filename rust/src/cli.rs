@@ -1,5 +1,6 @@
-//! Minimal `--key value` CLI argument parsing, shared by `main.rs` and
-//! unit-tested here (no clap in the offline image).
+//! Minimal CLI argument parsing (`--key value` and `--key=value`),
+//! shared by `main.rs` and unit-tested here (no clap in the offline
+//! image).
 
 use std::collections::HashMap;
 
@@ -19,13 +20,23 @@ impl Args {
         let cmd = it.next().unwrap_or_else(|| "help".into());
         let mut kv = HashMap::new();
         while let Some(k) = it.next() {
-            let key = k
+            let body = k
                 .strip_prefix("--")
-                .ok_or_else(|| Error::config(format!("expected --flag, got `{k}`")))?
-                .to_string();
-            let v = it
-                .next()
-                .ok_or_else(|| Error::config(format!("--{key} needs a value")))?;
+                .ok_or_else(|| Error::config(format!("expected --flag, got `{k}`")))?;
+            let (key, v) = match body.split_once('=') {
+                // --key=value (value may be empty: `--tag=`)
+                Some((key, v)) => (key.to_string(), v.to_string()),
+                // --key value
+                None => {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| Error::config(format!("--{body} needs a value")))?;
+                    (body.to_string(), v)
+                }
+            };
+            if key.is_empty() {
+                return Err(Error::config(format!("empty flag name in `{k}`")));
+            }
             kv.insert(key, v);
         }
         Ok(Args { cmd, kv })
@@ -94,6 +105,45 @@ mod tests {
     #[test]
     fn rejects_bad_typed_value() {
         let a = parse(&["train", "--c", "abc"]).unwrap();
+        assert!(a.get("c", 1.0).is_err());
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["train", "--dataset=mnist89", "--c=0.5"]).unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.str("dataset", "x"), "mnist89");
+        assert_eq!(a.get("c", 1.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn mixes_equals_and_space_forms() {
+        let a = parse(&["merge", "--inputs=a.meb,b.meb", "--out", "m.meb", "--frac=0.25"]).unwrap();
+        assert_eq!(a.str("inputs", ""), "a.meb,b.meb");
+        assert_eq!(a.str("out", ""), "m.meb");
+        assert_eq!(a.get("frac", 1.0).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn equals_value_may_be_empty_and_may_contain_equals() {
+        let a = parse(&["train", "--tag=", "--spec=k=v"]).unwrap();
+        assert_eq!(a.str("tag", "default"), "");
+        assert!(a.has("tag"));
+        // only the first '=' splits
+        assert_eq!(a.str("spec", ""), "k=v");
+    }
+
+    #[test]
+    fn equals_form_error_paths() {
+        // empty flag name
+        assert!(parse(&["train", "--=5"]).is_err());
+        // bare `--` still needs a value for its (empty) key → rejected
+        assert!(parse(&["train", "--"]).is_err());
+        // equals form never consumes the next token
+        let a = parse(&["train", "--c=1", "orphan"]);
+        assert!(a.is_err(), "bare token after --k=v must still be rejected");
+        // typed parse failure on equals form
+        let a = parse(&["train", "--c=abc"]).unwrap();
         assert!(a.get("c", 1.0).is_err());
     }
 }

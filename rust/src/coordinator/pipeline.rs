@@ -25,6 +25,7 @@ use crate::coordinator::metrics::{PipelineMetrics, ScopeTimer};
 use crate::data::Example;
 use crate::error::{Error, Result};
 use crate::runtime::{pad_dim, Runtime};
+use crate::sketch::checkpoint::Checkpointer;
 use crate::svm::ball::BallState;
 use crate::svm::meb::solve_merge;
 use crate::svm::streamsvm::StreamSvm;
@@ -311,6 +312,31 @@ pub fn train_stream<I>(
 where
     I: Iterator<Item = Example> + Send + 'static,
 {
+    train_stream_ckpt(runtime, source, dim, cfg, None)
+}
+
+/// [`train_stream`] with periodic checkpoints: the `Checkpointer`
+/// snapshots the live ball at block boundaries whenever its interval
+/// elapsed, so a crashed run resumes from the last sketch via
+/// [`crate::sketch::checkpoint::resume_fit`] — bit-identically for the
+/// pure-Rust paths (`resume_fit` replays with the algorithm the
+/// sketch's options select); runs whose merges executed on-device
+/// resume within float tolerance.
+///
+/// With lookahead > 1, snapshots only happen while the merge buffer is
+/// empty — buffered-but-unmerged survivors are not part of the ball, so
+/// a mid-buffer sketch would drop them on resume (and `resume_fit`'s
+/// merge cadence relies on the buffer-empty cut).
+pub fn train_stream_ckpt<I>(
+    runtime: Option<&mut Runtime>,
+    source: I,
+    dim: usize,
+    cfg: PipelineConfig,
+    mut ckpt: Option<&mut Checkpointer>,
+) -> Result<PipelineReport>
+where
+    I: Iterator<Item = Example> + Send + 'static,
+{
     let d_pad = pad_dim(dim);
     let block = cfg
         .block
@@ -321,6 +347,16 @@ where
     let mut trainer = Trainer::new(runtime, cfg, dim);
     for blk in rx.iter() {
         trainer.process_block(&blk)?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if trainer.buf_x.is_empty() {
+                ck.maybe_save(
+                    trainer.ball.as_ref(),
+                    dim,
+                    trainer.metrics.examples,
+                    &trainer.cfg.train,
+                )?;
+            }
+        }
     }
     trainer.flush_buffer();
     reader
@@ -423,5 +459,65 @@ mod tests {
         assert_eq!(report.metrics.blocks, 7);
         assert!(report.metrics.updates >= 1);
         assert!(report.metrics.wall_ns > 0);
+    }
+
+    #[test]
+    fn checkpointed_pipeline_resumes_bit_identical() {
+        use crate::sketch::checkpoint::{resume_fit, CheckpointConfig};
+        use crate::sketch::codec::MebSketch;
+        let dir = std::env::temp_dir().join(format!("ssvm_pipe_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pipe.meb");
+        let exs = toy(200, 5, 4);
+        let cfg = PipelineConfig { mode: ExecMode::Pure, block: Some(16), ..Default::default() };
+        let mut ck = Checkpointer::new(CheckpointConfig {
+            every: 48,
+            path: path.clone(),
+            tag: "pipe".into(),
+        });
+        let report =
+            train_stream_ckpt(None, exs.clone().into_iter(), 5, cfg, Some(&mut ck)).unwrap();
+        // intervals elapse at block boundaries 48, 96, 144, 192
+        assert!(ck.saves() >= 3, "saves = {}", ck.saves());
+        let sk = MebSketch::read_from(&path).unwrap();
+        assert!(sk.seen > 0 && sk.seen < 200, "seen = {}", sk.seen);
+        // simulate the crash: resume from the last checkpoint and replay
+        let resumed = resume_fit(&sk, exs.clone());
+        assert_eq!(resumed.weights(), report.model.weights());
+        assert_eq!(resumed.radius().to_bits(), report.model.radius().to_bits());
+        assert_eq!(resumed.num_support(), report.model.num_support());
+        assert_eq!(resumed.examples_seen(), 200);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpointed_lookahead_skips_mid_buffer_saves() {
+        use crate::sketch::checkpoint::CheckpointConfig;
+        use crate::sketch::codec::MebSketch;
+        let dir = std::env::temp_dir().join(format!("ssvm_pipe_ckpt_la_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("la.meb");
+        let exs = toy(300, 4, 6);
+        let cfg = PipelineConfig {
+            mode: ExecMode::Pure,
+            block: Some(32),
+            train: TrainOptions::default().with_lookahead(7),
+            ..Default::default()
+        };
+        let mut ck =
+            Checkpointer::new(CheckpointConfig { every: 64, path: path.clone(), tag: "la".into() });
+        train_stream_ckpt(None, exs.clone().into_iter(), 4, cfg, Some(&mut ck)).unwrap();
+        if ck.saves() > 0 {
+            // every saved sketch must be at a fully-absorbed prefix: the
+            // resumed prefix model equals a direct prefix-trained model
+            let sk = MebSketch::read_from(&path).unwrap();
+            let mut direct = crate::svm::lookahead::LookaheadSvm::new(4, cfg.train);
+            for e in exs.iter().take(sk.seen) {
+                direct.observe(&e.x, e.y);
+            }
+            assert_eq!(direct.buffered(), 0, "checkpoint taken mid-buffer");
+            assert_eq!(sk.ball.as_ref().unwrap().w.as_slice(), direct.weights());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,6 +7,7 @@
 //! per-request channels. Latency is tracked per request admission →
 //! reply in a log-bucketed histogram.
 
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
@@ -14,6 +15,8 @@ use crate::coordinator::metrics::LatencyHistogram;
 use crate::error::{Error, Result};
 use crate::linalg;
 use crate::runtime::{pad_dim, Runtime};
+use crate::sketch::codec::MebSketch;
+use crate::svm::streamsvm::StreamSvm;
 
 /// One scoring request.
 pub struct Request {
@@ -68,6 +71,8 @@ impl Default for ServiceConfig {
 pub struct ServiceStats {
     pub requests: u64,
     pub batches: u64,
+    /// Live model snapshots written while serving.
+    pub snapshots: u64,
     pub latency: LatencyHistogram,
 }
 
@@ -90,6 +95,16 @@ pub struct PredictService {
     rx: Receiver<Request>,
     tx: Sender<Request>,
     stats: ServiceStats,
+    /// Full model sketch for live snapshots (None when constructed from
+    /// bare weights).
+    sketch: Option<MebSketch>,
+    /// `(path, every_batches)` — persist the sketch to `path`, checked
+    /// every N batches while serving.
+    snapshot: Option<(PathBuf, u64)>,
+    /// Has the (immutable) sketch been written this run? Serving never
+    /// mutates the model, so after the first successful write the hook
+    /// only re-writes if the file disappears out from under it.
+    snapshot_fresh: bool,
 }
 
 impl PredictService {
@@ -99,7 +114,45 @@ impl PredictService {
         let mut w_pad = w;
         w_pad.resize(d_pad, 0.0);
         let (tx, rx) = channel();
-        PredictService { w: w_pad, dim, d_pad, cfg, rx, tx, stats: ServiceStats::default() }
+        PredictService {
+            w: w_pad,
+            dim,
+            d_pad,
+            cfg,
+            rx,
+            tx,
+            stats: ServiceStats::default(),
+            sketch: None,
+            snapshot: None,
+            snapshot_fresh: false,
+        }
+    }
+
+    /// Build a service around a trained model, retaining its full sketch
+    /// (ball + provenance) so live snapshots capture the whole state,
+    /// not just the serving weights.
+    pub fn from_model(model: &StreamSvm, tag: &str, cfg: ServiceConfig) -> Self {
+        let mut svc = Self::new(model.weights().to_vec(), cfg);
+        svc.sketch = Some(MebSketch::from_model(model, tag));
+        svc
+    }
+
+    /// Live-snapshot hook: while serving, persist the model sketch to
+    /// `path` (atomic tmp+rename) without ever blocking a reply on a
+    /// failure. The serving model is immutable, so the sketch is
+    /// written once on the first eligible batch; every `every_batches`
+    /// batches thereafter the hook re-checks the file and rewrites it
+    /// only if it vanished (rotated away, volume wiped). Requires
+    /// [`Self::from_model`]; failures are reported on stderr and never
+    /// interrupt serving.
+    pub fn snapshot_to(mut self, path: PathBuf, every_batches: u64) -> Self {
+        self.snapshot = Some((path, every_batches.max(1)));
+        self
+    }
+
+    /// The retained model sketch, if constructed with [`Self::from_model`].
+    pub fn sketch(&self) -> Option<&MebSketch> {
+        self.sketch.as_ref()
     }
 
     pub fn client(&self) -> ServiceClient {
@@ -154,6 +207,17 @@ impl PredictService {
                 self.stats.latency.record(r.admitted.elapsed());
                 let _ = r.reply.send(Reply { score: scores[i] });
             }
+            if let (Some(sk), Some((path, every))) = (&self.sketch, &self.snapshot) {
+                if self.stats.batches % every == 0 && (!self.snapshot_fresh || !path.exists()) {
+                    match sk.write_to(path) {
+                        Ok(()) => {
+                            self.stats.snapshots += 1;
+                            self.snapshot_fresh = true;
+                        }
+                        Err(e) => eprintln!("warning: live snapshot failed: {e}"),
+                    }
+                }
+            }
         }
         Ok(self.stats)
     }
@@ -190,6 +254,32 @@ mod tests {
         assert_eq!(stats.requests, 200);
         assert!(stats.batches <= 200);
         assert!(stats.latency.count() == 200);
+    }
+
+    #[test]
+    fn live_snapshot_writes_decodable_sketch() {
+        use crate::svm::TrainOptions;
+        let dir = std::env::temp_dir().join(format!("ssvm_svc_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("live.meb");
+        let mut model = StreamSvm::new(2, TrainOptions::default());
+        model.observe(&[1.0, -2.0], 1.0);
+        model.observe(&[3.0, 0.5], -1.0);
+        let svc = PredictService::from_model(&model, "serving", ServiceConfig::default())
+            .snapshot_to(path.clone(), 1);
+        let client = svc.client();
+        let worker = std::thread::spawn(move || {
+            for i in 0..40 {
+                let _ = client.score(vec![i as f32, 1.0]).unwrap();
+            }
+        });
+        let stats = svc.run(None).unwrap();
+        worker.join().unwrap();
+        assert!(stats.snapshots >= 1, "no snapshots written");
+        let sk = MebSketch::read_from(&path).unwrap();
+        assert_eq!(sk.tag, "serving");
+        assert_eq!(sk.to_model().weights(), model.weights());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

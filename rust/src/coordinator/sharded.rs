@@ -1,20 +1,24 @@
 //! Sharded one-pass training: S worker threads each consume a disjoint
-//! sub-stream with Algorithm 1, and the final balls merge pairwise into
-//! one model (closed-form two-ball MEB) — the natural distributed
+//! sub-stream with Algorithm 1, and the final balls merge through the
+//! sketch layer's balanced merge-and-reduce tree
+//! ([`crate::sketch::merge`]) into one model — the natural distributed
 //! extension of the streaming coordinator.
 //!
 //! Slack masses of distinct shards live on disjoint stream indices, so
-//! the two-ball merge geometry of `svm::multiball` applies exactly. The
-//! merged ball encloses every shard ball, hence (transitively) every
-//! streamed point in the augmented space; the price is the same kind of
-//! radius slack the lookahead analysis bounds.
+//! the two-ball merge geometry of `svm::multiball` applies exactly at
+//! every tree level. The merged ball encloses every shard ball, hence
+//! (transitively) every streamed point in the augmented space; the price
+//! is the same kind of radius slack the lookahead analysis bounds, and
+//! the balanced tree keeps it order-robust (⌈log₂ S⌉ merges deep instead
+//! of S−1).
 
 use std::sync::mpsc::sync_channel;
 
 use crate::data::Example;
 use crate::error::{Error, Result};
+use crate::sketch::codec::MebSketch;
+use crate::sketch::merge::{merge_ball_tree, merge_sketches};
 use crate::svm::ball::BallState;
-use crate::svm::multiball::merge_balls;
 use crate::svm::streamsvm::StreamSvm;
 use crate::svm::TrainOptions;
 
@@ -27,8 +31,20 @@ pub struct ShardedReport {
     pub examples: usize,
 }
 
+impl ShardedReport {
+    /// The merged model as a durable sketch (for `streamsvm train
+    /// --shards N --out model.meb` and checkpoint hand-off).
+    pub fn sketch(&self, tag: &str) -> MebSketch {
+        MebSketch::from_model(&self.model, tag)
+    }
+}
+
 /// Train over `source` with `shards` parallel one-pass learners
 /// (round-robin dispatch, bounded per-shard queues for backpressure).
+///
+/// Every dispatched example is validated against the caller-supplied
+/// `dim`; a mismatch aborts with [`Error::Config`] instead of silently
+/// training shards on inconsistent dimensions.
 pub fn train_sharded<I>(
     source: I,
     dim: usize,
@@ -46,16 +62,25 @@ where
         let (tx, rx) = sync_channel::<Example>(queue.max(1));
         senders.push(tx);
         workers.push(std::thread::spawn(move || {
-            let mut model: Option<StreamSvm> = None;
+            // Workers are told the stream dimension up front — they no
+            // longer infer it from their first example.
+            let mut model = StreamSvm::new(dim, opts);
             for e in rx.iter() {
-                let m = model.get_or_insert_with(|| StreamSvm::new(e.x.len(), opts));
-                m.observe(&e.x, e.y);
+                model.observe(&e.x, e.y);
             }
             model
         }));
     }
     let mut n = 0usize;
     for (i, e) in source.enumerate() {
+        if e.x.len() != dim {
+            drop(senders); // release workers before bailing out
+            return Err(Error::config(format!(
+                "shard dispatch: example {i} has dimension {} but the stream \
+                 was declared as {dim}",
+                e.x.len()
+            )));
+        }
         n += 1;
         senders[i % shards]
             .send(e)
@@ -65,20 +90,28 @@ where
     let mut balls: Vec<BallState> = Vec::new();
     for w in workers {
         let model = w.join().map_err(|_| Error::Pipeline("shard worker panicked".into()))?;
-        if let Some(m) = model {
-            if let Some(b) = m.ball() {
-                balls.push(b.clone());
-            }
+        if let Some(b) = model.ball() {
+            balls.push(b.clone());
         }
     }
     if balls.is_empty() {
         return Err(Error::Pipeline("empty stream".into()));
     }
     let shard_radii: Vec<f64> = balls.iter().map(|b| b.r).collect();
-    let merged = merge_balls(&balls).expect("non-empty");
+    let merged = merge_ball_tree(balls).expect("non-empty");
     let mut model = StreamSvm::new(dim, opts);
     model.set_ball(merged, n);
     Ok(ShardedReport { model, shard_radii, examples: n })
+}
+
+/// Merge independently-trained shard sketches into one model — the
+/// cross-machine half of merge-and-reduce, where each shard arrives as a
+/// `MebSketch` file rather than a live thread.
+pub fn merge_shard_sketches(sketches: &[MebSketch]) -> Result<ShardedReport> {
+    let shard_radii: Vec<f64> = sketches.iter().map(|s| s.radius()).collect();
+    let merged = merge_sketches(sketches)?;
+    let examples = merged.seen;
+    Ok(ShardedReport { model: merged.to_model(), shard_radii, examples })
 }
 
 #[cfg(test)]
@@ -116,6 +149,19 @@ mod tests {
     }
 
     #[test]
+    fn many_shards_through_the_tree_stay_in_tolerance() {
+        // The merge tree must keep accuracy when S is large enough that
+        // the old sequential fold would be S−1 merges deep.
+        let exs = toy(6000, 8, 5);
+        let opts = TrainOptions::default();
+        let single = train_sharded(exs.clone().into_iter(), 8, 1, opts, 8).unwrap();
+        let wide = train_sharded(exs.clone().into_iter(), 8, 16, opts, 8).unwrap();
+        let (a1, aw) = (accuracy(&single.model, &exs), accuracy(&wide.model, &exs));
+        assert_eq!(wide.shard_radii.len(), 16);
+        assert!(aw > a1 - 0.08, "16-shard {aw:.3} vs single {a1:.3}");
+    }
+
+    #[test]
     fn merged_radius_dominates_shards() {
         let exs = toy(1000, 4, 3);
         let rep = train_sharded(exs.into_iter(), 4, 3, TrainOptions::default(), 4).unwrap();
@@ -127,5 +173,38 @@ mod tests {
     fn empty_stream_errors() {
         let err = train_sharded(std::iter::empty(), 3, 2, TrainOptions::default(), 2);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected_at_dispatch() {
+        let mut exs = toy(20, 4, 7);
+        exs.insert(10, Example::new(vec![1.0, -1.0], 1.0)); // rogue dim-2 row
+        let err = train_sharded(exs.into_iter(), 4, 3, TrainOptions::default(), 2).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Config(_)), "{msg}");
+        assert!(msg.contains("example 10") && msg.contains("dimension 2"), "{msg}");
+    }
+
+    #[test]
+    fn shard_sketches_merge_like_live_shards() {
+        let exs = toy(1200, 5, 9);
+        let opts = TrainOptions::default();
+        let sketches: Vec<MebSketch> = exs
+            .chunks(400)
+            .enumerate()
+            .map(|(i, c)| {
+                MebSketch::from_model(
+                    &StreamSvm::fit(c.iter(), 5, &opts),
+                    format!("shard{i}"),
+                )
+            })
+            .collect();
+        let rep = merge_shard_sketches(&sketches).unwrap();
+        assert_eq!(rep.examples, 1200);
+        assert_eq!(rep.shard_radii.len(), 3);
+        // same tolerance sharded training gets vs the single pass
+        let single = StreamSvm::fit(exs.iter(), 5, &opts);
+        let (a, a1) = (accuracy(&rep.model, &exs), accuracy(&single, &exs));
+        assert!(a > a1 - 0.08, "sketch-merged {a:.3} vs single {a1:.3}");
     }
 }

@@ -1,35 +1,75 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls (no `thiserror` in the offline
+//! image); the PJRT variant only exists when the `pjrt` feature is on.
 
 /// Unified error for the StreamSVM crate.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Errors bubbling up from the PJRT runtime (`xla` crate).
-    #[error("xla runtime: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
 
-    /// I/O (artifact files, dataset files).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O (artifact files, dataset files, sketch files).
+    Io(std::io::Error),
 
     /// Artifact registry problems: missing manifest entries, shape
     /// mismatches between the requested block and the compiled bucket.
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Malformed dataset input (LIBSVM parser, registry names).
-    #[error("data: {0}")]
     Data(String),
 
     /// Invalid configuration (CLI, TrainOptions).
-    #[error("config: {0}")]
     Config(String),
 
     /// A pipeline stage disappeared (channel closed unexpectedly).
-    #[error("pipeline: {0}")]
     Pipeline(String),
+
+    /// Malformed or incompatible MEB sketch (codec, merge, checkpoint).
+    Sketch(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla runtime: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline: {m}"),
+            Error::Sketch(m) => write!(f, "sketch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
 
 impl Error {
     pub fn artifact(msg: impl Into<String>) -> Self {
@@ -40,5 +80,29 @@ impl Error {
     }
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
+    }
+    pub fn sketch(msg: impl Into<String>) -> Self {
+        Error::Sketch(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::artifact("x").to_string(), "artifact: x");
+        assert_eq!(Error::data("x").to_string(), "data: x");
+        assert_eq!(Error::config("x").to_string(), "config: x");
+        assert_eq!(Error::Pipeline("x".into()).to_string(), "pipeline: x");
+        assert_eq!(Error::sketch("x").to_string(), "sketch: x");
+    }
+
+    #[test]
+    fn io_preserves_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

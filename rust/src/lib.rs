@@ -17,8 +17,20 @@
 //!   Figures 2–4.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
-//! binary loads the HLO artifacts via PJRT (`xla` crate) and is
-//! self-contained.
+//! binary loads the HLO artifacts via PJRT (`xla` crate, behind the
+//! `pjrt` feature) and is self-contained. Without the feature (the
+//! offline default) every PJRT call site falls back to the pure-Rust
+//! reference paths.
+//!
+//! The **sketch layer** ([`sketch`]) turns the tiny ball state into
+//! durable, composable model files: [`sketch::MebSketch`] is a
+//! versioned, checksummed binary encoding of ball + stream provenance;
+//! [`sketch::merge_sketches`] folds N shard sketches through an
+//! order-robust merge-and-reduce tree (the sharded coordinator trains
+//! through it); [`sketch::Checkpointer`] gives the pipeline periodic
+//! snapshots with *exact* resume — a run interrupted at example `k` and
+//! resumed from its sketch finishes with bit-identical weights. The CLI
+//! exposes all of it as `snapshot`, `resume` and `merge` subcommands.
 //!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
@@ -46,6 +58,7 @@ pub mod linalg;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod sketch;
 pub mod svm;
 
 pub use error::{Error, Result};

@@ -1,8 +1,15 @@
 //! StreamSVM CLI — the leader entrypoint.
 //!
+//! Flags accept both `--key value` and `--key=value`.
+//!
 //! ```text
 //! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
+//!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
 //! streamsvm serve    --dataset mnist01 [--requests 5000] [--batch 64]
+//!                    [--snapshot live.meb --snapshot-every 64]
+//! streamsvm snapshot --dataset synthA [--at 5000] --out model.meb
+//! streamsvm resume   --from model.meb --dataset synthA [--out model2.meb]
+//! streamsvm merge    --inputs a.meb,b.meb,... --out merged.meb [--dataset synthA]
 //! streamsvm table1   [--frac 1.0] [--runs 20]
 //! streamsvm fig2     [--dataset mnist89] [--max-passes 512] [--frac 1.0]
 //! streamsvm fig3     [--dataset mnist89] [--perms 100] [--frac 1.0]
@@ -12,16 +19,22 @@
 //! ```
 
 use std::io::Write as _;
+use std::path::{Path, PathBuf};
 
 use streamsvm::cli::Args;
-use streamsvm::coordinator::pipeline::{train_stream, ExecMode, PipelineConfig};
+use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
 use streamsvm::coordinator::service::{PredictService, ServiceConfig};
+use streamsvm::coordinator::sharded::train_sharded;
 use streamsvm::coordinator::stream::VecStream;
 use streamsvm::data::registry::{load_dataset, load_dataset_sized};
 use streamsvm::error::{Error, Result};
 use streamsvm::eval::accuracy;
 use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
 use streamsvm::runtime::Runtime;
+use streamsvm::sketch::checkpoint::{resume_fit, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::codec::MebSketch;
+use streamsvm::sketch::merge::merge_sketches;
+use streamsvm::svm::streamsvm::StreamSvm;
 use streamsvm::svm::{SlackMode, TrainOptions};
 
 fn train_opts(args: &Args) -> Result<TrainOptions> {
@@ -53,12 +66,6 @@ fn cmd_train(args: &Args) -> Result<()> {
     let name = args.str("dataset", "synthA");
     let frac: f64 = args.get("frac", 1.0)?;
     let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, frac)?;
-    let mode = match args.str("mode", "filter").as_str() {
-        "filter" => ExecMode::Filter,
-        "scan" => ExecMode::Scan,
-        "pure" => ExecMode::Pure,
-        other => return Err(Error::config(format!("unknown mode `{other}`"))),
-    };
     let train = train_opts(args)?;
     // C defaults per dataset unless explicitly given
     let train = if args.has("c") {
@@ -66,23 +73,175 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         train.with_c(table1::c_for(&name))
     };
-    let cfg = PipelineConfig { train, mode, block: None, queue: args.get("queue", 4usize)? };
-    let mut rt = open_runtime_opt(mode);
-    let cfg = if rt.is_none() && mode != ExecMode::Pure {
-        PipelineConfig { mode: ExecMode::Pure, ..cfg }
-    } else {
-        cfg
-    };
     let perm: i64 = args.get("perm-seed", -1i64)?;
     let stream = VecStream::of_train(&ds, (perm >= 0).then_some(perm as u64));
-    let report = train_stream(rt.as_mut(), stream, ds.dim, cfg)?;
-    println!("pipeline: {}", report.metrics.summary());
+
+    // Validate flags up front so no combination silently ignores them.
+    let mode = match args.str("mode", "filter").as_str() {
+        "filter" => ExecMode::Filter,
+        "scan" => ExecMode::Scan,
+        "pure" => ExecMode::Pure,
+        other => return Err(Error::config(format!("unknown mode `{other}`"))),
+    };
+    let ckpt_every: usize = args.get("ckpt-every", 100_000usize)?;
+    if args.has("ckpt") && ckpt_every == 0 {
+        return Err(Error::config("--ckpt-every must be >= 1"));
+    }
+    let shards: usize = args.get("shards", 1)?;
+    if shards == 0 {
+        return Err(Error::config("--shards must be >= 1"));
+    }
+    if shards > 1 && args.has("ckpt") {
+        return Err(Error::config(
+            "--ckpt is not supported with --shards (shard state exists only at \
+             merge time; use --out to persist the merged model)",
+        ));
+    }
+
+    // ---- sharded path: S parallel one-pass learners, merge-and-reduce
+    let model = if shards > 1 {
+        let rep = train_sharded(stream, ds.dim, shards, train, args.get("queue", 64usize)?)?;
+        let max_r = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "sharded: {} examples over {shards} shards | max shard R={max_r:.4}",
+            rep.examples
+        );
+        rep.model
+    } else {
+        // ---- pipeline path, with optional periodic checkpoints
+        let cfg = PipelineConfig { train, mode, block: None, queue: args.get("queue", 4usize)? };
+        let mut rt = open_runtime_opt(mode);
+        let cfg = if rt.is_none() && mode != ExecMode::Pure {
+            PipelineConfig { mode: ExecMode::Pure, ..cfg }
+        } else {
+            cfg
+        };
+        let mut ckpt = if args.has("ckpt") {
+            Some(Checkpointer::new(CheckpointConfig {
+                every: ckpt_every,
+                path: PathBuf::from(args.str("ckpt", "checkpoint.meb")),
+                tag: name.clone(),
+            }))
+        } else {
+            None
+        };
+        let report = train_stream_ckpt(rt.as_mut(), stream, ds.dim, cfg, ckpt.as_mut())?;
+        println!("pipeline: {}", report.metrics.summary());
+        if let Some(ck) = &ckpt {
+            println!(
+                "checkpoints: {} written to {} (last at example {})",
+                ck.saves(),
+                ck.path().display(),
+                ck.last_saved()
+            );
+        }
+        report.model
+    };
     println!(
         "model: R={:.4} supports={} | test acc = {:.2}%",
-        report.model.radius(),
-        report.model.num_support(),
-        accuracy(&report.model, &ds.test) * 100.0
+        model.radius(),
+        model.num_support(),
+        accuracy(&model, &ds.test) * 100.0
     );
+    if args.has("out") {
+        let out = args.str("out", "model.meb");
+        let sk = MebSketch::from_model(&model, &name);
+        sk.write_to(Path::new(&out))?;
+        println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
+    }
+    Ok(())
+}
+
+/// Rebuild the training stream a sketch was produced from (same dataset
+/// flags must be passed as on the original run).
+fn stream_for(args: &Args, ds: &streamsvm::data::Dataset) -> Result<VecStream> {
+    let perm: i64 = args.get("perm-seed", -1i64)?;
+    Ok(VecStream::of_train(ds, (perm >= 0).then_some(perm as u64)))
+}
+
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    let name = args.str("dataset", "synthA");
+    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
+    let train = train_opts(args)?;
+    let train = if args.has("c") { train } else { train.with_c(table1::c_for(&name)) };
+    let at: usize = args.get("at", usize::MAX)?;
+    let mut model = StreamSvm::new(ds.dim, train);
+    for e in stream_for(args, &ds)?.take(at) {
+        model.observe(&e.x, e.y);
+    }
+    let out = args.str("out", "model.meb");
+    let sk = MebSketch::from_model(&model, &name);
+    sk.write_to(Path::new(&out))?;
+    println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
+    println!("test acc = {:.2}%", accuracy(&model, &ds.test) * 100.0);
+    Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    let from = args.str("from", "model.meb");
+    let sk = MebSketch::read_from(Path::new(&from))?;
+    println!("loaded {from}: {}", sk.summary());
+    let name = args.str("dataset", if sk.tag.is_empty() { "synthA" } else { sk.tag.as_str() });
+    if name != sk.tag && !sk.tag.is_empty() {
+        eprintln!("warning: sketch was trained on `{}`, resuming on `{name}`", sk.tag);
+    }
+    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
+    let model = if sk.ball.is_none() {
+        // empty sketch (no examples absorbed): train from scratch with
+        // the sketch's options, at the dataset's dimension
+        let mut m = StreamSvm::new(ds.dim, sk.opts);
+        for e in stream_for(args, &ds)? {
+            m.observe(&e.x, e.y);
+        }
+        m
+    } else {
+        if ds.dim != sk.dim {
+            return Err(Error::config(format!(
+                "sketch dimension {} does not match dataset `{name}` dimension {}",
+                sk.dim, ds.dim
+            )));
+        }
+        resume_fit(&sk, stream_for(args, &ds)?)
+    };
+    println!(
+        "resumed {} -> {} examples | R={:.4} supports={} | test acc = {:.2}%",
+        sk.seen,
+        model.examples_seen(),
+        model.radius(),
+        model.num_support(),
+        accuracy(&model, &ds.test) * 100.0
+    );
+    if args.has("out") {
+        let out = args.str("out", "model.meb");
+        let sk2 = MebSketch::from_model(&model, &sk.tag);
+        sk2.write_to(Path::new(&out))?;
+        println!("wrote {out}: {}", sk2.summary());
+    }
+    Ok(())
+}
+
+fn cmd_merge(args: &Args) -> Result<()> {
+    let inputs = args.str("inputs", "");
+    if inputs.is_empty() {
+        return Err(Error::config("merge needs --inputs a.meb,b.meb,..."));
+    }
+    let mut sketches = Vec::new();
+    for p in inputs.split(',').filter(|p| !p.is_empty()) {
+        let sk = MebSketch::read_from(Path::new(p))?;
+        println!("  in  {p}: {}", sk.summary());
+        sketches.push(sk);
+    }
+    let merged = merge_sketches(&sketches)?;
+    println!("  out {}", merged.summary());
+    let out = args.str("out", "merged.meb");
+    merged.write_to(Path::new(&out))?;
+    println!("wrote {out} ({} bytes)", merged.encode().len());
+    if args.has("dataset") {
+        let name = args.str("dataset", "synthA");
+        let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
+        let model = merged.to_model();
+        println!("test acc on {name} = {:.2}%", accuracy(&model, &ds.test) * 100.0);
+    }
     Ok(())
 }
 
@@ -94,10 +253,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("trained on {}: {} supports", ds.name, model.num_support());
     let n_req: usize = args.get("requests", 5000)?;
     let batch: usize = args.get("batch", 64)?;
-    let svc = PredictService::new(
-        model.weights().to_vec(),
+    let mut svc = PredictService::from_model(
+        &model,
+        &name,
         ServiceConfig { batch, ..Default::default() },
     );
+    if args.has("snapshot") {
+        svc = svc.snapshot_to(
+            PathBuf::from(args.str("snapshot", "live.meb")),
+            args.get("snapshot-every", 64u64)?,
+        );
+    }
     let client = svc.client();
     let test = std::sync::Arc::new(ds.test.clone());
     let workers: Vec<_> = (0..4)
@@ -129,10 +295,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total += t;
     }
     println!(
-        "served {} requests in {} batches (mean fill {:.1})",
+        "served {} requests in {} batches (mean fill {:.1}, {} live snapshots)",
         stats.requests,
         stats.batches,
-        stats.mean_batch_fill()
+        stats.mean_batch_fill(),
+        stats.snapshots
     );
     println!("latency: {}", stats.latency.summary());
     println!("serving accuracy: {:.2}%", correct as f64 / total as f64 * 100.0);
@@ -152,6 +319,9 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(&args)?,
         "serve" => cmd_serve(&args)?,
+        "snapshot" => cmd_snapshot(&args)?,
+        "resume" => cmd_resume(&args)?,
+        "merge" => cmd_merge(&args)?,
         "table1" => {
             let rows = table1::run(&scale_from(&args)?)?;
             table1::print(&rows);
@@ -213,10 +383,13 @@ fn main() -> Result<()> {
             }
             Err(e) => println!("{e}"),
         },
-        "help" | _ => {
+        _ => {
             println!("streamsvm — one-pass streaming l2-SVM (IJCAI'09 reproduction)");
-            println!("commands: train serve table1 fig2 fig3 bounds gen-data artifacts");
-            println!("see README.md for flags");
+            println!(
+                "commands: train serve snapshot resume merge table1 fig2 fig3 \
+                 bounds gen-data artifacts"
+            );
+            println!("see README.md for flags (--key value and --key=value)");
         }
     }
     Ok(())

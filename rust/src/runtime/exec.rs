@@ -4,14 +4,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
-
-/// Key into the artifact manifest: `(entry, block, dim)`.
-#[derive(Clone, Debug, Hash, PartialEq, Eq)]
-struct Key {
-    entry: String,
-    b: usize,
-    d: usize,
-}
+use crate::runtime::manifest::{self, Key};
 
 /// Outputs of the `update` entry point (Algorithm-1 semantics over one
 /// block).
@@ -70,33 +63,7 @@ impl Runtime {
     /// Open the artifact directory (reads `manifest.txt`; artifacts
     /// compile lazily on first use).
     pub fn open(dir: &Path) -> Result<Self> {
-        let manifest_path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            Error::artifact(format!(
-                "cannot read {} — run `make artifacts` first ({e})",
-                manifest_path.display()
-            ))
-        })?;
-        let mut manifest = HashMap::new();
-        for (lineno, line) in text.lines().enumerate() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let parts: Vec<&str> = line.split_whitespace().collect();
-            if parts.len() != 4 {
-                return Err(Error::artifact(format!(
-                    "manifest line {}: expected `entry b d file`, got `{line}`",
-                    lineno + 1
-                )));
-            }
-            let key = Key {
-                entry: parts[0].to_string(),
-                b: parts[1].parse().map_err(|e| Error::artifact(format!("bad b: {e}")))?,
-                d: parts[2].parse().map_err(|e| Error::artifact(format!("bad d: {e}")))?,
-            };
-            manifest.insert(key, dir.join(parts[3]));
-        }
+        let manifest = manifest::parse(dir)?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
             client,

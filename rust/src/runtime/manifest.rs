@@ -1,0 +1,85 @@
+//! Artifact manifest parsing, shared by the PJRT executor and the
+//! feature-off stub runtime so both agree on `manifest.txt` semantics.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Key into the artifact manifest: `(entry, block, dim)`.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+pub struct Key {
+    pub entry: String,
+    pub b: usize,
+    pub d: usize,
+}
+
+/// Read and parse `<dir>/manifest.txt` (`entry b d file` per line).
+pub fn parse(dir: &Path) -> Result<HashMap<Key, PathBuf>> {
+    let manifest_path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        Error::artifact(format!(
+            "cannot read {} — run `make artifacts` first ({e})",
+            manifest_path.display()
+        ))
+    })?;
+    let mut manifest = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            return Err(Error::artifact(format!(
+                "manifest line {}: expected `entry b d file`, got `{line}`",
+                lineno + 1
+            )));
+        }
+        let key = Key {
+            entry: parts[0].to_string(),
+            b: parts[1].parse().map_err(|e| Error::artifact(format!("bad b: {e}")))?,
+            d: parts[2].parse().map_err(|e| Error::artifact(format!("bad d: {e}")))?,
+        };
+        manifest.insert(key, dir.join(parts[3]));
+    }
+    Ok(manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_missing_dir_is_artifact_error() {
+        let err = parse(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        let dir = std::env::temp_dir().join(format!("ssvm_manifest_mod_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "distance 256\n").unwrap();
+        let err = parse(&dir).unwrap_err();
+        assert!(err.to_string().contains("expected `entry b d file`"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parse_accepts_well_formed() {
+        let dir = std::env::temp_dir().join(format!("ssvm_manifest_ok_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "distance 256 21 d.hlo.txt\n\nupdate 256 21 u.hlo.txt\n",
+        )
+        .unwrap();
+        let m = parse(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let k = Key { entry: "distance".into(), b: 256, d: 21 };
+        assert_eq!(m[&k], dir.join("d.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

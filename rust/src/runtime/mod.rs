@@ -8,9 +8,22 @@
 //! points; shapes must match the compiled (B, D) bucket exactly — the
 //! coordinator's batcher owns padding (see `coordinator::batcher`).
 
-pub mod exec;
+//! Feature gating: the real executor needs the `xla` crate, which the
+//! offline image does not carry. Without the `pjrt` feature a stub
+//! runtime with the identical API parses manifests but fails at execute
+//! time, and every caller falls back to the pure-Rust paths.
 
+pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(feature = "pjrt")]
 pub use exec::{MergeOut, Runtime, UpdateOut};
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{MergeOut, Runtime, UpdateOut};
 
 /// Feature-dim padding rule — must mirror `aot.pad_dim` on the Python
 /// side: exact below 128, then the next multiple of 128.

@@ -1,0 +1,244 @@
+//! Stub runtime compiled when the `pjrt` feature is off (the offline
+//! default — the `xla` crate is unavailable in the image).
+//!
+//! It mirrors the executor's public API exactly: manifests parse with
+//! identical semantics and errors, bucket queries (`has`, `train_block`,
+//! `available`) answer from the manifest, but every execute entry point
+//! returns an artifact error. Callers already handle execute-time
+//! artifact failures (corrupt HLO, missing bucket) by falling back to
+//! the pure-Rust paths, so a feature-off build degrades exactly like a
+//! build whose artifacts are absent or broken.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{self, Key};
+
+/// Outputs of the `update` entry point (Algorithm-1 semantics over one
+/// block).
+#[derive(Clone, Debug)]
+pub struct UpdateOut {
+    pub w: Vec<f32>,
+    pub r: f64,
+    pub xi2: f64,
+    /// Updates applied within the block.
+    pub m_added: usize,
+    /// Per-row update mask.
+    pub upd_mask: Vec<f32>,
+    /// Per-row distance to the *entry* ball (the L1 kernel's output).
+    pub d0: Vec<f32>,
+}
+
+/// Outputs of the `merge` entry point (Algorithm-2 lookahead merge).
+#[derive(Clone, Debug)]
+pub struct MergeOut {
+    pub w: Vec<f32>,
+    pub r: f64,
+    pub xi2: f64,
+    pub mu: Vec<f32>,
+}
+
+/// Manifest-only runtime: resolves buckets, never executes.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: HashMap<Key, PathBuf>,
+    prefer_fast: bool,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = manifest::parse(dir)?;
+        Ok(Runtime { dir: dir.to_path_buf(), manifest, prefer_fast: true })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&super::default_artifact_dir())
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All `(entry, b, d)` triples in the manifest.
+    pub fn available(&self) -> Vec<(String, usize, usize)> {
+        let mut v: Vec<_> = self.manifest.keys().map(|k| (k.entry.clone(), k.b, k.d)).collect();
+        v.sort();
+        v
+    }
+
+    /// Does the manifest have this bucket?
+    pub fn has(&self, entry: &str, b: usize, d: usize) -> bool {
+        self.manifest.contains_key(&Key { entry: entry.into(), b, d })
+    }
+
+    /// The default training block size compiled for dimension `d`
+    /// (smallest compiled bucket, matching the executor's choice).
+    pub fn train_block(&self, d: usize) -> Option<usize> {
+        self.train_blocks(d).first().copied()
+    }
+
+    /// All compiled training block sizes for dimension `d`, ascending.
+    pub fn train_blocks(&self, d: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .keys()
+            .filter(|k| k.entry == "update" && k.d == d)
+            .map(|k| k.b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Toggle backend kernel selection; returns the previous value.
+    pub fn set_prefer_fast(&mut self, on: bool) -> bool {
+        std::mem::replace(&mut self.prefer_fast, on)
+    }
+
+    fn resolve_entry(&self, entry: &str, b: usize, d: usize) -> String {
+        if self.prefer_fast {
+            let fast = format!("{entry}f");
+            if self.manifest.contains_key(&Key { entry: fast.clone(), b, d }) {
+                return fast;
+            }
+        }
+        entry.to_string()
+    }
+
+    /// Execute-time error for `entry`: missing bucket reports the same
+    /// message as the executor; a present bucket reports the missing
+    /// `pjrt` feature.
+    fn exec_err(&self, entry: &str, b: usize, d: usize) -> Error {
+        let entry = self.resolve_entry(entry, b, d);
+        if self.manifest.contains_key(&Key { entry: entry.clone(), b, d }) {
+            Error::artifact(format!(
+                "artifact {entry} b={b} d={d} exists but this build lacks the \
+                 `pjrt` feature; rebuild with `--features pjrt` (see Cargo.toml)"
+            ))
+        } else {
+            Error::artifact(format!(
+                "no artifact for {entry} b={b} d={d}; run `make artifacts` \
+                 with --dims covering this dataset"
+            ))
+        }
+    }
+
+    /// Pre-compile a set of entries — always fails in the stub.
+    pub fn warmup(&mut self, entries: &[(&str, usize, usize)]) -> Result<()> {
+        match entries.first() {
+            Some(&(e, b, d)) => Err(self.exec_err(e, b, d)),
+            None => Ok(()),
+        }
+    }
+
+    /// `distance` entry — always fails in the stub.
+    pub fn distance(
+        &mut self,
+        _w: &[f32],
+        _x: &[f32],
+        _y: &[f32],
+        _xi2: f32,
+        _invc: f32,
+        b: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        Err(self.exec_err("distance", b, d))
+    }
+
+    /// `predict` entry — always fails in the stub.
+    pub fn predict(&mut self, _w: &[f32], _x: &[f32], b: usize, d: usize) -> Result<Vec<f32>> {
+        Err(self.exec_err("predict", b, d))
+    }
+
+    /// `update` entry — always fails in the stub.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        _w: &[f32],
+        _r: f32,
+        _xi2: f32,
+        _x: &[f32],
+        _y: &[f32],
+        _valid: &[f32],
+        _invc: f32,
+        _s2: f32,
+        b: usize,
+        d: usize,
+    ) -> Result<UpdateOut> {
+        Err(self.exec_err("update", b, d))
+    }
+
+    /// `merge` entry — always fails in the stub.
+    #[allow(clippy::too_many_arguments)]
+    pub fn merge(
+        &mut self,
+        _w: &[f32],
+        _r: f32,
+        _xi2: f32,
+        _xs: &[f32],
+        _ys: &[f32],
+        _valid: &[f32],
+        _s2: f32,
+        l: usize,
+        d: usize,
+    ) -> Result<MergeOut> {
+        Err(self.exec_err("merge", l, d))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.len())
+            .field("pjrt", &false)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_manifest(lines: &str, tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ssvm_stub_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn open_missing_dir_is_artifact_error() {
+        let err = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn bucket_queries_answer_from_manifest() {
+        let dir = tmp_manifest("update 64 21 u.hlo.txt\nupdate 256 21 u2.hlo.txt\n", "q");
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.has("update", 64, 21));
+        assert!(!rt.has("update", 64, 22));
+        assert_eq!(rt.train_block(21), Some(64));
+        assert_eq!(rt.train_blocks(21), vec![64, 256]);
+        assert_eq!(rt.available().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn execute_reports_missing_bucket_or_feature() {
+        let dir = tmp_manifest("distance 64 4 d.hlo.txt\n", "x");
+        let mut rt = Runtime::open(&dir).unwrap();
+        // present bucket: feature error
+        let e = rt.distance(&[0.0; 4], &[0.0; 256], &[1.0; 64], 1.0, 1.0, 64, 4).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+        // absent bucket: the executor's missing-artifact message
+        let e = rt.predict(&[0.0; 4], &[0.0; 256], 64, 4).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("predict") && msg.contains("make artifacts"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

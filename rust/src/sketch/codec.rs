@@ -1,0 +1,432 @@
+//! `MebSketch` — the durable form of a StreamSVM model.
+//!
+//! The entire learner state is a ball `(w, R, ξ², M)` plus stream
+//! provenance (examples seen, training-option fingerprint, dataset tag),
+//! a few hundred bytes for typical dimensions. The wire format is
+//! versioned, length-prefixed and checksummed:
+//!
+//! ```text
+//!   magic   "MEBS"                     4 bytes
+//!   version u16 LE                     2 bytes
+//!   flags   u16 LE (reserved, 0)       2 bytes
+//!   len     u64 LE (payload bytes)     8 bytes
+//!   payload                            len bytes
+//!   fnv1a64 u64 LE (over payload)      8 bytes
+//! ```
+//!
+//! Payload, all little-endian:
+//! `tag(u32 len + utf8) · c(f64) · slack_mode(u8) · lookahead(u64) ·
+//! merge_iters(u64) · seen(u64) · dim(u64) · has_ball(u8) ·
+//! [m(u64) · r(f64) · xi2(f64) · w(dim × f32)]`.
+//!
+//! Every numeric field round-trips bit-exactly, so decode → resume →
+//! continue training reproduces an uninterrupted run bit-for-bit.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::svm::ball::BallState;
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::{SlackMode, TrainOptions};
+
+/// Current wire-format version.
+pub const SKETCH_VERSION: u16 = 1;
+
+const MAGIC: &[u8; 4] = b"MEBS";
+/// Fixed header bytes before the payload.
+const HEADER_LEN: usize = 4 + 2 + 2 + 8;
+/// Trailing checksum bytes.
+const CHECKSUM_LEN: usize = 8;
+
+/// A serializable, mergeable snapshot of one StreamSVM learner.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MebSketch {
+    /// Feature dimension (valid even before any data arrived).
+    pub dim: usize,
+    /// Ball state; `None` for a learner that has seen no examples.
+    pub ball: Option<BallState>,
+    /// Stream position: examples consumed so far.
+    pub seen: usize,
+    /// Training-option fingerprint (merge compatibility is checked on
+    /// `c`, `slack_mode` and `dim`).
+    pub opts: TrainOptions,
+    /// Free-form provenance tag (dataset name, shard id, ...).
+    pub tag: String,
+}
+
+/// FNV-1a 64-bit — tiny, deterministic, dependency-free integrity check.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian payload reader with truncation-checked accessors.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::sketch(format!("truncated payload reading {what}")))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn usize_of(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| Error::sketch(format!("{what} {v} overflows usize")))
+}
+
+impl MebSketch {
+    /// Build a sketch from raw state (the checkpointer's entry point).
+    pub fn new(
+        dim: usize,
+        ball: Option<BallState>,
+        seen: usize,
+        opts: TrainOptions,
+        tag: impl Into<String>,
+    ) -> Self {
+        if let Some(b) = &ball {
+            debug_assert_eq!(b.dim(), dim, "ball/sketch dim mismatch");
+        }
+        MebSketch { dim, ball, seen, opts, tag: tag.into() }
+    }
+
+    /// Snapshot a live model.
+    pub fn from_model(model: &StreamSvm, tag: impl Into<String>) -> Self {
+        MebSketch::new(
+            model.dim(),
+            model.ball().cloned(),
+            model.examples_seen(),
+            *model.options(),
+            tag,
+        )
+    }
+
+    /// Rebuild the live model. The result is bit-identical to the model
+    /// the sketch was taken from: feeding it the remaining stream
+    /// reproduces an uninterrupted run exactly.
+    pub fn to_model(&self) -> StreamSvm {
+        let mut model = StreamSvm::new(self.dim, self.opts);
+        if let Some(b) = &self.ball {
+            model.set_ball(b.clone(), self.seen);
+        }
+        model
+    }
+
+    /// Ball radius (0 for an empty sketch) — convenience for reporting.
+    pub fn radius(&self) -> f64 {
+        self.ball.as_ref().map(|b| b.r).unwrap_or(0.0)
+    }
+
+    /// Core-set size (0 for an empty sketch).
+    pub fn num_support(&self) -> usize {
+        self.ball.as_ref().map(|b| b.m).unwrap_or(0)
+    }
+
+    /// Can `self` and `other` be merged into one model? Requires the same
+    /// feature dimension and the same `(C, slack_mode)` geometry —
+    /// lookahead and merge-iteration budgets are training-time tuning and
+    /// may differ between shards.
+    pub fn compatible(&self, other: &MebSketch) -> bool {
+        self.dim == other.dim
+            && self.opts.c.to_bits() == other.opts.c.to_bits()
+            && self.opts.slack_mode == other.opts.slack_mode
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "tag={} dim={} seen={} supports={} R={:.4} C={} slack={:?}",
+            if self.tag.is_empty() { "-" } else { &self.tag },
+            self.dim,
+            self.seen,
+            self.num_support(),
+            self.radius(),
+            self.opts.c,
+            self.opts.slack_mode,
+        )
+    }
+
+    /// Serialize to the versioned, checksummed wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p: Vec<u8> = Vec::with_capacity(64 + self.tag.len() + 4 * self.dim);
+        p.extend_from_slice(&(self.tag.len() as u32).to_le_bytes());
+        p.extend_from_slice(self.tag.as_bytes());
+        p.extend_from_slice(&self.opts.c.to_bits().to_le_bytes());
+        p.push(match self.opts.slack_mode {
+            SlackMode::Paper => 0,
+            SlackMode::Consistent => 1,
+        });
+        p.extend_from_slice(&(self.opts.lookahead as u64).to_le_bytes());
+        p.extend_from_slice(&(self.opts.merge_iters as u64).to_le_bytes());
+        p.extend_from_slice(&(self.seen as u64).to_le_bytes());
+        p.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        match &self.ball {
+            None => p.push(0),
+            Some(b) => {
+                p.push(1);
+                p.extend_from_slice(&(b.m as u64).to_le_bytes());
+                p.extend_from_slice(&b.r.to_bits().to_le_bytes());
+                p.extend_from_slice(&b.xi2.to_bits().to_le_bytes());
+                for &v in &b.w {
+                    p.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + p.len() + CHECKSUM_LEN);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&SKETCH_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags
+        out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        let sum = fnv1a64(&p);
+        out.extend_from_slice(&p);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Deserialize, validating magic, version, length and checksum.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
+            return Err(Error::sketch(format!(
+                "{} bytes is too short for a sketch header",
+                bytes.len()
+            )));
+        }
+        if &bytes[..4] != MAGIC {
+            return Err(Error::sketch("bad magic (not a MEBS sketch)"));
+        }
+        let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+        if version == 0 || version > SKETCH_VERSION {
+            return Err(Error::sketch(format!(
+                "unsupported sketch version {version} (this build reads <= {SKETCH_VERSION})"
+            )));
+        }
+        let payload_len =
+            usize_of(u64::from_le_bytes(bytes[8..16].try_into().unwrap()), "payload length")?;
+        let expect = HEADER_LEN + payload_len + CHECKSUM_LEN;
+        if bytes.len() != expect {
+            return Err(Error::sketch(format!(
+                "length mismatch: header promises {expect} bytes, got {}",
+                bytes.len()
+            )));
+        }
+        let payload = &bytes[HEADER_LEN..HEADER_LEN + payload_len];
+        let stored = u64::from_le_bytes(bytes[HEADER_LEN + payload_len..].try_into().unwrap());
+        let actual = fnv1a64(payload);
+        if stored != actual {
+            return Err(Error::sketch(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {actual:#018x}) — \
+                 corrupt or partially-written sketch"
+            )));
+        }
+
+        let mut r = Reader::new(payload);
+        let tag_len = usize_of(r.u32("tag length")? as u64, "tag length")?;
+        let tag = std::str::from_utf8(r.take(tag_len, "tag")?)
+            .map_err(|_| Error::sketch("tag is not valid UTF-8"))?
+            .to_string();
+        let c = r.f64("c")?;
+        let slack_mode = match r.u8("slack_mode")? {
+            0 => SlackMode::Paper,
+            1 => SlackMode::Consistent,
+            other => return Err(Error::sketch(format!("unknown slack mode byte {other}"))),
+        };
+        let lookahead = usize_of(r.u64("lookahead")?, "lookahead")?;
+        let merge_iters = usize_of(r.u64("merge_iters")?, "merge_iters")?;
+        let seen = usize_of(r.u64("seen")?, "seen")?;
+        let dim = usize_of(r.u64("dim")?, "dim")?;
+        let ball = match r.u8("has_ball")? {
+            0 => None,
+            1 => {
+                let m = usize_of(r.u64("m")?, "m")?;
+                let rad = r.f64("r")?;
+                let xi2 = r.f64("xi2")?;
+                let wb = r.take(dim.checked_mul(4).ok_or_else(|| {
+                    Error::sketch(format!("dim {dim} overflows the weight size"))
+                })?, "weights")?;
+                let w: Vec<f32> = wb
+                    .chunks_exact(4)
+                    .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                    .collect();
+                Some(BallState { w, r: rad, xi2, m })
+            }
+            other => return Err(Error::sketch(format!("bad has_ball byte {other}"))),
+        };
+        if !r.done() {
+            return Err(Error::sketch("trailing bytes after sketch payload"));
+        }
+        let opts = TrainOptions { c, slack_mode, lookahead, merge_iters };
+        Ok(MebSketch { dim, ball, seen, opts, tag })
+    }
+
+    /// Write atomically: encode to `<path>.tmp`, then rename over `path`,
+    /// so a crash mid-write never leaves a truncated sketch behind.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode();
+        let tmp = path.with_extension("meb.tmp");
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read and decode a sketch file.
+    pub fn read_from(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::sketch(format!("cannot read {}: {e}", path.display())))?;
+        Self::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Example;
+    use crate::prop::{check_default, gen};
+
+    fn trained(n: usize, d: usize, seed: u64, opts: &TrainOptions) -> StreamSvm {
+        let mut rng = crate::rng::Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, 0.5);
+        let exs: Vec<Example> = xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect();
+        StreamSvm::fit(exs.iter(), d, opts)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        check_default("sketch-roundtrip", |rng, case| {
+            let d = gen::dim(rng);
+            let n = 1 + rng.below(120);
+            let opts = TrainOptions::default()
+                .with_c(0.25 + rng.uniform() * 8.0)
+                .with_lookahead(1 + rng.below(20));
+            let model = trained(n, d, 1000 + case as u64, &opts);
+            let sk = MebSketch::from_model(&model, format!("case-{case}"));
+            let back = MebSketch::decode(&sk.encode()).map_err(|e| e.to_string())?;
+            if back != sk {
+                return Err("decoded sketch differs".into());
+            }
+            let m2 = back.to_model();
+            let (a, b) = (model.ball().unwrap(), m2.ball().unwrap());
+            if a.w != b.w
+                || a.r.to_bits() != b.r.to_bits()
+                || a.xi2.to_bits() != b.xi2.to_bits()
+                || a.m != b.m
+                || m2.examples_seen() != model.examples_seen()
+            {
+                return Err("rebuilt model is not bit-identical".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_model_roundtrips() {
+        let model = StreamSvm::new(7, TrainOptions::default());
+        let sk = MebSketch::from_model(&model, "empty");
+        let back = MebSketch::decode(&sk.encode()).unwrap();
+        assert_eq!(back, sk);
+        assert!(back.ball.is_none());
+        let m2 = back.to_model();
+        assert_eq!(m2.dim(), 7);
+        assert_eq!(m2.examples_seen(), 0);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let model = trained(60, 5, 9, &TrainOptions::default());
+        let good = MebSketch::from_model(&model, "t").encode();
+
+        // flip one payload byte → checksum error
+        let mut bad = good.clone();
+        let mid = HEADER_LEN + 10;
+        bad[mid] ^= 0xFF;
+        let e = MebSketch::decode(&bad).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+
+        // truncate → length error
+        let e = MebSketch::decode(&good[..good.len() - 3]).unwrap_err();
+        assert!(e.to_string().contains("length"), "{e}");
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(MebSketch::decode(&bad).unwrap_err().to_string().contains("magic"));
+
+        // future version
+        let mut bad = good.clone();
+        bad[4] = 0xFF;
+        bad[5] = 0xFF;
+        assert!(MebSketch::decode(&bad).unwrap_err().to_string().contains("version"));
+
+        // too short entirely
+        assert!(MebSketch::decode(&good[..8]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_atomic() {
+        let dir = std::env::temp_dir().join(format!("ssvm_sketch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.meb");
+        let model = trained(40, 3, 11, &TrainOptions::default().with_c(2.0));
+        let sk = MebSketch::from_model(&model, "file");
+        sk.write_to(&path).unwrap();
+        // the temp file must be gone after the rename
+        assert!(!path.with_extension("meb.tmp").exists());
+        let back = MebSketch::read_from(&path).unwrap();
+        assert_eq!(back, sk);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compatibility_fingerprint() {
+        let a = MebSketch::new(4, None, 0, TrainOptions::default(), "a");
+        let b = MebSketch::new(4, None, 0, TrainOptions::default().with_lookahead(10), "b");
+        assert!(a.compatible(&b), "lookahead must not affect compatibility");
+        let c = MebSketch::new(4, None, 0, TrainOptions::default().with_c(2.0), "c");
+        assert!(!a.compatible(&c));
+        let d = MebSketch::new(5, None, 0, TrainOptions::default(), "d");
+        assert!(!a.compatible(&d));
+        let e = MebSketch::new(
+            4,
+            None,
+            0,
+            TrainOptions::default().with_slack_mode(SlackMode::Paper),
+            "e",
+        );
+        assert!(!a.compatible(&e));
+    }
+}

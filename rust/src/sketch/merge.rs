@@ -1,0 +1,279 @@
+//! Merge-and-reduce composition of MEB sketches.
+//!
+//! N shard balls fold into one enclosing ball through a *balanced binary
+//! tree* of closed-form two-ball MEB merges (the exact geometry of
+//! [`crate::svm::multiball::merge_two`]). Compared with the left-to-right
+//! fold the sharded coordinator used before, the tree
+//!
+//! * is order-robust: every leaf sits at depth ⌈log₂ N⌉, so no shard's
+//!   slack compounds through N−1 sequential merges, and permuting the
+//!   shards perturbs the result only within the pairing tolerance;
+//! * is the composition rule of merge-and-reduce coreset schemes
+//!   (Tukan et al., "On Coresets for Support Vector Machines"), which is
+//!   what makes sketches the right currency for distributed training:
+//!   merging is associative *enough* — every merge output encloses both
+//!   inputs, so the root encloses every streamed point of every shard.
+//!
+//! Slack masses of distinct shards live on disjoint stream indices, so
+//! the two-ball distance `t² = ||w₁−w₂||² + ξ₁² + ξ₂²` is exact at every
+//! tree level (the merged ξ² bookkeeping keeps the invariant inductively;
+//! see the lifted-space property test below).
+
+use crate::error::{Error, Result};
+use crate::sketch::codec::MebSketch;
+use crate::svm::ball::BallState;
+use crate::svm::multiball::merge_two;
+
+/// Fold `items` with `f` along a balanced binary tree: pair adjacent
+/// items level by level until one remains. `None` on empty input.
+///
+/// Generic so tests can thread auxiliary state (e.g. lifted-space
+/// centers) through the exact same tree structure.
+pub fn merge_tree_with<T>(mut items: Vec<T>, mut f: impl FnMut(&T, &T) -> T) -> Option<T> {
+    if items.is_empty() {
+        return None;
+    }
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(f(&a, &b)),
+                None => next.push(a), // odd item promotes unchanged
+            }
+        }
+        items = next;
+    }
+    items.pop()
+}
+
+/// Balanced merge-and-reduce of shard balls into one enclosing ball.
+pub fn merge_ball_tree(balls: Vec<BallState>) -> Option<BallState> {
+    merge_tree_with(balls, merge_two)
+}
+
+/// Merge N sketches into one.
+///
+/// Validates pairwise compatibility (same dimension and `(C, slack_mode)`
+/// geometry — see [`MebSketch::compatible`]); empty sketches act as merge
+/// identities. `seen` counts add; the merged tag records the lineage.
+pub fn merge_sketches(sketches: &[MebSketch]) -> Result<MebSketch> {
+    let first = sketches
+        .first()
+        .ok_or_else(|| Error::sketch("cannot merge zero sketches"))?;
+    for (i, s) in sketches.iter().enumerate().skip(1) {
+        if !first.compatible(s) {
+            return Err(Error::sketch(format!(
+                "sketch {i} (tag={}, dim={}, C={}, slack={:?}) is incompatible with \
+                 sketch 0 (tag={}, dim={}, C={}, slack={:?})",
+                s.tag, s.dim, s.opts.c, s.opts.slack_mode,
+                first.tag, first.dim, first.opts.c, first.opts.slack_mode,
+            )));
+        }
+    }
+    let seen: usize = sketches.iter().map(|s| s.seen).sum();
+    let balls: Vec<BallState> = sketches.iter().filter_map(|s| s.ball.clone()).collect();
+    let ball = merge_ball_tree(balls);
+    let tag = match sketches.len() {
+        1 => first.tag.clone(),
+        n => format!("merge({n}:{})", first.tag),
+    };
+    Ok(MebSketch::new(first.dim, ball, seen, first.opts, tag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check_default, gen};
+    use crate::rng::Pcg32;
+    use crate::svm::multiball::merge_two_lambda;
+    use crate::svm::TrainOptions;
+
+    fn random_ball(d: usize, rng: &mut Pcg32) -> BallState {
+        BallState {
+            w: (0..d).map(|_| (rng.normal() * 2.0) as f32).collect(),
+            r: rng.uniform() * 3.0,
+            xi2: rng.uniform(),
+            m: 1 + rng.below(10),
+        }
+    }
+
+    /// A ball paired with its center materialized in the lifted space
+    /// `R^(d+n)` where shard `i`'s slack mass sits alone on axis `d+i`.
+    #[derive(Clone)]
+    struct Lifted {
+        ball: BallState,
+        center: Vec<f64>,
+    }
+
+    fn lift(balls: &[BallState], d: usize) -> Vec<Lifted> {
+        let n = balls.len();
+        balls
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let mut c = vec![0.0f64; d + n];
+                for j in 0..d {
+                    c[j] = b.w[j] as f64;
+                }
+                c[d + i] = b.xi2.sqrt();
+                Lifted { ball: b.clone(), center: c }
+            })
+            .collect()
+    }
+
+    fn dist(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn tree_root_encloses_every_input_ball() {
+        // Run the tree twice in lockstep: once on the BallState geometry,
+        // once on explicit lifted-space centers blended with the same λ.
+        // The root must contain every leaf: ||c_root − c_i|| + r_i ≤ R.
+        check_default("merge-tree-enclosure", |rng, _| {
+            let d = gen::dim(rng);
+            let n = 2 + rng.below(15);
+            let balls: Vec<BallState> = (0..n).map(|_| random_ball(d, rng)).collect();
+            let leaves = lift(&balls, d);
+            let root = merge_tree_with(leaves.clone(), |a, b| {
+                let (m, lam) = merge_two_lambda(&a.ball, &b.ball);
+                let center: Vec<f64> = a
+                    .center
+                    .iter()
+                    .zip(&b.center)
+                    .map(|(x, y)| (1.0 - lam) * x + lam * y)
+                    .collect();
+                Lifted { ball: m, center }
+            })
+            .unwrap();
+            // ξ² bookkeeping matches the explicit lift
+            let slack2: f64 = root.center[d..].iter().map(|v| v * v).sum();
+            if (slack2 - root.ball.xi2).abs() > 1e-6 * slack2.max(1.0) {
+                return Err(format!("xi2 {} vs lifted {slack2}", root.ball.xi2));
+            }
+            // explicit part matches w
+            for j in 0..d {
+                if (root.center[j] - root.ball.w[j] as f64).abs() > 1e-3 {
+                    return Err(format!("w[{j}] diverged from lifted center"));
+                }
+            }
+            for (i, leaf) in leaves.iter().enumerate() {
+                let gap = dist(&root.center, &leaf.center) + leaf.ball.r - root.ball.r;
+                if gap > 1e-6 * root.ball.r.max(1.0) {
+                    return Err(format!(
+                        "ball {i} sticks out of the root by {gap} (R={})",
+                        root.ball.r
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_permutation_invariant_within_tolerance() {
+        // Pairings differ between shard orders, so roots differ — but
+        // every root encloses all inputs (checked above), so radii stay
+        // within the streaming-MEB style constant band of each other.
+        check_default("merge-tree-permutation", |rng, _| {
+            let d = gen::dim(rng);
+            let n = 3 + rng.below(13);
+            let balls: Vec<BallState> = (0..n).map(|_| random_ball(d, rng)).collect();
+            let base = merge_ball_tree(balls.clone()).unwrap();
+            for _ in 0..4 {
+                let mut shuffled = balls.clone();
+                rng.shuffle(&mut shuffled);
+                let alt = merge_ball_tree(shuffled).unwrap();
+                let ratio = alt.r.max(base.r) / alt.r.min(base.r).max(1e-12);
+                if ratio > 1.5 + 1e-9 {
+                    return Err(format!(
+                        "permutation changed radius beyond tolerance: {} vs {}",
+                        base.r, alt.r
+                    ));
+                }
+                if alt.m != base.m {
+                    return Err("core-set count is permutation-dependent".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_radius_dominates_inputs_and_single_input_is_identity() {
+        let mut rng = Pcg32::seeded(77);
+        let balls: Vec<BallState> = (0..9).map(|_| random_ball(6, &mut rng)).collect();
+        let root = merge_ball_tree(balls.clone()).unwrap();
+        let max_r = balls.iter().map(|b| b.r).fold(0.0f64, f64::max);
+        assert!(root.r + 1e-9 >= max_r);
+        assert_eq!(root.m, balls.iter().map(|b| b.m).sum::<usize>());
+
+        let one = merge_ball_tree(vec![balls[0].clone()]).unwrap();
+        assert_eq!(one, balls[0]);
+        assert!(merge_ball_tree(Vec::new()).is_none());
+    }
+
+    #[test]
+    fn sketch_merge_validates_and_sums_provenance() {
+        let mut rng = Pcg32::seeded(5);
+        let opts = TrainOptions::default().with_c(2.0);
+        let sk = |seen: usize, rng: &mut Pcg32| {
+            MebSketch::new(4, Some(random_ball(4, rng)), seen, opts, format!("shard{seen}"))
+        };
+        let parts = [sk(10, &mut rng), sk(20, &mut rng), sk(30, &mut rng)];
+        let merged = merge_sketches(&parts).unwrap();
+        assert_eq!(merged.seen, 60);
+        assert_eq!(merged.dim, 4);
+        assert!(merged.tag.starts_with("merge(3:"));
+        assert!(merged.radius() >= parts.iter().map(|s| s.radius()).fold(0.0, f64::max));
+
+        // empty sketches are identities
+        let with_empty =
+            [parts[0].clone(), MebSketch::new(4, None, 0, opts, "idle"), parts[1].clone()];
+        let m2 = merge_sketches(&with_empty).unwrap();
+        assert_eq!(m2.seen, 30);
+        assert!(m2.ball.is_some());
+
+        // incompatible C rejected
+        let odd = MebSketch::new(4, None, 0, TrainOptions::default().with_c(9.0), "odd");
+        let err = merge_sketches(&[parts[0].clone(), odd]).unwrap_err();
+        assert!(err.to_string().contains("incompatible"), "{err}");
+
+        // dimension mismatch rejected
+        let wrong_dim = MebSketch::new(5, None, 0, opts, "d5");
+        assert!(merge_sketches(&[parts[0].clone(), wrong_dim]).is_err());
+
+        // zero sketches rejected
+        assert!(merge_sketches(&[]).is_err());
+    }
+
+    #[test]
+    fn merged_model_classifies_like_its_shards() {
+        // End-to-end: train three shards on slices of one stream, merge
+        // the sketches, and require the merged model to stay within the
+        // sharded-training tolerance of the single-pass model.
+        use crate::data::Example;
+        use crate::eval::accuracy;
+        use crate::svm::streamsvm::StreamSvm;
+        let mut rng = Pcg32::seeded(42);
+        let (xs, ys) = gen::labeled_points(&mut rng, 1800, 6, 1.0, 1.0);
+        let exs: Vec<Example> =
+            xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect();
+        let opts = TrainOptions::default();
+        let single = StreamSvm::fit(exs.iter(), 6, &opts);
+
+        let sketches: Vec<MebSketch> = exs
+            .chunks(600)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let m = StreamSvm::fit(chunk.iter(), 6, &opts);
+                MebSketch::from_model(&m, format!("shard{i}"))
+            })
+            .collect();
+        let merged = merge_sketches(&sketches).unwrap().to_model();
+        let (a1, am) = (accuracy(&single, &exs), accuracy(&merged, &exs));
+        assert!(am > a1 - 0.08, "merged {am:.3} vs single {a1:.3}");
+        assert_eq!(merged.examples_seen(), 1800);
+    }
+}

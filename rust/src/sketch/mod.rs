@@ -1,0 +1,32 @@
+//! Mergeable MEB sketches: durable, composable model state.
+//!
+//! The paper's central object — the ball `(w, R, ξ², M)` — is tiny, and
+//! this module exploits the production consequence of that: the whole
+//! learner state *serializes* (a few hundred bytes) and *merges* (the
+//! closed-form two-ball MEB composes). Three pieces:
+//!
+//! * [`codec`] — [`MebSketch`](codec::MebSketch): a versioned,
+//!   checksummed binary encoding of ball + stream provenance (examples
+//!   seen, training-option fingerprint, dataset tag), with bit-exact
+//!   round-tripping through bytes and files.
+//! * [`merge`] — order-robust merge-and-reduce: N shard sketches fold
+//!   through a balanced binary tree of exact two-ball merges into one
+//!   model whose ball encloses every streamed point of every shard. The
+//!   sharded coordinator trains through this tree.
+//! * [`checkpoint`] — periodic snapshot + *exact* resume: interrupt a
+//!   one-pass run at example `k`, resume from the sketch, and the final
+//!   weights are bit-identical to an uninterrupted run (the update is
+//!   deterministic and the sketch is lossless).
+//!
+//! This is the substrate for every distributed-scale roadmap item:
+//! durable deployable model files (`streamsvm snapshot` / `resume` /
+//! `merge`), crash-safe long streams (pipeline checkpoint intervals),
+//! and shard-then-merge training (`coordinator::sharded`).
+
+pub mod checkpoint;
+pub mod codec;
+pub mod merge;
+
+pub use checkpoint::{resume_fit, resume_model, save_model, CheckpointConfig, Checkpointer};
+pub use codec::{MebSketch, SKETCH_VERSION};
+pub use merge::{merge_ball_tree, merge_sketches, merge_tree_with};

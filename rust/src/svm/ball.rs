@@ -10,7 +10,7 @@ use crate::linalg;
 use crate::svm::TrainOptions;
 
 /// Streaming MEB / StreamSVM state: `(w, R, ξ², M)`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BallState {
     /// Explicit center part = SVM weight vector.
     pub w: Vec<f32>,

@@ -40,6 +40,23 @@ impl LookaheadSvm {
         }
     }
 
+    /// Rebuild a learner mid-stream from checkpointed state: `ball` as
+    /// it stood at the buffer-empty stream position `seen` (the only
+    /// positions the sketch checkpointer snapshots). Continuing the
+    /// stream from `seen` reproduces an uninterrupted run exactly.
+    pub fn from_ball(dim: usize, opts: TrainOptions, ball: BallState, seen: usize) -> Self {
+        assert!(opts.lookahead >= 1, "lookahead must be >= 1");
+        LookaheadSvm {
+            ball: Some(ball),
+            buf_x: Vec::with_capacity(opts.lookahead),
+            buf_y: Vec::with_capacity(opts.lookahead),
+            opts,
+            dim,
+            seen,
+            merges: 0,
+        }
+    }
+
     /// Stream one example (Algorithm 2 lines 3–9).
     pub fn observe(&mut self, x: &[f32], y: f32) {
         debug_assert_eq!(x.len(), self.dim);

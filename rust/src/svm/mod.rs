@@ -26,7 +26,7 @@ pub enum SlackMode {
 }
 
 /// Shared training options for all StreamSVM variants.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrainOptions {
     /// Misclassification cost `C` of the ℓ₂-SVM.
     pub c: f64,

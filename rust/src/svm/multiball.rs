@@ -55,8 +55,9 @@ fn center_dist(a: &BallState, b: &BallState) -> f64 {
 
 /// Closed-form MEB of two balls; also returns the blend weight λ
 /// (center = (1−λ)·c_a + λ·c_b; λ·t = r − r_a exactly, which is the
-/// enclosure proof).
-fn merge_two_lambda(a: &BallState, b: &BallState) -> (BallState, f64) {
+/// enclosure proof). Public so the sketch merge tree (and its
+/// lifted-space enclosure tests) can reuse the exact geometry.
+pub fn merge_two_lambda(a: &BallState, b: &BallState) -> (BallState, f64) {
     let t = center_dist(a, b);
     // containment cases
     if t + b.r <= a.r {
@@ -81,16 +82,8 @@ fn merge_two_lambda(a: &BallState, b: &BallState) -> (BallState, f64) {
 }
 
 /// Closed-form MEB of two balls.
-fn merge_two(a: &BallState, b: &BallState) -> BallState {
+pub fn merge_two(a: &BallState, b: &BallState) -> BallState {
     merge_two_lambda(a, b).0
-}
-
-/// Fold a set of balls into one enclosing ball (pairwise closed-form
-/// merges; used by the multiball finisher and the sharded coordinator).
-pub fn merge_balls(balls: &[BallState]) -> Option<BallState> {
-    let mut it = balls.iter();
-    let first = it.next()?.clone();
-    Some(it.fold(first, |acc, b| merge_two(&acc, b)))
 }
 
 impl MultiBallSvm {

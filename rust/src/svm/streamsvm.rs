@@ -68,6 +68,12 @@ impl StreamSvm {
         self.seen
     }
 
+    /// Feature dimension this model was constructed for (valid before
+    /// any data arrives, unlike `weights().len()`).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
     pub fn options(&self) -> &TrainOptions {
         &self.opts
     }

@@ -1,0 +1,155 @@
+//! Acceptance-criteria integration suite for the sketch subsystem:
+//! interrupt/resume exactness on real dataset streams, sharded training
+//! through the merge-and-reduce tree, and durability of sketch files
+//! across the public API surface.
+
+use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
+use streamsvm::coordinator::sharded::{merge_shard_sketches, train_sharded};
+use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::registry::load_dataset_sized;
+use streamsvm::data::Example;
+use streamsvm::eval::accuracy;
+use streamsvm::prop::{check, PropConfig};
+use streamsvm::sketch::checkpoint::{resume_fit, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::codec::MebSketch;
+use streamsvm::sketch::merge::merge_sketches;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ssvm_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The headline guarantee: interrupt a one-pass run at an arbitrary
+/// example index, round-trip the state through a sketch *file*, resume,
+/// and the final weights are bit-identical to the uninterrupted run.
+#[test]
+fn interrupt_at_arbitrary_index_resume_bit_identical_on_real_data() {
+    let dir = tmpdir("resume");
+    let ds = load_dataset_sized("waveform", 42, 0.2).unwrap();
+    let opts = TrainOptions::default();
+    let full = StreamSvm::fit(ds.train.iter(), ds.dim, &opts);
+
+    check("it-resume-exact", PropConfig { cases: 12, seed: 0x5E }, |rng, case| {
+        let k = rng.below(ds.train.len() + 1);
+        let mut partial = StreamSvm::new(ds.dim, opts);
+        for e in ds.train.iter().take(k) {
+            partial.observe(&e.x, e.y);
+        }
+        let path = dir.join(format!("cut{case}.meb"));
+        MebSketch::from_model(&partial, "waveform")
+            .write_to(&path)
+            .map_err(|e| e.to_string())?;
+        let sk = MebSketch::read_from(&path).map_err(|e| e.to_string())?;
+        if sk.seen != k {
+            return Err(format!("sketch seen {} != cut point {k}", sk.seen));
+        }
+        let resumed = resume_fit(&sk, ds.train.iter().cloned());
+        if resumed.weights() != full.weights()
+            || resumed.radius().to_bits() != full.radius().to_bits()
+            || resumed.num_support() != full.num_support()
+            || resumed.examples_seen() != full.examples_seen()
+        {
+            return Err(format!("resume at k={k} diverged from the uninterrupted run"));
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same guarantee driven through the pipeline's checkpoint interval
+/// machinery: crash after the last periodic snapshot, resume from disk.
+#[test]
+fn pipeline_checkpoint_interval_resume_bit_identical() {
+    let dir = tmpdir("pipe");
+    let ds = load_dataset_sized("synthC", 42, 0.05).unwrap();
+    let path = dir.join("pipe.meb");
+    let cfg = PipelineConfig { mode: ExecMode::Pure, block: Some(64), ..Default::default() };
+    let mut ck = Checkpointer::new(CheckpointConfig {
+        every: 250,
+        path: path.clone(),
+        tag: "synthC".into(),
+    });
+    let stream = VecStream::of_train(&ds, None);
+    let report = train_stream_ckpt(None, stream, ds.dim, cfg, Some(&mut ck)).unwrap();
+    assert!(ck.saves() >= 2, "expected multiple periodic checkpoints, got {}", ck.saves());
+
+    let sk = MebSketch::read_from(&path).unwrap();
+    assert!(sk.seen > 0 && sk.seen < ds.train.len());
+    let resumed = resume_fit(&sk, VecStream::of_train(&ds, None));
+    assert_eq!(resumed.weights(), report.model.weights());
+    assert_eq!(resumed.radius().to_bits(), report.model.radius().to_bits());
+    assert_eq!(resumed.examples_seen(), ds.train.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Sharded training through the merge-and-reduce tree stays within the
+/// documented 0.08 accuracy tolerance of the single-shard run — on a
+/// real dataset, at several shard widths.
+#[test]
+fn sharded_tree_accuracy_within_tolerance_on_real_data() {
+    let ds = load_dataset_sized("waveform", 42, 0.5).unwrap();
+    let opts = TrainOptions::default();
+    let single =
+        train_sharded(ds.train.clone().into_iter(), ds.dim, 1, opts, 32).unwrap();
+    let a1 = accuracy(&single.model, &ds.test);
+    for shards in [2usize, 8, 16] {
+        let rep =
+            train_sharded(ds.train.clone().into_iter(), ds.dim, shards, opts, 32).unwrap();
+        let a = accuracy(&rep.model, &ds.test);
+        assert!(a > a1 - 0.08, "{shards} shards: {a:.3} vs single {a1:.3}");
+        assert_eq!(rep.examples, ds.train.len());
+        let max_r = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
+        assert!(rep.model.radius() + 1e-9 >= max_r);
+    }
+}
+
+/// Distributed hand-off via files: each shard snapshots to disk, the
+/// merger reads the files back and reduces — matching the live path.
+#[test]
+fn shard_sketch_files_merge_end_to_end() {
+    let dir = tmpdir("files");
+    let ds = load_dataset_sized("synthA", 42, 0.1).unwrap();
+    let opts = TrainOptions::default();
+    let shards = 6usize;
+    let mut paths = Vec::new();
+    for s in 0..shards {
+        let mut m = StreamSvm::new(ds.dim, opts);
+        for e in ds.train.iter().skip(s).step_by(shards) {
+            m.observe(&e.x, e.y);
+        }
+        let p = dir.join(format!("s{s}.meb"));
+        MebSketch::from_model(&m, format!("s{s}")).write_to(&p).unwrap();
+        paths.push(p);
+    }
+    let sketches: Vec<MebSketch> =
+        paths.iter().map(|p| MebSketch::read_from(p).unwrap()).collect();
+    let rep = merge_shard_sketches(&sketches).unwrap();
+    assert_eq!(rep.examples, ds.train.len());
+    assert_eq!(rep.shard_radii.len(), shards);
+    let single = StreamSvm::fit(ds.train.iter(), ds.dim, &opts);
+    let (am, a1) = (accuracy(&rep.model, &ds.test), accuracy(&single, &ds.test));
+    assert!(am > a1 - 0.08, "file-merged {am:.3} vs single {a1:.3}");
+
+    // the merged sketch itself round-trips
+    let merged = merge_sketches(&sketches).unwrap();
+    let out = dir.join("merged.meb");
+    merged.write_to(&out).unwrap();
+    let back = MebSketch::read_from(&out).unwrap();
+    assert_eq!(back, merged);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Heterogeneous-options shards must be rejected, not silently merged.
+#[test]
+fn incompatible_shard_sketches_rejected() {
+    let mk = |c: f64| {
+        let e = Example::new(vec![1.0, 2.0], 1.0);
+        let m = StreamSvm::fit([&e].into_iter().map(|x| &*x), 2, &TrainOptions::default().with_c(c));
+        MebSketch::from_model(&m, "x")
+    };
+    let err = merge_sketches(&[mk(1.0), mk(4.0)]).unwrap_err();
+    assert!(err.to_string().contains("incompatible"), "{err}");
+}
