@@ -1,0 +1,98 @@
+//! Serving bench: start the network server in-process, drive it with
+//! the paced loadgen at increasing target QPS, and report throughput,
+//! latency quantiles and shed rate per step. The final (heaviest) step
+//! is written to `BENCH_serve.json`.
+//!
+//! Run: `cargo bench --bench serve_loadgen`
+//! (`STREAMSVM_BENCH_FULL=1` for the paper-scale sweep.)
+
+use std::path::Path;
+use std::time::Duration;
+
+use streamsvm::bench_util::Table;
+use streamsvm::data::registry::load_dataset_sized;
+use streamsvm::server::{run_loadgen, serve, LoadgenConfig, ServerConfig};
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn main() {
+    let full = std::env::var("STREAMSVM_BENCH_FULL").is_ok();
+    let frac = if full { 0.5 } else { 0.1 };
+    let requests = if full { 20_000 } else { 2_000 };
+    let ds = load_dataset_sized("mnist01", 42, frac).expect("dataset");
+    let model = StreamSvm::fit(ds.train.iter(), ds.dim, &TrainOptions::default());
+    println!(
+        "serving mnist01 (dim {}, {} supports), {} requests per step\n",
+        ds.dim,
+        model.num_support(),
+        requests
+    );
+
+    let cfg = ServerConfig {
+        threads: 8,
+        conn_queue: 64,
+        train_queue: 8192,
+        republish_every: 64,
+        read_timeout: Duration::from_secs(5),
+        tag: "bench".into(),
+        ..Default::default()
+    };
+    let handle = serve(model, cfg).expect("server start");
+    let addr = handle.addr().to_string();
+
+    let mut table = Table::new(&[
+        "target rps", "threads", "train%", "achieved rps", "ok", "shed%", "p50", "p90", "p99",
+    ]);
+    let steps: &[(f64, usize, f64)] = if full {
+        &[
+            (1_000.0, 4, 0.1),
+            (5_000.0, 8, 0.1),
+            (20_000.0, 8, 0.1),
+            (0.0, 8, 0.1), // unthrottled
+            (0.0, 8, 0.5), // train-heavy
+        ]
+    } else {
+        &[(500.0, 4, 0.1), (2_000.0, 4, 0.1), (0.0, 4, 0.25)]
+    };
+    let mut last = None;
+    for &(qps, threads, train_share) in steps {
+        let cfg = LoadgenConfig {
+            addr: addr.clone(),
+            threads,
+            requests,
+            qps,
+            train_share,
+            read_timeout: Duration::from_secs(5),
+            seed: 42,
+        };
+        let rep = run_loadgen(&cfg, &ds.test).expect("loadgen");
+        table.row(&[
+            if qps > 0.0 { format!("{qps:.0}") } else { "∞".into() },
+            format!("{threads}"),
+            format!("{:.0}", train_share * 100.0),
+            format!("{:.0}", rep.qps_achieved()),
+            format!("{}", rep.ok),
+            format!("{:.1}", rep.shed_rate() * 100.0),
+            format!("{:?}", rep.latency.quantile(0.50)),
+            format!("{:?}", rep.latency.quantile(0.90)),
+            format!("{:?}", rep.latency.quantile(0.99)),
+        ]);
+        last = Some(rep);
+    }
+    table.print();
+
+    if let Some(rep) = last {
+        rep.write_json(Path::new("BENCH_serve.json")).expect("write BENCH_serve.json");
+        println!("\nwrote BENCH_serve.json: {}", rep.summary());
+    }
+    let report = handle.shutdown().expect("shutdown");
+    println!(
+        "server: {} ok, {} shed, {} conns ({} shed), trained {} (model v{})",
+        report.requests_ok,
+        report.requests_shed,
+        report.conns_accepted,
+        report.conns_shed,
+        report.trained,
+        report.version
+    );
+}

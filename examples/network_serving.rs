@@ -1,0 +1,86 @@
+//! End-to-end network serving demo: train a model, put it behind the
+//! TCP server, keep training it through `/train` while `/predict`
+//! traffic flows, watch the hot-swap version advance, and shut down
+//! gracefully with every accepted example absorbed.
+//!
+//! Run: `cargo run --release --example network_serving`
+
+use std::time::Duration;
+
+use streamsvm::data::registry::load_dataset_sized;
+use streamsvm::error::Result;
+use streamsvm::eval::accuracy;
+use streamsvm::server::{serve, LoadClient, ServerConfig};
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+fn main() -> Result<()> {
+    let ds = load_dataset_sized("synthA", 42, 0.2)?;
+    // warm-start on the first half of the train split; the second half
+    // arrives later as live /train traffic
+    let half = ds.train.len() / 2;
+    let model = StreamSvm::fit(ds.train[..half].iter(), ds.dim, &TrainOptions::default());
+    println!(
+        "warm start: {} examples, test acc {:.2}%",
+        half,
+        accuracy(&model, &ds.test) * 100.0
+    );
+
+    let handle = serve(
+        model,
+        ServerConfig {
+            threads: 4,
+            republish_every: 16,
+            tag: "demo".into(),
+            ..Default::default()
+        },
+    )?;
+    let addr = handle.addr();
+    println!("serving on http://{addr}/");
+
+    let mut client = LoadClient::connect(addr, Duration::from_secs(2))?;
+
+    // score a few test points against the warm-start snapshot
+    for e in ds.test.iter().take(3) {
+        let o = client.predict(&e.x)?;
+        println!(
+            "  predict → status {} score {:+.4} (snapshot v{})",
+            o.status,
+            o.score.unwrap_or(f64::NAN),
+            o.version.unwrap_or(0)
+        );
+    }
+
+    // stream the second half through /train: the server learns live
+    let mut accepted = 0;
+    for e in &ds.train[half..] {
+        if client.train(&e.x, e.y)?.status == 202 {
+            accepted += 1;
+        }
+    }
+    println!("streamed {} live training examples ({} accepted)", ds.train.len() - half, accepted);
+
+    // the hot-swap cell republished while we trained
+    let o = client.predict(&ds.test[0].x)?;
+    println!(
+        "  predict after live training → score {:+.4} (snapshot v{})",
+        o.score.unwrap_or(f64::NAN),
+        o.version.unwrap_or(0)
+    );
+    let stats = client.stats()?;
+    println!(
+        "  /stats: version={} trained={}",
+        stats.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        stats.get("trained").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
+    drop(client);
+
+    let report = handle.shutdown()?;
+    println!(
+        "shutdown: trained {} live examples, final snapshot v{}, test acc {:.2}%",
+        report.trained,
+        report.version,
+        accuracy(&report.model, &ds.test) * 100.0
+    );
+    Ok(())
+}

@@ -40,6 +40,24 @@ impl PipelineMetrics {
         }
     }
 
+    /// Fold another run's counters into this one, so sharded training can
+    /// report one aggregate instead of per-shard metrics only.
+    ///
+    /// Work counters (`examples`, `updates`, time inside the engines, ...)
+    /// add; `wall_ns` takes the maximum because shards run concurrently —
+    /// the aggregate wall clock is the slowest shard, which makes
+    /// [`Self::throughput`] report the true aggregate rate.
+    pub fn merge(&mut self, other: &PipelineMetrics) {
+        self.examples += other.examples;
+        self.blocks += other.blocks;
+        self.survivors += other.survivors;
+        self.updates += other.updates;
+        self.merges += other.merges;
+        self.xla_ns += other.xla_ns;
+        self.rust_ns += other.rust_ns;
+        self.wall_ns = self.wall_ns.max(other.wall_ns);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "examples={} blocks={} survivors={} updates={} merges={} \
@@ -133,6 +151,18 @@ impl LatencyHistogram {
         self.max()
     }
 
+    /// Fold another histogram into this one (bucket-wise). Used to
+    /// aggregate per-thread histograms (server handler threads, loadgen
+    /// worker threads) into one distribution for quantile reporting.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:?} p50≤{:?} p90≤{:?} p99≤{:?} max={:?}",
@@ -193,5 +223,113 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn pipeline_metrics_merge_aggregates_shards() {
+        let mut a = PipelineMetrics {
+            examples: 1000,
+            blocks: 10,
+            survivors: 100,
+            updates: 40,
+            merges: 4,
+            xla_ns: 5_000,
+            rust_ns: 7_000,
+            wall_ns: 2_000_000_000,
+        };
+        let b = PipelineMetrics {
+            examples: 3000,
+            blocks: 30,
+            survivors: 300,
+            updates: 60,
+            merges: 6,
+            xla_ns: 1_000,
+            rust_ns: 3_000,
+            wall_ns: 1_000_000_000,
+        };
+        a.merge(&b);
+        assert_eq!(a.examples, 4000);
+        assert_eq!(a.blocks, 40);
+        assert_eq!(a.survivors, 400);
+        assert_eq!(a.updates, 100);
+        assert_eq!(a.merges, 10);
+        assert_eq!(a.xla_ns, 6_000);
+        assert_eq!(a.rust_ns, 10_000);
+        // concurrent shards: wall is the slowest shard, so throughput is
+        // the aggregate rate (4000 examples / 2 s)
+        assert_eq!(a.wall_ns, 2_000_000_000);
+        assert!((a.throughput() - 2000.0).abs() < 1e-9);
+        // merging into a default is identity
+        let mut z = PipelineMetrics::default();
+        z.merge(&b);
+        assert_eq!(z.examples, b.examples);
+        assert_eq!(z.wall_ns, b.wall_ns);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered_property() {
+        crate::prop::check_default("hist-quantile-order", |rng, _| {
+            let mut h = LatencyHistogram::default();
+            let n = 1 + rng.below(500);
+            for _ in 0..n {
+                // span the bucket range: 1µs .. ~100ms
+                let us = 1 + rng.below(100_000);
+                h.record(Duration::from_micros(us as u64));
+            }
+            let (p50, p90, p99) = (h.quantile(0.50), h.quantile(0.90), h.quantile(0.99));
+            if !(p50 <= p90 && p90 <= p99) {
+                return Err(format!("quantiles out of order: {p50:?} {p90:?} {p99:?}"));
+            }
+            if h.count() != n as u64 {
+                return Err(format!("count {} != {n}", h.count()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn known_distribution_lands_in_the_right_log_bucket() {
+        crate::prop::check_default("hist-bucket-placement", |rng, _| {
+            // All samples inside one log₂ bucket [2^i µs, 2^(i+1) µs):
+            // every quantile must report exactly that bucket's upper edge.
+            let i = 1 + rng.below(20) as u32;
+            let lo = 1u64 << i;
+            let mut h = LatencyHistogram::default();
+            for _ in 0..200 {
+                let us = lo + rng.below(lo as usize) as u64; // [2^i, 2^(i+1))
+                h.record(Duration::from_micros(us));
+            }
+            let edge = Duration::from_micros(1u64 << (i + 1));
+            for q in [0.01, 0.5, 0.9, 0.99] {
+                let got = h.quantile(q);
+                if got != edge {
+                    return Err(format!("q={q}: got {got:?}, want bucket edge {edge:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_recording() {
+        let mut all = LatencyHistogram::default();
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            let d = Duration::from_micros(i * 3);
+            all.record(d);
+            if i % 2 == 0 {
+                a.record(d);
+            } else {
+                b.record(d);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.mean(), all.mean());
+        assert_eq!(a.max(), all.max());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
     }
 }

@@ -8,7 +8,9 @@
 //! reply in a log-bucketed histogram.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::LatencyHistogram;
@@ -35,19 +37,46 @@ pub struct Reply {
 #[derive(Clone)]
 pub struct ServiceClient {
     tx: Sender<Request>,
+    /// Set by the service loop's drop guard the moment [`PredictService::run`]
+    /// returns — normally *or by panic* — so a waiting client can tell a
+    /// dead loop from a slow one.
+    stopped: Arc<AtomicBool>,
 }
 
 impl ServiceClient {
     /// Submit and wait for the score.
+    ///
+    /// Never blocks forever: if the service loop thread exits (including a
+    /// panic mid-batch, which may strand this request without dropping its
+    /// reply channel), the call returns [`Error::Pipeline`] instead of
+    /// hanging on `recv()`.
     pub fn score(&self, x: Vec<f32>) -> Result<f32> {
         let (reply_tx, reply_rx) = channel();
         self.tx
             .send(Request { x, reply: reply_tx, admitted: Instant::now() })
             .map_err(|_| Error::Pipeline("service stopped".into()))?;
-        reply_rx
-            .recv()
-            .map(|r| r.score)
-            .map_err(|_| Error::Pipeline("service dropped request".into()))
+        loop {
+            match reply_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => return Ok(r.score),
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Pipeline("service dropped request".into()))
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.stopped.load(Ordering::Acquire) {
+                        // The loop is gone. Drain a reply that may have
+                        // raced the flag before giving up.
+                        return match reply_rx.try_recv() {
+                            Ok(r) => Ok(r.score),
+                            Err(_) => Err(Error::Pipeline(
+                                "service loop terminated before replying \
+                                 (panicked mid-batch?)"
+                                    .into(),
+                            )),
+                        };
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -105,6 +134,8 @@ pub struct PredictService {
     /// mutates the model, so after the first successful write the hook
     /// only re-writes if the file disappears out from under it.
     snapshot_fresh: bool,
+    /// Shared with every [`ServiceClient`]; flipped when `run` exits.
+    stopped: Arc<AtomicBool>,
 }
 
 impl PredictService {
@@ -125,6 +156,7 @@ impl PredictService {
             sketch: None,
             snapshot: None,
             snapshot_fresh: false,
+            stopped: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -156,12 +188,21 @@ impl PredictService {
     }
 
     pub fn client(&self) -> ServiceClient {
-        ServiceClient { tx: self.tx.clone() }
+        ServiceClient { tx: self.tx.clone(), stopped: self.stopped.clone() }
     }
 
     /// Run until all clients hang up. `runtime = None` falls back to the
     /// pure-Rust matvec (used for the ablation and artifact-less runs).
     pub fn run(mut self, mut runtime: Option<&mut Runtime>) -> Result<ServiceStats> {
+        // Tell waiting clients when this loop is gone — even by panic —
+        // so `ServiceClient::score` fails fast instead of blocking.
+        struct StopGuard(Arc<AtomicBool>);
+        impl Drop for StopGuard {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::Release);
+            }
+        }
+        let _stop = StopGuard(self.stopped.clone());
         // Drop our own sender so the loop ends when clients do.
         let rx = self.rx;
         drop(self.tx);
@@ -280,6 +321,26 @@ mod tests {
         assert_eq!(sk.tag, "serving");
         assert_eq!(sk.to_model().weights(), model.weights());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn score_errors_instead_of_hanging_when_service_panics() {
+        let svc = PredictService::new(vec![1.0, -2.0], ServiceConfig::default());
+        let client = svc.client();
+        let loop_thread = std::thread::spawn(move || {
+            // The wrong-dim request below panics the loop mid-batch; keep
+            // the panic inside this thread.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.run(None)));
+        });
+        // Poison pill: a wrong-dimension request makes the batch copy panic.
+        let bad = client.score(vec![1.0, 2.0, 3.0]);
+        assert!(bad.is_err(), "wrong-dim request must error, got {bad:?}");
+        loop_thread.join().unwrap();
+        // After the loop died, every call must fail fast — never block.
+        for _ in 0..4 {
+            let r = client.score(vec![1.0, 1.0]);
+            assert!(r.is_err(), "score must fail once the loop is dead");
+        }
     }
 
     #[test]

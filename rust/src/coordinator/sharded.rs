@@ -13,7 +13,9 @@
 //! of S−1).
 
 use std::sync::mpsc::sync_channel;
+use std::time::Instant;
 
+use crate::coordinator::metrics::PipelineMetrics;
 use crate::data::Example;
 use crate::error::{Error, Result};
 use crate::sketch::codec::MebSketch;
@@ -29,6 +31,11 @@ pub struct ShardedReport {
     /// Final per-shard balls (pre-merge), for diagnostics.
     pub shard_radii: Vec<f64>,
     pub examples: usize,
+    /// Aggregate over all shards ([`PipelineMetrics::merge`]): counters
+    /// sum, wall time is the slowest shard, so `metrics.throughput()` is
+    /// the aggregate rate. Shard workers run the sequential updater with
+    /// no block filter, so `survivors == examples` and `filter_rate` is 0.
+    pub metrics: PipelineMetrics,
 }
 
 impl ShardedReport {
@@ -65,10 +72,17 @@ where
             // Workers are told the stream dimension up front — they no
             // longer infer it from their first example.
             let mut model = StreamSvm::new(dim, opts);
+            let mut metrics = PipelineMetrics::default();
+            let wall = Instant::now();
             for e in rx.iter() {
-                model.observe(&e.x, e.y);
+                metrics.examples += 1;
+                metrics.survivors += 1; // sequential path: every row checked
+                if model.observe(&e.x, e.y) {
+                    metrics.updates += 1;
+                }
             }
-            model
+            metrics.wall_ns = wall.elapsed().as_nanos() as u64;
+            (model, metrics)
         }));
     }
     let mut n = 0usize;
@@ -88,8 +102,11 @@ where
     }
     drop(senders);
     let mut balls: Vec<BallState> = Vec::new();
+    let mut agg = PipelineMetrics::default();
     for w in workers {
-        let model = w.join().map_err(|_| Error::Pipeline("shard worker panicked".into()))?;
+        let (model, m) =
+            w.join().map_err(|_| Error::Pipeline("shard worker panicked".into()))?;
+        agg.merge(&m);
         if let Some(b) = model.ball() {
             balls.push(b.clone());
         }
@@ -101,7 +118,7 @@ where
     let merged = merge_ball_tree(balls).expect("non-empty");
     let mut model = StreamSvm::new(dim, opts);
     model.set_ball(merged, n);
-    Ok(ShardedReport { model, shard_radii, examples: n })
+    Ok(ShardedReport { model, shard_radii, examples: n, metrics: agg })
 }
 
 /// Merge independently-trained shard sketches into one model — the
@@ -111,7 +128,15 @@ pub fn merge_shard_sketches(sketches: &[MebSketch]) -> Result<ShardedReport> {
     let shard_radii: Vec<f64> = sketches.iter().map(|s| s.radius()).collect();
     let merged = merge_sketches(sketches)?;
     let examples = merged.seen;
-    Ok(ShardedReport { model: merged.to_model(), shard_radii, examples })
+    // Offline merge: the shards' wall clocks are unknown, so only the
+    // work counters recoverable from the sketches are populated.
+    let metrics = PipelineMetrics {
+        examples,
+        survivors: examples,
+        updates: sketches.iter().map(|s| s.num_support()).sum(),
+        ..Default::default()
+    };
+    Ok(ShardedReport { model: merged.to_model(), shard_radii, examples, metrics })
 }
 
 #[cfg(test)]
@@ -167,6 +192,19 @@ mod tests {
         let rep = train_sharded(exs.into_iter(), 4, 3, TrainOptions::default(), 4).unwrap();
         let max_shard = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
         assert!(rep.model.radius() + 1e-9 >= max_shard);
+    }
+
+    #[test]
+    fn sharded_metrics_aggregate_across_shards() {
+        let exs = toy(1200, 6, 11);
+        let rep = train_sharded(exs.into_iter(), 6, 4, TrainOptions::default(), 8).unwrap();
+        // per-shard counters merged into one aggregate
+        assert_eq!(rep.metrics.examples, 1200);
+        assert_eq!(rep.metrics.survivors, 1200, "no block filter in shard workers");
+        assert!(rep.metrics.updates >= 4, "each shard updates at least once");
+        assert!(rep.metrics.wall_ns > 0);
+        assert!(rep.metrics.throughput() > 0.0);
+        assert!((rep.metrics.filter_rate()).abs() < 1e-12);
     }
 
     #[test]

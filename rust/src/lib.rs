@@ -22,6 +22,16 @@
 //! offline default) every PJRT call site falls back to the pure-Rust
 //! reference paths.
 //!
+//! The **serving layer** ([`server`]) puts the learner behind a network:
+//! a dependency-free HTTP/1.1 server (`std::net` only) with `/predict`,
+//! `/predict_batch`, `/train`, `/snapshot` and `/stats` endpoints. A
+//! background trainer consumes `/train` traffic one-pass style and
+//! republishes an immutable model snapshot every k examples through a
+//! hot-swap cell, so requests never observe a torn model; bounded
+//! admission queues shed overload with explicit 429s; and a built-in
+//! load generator ([`server::loadgen`]) measures throughput, latency
+//! quantiles and shed rate into `BENCH_serve.json`.
+//!
 //! The **sketch layer** ([`sketch`]) turns the tiny ball state into
 //! durable, composable model files: [`sketch::MebSketch`] is a
 //! versioned, checksummed binary encoding of ball + stream provenance;
@@ -58,6 +68,7 @@ pub mod linalg;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod sketch;
 pub mod svm;
 

@@ -5,8 +5,10 @@
 //! ```text
 //! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
 //!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
-//! streamsvm serve    --dataset mnist01 [--requests 5000] [--batch 64]
-//!                    [--snapshot live.meb --snapshot-every 64]
+//! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
+//!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
+//! streamsvm loadgen  --addr 127.0.0.1:7878 [--dataset mnist01] [--qps 500] [--requests 2000]
+//!                    [--threads 4] [--train-share 0.1] [--out BENCH_serve.json]
 //! streamsvm snapshot --dataset synthA [--at 5000] --out model.meb
 //! streamsvm resume   --from model.meb --dataset synthA [--out model2.meb]
 //! streamsvm merge    --inputs a.meb,b.meb,... --out merged.meb [--dataset synthA]
@@ -20,10 +22,10 @@
 
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use streamsvm::cli::Args;
 use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
-use streamsvm::coordinator::service::{PredictService, ServiceConfig};
 use streamsvm::coordinator::sharded::train_sharded;
 use streamsvm::coordinator::stream::VecStream;
 use streamsvm::data::registry::{load_dataset, load_dataset_sized};
@@ -31,6 +33,7 @@ use streamsvm::error::{Error, Result};
 use streamsvm::eval::accuracy;
 use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
 use streamsvm::runtime::Runtime;
+use streamsvm::server::{run_loadgen, serve, LoadgenConfig, ServerConfig};
 use streamsvm::sketch::checkpoint::{resume_fit, CheckpointConfig, Checkpointer};
 use streamsvm::sketch::codec::MebSketch;
 use streamsvm::sketch::merge::merge_sketches;
@@ -106,6 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             "sharded: {} examples over {shards} shards | max shard R={max_r:.4}",
             rep.examples
         );
+        println!("sharded aggregate: {}", rep.metrics.summary());
         rep.model
     } else {
         // ---- pipeline path, with optional periodic checkpoints
@@ -245,64 +249,72 @@ fn cmd_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Start the network server: train an initial model on the dataset, then
+/// serve `/predict`, `/predict_batch`, `/train`, `/snapshot` and `/stats`
+/// until the process is killed. `--republish-every N` is the hot-swap
+/// interval: the background trainer republishes the serving snapshot
+/// (and rewrites `--snapshot <path>.meb`, if given) every N absorbed
+/// `/train` examples.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.str("dataset", "mnist01");
-    let ds = load_dataset_sized(&name, 42, args.get("frac", 0.25)?)?;
-    let train = TrainOptions::default().with_c(table1::c_for(&name));
-    let model = streamsvm::svm::streamsvm::StreamSvm::fit(ds.train.iter(), ds.dim, &train);
-    println!("trained on {}: {} supports", ds.name, model.num_support());
-    let n_req: usize = args.get("requests", 5000)?;
-    let batch: usize = args.get("batch", 64)?;
-    let mut svc = PredictService::from_model(
-        &model,
-        &name,
-        ServiceConfig { batch, ..Default::default() },
-    );
-    if args.has("snapshot") {
-        svc = svc.snapshot_to(
-            PathBuf::from(args.str("snapshot", "live.meb")),
-            args.get("snapshot-every", 64u64)?,
-        );
-    }
-    let client = svc.client();
-    let test = std::sync::Arc::new(ds.test.clone());
-    let workers: Vec<_> = (0..4)
-        .map(|k| {
-            let c = client.clone();
-            let test = test.clone();
-            std::thread::spawn(move || {
-                let mut correct = 0usize;
-                let mut total = 0usize;
-                for i in 0..n_req / 4 {
-                    let e = &test[(k * 31 + i * 7) % test.len()];
-                    let s = c.score(e.x.clone()).unwrap();
-                    total += 1;
-                    if (s >= 0.0) == (e.y > 0.0) {
-                        correct += 1;
-                    }
-                }
-                (correct, total)
-            })
-        })
-        .collect();
-    drop(client);
-    let mut rt = open_runtime_opt(ExecMode::Filter);
-    let stats = svc.run(rt.as_mut())?;
-    let (mut correct, mut total) = (0, 0);
-    for w in workers {
-        let (c, t) = w.join().unwrap();
-        correct += c;
-        total += t;
-    }
+    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 0.25)?)?;
+    let train = if args.has("c") {
+        TrainOptions::default().with_c(args.get("c", 1.0)?)
+    } else {
+        TrainOptions::default().with_c(table1::c_for(&name))
+    };
+    let model = StreamSvm::fit(ds.train.iter(), ds.dim, &train);
     println!(
-        "served {} requests in {} batches (mean fill {:.1}, {} live snapshots)",
-        stats.requests,
-        stats.batches,
-        stats.mean_batch_fill(),
-        stats.snapshots
+        "trained on {}: dim={} supports={} | test acc = {:.2}%",
+        ds.name,
+        ds.dim,
+        model.num_support(),
+        accuracy(&model, &ds.test) * 100.0
     );
-    println!("latency: {}", stats.latency.summary());
-    println!("serving accuracy: {:.2}%", correct as f64 / total as f64 * 100.0);
+    let cfg = ServerConfig {
+        addr: args.str("addr", "127.0.0.1:7878"),
+        threads: args.get("threads", 8usize)?,
+        conn_queue: args.get("queue", 64usize)?,
+        train_queue: args.get("train-queue", 1024usize)?,
+        republish_every: args.get("republish-every", 32usize)?,
+        snapshot: args
+            .has("snapshot")
+            .then(|| PathBuf::from(args.str("snapshot", "live.meb"))),
+        read_timeout: Duration::from_millis(args.get("read-timeout-ms", 10_000u64)?),
+        tag: name.clone(),
+        ..Default::default()
+    };
+    let handle = serve(model, cfg)?;
+    println!("serving {name} on http://{}/ (predict, predict_batch, train, snapshot, stats)", handle.addr());
+    handle.run_forever()
+}
+
+/// Drive a running server at a target QPS with a mixed predict/train
+/// workload and write `BENCH_serve.json`.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let name = args.str("dataset", "mnist01");
+    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 0.25)?)?;
+    let cfg = LoadgenConfig {
+        addr: args.str("addr", "127.0.0.1:7878"),
+        threads: args.get("threads", 4usize)?,
+        requests: args.get("requests", 2000usize)?,
+        qps: args.get("qps", 500.0f64)?,
+        train_share: args.get("train-share", 0.1f64)?,
+        read_timeout: Duration::from_millis(args.get("read-timeout-ms", 5_000u64)?),
+        seed: args.get("seed", 42u64)?,
+    };
+    println!("loadgen → {} ({} requests, target {} rps)", cfg.addr, cfg.requests, cfg.qps);
+    let report = run_loadgen(&cfg, &ds.test)?;
+    println!("{}", report.summary());
+    let out = args.str("out", "BENCH_serve.json");
+    report.write_json(Path::new(&out))?;
+    println!("wrote {out}");
+    if report.ok == 0 {
+        return Err(Error::Pipeline(format!(
+            "no successful round-trips against {} ({} errors)",
+            cfg.addr, report.errors
+        )));
+    }
     Ok(())
 }
 
@@ -319,6 +331,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(&args)?,
         "serve" => cmd_serve(&args)?,
+        "loadgen" => cmd_loadgen(&args)?,
         "snapshot" => cmd_snapshot(&args)?,
         "resume" => cmd_resume(&args)?,
         "merge" => cmd_merge(&args)?,
@@ -386,8 +399,8 @@ fn main() -> Result<()> {
         _ => {
             println!("streamsvm — one-pass streaming l2-SVM (IJCAI'09 reproduction)");
             println!(
-                "commands: train serve snapshot resume merge table1 fig2 fig3 \
-                 bounds gen-data artifacts"
+                "commands: train serve loadgen snapshot resume merge table1 fig2 \
+                 fig3 bounds gen-data artifacts"
             );
             println!("see README.md for flags (--key value and --key=value)");
         }

@@ -1,0 +1,211 @@
+//! Admission control: bounded hand-off queues with explicit shedding,
+//! and the per-endpoint latency/shed bookkeeping behind `/stats`.
+//!
+//! The server has two admission points, both built on [`bounded`]:
+//! connections (acceptor → handler pool) and training examples
+//! (`/train` handler → trainer thread). Either queue being full is an
+//! *explicit, immediate* 429-style reject — never a silent drop, never
+//! an unbounded backlog, never a hang.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::metrics::LatencyHistogram;
+
+/// Producer side of a bounded hand-off queue.
+pub struct Bounded<T> {
+    tx: SyncSender<T>,
+    depth: usize,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Bounded { tx: self.tx.clone(), depth: self.depth }
+    }
+}
+
+/// A bounded queue of capacity `depth` (0 = rendezvous: admit only when
+/// a consumer is actively waiting).
+pub fn bounded<T>(depth: usize) -> (Bounded<T>, Receiver<T>) {
+    let (tx, rx) = sync_channel(depth);
+    (Bounded { tx, depth }, rx)
+}
+
+impl<T> Bounded<T> {
+    /// Non-blocking admit. `Err(item)` hands the item back when the
+    /// queue is full (shed it) or the consumer is gone (shutdown).
+    pub fn try_admit(&self, item: T) -> std::result::Result<(), T> {
+        match self.tx.try_send(item) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(it)) | Err(TrySendError::Disconnected(it)) => Err(it),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+}
+
+/// The serving endpoints, in display order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Predict,
+    PredictBatch,
+    Train,
+    Snapshot,
+    Stats,
+}
+
+impl Endpoint {
+    pub const ALL: [Endpoint; 5] = [
+        Endpoint::Predict,
+        Endpoint::PredictBatch,
+        Endpoint::Train,
+        Endpoint::Snapshot,
+        Endpoint::Stats,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Endpoint::Predict => "predict",
+            Endpoint::PredictBatch => "predict_batch",
+            Endpoint::Train => "train",
+            Endpoint::Snapshot => "snapshot",
+            Endpoint::Stats => "stats",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Endpoint::Predict => 0,
+            Endpoint::PredictBatch => 1,
+            Endpoint::Train => 2,
+            Endpoint::Snapshot => 3,
+            Endpoint::Stats => 4,
+        }
+    }
+}
+
+/// Counters + latency distribution for one endpoint.
+#[derive(Clone, Debug, Default)]
+pub struct EndpointStats {
+    /// Requests answered 2xx.
+    pub ok: u64,
+    /// Requests rejected by admission control (429).
+    pub shed: u64,
+    /// Malformed / failed requests (4xx other than 429, 5xx).
+    pub errors: u64,
+    /// Admission → response-written latency of 2xx requests.
+    pub latency: LatencyHistogram,
+}
+
+/// Shared, thread-safe stats registry for the whole server.
+#[derive(Default)]
+pub struct ServerStats {
+    per: [Mutex<EndpointStats>; 5],
+    /// Connections handed to the handler pool.
+    pub conns_accepted: AtomicU64,
+    /// Connections shed at the acceptor (handler pool + queue full).
+    pub conns_shed: AtomicU64,
+}
+
+impl ServerStats {
+    fn lock(&self, ep: Endpoint) -> std::sync::MutexGuard<'_, EndpointStats> {
+        match self.per[ep.idx()].lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    pub fn record_ok(&self, ep: Endpoint, latency: Duration) {
+        let mut g = self.lock(ep);
+        g.ok += 1;
+        g.latency.record(latency);
+    }
+
+    pub fn record_shed(&self, ep: Endpoint) {
+        self.lock(ep).shed += 1;
+    }
+
+    pub fn record_error(&self, ep: Endpoint) {
+        self.lock(ep).errors += 1;
+    }
+
+    /// A point-in-time copy of one endpoint's stats.
+    pub fn snapshot(&self, ep: Endpoint) -> EndpointStats {
+        self.lock(ep).clone()
+    }
+
+    /// Total 2xx-answered requests across endpoints.
+    pub fn total_ok(&self) -> u64 {
+        Endpoint::ALL.iter().map(|&e| self.lock(e).ok).sum()
+    }
+
+    /// Total requests shed across endpoints (excluding connection sheds).
+    pub fn total_shed(&self) -> u64 {
+        Endpoint::ALL.iter().map(|&e| self.lock(e).shed).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_admits_until_full_then_hands_back() {
+        let (q, rx) = bounded::<u32>(2);
+        assert!(q.try_admit(1).is_ok());
+        assert!(q.try_admit(2).is_ok());
+        assert_eq!(q.try_admit(3), Err(3), "full queue must hand the item back");
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert!(q.try_admit(3).is_ok(), "space freed after a pop");
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn bounded_rejects_after_consumer_gone() {
+        let (q, rx) = bounded::<u32>(4);
+        drop(rx);
+        assert_eq!(q.try_admit(7), Err(7));
+    }
+
+    #[test]
+    fn rendezvous_queue_sheds_without_waiting_consumer() {
+        let (q, rx) = bounded::<u32>(0);
+        assert_eq!(q.try_admit(1), Err(1), "no consumer waiting → shed");
+        let waiter = std::thread::spawn(move || rx.recv().unwrap());
+        // spin until the consumer blocks in recv
+        let mut admitted = false;
+        for _ in 0..500 {
+            if q.try_admit(9).is_ok() {
+                admitted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(admitted, "rendezvous admit must succeed once a consumer waits");
+        assert_eq!(waiter.join().unwrap(), 9);
+    }
+
+    #[test]
+    fn stats_record_and_snapshot() {
+        let s = ServerStats::default();
+        s.record_ok(Endpoint::Predict, Duration::from_micros(100));
+        s.record_ok(Endpoint::Predict, Duration::from_micros(200));
+        s.record_shed(Endpoint::Train);
+        s.record_error(Endpoint::PredictBatch);
+        let p = s.snapshot(Endpoint::Predict);
+        assert_eq!(p.ok, 2);
+        assert_eq!(p.latency.count(), 2);
+        assert_eq!(s.snapshot(Endpoint::Train).shed, 1);
+        assert_eq!(s.snapshot(Endpoint::PredictBatch).errors, 1);
+        assert_eq!(s.total_ok(), 2);
+        assert_eq!(s.total_shed(), 1);
+        assert_eq!(s.snapshot(Endpoint::Stats).ok, 0);
+        for ep in Endpoint::ALL {
+            assert!(!ep.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Hot-swap model cell: lock-held-for-nanoseconds snapshot publishing.
+//!
+//! The serving path must never observe a torn model while the trainer
+//! thread keeps learning. The cell holds an `Arc<ModelSnapshot>` behind
+//! an `RwLock`; readers clone the `Arc` (a refcount bump under the read
+//! lock), the trainer builds a complete new snapshot off-lock and swaps
+//! the pointer under the write lock. Every request therefore scores
+//! against exactly one published snapshot — old or new, never a mix —
+//! and publishing never blocks on in-flight scoring work, because
+//! scoring happens after the guard is released.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::linalg;
+use crate::sketch::codec::MebSketch;
+use crate::svm::streamsvm::StreamSvm;
+
+/// One immutable published model: the serving weights plus the full
+/// durable sketch (so `/snapshot` serves the same bytes a `.meb` file
+/// would hold) and provenance for `/stats` and response metadata.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Dense serving weights, always `dim` long (zeros before any data).
+    pub w: Vec<f32>,
+    pub dim: usize,
+    /// Monotone publish counter; 1 is the snapshot the server started with.
+    pub version: u64,
+    /// Stream position of the learner when this snapshot was taken.
+    pub seen: usize,
+    pub radius: f64,
+    pub supports: usize,
+    /// Full durable state ([`MebSketch`]), the `/snapshot` payload.
+    pub sketch: MebSketch,
+}
+
+impl ModelSnapshot {
+    fn build(model: &StreamSvm, tag: &str, version: u64) -> Self {
+        let dim = model.dim();
+        let mut w = model.weights().to_vec();
+        w.resize(dim, 0.0);
+        ModelSnapshot {
+            w,
+            dim,
+            version,
+            seen: model.examples_seen(),
+            radius: model.radius(),
+            supports: model.num_support(),
+            sketch: MebSketch::from_model(model, tag),
+        }
+    }
+
+    /// Raw margin of `x` against this snapshot's weights. Callers
+    /// validate dimensions at the protocol boundary; a mismatch here is
+    /// a bug, handled as an error response upstream.
+    pub fn score(&self, x: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        linalg::dot(&self.w, x)
+    }
+}
+
+/// The swap cell shared by acceptor/handler threads and the trainer.
+pub struct ModelCell {
+    slot: RwLock<Arc<ModelSnapshot>>,
+    version: AtomicU64,
+}
+
+impl ModelCell {
+    /// Publish `model` as version 1.
+    pub fn new(model: &StreamSvm, tag: &str) -> Self {
+        ModelCell {
+            slot: RwLock::new(Arc::new(ModelSnapshot::build(model, tag, 1))),
+            version: AtomicU64::new(1),
+        }
+    }
+
+    /// The latest published snapshot. Lock-poisoning (a reader panicking
+    /// with the guard held) cannot corrupt an `Arc` swap, so a poisoned
+    /// lock is recovered rather than propagated — serving must not die
+    /// because one handler thread did.
+    pub fn load(&self) -> Arc<ModelSnapshot> {
+        match self.slot.read() {
+            Ok(g) => g.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+
+    /// Atomically replace the published snapshot with the trainer's
+    /// current state. Returns the new version.
+    ///
+    /// Single-publisher: only the trainer thread calls this, so the
+    /// version counter advances *after* the swap — [`Self::version`]
+    /// never reports a version that is not yet loadable.
+    pub fn publish(&self, model: &StreamSvm, tag: &str) -> u64 {
+        let version = self.version.load(Ordering::Acquire) + 1;
+        let next = Arc::new(ModelSnapshot::build(model, tag, version));
+        match self.slot.write() {
+            Ok(mut g) => *g = next,
+            Err(poisoned) => *poisoned.into_inner() = next,
+        }
+        self.version.store(version, Ordering::Release);
+        version
+    }
+
+    /// The latest published version (monotone, starts at 1).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::TrainOptions;
+
+    fn toy_model(n: usize) -> StreamSvm {
+        let mut m = StreamSvm::new(2, TrainOptions::default());
+        for i in 0..n {
+            let v = 1.0 + i as f32;
+            m.observe(&[v, -v], if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        m
+    }
+
+    #[test]
+    fn publish_bumps_version_and_swaps_weights() {
+        let m1 = toy_model(1);
+        let cell = ModelCell::new(&m1, "t");
+        let s1 = cell.load();
+        assert_eq!(s1.version, 1);
+        assert_eq!(s1.dim, 2);
+        assert_eq!(s1.w.len(), 2);
+        assert_eq!(s1.seen, 1);
+
+        let m2 = toy_model(20);
+        let v = cell.publish(&m2, "t");
+        assert_eq!(v, 2);
+        assert_eq!(cell.version(), 2);
+        let s2 = cell.load();
+        assert_eq!(s2.version, 2);
+        assert_eq!(s2.seen, 20);
+        assert_eq!(s2.w, m2.weights());
+        // the old Arc is still intact for readers that grabbed it
+        assert_eq!(s1.version, 1);
+        assert_eq!(s1.seen, 1);
+    }
+
+    #[test]
+    fn empty_model_serves_zero_scores() {
+        let m = StreamSvm::new(3, TrainOptions::default());
+        let cell = ModelCell::new(&m, "empty");
+        let s = cell.load();
+        assert_eq!(s.w, vec![0.0; 3]);
+        assert_eq!(s.score(&[1.0, 2.0, 3.0]), 0.0);
+        assert!(s.sketch.ball.is_none());
+    }
+
+    #[test]
+    fn snapshot_sketch_is_decodable_and_equal() {
+        let m = toy_model(40);
+        let cell = ModelCell::new(&m, "tag");
+        let s = cell.load();
+        let bytes = s.sketch.encode();
+        let back = MebSketch::decode(&bytes).unwrap();
+        assert_eq!(back, s.sketch);
+        assert_eq!(back.to_model().weights(), m.weights());
+    }
+
+    #[test]
+    fn concurrent_readers_never_see_a_torn_model() {
+        // Publish models whose weights satisfy an invariant (w[0] == -w[1]);
+        // a torn read would break it.
+        let cell = std::sync::Arc::new(ModelCell::new(&toy_model(1), "t"));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let cell = cell.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut last_version = 0;
+                    let mut reads = 0usize;
+                    while !stop.load(Ordering::Acquire) {
+                        let s = cell.load();
+                        assert!(s.version >= last_version, "version went backwards");
+                        last_version = s.version;
+                        let sc = s.score(&[1.0, 1.0]);
+                        assert!(sc.is_finite());
+                        // invariant of every published model below
+                        assert_eq!(s.w[0], -s.w[1], "torn snapshot");
+                        reads += 1;
+                    }
+                    reads
+                })
+            })
+            .collect();
+        for n in 2..200 {
+            cell.publish(&toy_model(n), "t");
+        }
+        stop.store(true, Ordering::Release);
+        let total: usize = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(cell.version(), 199);
+    }
+}

@@ -1,0 +1,421 @@
+//! Hand-rolled minimal HTTP/1.1 — just enough protocol for the serving
+//! subsystem, with zero dependencies.
+//!
+//! Supported: request line + headers + `Content-Length` bodies,
+//! keep-alive connections, `Expect: 100-continue` (see
+//! [`read_request_expect`]), and the response writer the server and the
+//! loadgen client share. Not supported (rejected or ignored): chunked
+//! transfer encoding, multi-line headers, HTTP/2. Limits guard every
+//! read so a malformed or hostile peer can cost at most
+//! [`Limits::max_body`] bytes of memory.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Parse limits for one request/response.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Longest accepted request/status/header line, in bytes.
+    pub max_line: usize,
+    /// Maximum number of headers.
+    pub max_headers: usize,
+    /// Maximum `Content-Length`.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_line: 8192, max_headers: 64, max_body: 16 << 20 }
+    }
+}
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_of(&self.headers, name)
+    }
+
+    /// Did the client ask to drop the connection after this exchange?
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// One parsed HTTP response (the loadgen-client half).
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_of(&self.headers, name)
+    }
+
+    /// Will the server drop the connection after this response?
+    pub fn connection_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+
+    pub fn is_2xx(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+}
+
+fn header_of<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+/// Reason phrases for the status codes the subsystem emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Read one `\r\n`- (or `\n`-) terminated line, enforcing `max_line`.
+/// Returns `None` on clean EOF before the first byte.
+fn read_line<R: BufRead>(r: &mut R, max_line: usize) -> Result<Option<String>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(64);
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(Error::Pipeline("http: connection closed mid-line".into()));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    let s = String::from_utf8(buf)
+                        .map_err(|_| Error::Pipeline("http: non-UTF-8 header line".into()))?;
+                    return Ok(Some(s));
+                }
+                buf.push(byte[0]);
+                if buf.len() > max_line {
+                    return Err(Error::Pipeline("http: header line too long".into()));
+                }
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+}
+
+/// Read the header block (up to and including the blank line).
+fn read_headers<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, limits.max_line)?
+            .ok_or_else(|| Error::Pipeline("http: connection closed in headers".into()))?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(Error::Pipeline("http: too many headers".into()));
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| Error::Pipeline(format!("http: malformed header `{line}`")))?;
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+}
+
+/// Declared body length, validated against `max_body`.
+fn body_len(headers: &[(String, String)], limits: &Limits) -> Result<usize> {
+    let len: usize = match header_of(headers, "content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::Pipeline(format!("http: bad content-length `{v}`")))?,
+    };
+    if len > limits.max_body {
+        return Err(Error::Pipeline(format!(
+            "http: body of {len} bytes exceeds the {} byte limit",
+            limits.max_body
+        )));
+    }
+    Ok(len)
+}
+
+/// Read the shared `headers … blank line … body` tail of a message.
+fn read_headers_and_body<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<(Vec<(String, String)>, Vec<u8>)> {
+    let headers = read_headers(r, limits)?;
+    let len = body_len(&headers, limits)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(Error::Io)?;
+    Ok((headers, body))
+}
+
+/// Read one request from a keep-alive connection. `Ok(None)` means the
+/// peer closed cleanly between requests (the normal end of a
+/// connection); errors mean a malformed request or a mid-message close.
+pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Option<HttpRequest>> {
+    read_request_expect(r, None, limits)
+}
+
+/// [`read_request`] with `Expect: 100-continue` support: when the client
+/// announced a body with that header (curl does for bodies over ~1KB)
+/// and `cont` is given, an interim `HTTP/1.1 100 Continue` is written
+/// before the body read — otherwise such clients stall ~1s per request
+/// waiting for the go-ahead.
+pub fn read_request_expect<R: BufRead>(
+    r: &mut R,
+    cont: Option<&mut dyn Write>,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>> {
+    let line = match read_line(r, limits.max_line)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m, p, v),
+        _ => return Err(Error::Pipeline(format!("http: malformed request line `{line}`"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::Pipeline(format!("http: unsupported version `{version}`")));
+    }
+    let headers = read_headers(r, limits)?;
+    let len = body_len(&headers, limits)?;
+    if len > 0 {
+        let expects_continue = header_of(&headers, "expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"));
+        if expects_continue {
+            if let Some(w) = cont {
+                w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+                w.flush()?;
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(Error::Io)?;
+    Ok(Some(HttpRequest {
+        method: method.to_ascii_uppercase(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// Read one response (the client half). `Ok(None)` on clean EOF before
+/// the status line — e.g. a server that shed the connection after its
+/// final response.
+pub fn read_response<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Option<HttpResponse>> {
+    let line = match read_line(r, limits.max_line)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse()
+            .map_err(|_| Error::Pipeline(format!("http: bad status code in `{line}`")))?,
+        _ => return Err(Error::Pipeline(format!("http: malformed status line `{line}`"))),
+    };
+    let (headers, body) = read_headers_and_body(r, limits)?;
+    Ok(Some(HttpResponse { status, headers, body }))
+}
+
+/// Write one response. The caller flushes (so a handler can batch the
+/// write with its latency bookkeeping).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status_text(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)
+}
+
+/// Write one request (the client half).
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    host: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len(),
+    )?;
+    w.write_all(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse_req(raw: &[u8]) -> Result<Option<HttpRequest>> {
+        read_request(&mut BufReader::new(raw), &Limits::default())
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\n{\"x\":[1,2]}";
+        let req = parse_req(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert_eq!(req.body, b"{\"x\":[1,2]}");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_close() {
+        let raw = b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = parse_req(raw).unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn keep_alive_reads_two_requests_then_eof() {
+        let raw: Vec<u8> = [
+            &b"GET /a HTTP/1.1\r\n\r\n"[..],
+            &b"GET /b HTTP/1.1\r\n\r\n"[..],
+        ]
+        .concat();
+        let mut r = BufReader::new(&raw[..]);
+        let lim = Limits::default();
+        assert_eq!(read_request(&mut r, &lim).unwrap().unwrap().path, "/a");
+        assert_eq!(read_request(&mut r, &lim).unwrap().unwrap().path, "/b");
+        assert!(read_request(&mut r, &lim).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        assert!(parse_req(b"garbage\r\n\r\n").is_err());
+        assert!(parse_req(b"GET /x SPDY/3\r\n\r\n").is_err());
+        assert!(parse_req(b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
+        assert!(parse_req(b"GET /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
+        // body shorter than content-length → mid-message close
+        assert!(parse_req(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn limits_enforced() {
+        let lim = Limits { max_line: 16, max_headers: 1, max_body: 4 };
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(64));
+        assert!(read_request(&mut BufReader::new(long.as_bytes()), &lim).is_err());
+        let many = b"GET /x HTTP/1.1\r\na: 1\r\nb: 2\r\n\r\n";
+        assert!(read_request(&mut BufReader::new(&many[..]), &lim).is_err());
+        let big = b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
+        assert!(read_request(&mut BufReader::new(&big[..]), &lim).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{\"ok\":true}", true).unwrap();
+        let resp = read_response(&mut BufReader::new(&out[..]), &Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.is_2xx());
+        assert!(!resp.connection_close());
+        assert_eq!(resp.body, b"{\"ok\":true}");
+
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{}", false).unwrap();
+        let resp = read_response(&mut BufReader::new(&out[..]), &Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(resp.status, 429);
+        assert!(resp.connection_close());
+        assert!(!resp.is_2xx());
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut out = Vec::new();
+        write_request(&mut out, "POST", "/train", "127.0.0.1:7878", b"{\"y\":1}").unwrap();
+        let req = parse_req(&out).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/train");
+        assert_eq!(req.body, b"{\"y\":1}");
+    }
+
+    #[test]
+    fn bare_lf_line_endings_accepted() {
+        let req = parse_req(b"GET /x HTTP/1.1\nA: b\n\n").unwrap().unwrap();
+        assert_eq!(req.path, "/x");
+        assert_eq!(req.header("a"), Some("b"));
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_reply() {
+        let raw =
+            b"POST /train HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 7\r\n\r\n{\"y\":1}";
+        let mut interim: Vec<u8> = Vec::new();
+        let req = read_request_expect(
+            &mut BufReader::new(&raw[..]),
+            Some(&mut interim),
+            &Limits::default(),
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.body, b"{\"y\":1}");
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+
+        // no Expect header → no interim bytes
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 2\r\n\r\nab";
+        let mut interim: Vec<u8> = Vec::new();
+        read_request_expect(
+            &mut BufReader::new(&raw[..]),
+            Some(&mut interim),
+            &Limits::default(),
+        )
+        .unwrap()
+        .unwrap();
+        assert!(interim.is_empty());
+
+        // plain read_request still parses Expect requests (no writer)
+        let raw =
+            b"POST /x HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nab";
+        assert_eq!(parse_req(raw).unwrap().unwrap().body, b"ab");
+    }
+}

@@ -1,0 +1,394 @@
+//! Dependency-free minimal JSON: a recursive-descent parser for the
+//! request/response bodies the serving protocol exchanges, plus the few
+//! formatting helpers the writers need.
+//!
+//! Coverage is deliberately small but standard: objects, arrays,
+//! strings with the common escapes (`\" \\ \/ \b \f \n \r \t \uXXXX`),
+//! numbers via `f64`, `true`/`false`/`null`. Depth is bounded so a
+//! hostile body cannot blow the stack.
+
+use crate::error::{Error, Result};
+
+/// Maximum nesting depth accepted by the parser.
+const MAX_DEPTH: usize = 64;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(Error::data(format!("json: trailing bytes at offset {}", p.pos)));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// An array of numbers as an `f32` vector (the `x` payload shape).
+    pub fn f32_vec(&self) -> Option<Vec<f32>> {
+        let arr = self.as_array()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()? as f32);
+        }
+        Some(out)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.pos) {
+            if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(Error::data(format!(
+                "json: expected `{}` at offset {}",
+                c as char, self.pos
+            )))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(Error::data(format!("json: bad literal at offset {}", self.pos)))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            return Err(Error::data("json: nesting too deep"));
+        }
+        match self.peek() {
+            None => Err(Error::data("json: unexpected end of input")),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    self.skip_ws();
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(Error::data(format!(
+                            "json: expected `,` or `]` at offset {}",
+                            self.pos
+                        ))),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut kv = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    self.eat(b':')?;
+                    self.skip_ws();
+                    let v = self.value(depth + 1)?;
+                    kv.push((k, v));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(kv));
+                        }
+                        _ => return Err(Error::data(format!(
+                            "json: expected `,` or `}}` at offset {}",
+                            self.pos
+                        ))),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(Error::data("json: unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| Error::data("json: unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let end = self.pos.checked_add(4).filter(|&e| e <= self.b.len());
+                            let hex = end
+                                .map(|e| &self.b[self.pos..e])
+                                .ok_or_else(|| Error::data("json: truncated \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| Error::data("json: bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::data("json: bad \\u escape"))?;
+                            self.pos += 4;
+                            // surrogates map to the replacement char; the
+                            // protocol never emits them
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        other => {
+                            return Err(Error::data(format!(
+                                "json: unknown escape `\\{}`",
+                                other as char
+                            )))
+                        }
+                    }
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(Error::data("json: raw control byte in string"))
+                }
+                Some(_) => {
+                    // copy one UTF-8 scalar (input is already valid UTF-8)
+                    let s = &self.b[self.pos..];
+                    let ch_len = match s[0] {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    let end = (self.pos + ch_len).min(self.b.len());
+                    out.push_str(
+                        std::str::from_utf8(&self.b[self.pos..end])
+                            .map_err(|_| Error::data("json: bad UTF-8 in string"))?,
+                    );
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.pos {
+            return Err(Error::data(format!("json: expected a value at offset {start}")));
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii");
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| Error::data(format!("json: bad number `{s}`")))
+    }
+}
+
+/// Format a float as a JSON value: finite numbers verbatim, NaN/±inf as
+/// `null` (raw `NaN` would make the document unparseable).
+pub fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an `f32` slice as a JSON array of numbers.
+pub fn fmt_f32_array(xs: &[f32]) -> String {
+    let mut out = String::with_capacity(2 + 8 * xs.len());
+    out.push('[');
+    for (i, &v) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&fmt_num(v as f64));
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_predict_body() {
+        let v = Json::parse(r#"{"x":[1.5,-2,3e-1],"y":1}"#).unwrap();
+        assert_eq!(v.get("x").unwrap().f32_vec().unwrap(), vec![1.5, -2.0, 0.3]);
+        assert_eq!(v.get("y").unwrap().as_f64(), Some(1.0));
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn parses_nested_batch() {
+        let v = Json::parse(r#"{"xs":[[1,2],[3,4]]}"#).unwrap();
+        let xs = v.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[1].f32_vec().unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn parses_scalars_strings_bools() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("-12.5e2").unwrap(), Json::Num(-1250.0));
+        let v = Json::parse(r#""a\"b\\c\ndA""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\c\ndA"));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(vec![]));
+        assert_eq!(Json::parse("\"héllo\"").unwrap().as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "{\"a\":}", "tru", "1 2", "[1 2]",
+            "\"unterminated", "{\"a\":1,}x", "nanx", "\u{1}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject `{bad}`");
+        }
+    }
+
+    #[test]
+    fn depth_bounded() {
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn f32_vec_rejects_non_numbers() {
+        let v = Json::parse(r#"[1,"two"]"#).unwrap();
+        assert!(v.f32_vec().is_none());
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_num(1.5), "1.5");
+        assert_eq!(fmt_num(f64::NAN), "null");
+        assert_eq!(fmt_num(f64::INFINITY), "null");
+        assert_eq!(fmt_f32_array(&[1.0, -0.5]), "[1,-0.5]");
+        assert_eq!(escape("a\"b\n"), "a\\\"b\\n");
+        // round-trip through the parser
+        let doc = format!(r#"{{"s":"{}","v":{}}}"#, escape("x\"y"), fmt_num(2.25));
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("x\"y"));
+        assert_eq!(v.get("v").unwrap().as_f64(), Some(2.25));
+    }
+}

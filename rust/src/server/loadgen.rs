@@ -1,0 +1,407 @@
+//! Load generator: a dependency-free HTTP client for the serving
+//! subsystem plus a paced multi-thread driver that reports throughput,
+//! latency quantiles and shed rate (`BENCH_serve.json`).
+//!
+//! [`LoadClient`] is the protocol client (keep-alive connection, one
+//! in-flight request): it powers the paced driver, the CI smoke test
+//! and the integration suite. [`run_loadgen`] drives N client threads
+//! at a target aggregate QPS with open-loop pacing (each thread sends
+//! on a fixed schedule rather than as-fast-as-replies-arrive, so
+//! server slowdowns surface as latency, not as a lower offered rate).
+
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::data::Example;
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+use crate::server::http::{self, HttpResponse, Limits};
+use crate::server::json::{self, Json};
+
+/// One keep-alive connection to a serving endpoint.
+pub struct LoadClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    host: String,
+    limits: Limits,
+}
+
+/// Outcome of one round-trip.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub status: u16,
+    /// Parsed `score` for `/predict` 2xx replies.
+    pub score: Option<f64>,
+    /// Parsed snapshot `version`, when the reply carries one.
+    pub version: Option<u64>,
+    /// Server announced it will close the connection (reconnect before
+    /// the next request).
+    pub closed: bool,
+}
+
+impl LoadClient {
+    /// Connect with `read_timeout` on replies.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(
+        addr: A,
+        read_timeout: Duration,
+    ) -> Result<Self> {
+        let host = addr.to_string();
+        let stream = TcpStream::connect(&addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(read_timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(LoadClient { reader, writer: BufWriter::new(stream), host, limits: Limits::default() })
+    }
+
+    fn round_trip(&mut self, method: &str, path: &str, body: &[u8]) -> Result<HttpResponse> {
+        http::write_request(&mut self.writer, method, path, &self.host, body)?;
+        self.writer.flush()?;
+        http::read_response(&mut self.reader, &self.limits)?
+            .ok_or_else(|| Error::Pipeline("server closed the connection before replying".into()))
+    }
+
+    fn outcome_of(resp: HttpResponse) -> Outcome {
+        let parsed = std::str::from_utf8(&resp.body).ok().and_then(|s| Json::parse(s).ok());
+        let field = |k: &str| parsed.as_ref().and_then(|v| v.get(k)).and_then(|v| v.as_f64());
+        Outcome {
+            status: resp.status,
+            score: field("score"),
+            version: field("version").map(|v| v as u64),
+            closed: resp.connection_close(),
+        }
+    }
+
+    /// `POST /predict` with one feature vector.
+    pub fn predict(&mut self, x: &[f32]) -> Result<Outcome> {
+        let body = format!(r#"{{"x":{}}}"#, json::fmt_f32_array(x));
+        Ok(Self::outcome_of(self.round_trip("POST", "/predict", body.as_bytes())?))
+    }
+
+    /// `POST /train` with one labeled example.
+    pub fn train(&mut self, x: &[f32], y: f32) -> Result<Outcome> {
+        let body = format!(r#"{{"x":{},"y":{}}}"#, json::fmt_f32_array(x), json::fmt_num(y as f64));
+        Ok(Self::outcome_of(self.round_trip("POST", "/train", body.as_bytes())?))
+    }
+
+    /// `GET /stats`, parsed.
+    pub fn stats(&mut self) -> Result<Json> {
+        let resp = self.round_trip("GET", "/stats", b"")?;
+        let text = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Pipeline("stats body is not UTF-8".into()))?;
+        Json::parse(text)
+    }
+
+    /// `GET /snapshot`: the raw `.meb` bytes.
+    pub fn snapshot(&mut self) -> Result<Vec<u8>> {
+        let resp = self.round_trip("GET", "/snapshot", b"")?;
+        if !resp.is_2xx() {
+            return Err(Error::Pipeline(format!("snapshot returned {}", resp.status)));
+        }
+        Ok(resp.body)
+    }
+}
+
+/// Load-generation parameters.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Client threads (each holds one keep-alive connection).
+    pub threads: usize,
+    /// Total requests across all threads.
+    pub requests: usize,
+    /// Aggregate target rate; `<= 0` runs unthrottled (closed loop).
+    pub qps: f64,
+    /// Fraction of requests that hit `/train` instead of `/predict`.
+    pub train_share: f64,
+    pub read_timeout: Duration,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7878".into(),
+            threads: 4,
+            requests: 2000,
+            qps: 500.0,
+            train_share: 0.1,
+            read_timeout: Duration::from_secs(5),
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregate results of one load-generation run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    /// 2xx replies with a well-formed body (finite score for predicts).
+    pub ok: usize,
+    /// Explicit 429 rejects (request- or connection-level shedding).
+    pub shed: usize,
+    /// Transport failures and non-2xx/non-429 statuses.
+    pub errors: usize,
+    pub predicts: usize,
+    pub trains: usize,
+    pub wall: Duration,
+    pub qps_target: f64,
+    /// Send → parsed-reply latency of *ok* (2xx) replies across all
+    /// threads — shed fast-path replies are excluded, matching the
+    /// server's own `/stats` accounting.
+    pub latency: LatencyHistogram,
+}
+
+impl LoadReport {
+    pub fn qps_achieved(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            // completed round-trips per second
+            (self.ok + self.shed) as f64 / s
+        }
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.sent as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "sent={} ok={} shed={} errors={} ({} predict / {} train) in {:.2?} | \
+             {:.0} rps achieved (target {}) shed_rate={:.2}% | latency {}",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.predicts,
+            self.trains,
+            self.wall,
+            self.qps_achieved(),
+            if self.qps_target > 0.0 { format!("{:.0}", self.qps_target) } else { "∞".into() },
+            self.shed_rate() * 100.0,
+            self.latency.summary(),
+        )
+    }
+
+    /// The `BENCH_serve.json` document.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                r#"{{"requests":{},"ok":{},"shed":{},"errors":{},"#,
+                r#""predicts":{},"trains":{},"shed_rate":{},"#,
+                r#""wall_s":{},"qps_target":{},"qps_achieved":{},"#,
+                r#""latency_us":{{"mean":{},"p50":{},"p90":{},"p99":{},"max":{}}}}}"#
+            ),
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.predicts,
+            self.trains,
+            json::fmt_num(self.shed_rate()),
+            json::fmt_num(self.wall.as_secs_f64()),
+            json::fmt_num(self.qps_target.max(0.0)),
+            json::fmt_num(self.qps_achieved()),
+            self.latency.mean().as_micros(),
+            self.latency.quantile(0.50).as_micros(),
+            self.latency.quantile(0.90).as_micros(),
+            self.latency.quantile(0.99).as_micros(),
+            self.latency.max().as_micros(),
+        )
+    }
+
+    /// Write [`Self::to_json`] to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+/// Per-thread slice of the run.
+struct ThreadReport {
+    sent: usize,
+    ok: usize,
+    shed: usize,
+    errors: usize,
+    predicts: usize,
+    trains: usize,
+    latency: LatencyHistogram,
+}
+
+/// Drive `cfg.addr` with a mixed `/predict` + `/train` workload drawn
+/// from `examples` (cycled). Returns the aggregate report; transport
+/// errors reconnect and count, they never abort the run.
+pub fn run_loadgen(cfg: &LoadgenConfig, examples: &[Example]) -> Result<LoadReport> {
+    if examples.is_empty() {
+        return Err(Error::config("loadgen needs at least one example"));
+    }
+    if cfg.threads == 0 || cfg.requests == 0 {
+        return Err(Error::config("loadgen needs threads >= 1 and requests >= 1"));
+    }
+    let interval = if cfg.qps > 0.0 {
+        Some(Duration::from_secs_f64(cfg.threads as f64 / cfg.qps))
+    } else {
+        None
+    };
+    let wall = Instant::now();
+    let reports: Vec<ThreadReport> = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(cfg.threads);
+        for k in 0..cfg.threads {
+            let n = cfg.requests / cfg.threads + usize::from(k < cfg.requests % cfg.threads);
+            joins.push(scope.spawn(move || drive_one(cfg, examples, k, n, interval)));
+        }
+        joins.into_iter().map(|j| j.join().expect("loadgen thread panicked")).collect()
+    });
+    let mut agg = LoadReport { qps_target: cfg.qps, ..Default::default() };
+    for r in reports {
+        agg.sent += r.sent;
+        agg.ok += r.ok;
+        agg.shed += r.shed;
+        agg.errors += r.errors;
+        agg.predicts += r.predicts;
+        agg.trains += r.trains;
+        agg.latency.merge(&r.latency);
+    }
+    agg.wall = wall.elapsed();
+    Ok(agg)
+}
+
+fn drive_one(
+    cfg: &LoadgenConfig,
+    examples: &[Example],
+    thread_idx: usize,
+    n: usize,
+    interval: Option<Duration>,
+) -> ThreadReport {
+    let mut rep = ThreadReport {
+        sent: 0,
+        ok: 0,
+        shed: 0,
+        errors: 0,
+        predicts: 0,
+        trains: 0,
+        latency: LatencyHistogram::default(),
+    };
+    let mut rng = Pcg32::new(cfg.seed, 7000 + thread_idx as u64);
+    let mut client = LoadClient::connect(cfg.addr.as_str(), cfg.read_timeout).ok();
+    // Stagger thread k by k/threads of a slot so the aggregate offered
+    // load is a smooth cfg.qps, not synchronized bursts of `threads`
+    // requests every interval.
+    let phase = interval
+        .map(|iv| iv.mul_f64(thread_idx as f64 / cfg.threads.max(1) as f64))
+        .unwrap_or(Duration::ZERO);
+    let t0 = Instant::now();
+    for j in 0..n {
+        if let Some(iv) = interval {
+            // open-loop pacing: sleep to this thread's j-th slot
+            let target = phase + iv.mul_f64(j as f64);
+            let elapsed = t0.elapsed();
+            if elapsed < target {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        if client.is_none() {
+            match LoadClient::connect(cfg.addr.as_str(), cfg.read_timeout) {
+                Ok(c) => client = Some(c),
+                Err(_) => {
+                    rep.sent += 1;
+                    rep.errors += 1;
+                    continue;
+                }
+            }
+        }
+        let c = client.as_mut().expect("connected above");
+        let e = &examples[(thread_idx * 31 + j * 7) % examples.len()];
+        let is_train = rng.bernoulli(cfg.train_share);
+        rep.sent += 1;
+        if is_train {
+            rep.trains += 1;
+        } else {
+            rep.predicts += 1;
+        }
+        let sent_at = Instant::now();
+        let outcome = if is_train { c.train(&e.x, e.y) } else { c.predict(&e.x) };
+        match outcome {
+            Ok(o) => {
+                // a 2xx predict only counts as ok with a finite score
+                let body_ok = is_train || matches!(o.score, Some(s) if s.is_finite());
+                if (200..300).contains(&o.status) && body_ok {
+                    rep.ok += 1;
+                    rep.latency.record(sent_at.elapsed());
+                } else if o.status == 429 {
+                    // counted, but kept out of the latency histogram: the
+                    // reject fast-path would make an overloaded server
+                    // look like it meets latency targets
+                    rep.shed += 1;
+                } else {
+                    rep.errors += 1;
+                }
+                if o.closed {
+                    client = None;
+                }
+            }
+            Err(_) => {
+                rep.errors += 1;
+                client = None; // reconnect on the next iteration
+            }
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_rates_and_json() {
+        let mut r = LoadReport {
+            sent: 100,
+            ok: 90,
+            shed: 10,
+            errors: 0,
+            predicts: 80,
+            trains: 20,
+            wall: Duration::from_secs(2),
+            qps_target: 100.0,
+            ..Default::default()
+        };
+        r.latency.record(Duration::from_micros(300));
+        assert!((r.qps_achieved() - 50.0).abs() < 1e-9);
+        assert!((r.shed_rate() - 0.1).abs() < 1e-12);
+        let v = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(v.get("requests").unwrap().as_f64(), Some(100.0));
+        assert_eq!(v.get("shed").unwrap().as_f64(), Some(10.0));
+        assert!(v.get("qps_achieved").unwrap().as_f64().unwrap() > 0.0);
+        let lat = v.get("latency_us").unwrap();
+        for k in ["mean", "p50", "p90", "p99", "max"] {
+            assert!(lat.get(k).unwrap().as_f64().is_some(), "missing latency key {k}");
+        }
+        assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = LoadReport::default();
+        assert_eq!(r.qps_achieved(), 0.0);
+        assert_eq!(r.shed_rate(), 0.0);
+        assert!(Json::parse(&r.to_json()).is_ok());
+    }
+
+    #[test]
+    fn loadgen_config_validation() {
+        let cfg = LoadgenConfig { requests: 0, ..Default::default() };
+        assert!(run_loadgen(&cfg, &[Example::new(vec![1.0], 1.0)]).is_err());
+        let cfg = LoadgenConfig::default();
+        assert!(run_loadgen(&cfg, &[]).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Network serving subsystem: train-while-serving over plain TCP, with
+//! zero dependencies.
+//!
+//! The paper's one-pass learner keeps constant storage and cheap
+//! per-example updates — exactly the profile of a model that can be
+//! *trained and served simultaneously* behind live traffic. This
+//! subsystem is that deployment shape:
+//!
+//! * [`http`] — hand-rolled minimal HTTP/1.1 (request/response framing,
+//!   keep-alive, strict limits) shared by server and client.
+//! * [`json`] — a tiny JSON parser/writer for the protocol bodies.
+//! * [`cell`] — the hot-swap [`cell::ModelCell`]: acceptor threads score
+//!   against an immutable published snapshot (`Arc` swap under an
+//!   `RwLock`) while the background trainer keeps learning; no request
+//!   can observe a torn model.
+//! * [`admission`] — bounded queues with explicit 429 shedding, plus the
+//!   per-endpoint latency/shed accounting behind `/stats`.
+//! * [`server`] — the listener: `/predict`, `/predict_batch`, `/train`,
+//!   `/snapshot` (live `.meb` bytes), `/stats`; a background training
+//!   thread consumes `/train` examples Algorithm-1 style and republishes
+//!   every k examples via the sketch machinery.
+//! * [`loadgen`] — the protocol client and a paced open-loop driver
+//!   that emits `BENCH_serve.json` (throughput, p50/p90/p99, shed rate).
+//!
+//! CLI: `streamsvm serve` / `streamsvm loadgen` (see README "Serving").
+
+pub mod admission;
+pub mod cell;
+pub mod http;
+pub mod json;
+pub mod loadgen;
+pub mod server;
+
+pub use admission::{Endpoint, ServerStats};
+pub use cell::{ModelCell, ModelSnapshot};
+pub use loadgen::{run_loadgen, LoadClient, LoadReport, LoadgenConfig};
+pub use server::{serve, ServerConfig, ServerHandle, ServerReport};

@@ -1,0 +1,755 @@
+//! The network serving loop: accept → admit → route, with a background
+//! trainer republishing hot-swap snapshots.
+//!
+//! Thread layout (all `std::net` + `std::thread`, zero dependencies):
+//!
+//! ```text
+//!   acceptor ──(bounded conn queue, shed ⇒ 429)──▶ handler pool (N threads)
+//!                                                     │ /predict, /predict_batch:
+//!                                                     │    score vs cell.load()
+//!   trainer ◀─(bounded train queue, shed ⇒ 429)────── │ /train: enqueue example
+//!      │                                              │ /snapshot: sketch bytes
+//!      └── observe → republish every k ──▶ ModelCell  │ /stats: counters+quantiles
+//! ```
+//!
+//! Consistency story: handlers never touch the learner — they score
+//! against the latest *published* [`ModelCell`] snapshot, so a request
+//! can never observe a half-updated model. The trainer owns the
+//! [`StreamSvm`] exclusively and republishes a complete snapshot every
+//! `republish_every` absorbed examples (and once more at shutdown), so
+//! accepted `/train` examples are never lost.
+
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::server::admission::{bounded, Bounded, Endpoint, ServerStats};
+use crate::server::cell::ModelCell;
+use crate::server::http::{self, HttpRequest, Limits};
+use crate::server::json::{self, Json};
+use crate::svm::streamsvm::StreamSvm;
+
+const JSON_CT: &str = "application/json";
+/// Upper bound on `/predict_batch` rows per request.
+pub const MAX_BATCH_ROWS: usize = 4096;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Handler threads = maximum concurrent connections being served.
+    pub threads: usize,
+    /// Accepted connections queued beyond busy handlers before the
+    /// acceptor sheds with 429. 0 = rendezvous (admit only when a
+    /// handler is free).
+    pub conn_queue: usize,
+    /// `/train` examples buffered ahead of the trainer before the
+    /// handler sheds with 429.
+    pub train_queue: usize,
+    /// Republish the serving snapshot every N absorbed `/train`
+    /// examples (the hot-swap interval; `--republish-every` on the CLI).
+    pub republish_every: usize,
+    /// Persist the published sketch to this `.meb` path on every
+    /// republish (atomic tmp+rename via [`crate::sketch::codec::MebSketch`]).
+    pub snapshot: Option<PathBuf>,
+    /// Per-connection socket read timeout (idle keep-alive cutoff).
+    pub read_timeout: Duration,
+    /// Provenance tag stamped into published sketches.
+    pub tag: String,
+    /// HTTP parse limits.
+    pub limits: Limits,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            threads: 8,
+            conn_queue: 64,
+            train_queue: 1024,
+            republish_every: 32,
+            snapshot: None,
+            read_timeout: Duration::from_secs(5),
+            tag: "serve".into(),
+            limits: Limits::default(),
+        }
+    }
+}
+
+/// State shared by every server thread.
+struct Shared {
+    cell: ModelCell,
+    stats: ServerStats,
+    train: Bounded<(Vec<f32>, f32)>,
+    /// Stops the acceptor and the handler pool (checked between requests).
+    shutdown: AtomicBool,
+    /// Stops the trainer — set only after the handler pool has joined,
+    /// so the final drain sees every admitted example.
+    trainer_stop: AtomicBool,
+    /// Examples absorbed by the trainer.
+    trained: AtomicU64,
+    started: Instant,
+    dim: usize,
+    tag: String,
+    limits: Limits,
+}
+
+/// A running server; dropping it without [`ServerHandle::shutdown`]
+/// leaves the threads serving until the process exits.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+    trainer: Option<JoinHandle<StreamSvm>>,
+}
+
+/// Final accounting returned by [`ServerHandle::shutdown`].
+#[derive(Debug)]
+pub struct ServerReport {
+    /// The trainer's final model (every accepted `/train` example absorbed).
+    pub model: StreamSvm,
+    pub trained: u64,
+    /// Last published snapshot version.
+    pub version: u64,
+    pub requests_ok: u64,
+    pub requests_shed: u64,
+    pub conns_accepted: u64,
+    pub conns_shed: u64,
+}
+
+/// Start serving `model` according to `cfg`. Returns once the listener
+/// is bound and all threads are up; serving continues until
+/// [`ServerHandle::shutdown`] (or process exit).
+pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
+    if cfg.threads == 0 {
+        return Err(Error::config("server threads must be >= 1"));
+    }
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let (train_tx, train_rx) = bounded::<(Vec<f32>, f32)>(cfg.train_queue.max(1));
+    let shared = Arc::new(Shared {
+        cell: ModelCell::new(&model, &cfg.tag),
+        stats: ServerStats::default(),
+        train: train_tx,
+        shutdown: AtomicBool::new(false),
+        trainer_stop: AtomicBool::new(false),
+        trained: AtomicU64::new(0),
+        started: Instant::now(),
+        dim: model.dim(),
+        tag: cfg.tag.clone(),
+        limits: cfg.limits,
+    });
+
+    let (conn_tx, conn_rx) = bounded::<TcpStream>(cfg.conn_queue);
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+    let mut handlers = Vec::with_capacity(cfg.threads);
+    for _ in 0..cfg.threads {
+        let sh = shared.clone();
+        let rx = conn_rx.clone();
+        let read_timeout = cfg.read_timeout;
+        handlers.push(std::thread::spawn(move || loop {
+            // Hold the mutex only while waiting for a hand-off; serving
+            // happens with the lock released so the pool stays parallel.
+            let next = {
+                let guard = match rx.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                guard.recv()
+            };
+            match next {
+                Ok(stream) => handle_conn(&sh, read_timeout, stream),
+                Err(_) => return, // acceptor gone: shutdown
+            }
+        }));
+    }
+
+    let acceptor = {
+        let sh = shared.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                match conn_tx.try_admit(stream) {
+                    Ok(()) => {
+                        sh.stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(stream) => {
+                        sh.stats.conns_shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream, sh.limits);
+                    }
+                }
+            }
+            // dropping conn_tx here ends the handler pool
+        })
+    };
+
+    let trainer = {
+        let sh = shared.clone();
+        let republish_every = cfg.republish_every.max(1);
+        let snapshot = cfg.snapshot.clone();
+        std::thread::spawn(move || trainer_loop(sh, model, train_rx, republish_every, snapshot))
+    };
+
+    Ok(ServerHandle {
+        addr,
+        shared,
+        acceptor: Some(acceptor),
+        handlers,
+        trainer: Some(trainer),
+    })
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live stats registry (what `/stats` reports).
+    pub fn stats(&self) -> &ServerStats {
+        &self.shared.stats
+    }
+
+    /// Latest published snapshot version.
+    pub fn version(&self) -> u64 {
+        self.shared.cell.version()
+    }
+
+    /// Examples absorbed by the trainer so far.
+    pub fn trained(&self) -> u64 {
+        self.shared.trained.load(Ordering::Relaxed)
+    }
+
+    /// Block on the acceptor thread forever (the CLI `serve` mode; the
+    /// process is expected to be killed externally).
+    pub fn run_forever(mut self) -> Result<()> {
+        if let Some(a) = self.acceptor.take() {
+            a.join().map_err(|_| Error::Pipeline("acceptor thread panicked".into()))?;
+        }
+        Ok(())
+    }
+
+    /// Graceful stop: acceptor first, then the handler pool (each stops
+    /// at its next request boundary), then the trainer — which drains
+    /// every admitted `/train` example and publishes a final snapshot, so
+    /// the returned model reflects all accepted training traffic.
+    pub fn shutdown(mut self) -> Result<ServerReport> {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Wake the acceptor out of `accept()`.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            a.join().map_err(|_| Error::Pipeline("acceptor thread panicked".into()))?;
+        }
+        for h in self.handlers.drain(..) {
+            h.join().map_err(|_| Error::Pipeline("handler thread panicked".into()))?;
+        }
+        // Handlers are gone: no new /train admissions can race the drain.
+        self.shared.trainer_stop.store(true, Ordering::Release);
+        let model = self
+            .trainer
+            .take()
+            .expect("trainer joined once")
+            .join()
+            .map_err(|_| Error::Pipeline("trainer thread panicked".into()))?;
+        let sh = &self.shared;
+        Ok(ServerReport {
+            model,
+            trained: sh.trained.load(Ordering::Relaxed),
+            version: sh.cell.version(),
+            requests_ok: sh.stats.total_ok(),
+            requests_shed: sh.stats.total_shed(),
+            conns_accepted: sh.stats.conns_accepted.load(Ordering::Relaxed),
+            conns_shed: sh.stats.conns_shed.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// Cap on concurrent shed-handling threads: beyond it a flood gets a
+/// best-effort inline 429 and an immediate close instead of a polite
+/// drain, so overload can never translate into unbounded thread spawn.
+const MAX_SHED_THREADS: usize = 32;
+static SHED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Explicit reject for a connection the pool cannot absorb. Runs on a
+/// short-lived thread (bounded by [`MAX_SHED_THREADS`]) so the acceptor
+/// never blocks on a slow peer: the pending request is read with the
+/// server's own parse limits (draining it avoids a TCP reset racing the
+/// reply) and answered 429, never hung.
+fn shed_connection(stream: TcpStream, limits: Limits) {
+    // A peer that never reads must not block either shed path.
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    if SHED_THREADS.fetch_add(1, Ordering::AcqRel) >= MAX_SHED_THREADS {
+        // Flood regime: don't drain, just answer and close. The reply
+        // may race a reset if the peer already sent its request, but the
+        // rejection stays immediate and the thread count stays bounded.
+        SHED_THREADS.fetch_sub(1, Ordering::AcqRel);
+        let mut writer = BufWriter::new(stream);
+        let _ = http::write_response(
+            &mut writer,
+            429,
+            JSON_CT,
+            br#"{"error":"server at capacity"}"#,
+            false,
+        );
+        let _ = writer.flush();
+        return;
+    }
+    std::thread::spawn(move || {
+        struct Slot;
+        impl Drop for Slot {
+            fn drop(&mut self) {
+                SHED_THREADS.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        let _slot = Slot;
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+        let reader = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let mut reader = BufReader::new(reader);
+        let _ = http::read_request(&mut reader, &limits);
+        let mut writer = BufWriter::new(stream);
+        let _ = http::write_response(
+            &mut writer,
+            429,
+            JSON_CT,
+            br#"{"error":"server at capacity"}"#,
+            false,
+        );
+        let _ = writer.flush();
+    });
+}
+
+/// Serve one (keep-alive) connection.
+fn handle_conn(sh: &Arc<Shared>, read_timeout: Duration, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let peer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(peer);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        if sh.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let req = match http::read_request_expect(&mut reader, Some(&mut writer), &sh.limits) {
+            Ok(Some(r)) => r,
+            Ok(None) => return,      // peer closed between requests
+            Err(Error::Io(_)) => return, // idle timeout / reset
+            Err(_) => {
+                // malformed request: explicit 400, then close
+                let _ = http::write_response(
+                    &mut writer,
+                    400,
+                    JSON_CT,
+                    &err_body("malformed HTTP request"),
+                    false,
+                );
+                let _ = writer.flush();
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let keep = !req.wants_close() && !sh.shutdown.load(Ordering::Acquire);
+        let (status, ctype, body, ep) = route(sh, &req);
+        if http::write_response(&mut writer, status, ctype, &body, keep).is_err() {
+            return;
+        }
+        if writer.flush().is_err() {
+            return;
+        }
+        if let Some(ep) = ep {
+            if (200..300).contains(&status) {
+                sh.stats.record_ok(ep, t0.elapsed());
+            } else if status == 429 {
+                sh.stats.record_shed(ep);
+            } else {
+                sh.stats.record_error(ep);
+            }
+        }
+        if !keep {
+            return;
+        }
+    }
+}
+
+fn err_body(msg: &str) -> Vec<u8> {
+    format!(r#"{{"error":"{}"}}"#, json::escape(msg)).into_bytes()
+}
+
+/// Dispatch one request. Returns `(status, content-type, body, endpoint)`;
+/// `endpoint = None` for unrouted paths (they are not part of any
+/// endpoint's stats).
+fn route(sh: &Shared, req: &HttpRequest) -> (u16, &'static str, Vec<u8>, Option<Endpoint>) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/predict") => {
+            let (status, body) = handle_predict(sh, &req.body);
+            (status, JSON_CT, body, Some(Endpoint::Predict))
+        }
+        ("POST", "/predict_batch") => {
+            let (status, body) = handle_predict_batch(sh, &req.body);
+            (status, JSON_CT, body, Some(Endpoint::PredictBatch))
+        }
+        ("POST", "/train") => {
+            let (status, body) = handle_train(sh, &req.body);
+            (status, JSON_CT, body, Some(Endpoint::Train))
+        }
+        ("GET", "/snapshot") => (
+            200,
+            "application/octet-stream",
+            sh.cell.load().sketch.encode(),
+            Some(Endpoint::Snapshot),
+        ),
+        ("GET", "/stats") => (200, JSON_CT, stats_json(sh).into_bytes(), Some(Endpoint::Stats)),
+        // any other method on a real endpoint is 405, unknown paths 404
+        (_, "/predict" | "/predict_batch" | "/train" | "/snapshot" | "/stats") => {
+            (405, JSON_CT, err_body("method not allowed for this endpoint"), None)
+        }
+        _ => (404, JSON_CT, err_body("no such endpoint"), None),
+    }
+}
+
+fn parse_body(body: &[u8]) -> Option<Json> {
+    std::str::from_utf8(body).ok().and_then(|s| Json::parse(s).ok())
+}
+
+/// Validate a feature vector at the protocol boundary: right dimension
+/// and every value finite. Non-finite features would poison the ball
+/// geometry on `/train` (inf radius forever, then persisted to the
+/// snapshot) and produce meaningless scores on `/predict` — both are
+/// client errors, rejected with the returned 400 body.
+fn check_features(x: &[f32], dim: usize) -> Option<Vec<u8>> {
+    if x.len() != dim {
+        return Some(err_body(&format!(
+            "x has dimension {}, model expects {dim}",
+            x.len()
+        )));
+    }
+    if let Some(i) = x.iter().position(|v| !v.is_finite()) {
+        return Some(err_body(&format!("x[{i}] is not finite")));
+    }
+    None
+}
+
+fn handle_predict(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
+    let parsed = parse_body(body);
+    let x = match parsed.as_ref().and_then(|v| v.get("x")).and_then(|v| v.f32_vec()) {
+        Some(x) => x,
+        None => return (400, err_body(r#"body must be {"x":[n0,n1,...]}"#)),
+    };
+    if let Some(err) = check_features(&x, sh.dim) {
+        return (400, err);
+    }
+    let snap = sh.cell.load();
+    let score = snap.score(&x);
+    (
+        200,
+        format!(
+            r#"{{"score":{},"version":{},"seen":{}}}"#,
+            json::fmt_num(score),
+            snap.version,
+            snap.seen
+        )
+        .into_bytes(),
+    )
+}
+
+fn handle_predict_batch(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
+    let parsed = parse_body(body);
+    let rows = match parsed.as_ref().and_then(|v| v.get("xs")).and_then(|v| v.as_array()) {
+        Some(rows) => rows,
+        None => return (400, err_body(r#"body must be {"xs":[[...],[...]]}"#)),
+    };
+    if rows.len() > MAX_BATCH_ROWS {
+        return (
+            413,
+            err_body(&format!("{} rows exceeds the {MAX_BATCH_ROWS} row limit", rows.len())),
+        );
+    }
+    // One snapshot for the whole batch: every row scores against the
+    // same published version.
+    let snap = sh.cell.load();
+    let mut scores = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let x = match row.f32_vec() {
+            Some(x) if check_features(&x, sh.dim).is_none() => x,
+            _ => {
+                return (
+                    400,
+                    err_body(&format!("row {i} is not a finite dim-{} vector", sh.dim)),
+                )
+            }
+        };
+        scores.push(json::fmt_num(snap.score(&x)));
+    }
+    (
+        200,
+        format!(
+            r#"{{"scores":[{}],"version":{},"seen":{}}}"#,
+            scores.join(","),
+            snap.version,
+            snap.seen
+        )
+        .into_bytes(),
+    )
+}
+
+fn handle_train(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
+    let parsed = parse_body(body);
+    let (x, y) = match parsed.as_ref().map(|v| (v.get("x"), v.get("y"))) {
+        Some((Some(xv), Some(yv))) => match (xv.f32_vec(), yv.as_f64()) {
+            (Some(x), Some(y)) => (x, y as f32),
+            _ => return (400, err_body(r#"body must be {"x":[...],"y":±1}"#)),
+        },
+        _ => return (400, err_body(r#"body must be {"x":[...],"y":±1}"#)),
+    };
+    if y != 1.0 && y != -1.0 {
+        return (400, err_body("y must be 1 or -1"));
+    }
+    if let Some(err) = check_features(&x, sh.dim) {
+        return (400, err);
+    }
+    match sh.train.try_admit((x, y)) {
+        Ok(()) => (
+            202,
+            format!(r#"{{"accepted":true,"version":{}}}"#, sh.cell.version()).into_bytes(),
+        ),
+        Err(_) => (429, err_body("train queue full")),
+    }
+}
+
+fn stats_json(sh: &Shared) -> String {
+    let snap = sh.cell.load();
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!(
+        r#"{{"version":{},"seen":{},"radius":{},"supports":{},"trained":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
+        snap.version,
+        snap.seen,
+        json::fmt_num(snap.radius),
+        snap.supports,
+        sh.trained.load(Ordering::Relaxed),
+        json::fmt_num(sh.started.elapsed().as_secs_f64()),
+        sh.stats.conns_accepted.load(Ordering::Relaxed),
+        sh.stats.conns_shed.load(Ordering::Relaxed),
+    ));
+    for (i, ep) in Endpoint::ALL.iter().enumerate() {
+        let s = sh.stats.snapshot(*ep);
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            r#""{}":{{"ok":{},"shed":{},"errors":{},"mean_us":{},"p50_us":{},"p90_us":{},"p99_us":{},"max_us":{}}}"#,
+            ep.name(),
+            s.ok,
+            s.shed,
+            s.errors,
+            s.latency.mean().as_micros(),
+            s.latency.quantile(0.50).as_micros(),
+            s.latency.quantile(0.90).as_micros(),
+            s.latency.quantile(0.99).as_micros(),
+            s.latency.max().as_micros(),
+        ));
+    }
+    out.push_str("}}");
+    out
+}
+
+/// The background trainer: consume admitted examples, republish the
+/// hot-swap snapshot every `republish_every` absorbed examples, persist
+/// the sketch if configured, and drain exactly once at shutdown.
+fn trainer_loop(
+    sh: Arc<Shared>,
+    mut model: StreamSvm,
+    rx: Receiver<(Vec<f32>, f32)>,
+    republish_every: usize,
+    snapshot: Option<PathBuf>,
+) -> StreamSvm {
+    let mut since_publish = 0usize;
+    loop {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok((x, y)) => {
+                model.observe(&x, y);
+                sh.trained.fetch_add(1, Ordering::Relaxed);
+                since_publish += 1;
+                if since_publish >= republish_every {
+                    since_publish = 0;
+                    publish(&sh, &model, &snapshot);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if sh.trainer_stop.load(Ordering::Acquire) {
+                    // The handler pool has joined: this drain is exact.
+                    while let Ok((x, y)) = rx.try_recv() {
+                        model.observe(&x, y);
+                        sh.trained.fetch_add(1, Ordering::Relaxed);
+                        since_publish += 1;
+                    }
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    if since_publish > 0 {
+        publish(&sh, &model, &snapshot);
+    }
+    model
+}
+
+fn publish(sh: &Shared, model: &StreamSvm, snapshot: &Option<PathBuf>) {
+    sh.cell.publish(model, &sh.tag);
+    if let Some(path) = snapshot {
+        if let Err(e) = sh.cell.load().sketch.write_to(path) {
+            eprintln!("warning: serving snapshot write failed: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::TrainOptions;
+
+    fn toy_model() -> StreamSvm {
+        let mut m = StreamSvm::new(2, TrainOptions::default());
+        m.observe(&[1.0, -2.0], 1.0);
+        m.observe(&[-1.0, 2.0], -1.0);
+        m
+    }
+
+    fn route_raw(sh: &Shared, method: &str, path: &str, body: &[u8]) -> (u16, Vec<u8>) {
+        let req = HttpRequest {
+            method: method.into(),
+            path: path.into(),
+            headers: vec![],
+            body: body.to_vec(),
+        };
+        let (status, _ct, body, _ep) = route(sh, &req);
+        (status, body)
+    }
+
+    fn test_shared(train_queue: usize) -> (Arc<Shared>, Receiver<(Vec<f32>, f32)>) {
+        let model = toy_model();
+        let (train_tx, train_rx) = bounded(train_queue);
+        let sh = Arc::new(Shared {
+            cell: ModelCell::new(&model, "t"),
+            stats: ServerStats::default(),
+            train: train_tx,
+            shutdown: AtomicBool::new(false),
+            trainer_stop: AtomicBool::new(false),
+            trained: AtomicU64::new(0),
+            started: Instant::now(),
+            dim: 2,
+            tag: "t".into(),
+            limits: Limits::default(),
+        });
+        (sh, train_rx)
+    }
+
+    #[test]
+    fn predict_routes_and_scores() {
+        let (sh, _rx) = test_shared(4);
+        let (status, body) = route_raw(&sh, "POST", "/predict", br#"{"x":[1.0,0.0]}"#);
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let score = v.get("score").unwrap().as_f64().unwrap();
+        assert!(score.is_finite());
+        assert_eq!(v.get("version").unwrap().as_f64(), Some(1.0));
+
+        // wrong dim and malformed bodies are explicit 400s
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"x":[1,2,3]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", b"not json").0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"y":1}"#).0, 400);
+        // non-finite features are rejected, not scored (1e999 → inf, and
+        // 3.5e38 overflows the f32 cast)
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"x":[1e999,0]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"x":[3.5e38,0]}"#).0, 400);
+    }
+
+    #[test]
+    fn predict_batch_scores_rows_against_one_version() {
+        let (sh, _rx) = test_shared(4);
+        let (status, body) =
+            route_raw(&sh, "POST", "/predict_batch", br#"{"xs":[[1,0],[0,1],[2,2]]}"#);
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert_eq!(scores.len(), 3);
+        assert_eq!(route_raw(&sh, "POST", "/predict_batch", br#"{"xs":[[1,2,3]]}"#).0, 400);
+    }
+
+    #[test]
+    fn train_admits_then_sheds_when_full() {
+        let (sh, rx) = test_shared(2);
+        assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[1,0],"y":1}"#).0, 202);
+        assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[0,1],"y":-1}"#).0, 202);
+        // queue depth 2, trainer not draining → explicit 429
+        let (status, body) = route_raw(&sh, "POST", "/train", br#"{"x":[1,1],"y":1}"#);
+        assert_eq!(status, 429);
+        assert!(String::from_utf8(body).unwrap().contains("train queue full"));
+        // bad label / bad dim / non-finite features never reach the queue
+        assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[1,0],"y":0.5}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[1],"y":1}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[1e999,0],"y":1}"#).0, 400);
+        drop(rx);
+    }
+
+    #[test]
+    fn snapshot_returns_decodable_sketch_bytes() {
+        use crate::sketch::codec::MebSketch;
+        let (sh, _rx) = test_shared(4);
+        let (status, body) = route_raw(&sh, "GET", "/snapshot", b"");
+        assert_eq!(status, 200);
+        let sk = MebSketch::decode(&body).unwrap();
+        assert_eq!(sk.dim, 2);
+        assert_eq!(sk.to_model().weights(), toy_model().weights());
+    }
+
+    #[test]
+    fn stats_is_valid_json_with_all_endpoints() {
+        let (sh, _rx) = test_shared(4);
+        sh.stats.record_ok(Endpoint::Predict, Duration::from_micros(120));
+        let (status, body) = route_raw(&sh, "GET", "/stats", b"");
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("version").unwrap().as_f64(), Some(1.0));
+        let eps = v.get("endpoints").unwrap();
+        for ep in Endpoint::ALL {
+            assert!(eps.get(ep.name()).is_some(), "missing endpoint {}", ep.name());
+        }
+        assert_eq!(
+            eps.get("predict").unwrap().get("ok").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_rejected() {
+        let (sh, _rx) = test_shared(4);
+        assert_eq!(route_raw(&sh, "GET", "/nope", b"").0, 404);
+        assert_eq!(route_raw(&sh, "GET", "/predict", b"").0, 405);
+        assert_eq!(route_raw(&sh, "POST", "/stats", b"").0, 405);
+        // other verbs on real endpoints are 405 too, not 404
+        assert_eq!(route_raw(&sh, "PUT", "/train", b"").0, 405);
+        assert_eq!(route_raw(&sh, "HEAD", "/stats", b"").0, 405);
+    }
+}
