@@ -16,12 +16,12 @@ use streamsvm::svm::ball::BallState;
 use streamsvm::svm::TrainOptions;
 
 fn random_ball(d: usize, rng: &mut Pcg32) -> BallState {
-    BallState {
-        w: (0..d).map(|_| (rng.normal() * 2.0) as f32).collect(),
-        r: 1.0 + rng.uniform() * 3.0,
-        xi2: rng.uniform(),
-        m: 1 + rng.below(200),
-    }
+    BallState::from_parts(
+        (0..d).map(|_| (rng.normal() * 2.0) as f32).collect(),
+        1.0 + rng.uniform() * 3.0,
+        rng.uniform(),
+        1 + rng.below(200),
+    )
 }
 
 fn merge_tree_throughput(dims: &[usize], shard_counts: &[usize]) {

@@ -1,0 +1,122 @@
+//! Sparse vs dense Algorithm-1 hot path at w3a-like density
+//! (`BENCH_sparse.json`).
+//!
+//! Generates one synthetic stream at ~4% density and D ≥ 10k, runs the
+//! identical stream through `StreamSvm::observe_view` twice — once with
+//! sparse `idx`/`val` features (O(nnz) per example), once densified
+//! (O(D)) — and reports per-example cost plus the speedup ratio. The two
+//! runs must agree on the learned state (tolerance-checked here; the
+//! exact property test lives in `rust/tests/sparse_path.rs`).
+//!
+//! `STREAMSVM_BENCH_SMOKE=1` shrinks the stream for the CI smoke step
+//! (the dimension stays ≥ 10k so the measured regime is the real one).
+
+use std::path::Path;
+
+use streamsvm::bench_util::{bench, Table};
+use streamsvm::data::Example;
+use streamsvm::rng::Pcg32;
+use streamsvm::server::json::fmt_num;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+const DIM: usize = 16_384;
+const DENSITY: f64 = 0.04;
+
+/// A stream of sparse examples: `nnz` random coordinates each, values
+/// N(0,1) plus a label-aligned shift on a shared prefix of coordinates
+/// (so the stream is learnable and updates actually happen).
+fn gen_sparse_stream(n: usize, dim: usize, nnz: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut taken = vec![false; dim];
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y = rng.label(0.5);
+        let mut idx = Vec::with_capacity(nnz);
+        while idx.len() < nnz {
+            let i = rng.below(dim);
+            if !taken[i] {
+                taken[i] = true;
+                idx.push(i as u32);
+            }
+        }
+        for &i in &idx {
+            taken[i as usize] = false;
+        }
+        idx.sort_unstable();
+        let val: Vec<f32> = idx
+            .iter()
+            .map(|&i| {
+                let shift = if (i as usize) < dim / 20 { 0.6 * y as f64 } else { 0.0 };
+                (rng.normal() + shift) as f32
+            })
+            .collect();
+        out.push(Example::sparse(dim, idx, val, y));
+    }
+    out
+}
+
+fn fit_ns_per_example(stream: &[Example], dim: usize, opts: &TrainOptions, reps: usize) -> (f64, StreamSvm) {
+    let stats = bench(1, reps, || {
+        let m = StreamSvm::fit(stream.iter(), dim, opts);
+        std::hint::black_box(m.radius());
+    });
+    let model = StreamSvm::fit(stream.iter(), dim, opts);
+    (stats.p50.as_nanos() as f64 / stream.len() as f64, model)
+}
+
+fn main() {
+    let smoke = std::env::var("STREAMSVM_BENCH_SMOKE").is_ok();
+    let (n, reps) = if smoke { (600, 3) } else { (4000, 5) };
+    let nnz = (DIM as f64 * DENSITY) as usize;
+    println!(
+        "== sparse vs dense update throughput (dim={DIM}, nnz={nnz}, n={n}, smoke={smoke}) =="
+    );
+    let sparse = gen_sparse_stream(n, DIM, nnz, 42);
+    let dense: Vec<Example> = sparse
+        .iter()
+        .map(|e| Example::new(e.x.dense().into_owned(), e.y))
+        .collect();
+    let opts = TrainOptions::default();
+
+    let (sparse_ns, ms) = fit_ns_per_example(&sparse, DIM, &opts, reps);
+    let (dense_ns, md) = fit_ns_per_example(&dense, DIM, &opts, reps);
+    let speedup = dense_ns / sparse_ns;
+    let radius_rel_diff = (ms.radius() - md.radius()).abs() / md.radius().max(1e-12);
+    assert_eq!(ms.num_support(), md.num_support(), "paths diverged on update count");
+    assert!(radius_rel_diff < 1e-6, "paths diverged on radius: {radius_rel_diff}");
+
+    let mut t = Table::new(&["path", "ns/example", "examples/s", "updates"]);
+    for (name, ns, m) in [("dense", dense_ns, &md), ("sparse", sparse_ns, &ms)] {
+        t.row(&[
+            name.into(),
+            format!("{ns:.0}"),
+            format!("{:.0}", 1e9 / ns),
+            m.num_support().to_string(),
+        ]);
+    }
+    t.print();
+    println!("speedup: {speedup:.1}x (density {:.1}%)", DENSITY * 100.0);
+
+    let json = format!(
+        concat!(
+            r#"{{"dim":{},"n":{},"nnz":{},"density":{},"#,
+            r#""dense_ns_per_example":{},"sparse_ns_per_example":{},"#,
+            r#""dense_eps":{},"sparse_eps":{},"speedup":{},"#,
+            r#""updates":{},"radius_rel_diff":{}}}"#
+        ),
+        DIM,
+        n,
+        nnz,
+        fmt_num(DENSITY),
+        fmt_num(dense_ns),
+        fmt_num(sparse_ns),
+        fmt_num(1e9 / dense_ns),
+        fmt_num(1e9 / sparse_ns),
+        fmt_num(speedup),
+        ms.num_support(),
+        fmt_num(radius_rel_diff),
+    );
+    std::fs::write(Path::new("BENCH_sparse.json"), &json).expect("write BENCH_sparse.json");
+    println!("wrote BENCH_sparse.json: {json}");
+}

@@ -128,7 +128,7 @@ fn serving_latency() {
                 std::thread::spawn(move || {
                     for i in 0..n / 4 {
                         let e = &test[(k * 31 + i * 7) % test.len()];
-                        let _ = c.score(e.x.clone()).unwrap();
+                        let _ = c.score(e.x.dense().into_owned()).unwrap();
                     }
                 })
             })

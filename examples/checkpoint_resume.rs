@@ -75,7 +75,7 @@ fn main() -> streamsvm::Result<()> {
     for s in 0..shards {
         let mut m = StreamSvm::new(ds.dim, opts);
         for e in ds.train.iter().skip(s).step_by(shards) {
-            m.observe(&e.x, e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         let path = dir.join(format!("shard{s}.meb"));
         MebSketch::from_model(&m, format!("shard{s}")).write_to(&path)?;

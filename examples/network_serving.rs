@@ -42,7 +42,7 @@ fn main() -> Result<()> {
 
     // score a few test points against the warm-start snapshot
     for e in ds.test.iter().take(3) {
-        let o = client.predict(&e.x)?;
+        let o = client.predict_features(&e.x)?;
         println!(
             "  predict → status {} score {:+.4} (snapshot v{})",
             o.status,
@@ -54,14 +54,14 @@ fn main() -> Result<()> {
     // stream the second half through /train: the server learns live
     let mut accepted = 0;
     for e in &ds.train[half..] {
-        if client.train(&e.x, e.y)?.status == 202 {
+        if client.train_features(&e.x, e.y)?.status == 202 {
             accepted += 1;
         }
     }
     println!("streamed {} live training examples ({} accepted)", ds.train.len() - half, accepted);
 
     // the hot-swap cell republished while we trained
-    let o = client.predict(&ds.test[0].x)?;
+    let o = client.predict_features(&ds.test[0].x)?;
     println!(
         "  predict after live training → score {:+.4} (snapshot v{})",
         o.score.unwrap_or(f64::NAN),

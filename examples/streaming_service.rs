@@ -80,7 +80,7 @@ fn main() -> streamsvm::Result<()> {
                 let mut correct = 0usize;
                 for i in 0..reqs_per_worker {
                     let e = &test[(k * 97 + i * 13) % test.len()];
-                    let s = c.score(e.x.clone()).unwrap();
+                    let s = c.score(e.x.dense().into_owned()).unwrap();
                     if (s >= 0.0) == (e.y > 0.0) {
                         correct += 1;
                     }

@@ -46,7 +46,7 @@ impl BatchL2Svm {
         let invc = 1.0 / opts.c;
         let mut alpha = vec![0.0f64; n];
         let mut w = vec![0.0f32; dim];
-        let xnorm2: Vec<f64> = examples.iter().map(|e| linalg::norm2(&e.x)).collect();
+        let xnorm2: Vec<f64> = examples.iter().map(|e| e.x.view().norm2()).collect();
         let mut order: Vec<usize> = (0..n).collect();
         let mut rng = Pcg32::seeded(opts.seed);
         let mut epochs_run = 0;
@@ -58,7 +58,7 @@ impl BatchL2Svm {
             max_viol = 0.0f64;
             for &i in &order {
                 let e = &examples[i];
-                let g = 1.0 - 0.5 * (e.y as f64 * linalg::dot(&w, &e.x) + alpha[i] * invc);
+                let g = 1.0 - 0.5 * (e.y as f64 * e.x.view().dot(&w) + alpha[i] * invc);
                 // projected-gradient violation
                 let viol = if alpha[i] > 0.0 { g.abs() } else { g.max(0.0) };
                 if viol > max_viol {
@@ -71,7 +71,7 @@ impl BatchL2Svm {
                 let new_a = (alpha[i] + g / h).max(0.0);
                 let delta = new_a - alpha[i];
                 if delta != 0.0 {
-                    linalg::axpy(&mut w, (delta * e.y as f64) as f32, &e.x);
+                    e.x.view().axpy_into(&mut w, (delta * e.y as f64) as f32);
                     alpha[i] = new_a;
                 }
             }
@@ -136,7 +136,7 @@ mod tests {
         // KKT: alpha_i > 0 => y_i w·x_i + alpha_i/C == 2 (stationarity)
         for (i, e) in exs.iter().enumerate() {
             if m.alpha[i] > 1e-6 {
-                let lhs = e.y as f64 * crate::linalg::dot(&m.w, &e.x) + m.alpha[i];
+                let lhs = e.y as f64 * e.x.view().dot(&m.w) + m.alpha[i];
                 assert!((lhs - 2.0).abs() < 1e-3, "KKT violated: {lhs}");
             }
         }

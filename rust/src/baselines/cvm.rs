@@ -76,7 +76,7 @@ impl Cvm {
         let mut coreset: Vec<usize> = vec![0];
         let mut alpha: Vec<f64> = vec![1.0];
         let mut w: Vec<f32> = vec![0.0; dim];
-        linalg::blend_into(&mut w, &examples[0].x, examples[0].y, 1.0);
+        linalg::blend_into(&mut w, &examples[0].x.dense(), examples[0].y, 1.0);
         let mut a2 = 1.0f64; // Σ α²
         let mut r = 0.0f64;
         let mut passes = 0usize;
@@ -84,7 +84,7 @@ impl Cvm {
 
         // d²(center, example i) with coefficient a_i (0 if not in core set)
         let sqdist = |w: &[f32], a2: f64, ai: f64, e: &Example| -> f64 {
-            linalg::sqdist_scaled(w, &e.x, e.y) + s2 * (a2 - 2.0 * ai + 1.0)
+            linalg::sqdist_scaled(w, &e.x.dense(), e.y) + s2 * (a2 - 2.0 * ai + 1.0)
         };
 
         while passes < opts.max_passes {
@@ -153,7 +153,7 @@ impl Cvm {
                 alpha[fi] += eta;
                 linalg::scale(&mut w, (1.0 - eta) as f32);
                 let e = &examples[coreset[fi]];
-                linalg::axpy(&mut w, (eta * e.y as f64) as f32, &e.x);
+                e.x.view().axpy_into(&mut w, (eta * e.y as f64) as f32);
                 a2 = alpha.iter().map(|a| a * a).sum();
             }
             // radius = max over core set at the refined center
@@ -226,7 +226,7 @@ mod tests {
                 .position(|&c| c == i)
                 .map(|k| m.alpha[k])
                 .unwrap_or(0.0);
-            let d2 = crate::linalg::sqdist_scaled(&m.w, &e.x, e.y) + s2 * (a2 - 2.0 * ai + 1.0);
+            let d2 = crate::linalg::sqdist_scaled(&m.w, &e.x.dense(), e.y) + s2 * (a2 - 2.0 * ai + 1.0);
             assert!(
                 d2.sqrt() <= m.r * (1.0 + opts.eps) + 1e-6,
                 "point {i}: {} > {}",

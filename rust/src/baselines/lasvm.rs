@@ -145,7 +145,7 @@ impl Lasvm {
     ) -> Self {
         let mut m = Lasvm::new(dim, *opts);
         for e in stream {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m
     }

@@ -57,8 +57,8 @@ impl Pegasos {
             let mut grad = vec![0.0f32; dim];
             let mut viol = 0usize;
             for e in block {
-                if (e.y as f64) * linalg::dot(&w, &e.x) < 1.0 {
-                    linalg::axpy(&mut grad, e.y, &e.x);
+                if (e.y as f64) * e.x.view().dot(&w) < 1.0 {
+                    e.x.view().axpy_into(&mut grad, e.y);
                     viol += 1;
                 }
             }

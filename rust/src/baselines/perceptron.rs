@@ -34,7 +34,7 @@ impl Perceptron {
     pub fn fit<'a, I: IntoIterator<Item = &'a Example>>(stream: I, dim: usize) -> Self {
         let mut m = Perceptron::new(dim);
         for e in stream {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m
     }

@@ -66,7 +66,8 @@ impl<I: Iterator<Item = Example>> Iterator for Batcher<I> {
             match self.source.next() {
                 Some(e) => {
                     debug_assert_eq!(e.x.len(), self.d);
-                    block.x[i * self.d_pad..i * self.d_pad + self.d].copy_from_slice(&e.x);
+                    e.x.view()
+                        .write_into(&mut block.x[i * self.d_pad..i * self.d_pad + self.d]);
                     block.y[i] = e.y;
                     block.valid[i] = 1.0;
                     block.n_real += 1;
@@ -122,7 +123,7 @@ mod tests {
         (0..n)
             .map(|i| {
                 Example::new(
-                    (0..d).map(|j| (i * d + j) as f32).collect(),
+                    (0..d).map(|j| (i * d + j) as f32).collect::<Vec<f32>>(),
                     if i % 2 == 0 { 1.0 } else { -1.0 },
                 )
             })
@@ -179,7 +180,7 @@ mod tests {
                 return Err(format!("{} rows reconstructed of {n}", recon.len()));
             }
             for (e, (x, y)) in src.iter().zip(&recon) {
-                if &e.x != x || e.y != *y {
+                if e.x.dense().as_ref() != x.as_slice() || e.y != *y {
                     return Err("row mismatch".into());
                 }
             }

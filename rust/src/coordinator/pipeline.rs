@@ -101,7 +101,7 @@ impl<'rt> Trainer<'rt> {
 
     fn sync_w_pad(&mut self) {
         if let Some(b) = &self.ball {
-            self.w_pad[..self.dim].copy_from_slice(&b.w);
+            b.write_weights(&mut self.w_pad[..self.dim]);
         }
     }
 
@@ -161,7 +161,7 @@ impl<'rt> Trainer<'rt> {
                         ys[i] = self.buf_y[i];
                         valid[i] = 1.0;
                     }
-                    self.w_pad[..self.dim].copy_from_slice(&ball.w);
+                    ball.write_weights(&mut self.w_pad[..self.dim]);
                     let t = ScopeTimer::new(&mut self.metrics.xla_ns);
                     let out = rt.merge(
                         &self.w_pad,
@@ -176,10 +176,12 @@ impl<'rt> Trainer<'rt> {
                     );
                     drop(t);
                     if let Ok(out) = out {
-                        ball.w.copy_from_slice(&out.w[..self.dim]);
-                        ball.r = out.r;
-                        ball.xi2 = out.xi2;
-                        ball.m += l;
+                        *ball = BallState::from_parts(
+                            out.w[..self.dim].to_vec(),
+                            out.r,
+                            out.xi2,
+                            ball.m + l,
+                        );
                         merged_on_device = true;
                     }
                 }
@@ -261,7 +263,7 @@ impl<'rt> Trainer<'rt> {
                 }
                 let ball = self.ball.as_mut().expect("initialized above");
                 let r_before = ball.r;
-                self.w_pad[..ball.w.len()].copy_from_slice(&ball.w);
+                ball.write_weights(&mut self.w_pad[..self.dim]);
                 let mut valid = block.valid.clone();
                 for v in valid.iter_mut().take(start_row) {
                     *v = 0.0;
@@ -284,10 +286,12 @@ impl<'rt> Trainer<'rt> {
                     block.d_pad,
                 )?;
                 drop(t);
-                ball.w.copy_from_slice(&out.w[..self.dim]);
-                ball.r = out.r;
-                ball.xi2 = out.xi2;
-                ball.m += out.m_added;
+                *ball = BallState::from_parts(
+                    out.w[..self.dim].to_vec(),
+                    out.r,
+                    out.xi2,
+                    ball.m + out.m_added,
+                );
                 self.metrics.updates += out.m_added;
                 // survivors := rows whose distance at block entry cleared
                 // the entry radius (informational in Scan mode)
@@ -513,10 +517,10 @@ mod tests {
             let sk = MebSketch::read_from(&path).unwrap();
             let mut direct = crate::svm::lookahead::LookaheadSvm::new(4, cfg.train);
             for e in exs.iter().take(sk.seen) {
-                direct.observe(&e.x, e.y);
+                direct.observe(&e.x.dense(), e.y);
             }
             assert_eq!(direct.buffered(), 0, "checkpoint taken mid-buffer");
-            assert_eq!(sk.ball.as_ref().unwrap().w.as_slice(), direct.weights());
+            assert_eq!(sk.ball.as_ref().unwrap().weights(), direct.weights());
         }
         std::fs::remove_dir_all(&dir).ok();
     }

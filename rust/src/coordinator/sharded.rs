@@ -77,7 +77,7 @@ where
             for e in rx.iter() {
                 metrics.examples += 1;
                 metrics.survivors += 1; // sequential path: every row checked
-                if model.observe(&e.x, e.y) {
+                if model.observe_view(e.x.view(), e.y) {
                     metrics.updates += 1;
                 }
             }
@@ -87,12 +87,12 @@ where
     }
     let mut n = 0usize;
     for (i, e) in source.enumerate() {
-        if e.x.len() != dim {
+        if e.dim() != dim {
             drop(senders); // release workers before bailing out
             return Err(Error::config(format!(
                 "shard dispatch: example {i} has dimension {} but the stream \
                  was declared as {dim}",
-                e.x.len()
+                e.dim()
             )));
         }
         n += 1;

@@ -57,8 +57,13 @@ impl Iterator for VecStream {
 }
 
 /// Lazy one-pass LIBSVM file stream — the genuinely disk-resident case
-/// from the paper's motivation (§1). Lines parse on demand; the file is
-/// never materialized. Dimension must be known up front (`dim`).
+/// from the paper's motivation (§1). Lines parse on demand as *sparse*
+/// examples (the file is never materialized or densified), so the
+/// downstream update cost is O(nnz) per row. Dimension must be known up
+/// front (`dim`). This reader is tolerant: out-of-range indices are
+/// dropped and rows with non-finite labels/values are skipped whole —
+/// one poisoned row must not truncate the rest of a long stream (the
+/// strict loaders in [`crate::data::libsvm_format`] reject instead).
 pub struct FileStream<R: std::io::Read> {
     reader: BufReader<R>,
     dim: usize,
@@ -99,16 +104,36 @@ impl<R: std::io::Read> Iterator for FileStream<R> {
             }
             let mut it = t.split_whitespace();
             let label: f64 = it.next()?.parse().ok()?;
-            let mut x = vec![0.0f32; self.dim];
+            if !label.is_finite() {
+                continue; // skip the poisoned row, keep streaming
+            }
+            let mut pairs: Vec<(u32, f32)> = Vec::new();
+            let mut poisoned = false;
             for tok in it {
                 let (i, v) = tok.split_once(':')?;
                 let idx: usize = i.parse().ok()?;
                 if idx == 0 || idx > self.dim {
                     continue;
                 }
-                x[idx - 1] = v.parse().ok()?;
+                let val: f32 = v.parse().ok()?;
+                if !val.is_finite() {
+                    poisoned = true;
+                    break;
+                }
+                pairs.push((idx as u32 - 1, val));
             }
-            return Some(Example::new(x, if label > 0.0 { 1.0 } else { -1.0 }));
+            if poisoned {
+                continue; // skip the poisoned row, keep streaming
+            }
+            pairs.sort_unstable_by_key(|&(i, _)| i);
+            pairs.dedup_by_key(|&mut (i, _)| i);
+            let (idx, val): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+            return Some(Example::sparse(
+                self.dim,
+                idx,
+                val,
+                if label > 0.0 { 1.0 } else { -1.0 },
+            ));
         }
     }
 }
@@ -147,17 +172,27 @@ mod tests {
     }
 
     #[test]
-    fn file_stream_parses_lazily() {
+    fn file_stream_parses_lazily_as_sparse() {
         let text = "+1 1:0.5 3:1.5\n# comment\n-1 2:2.0\n";
         let got: Vec<Example> = FileStream::from_reader(text.as_bytes(), 3).collect();
         assert_eq!(got.len(), 2);
-        assert_eq!(got[0].x, vec![0.5, 0.0, 1.5]);
+        assert_eq!(got[0].x.nnz(), 2);
+        assert_eq!(got[0].x.dense().as_ref(), &[0.5, 0.0, 1.5]);
         assert_eq!(got[1].y, -1.0);
     }
 
     #[test]
     fn file_stream_ignores_out_of_range_indices() {
         let got: Vec<Example> = FileStream::from_reader("+1 99:1.0 1:2.0\n".as_bytes(), 2).collect();
-        assert_eq!(got[0].x, vec![2.0, 0.0]);
+        assert_eq!(got[0].x.dense().as_ref(), &[2.0, 0.0]);
+    }
+
+    #[test]
+    fn file_stream_skips_non_finite_rows_without_truncating() {
+        let text = "+1 1:nan\nnan 1:1\n+1 1:inf\n-1 1:1\n";
+        let got: Vec<Example> = FileStream::from_reader(text.as_bytes(), 2).collect();
+        assert_eq!(got.len(), 1, "good rows after a poisoned row must survive");
+        assert_eq!(got[0].y, -1.0);
+        assert_eq!(got[0].x.dense().as_ref(), &[1.0, 0.0]);
     }
 }

@@ -4,6 +4,21 @@
 //! Format: one example per line, `label idx:val idx:val ...` with 1-based
 //! indices. Labels are mapped to ±1 (`0`/`-1` → −1, anything positive →
 //! +1, two-class multi-label files can be filtered with [`parse_pair`]).
+//!
+//! Examples load as *sparse* [`Example`]s — the dimension is tracked on
+//! the [`Dataset`] (and on each `Features::Sparse`), not by densifying
+//! rows, so a w3a-like stream at ~4% density trains at O(nnz) per
+//! example. Ingestion is strict about two classes of poison:
+//!
+//! * **Non-finite values** (`nan`, `inf` — which `f32::parse` happily
+//!   accepts) are rejected at parse time for both labels and features: a
+//!   single NaN distance would otherwise silently corrupt the ball
+//!   (`d < r` is false for NaN, so the update path would blend NaN into
+//!   `w` forever).
+//! * **Out-of-range test indices**: a test-set row with a feature index
+//!   beyond the training dimension is rejected with [`Error::Data`]
+//!   instead of silently widening the dataset past its declared `dim`
+//!   (which used to blow up later inside a `linalg` length assert).
 
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
@@ -11,8 +26,10 @@ use std::path::Path;
 use super::{Dataset, Example};
 use crate::error::{Error, Result};
 
-/// Parse one LIBSVM line into `(raw_label, sparse pairs)`.
-fn parse_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(usize, f32)>)>> {
+/// Parse one LIBSVM line into `(raw_label, sorted sparse pairs)`.
+/// Indices are converted to 0-based; duplicate and non-finite entries
+/// are rejected.
+fn parse_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(u32, f32)>)>> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {
         return Ok(None);
@@ -23,12 +40,15 @@ fn parse_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(usize, f32)
         .unwrap()
         .parse()
         .map_err(|e| Error::data(format!("line {lineno}: bad label ({e})")))?;
-    let mut pairs = Vec::new();
+    if !label.is_finite() {
+        return Err(Error::data(format!("line {lineno}: non-finite label `{label}`")));
+    }
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
     for tok in it {
         let (i, v) = tok
             .split_once(':')
             .ok_or_else(|| Error::data(format!("line {lineno}: token `{tok}` lacks `:`")))?;
-        let idx: usize = i
+        let idx: u32 = i
             .parse()
             .map_err(|e| Error::data(format!("line {lineno}: bad index ({e})")))?;
         if idx == 0 {
@@ -37,39 +57,69 @@ fn parse_line(line: &str, lineno: usize) -> Result<Option<(f64, Vec<(usize, f32)
         let val: f32 = v
             .parse()
             .map_err(|e| Error::data(format!("line {lineno}: bad value ({e})")))?;
+        if !val.is_finite() {
+            return Err(Error::data(format!(
+                "line {lineno}: non-finite value `{v}` at index {idx}"
+            )));
+        }
         pairs.push((idx - 1, val));
+    }
+    // LIBSVM files are conventionally sorted, but don't rely on it.
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    if pairs.windows(2).any(|w| w[0].0 == w[1].0) {
+        return Err(Error::data(format!("line {lineno}: duplicate feature index")));
     }
     Ok(Some((label, pairs)))
 }
 
-/// Read all examples from a LIBSVM reader; densifies to the max index
-/// (or `force_dim` if larger).
-pub fn read_examples<R: Read>(r: R, force_dim: Option<usize>) -> Result<Vec<Example>> {
+fn to_example(label: f64, pairs: Vec<(u32, f32)>, dim: usize) -> Example {
+    let (idx, val): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+    Example::sparse(dim, idx, val, if label > 0.0 { 1.0 } else { -1.0 })
+}
+
+/// Read raw `(label, pairs)` rows plus the observed dimension.
+fn read_rows<R: Read>(r: R) -> Result<(Vec<(f64, Vec<(u32, f32)>)>, usize)> {
     let reader = BufReader::new(r);
-    let mut rows: Vec<(f64, Vec<(usize, f32)>)> = Vec::new();
-    let mut max_dim = force_dim.unwrap_or(0);
+    let mut rows = Vec::new();
+    let mut max_dim = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         if let Some((label, pairs)) = parse_line(&line, lineno + 1)? {
-            if let Some(&(idx, _)) = pairs.iter().max_by_key(|&&(i, _)| i) {
-                max_dim = max_dim.max(idx + 1);
+            if let Some(&(idx, _)) = pairs.last() {
+                max_dim = max_dim.max(idx as usize + 1);
             }
             rows.push((label, pairs));
         }
     }
-    Ok(rows
-        .into_iter()
-        .map(|(label, pairs)| {
-            let mut x = vec![0.0f32; max_dim];
-            for (i, v) in pairs {
-                x[i] = v;
-            }
-            Example::new(x, if label > 0.0 { 1.0 } else { -1.0 })
-        })
-        .collect())
+    Ok((rows, max_dim))
 }
 
-/// Load a train/test pair of LIBSVM files as a [`Dataset`].
+/// Read all examples from a LIBSVM reader as sparse examples. The
+/// logical dimension is the max observed index (or `force_dim` if
+/// larger — a floor, matching the old densifying behaviour).
+pub fn read_examples<R: Read>(r: R, force_dim: Option<usize>) -> Result<Vec<Example>> {
+    let (rows, max_dim) = read_rows(r)?;
+    let dim = max_dim.max(force_dim.unwrap_or(0));
+    Ok(rows.into_iter().map(|(l, p)| to_example(l, p, dim)).collect())
+}
+
+/// Read examples with a *hard* dimension: any row with a feature index
+/// `>= dim` is rejected with [`Error::Data`]. This is the test-split
+/// loader — test rows must fit the training dimension, not widen it.
+pub fn read_examples_strict<R: Read>(r: R, dim: usize) -> Result<Vec<Example>> {
+    let (rows, max_dim) = read_rows(r)?;
+    if max_dim > dim {
+        return Err(Error::data(format!(
+            "row has feature index {max_dim} beyond the declared dimension {dim} \
+             (test split wider than its training split?)"
+        )));
+    }
+    Ok(rows.into_iter().map(|(l, p)| to_example(l, p, dim)).collect())
+}
+
+/// Load a train/test pair of LIBSVM files as a [`Dataset`] of sparse
+/// examples. The dataset dimension is `force_dim` (if given) or the
+/// max index of the *training* split; test rows beyond it are rejected.
 pub fn load_files(
     name: &str,
     train_path: &Path,
@@ -77,50 +127,35 @@ pub fn load_files(
     force_dim: Option<usize>,
 ) -> Result<Dataset> {
     let train = read_examples(std::fs::File::open(train_path)?, force_dim)?;
-    let dim = force_dim
-        .unwrap_or_else(|| train.iter().map(|e| e.dim()).max().unwrap_or(0));
-    let mut train = train;
-    pad_to(&mut train, dim);
-    let mut test = read_examples(std::fs::File::open(test_path)?, Some(dim))?;
-    pad_to(&mut test, dim);
+    let dim = train.iter().map(|e| e.dim()).max().unwrap_or(force_dim.unwrap_or(0));
+    let test = read_examples_strict(std::fs::File::open(test_path)?, dim)?;
     Ok(Dataset::new(name, dim, train, test))
 }
 
 /// For multi-class files: keep labels `a` (→ +1) and `b` (→ −1) only.
+/// The dimension is computed over the *kept* rows (plus the `force_dim`
+/// floor) — indices that only appear in discarded classes must not
+/// widen the pair dataset, or two splits of the same file could load
+/// with mismatched dimensions.
 pub fn parse_pair<R: Read>(r: R, a: f64, b: f64, force_dim: Option<usize>) -> Result<Vec<Example>> {
-    let reader = BufReader::new(r);
-    let mut rows = Vec::new();
-    let mut max_dim = force_dim.unwrap_or(0);
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        if let Some((label, pairs)) = parse_line(&line, lineno + 1)? {
-            if label != a && label != b {
-                continue;
-            }
-            if let Some(&(idx, _)) = pairs.iter().max_by_key(|&&(i, _)| i) {
-                max_dim = max_dim.max(idx + 1);
-            }
-            rows.push((label, pairs));
-        }
-    }
+    let (rows, _) = read_rows(r)?;
+    let rows: Vec<(f64, Vec<(u32, f32)>)> = rows
+        .into_iter()
+        .filter(|(label, _)| *label == a || *label == b)
+        .collect();
+    let max_dim = rows
+        .iter()
+        .filter_map(|(_, pairs)| pairs.last().map(|&(i, _)| i as usize + 1))
+        .max()
+        .unwrap_or(0);
+    let dim = max_dim.max(force_dim.unwrap_or(0));
     Ok(rows
         .into_iter()
         .map(|(label, pairs)| {
-            let mut x = vec![0.0f32; max_dim];
-            for (i, v) in pairs {
-                x[i] = v;
-            }
-            Example::new(x, if label == a { 1.0 } else { -1.0 })
+            let (idx, val): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+            Example::sparse(dim, idx, val, if label == a { 1.0 } else { -1.0 })
         })
         .collect())
-}
-
-fn pad_to(examples: &mut [Example], dim: usize) {
-    for e in examples.iter_mut() {
-        if e.x.len() < dim {
-            e.x.resize(dim, 0.0);
-        }
-    }
 }
 
 #[cfg(test)]
@@ -128,13 +163,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parses_basic_file() {
+    fn parses_basic_file_as_sparse() {
         let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n\n# comment\n+1 1:1.0\n";
         let ex = read_examples(text.as_bytes(), None).unwrap();
         assert_eq!(ex.len(), 3);
-        assert_eq!(ex[0].x, vec![0.5, 0.0, 1.5]);
+        assert_eq!(ex[0].dim(), 3);
+        assert_eq!(ex[0].x.nnz(), 2);
+        assert_eq!(ex[0].x.dense().as_ref(), &[0.5, 0.0, 1.5]);
         assert_eq!(ex[0].y, 1.0);
-        assert_eq!(ex[1].x, vec![0.0, 2.0, 0.0]);
+        assert_eq!(ex[1].x.dense().as_ref(), &[0.0, 2.0, 0.0]);
         assert_eq!(ex[1].y, -1.0);
     }
 
@@ -145,9 +182,18 @@ mod tests {
     }
 
     #[test]
-    fn force_dim_pads() {
+    fn force_dim_is_a_floor() {
         let ex = read_examples("+1 1:1\n".as_bytes(), Some(5)).unwrap();
-        assert_eq!(ex[0].x.len(), 5);
+        assert_eq!(ex[0].dim(), 5);
+        // ... and observed indices can still exceed it
+        let ex = read_examples("+1 9:1\n".as_bytes(), Some(5)).unwrap();
+        assert_eq!(ex[0].dim(), 9);
+    }
+
+    #[test]
+    fn unsorted_indices_are_sorted() {
+        let ex = read_examples("+1 3:3 1:1\n".as_bytes(), None).unwrap();
+        assert_eq!(ex[0].x.dense().as_ref(), &[1.0, 0.0, 3.0]);
     }
 
     #[test]
@@ -155,6 +201,54 @@ mod tests {
         assert!(read_examples("+1 nocolon\n".as_bytes(), None).is_err());
         assert!(read_examples("+1 0:1\n".as_bytes(), None).is_err());
         assert!(read_examples("notanumber 1:1\n".as_bytes(), None).is_err());
+        assert!(read_examples("+1 2:1 2:3\n".as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_values_and_labels() {
+        // f32/f64::parse accept these spellings; ingestion must not
+        for bad in ["+1 1:nan\n", "+1 1:inf\n", "+1 1:-inf\n", "+1 1:NaN\n", "nan 1:1\n", "inf 1:1\n"] {
+            let err = read_examples(bad.as_bytes(), None).unwrap_err();
+            assert!(
+                matches!(err, Error::Data(_)),
+                "`{}` should be rejected as data error, got {err}",
+                bad.trim()
+            );
+            assert!(err.to_string().contains("non-finite"), "{err}");
+        }
+        // overflow to inf is also rejected
+        assert!(read_examples("+1 1:4e40\n".as_bytes(), None).is_err());
+    }
+
+    #[test]
+    fn strict_reader_rejects_wide_rows() {
+        let err = read_examples_strict("+1 7:1\n".as_bytes(), 4).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("beyond the declared dimension 4"), "{err}");
+        let ok = read_examples_strict("+1 4:1\n".as_bytes(), 4).unwrap();
+        assert_eq!(ok[0].dim(), 4);
+    }
+
+    #[test]
+    fn test_split_wider_than_train_is_rejected() {
+        // Regression: a test row with an index beyond the train dim used
+        // to silently widen the dataset past Dataset::dim, and eval then
+        // died on the length assert inside linalg::dot.
+        let dir = std::env::temp_dir().join(format!("ssvm_libsvm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (train_p, test_p) = (dir.join("a.train"), dir.join("a.test"));
+        std::fs::write(&train_p, "+1 1:1 3:1\n-1 2:1\n").unwrap();
+        std::fs::write(&test_p, "+1 10:1\n").unwrap();
+        let err = load_files("t", &train_p, &test_p, None).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("beyond the declared dimension"), "{err}");
+
+        // in-range test rows load fine, at the train dimension
+        std::fs::write(&test_p, "+1 2:1\n").unwrap();
+        let ds = load_files("t", &train_p, &test_p, None).unwrap();
+        assert_eq!(ds.dim, 3);
+        assert!(ds.train.iter().chain(ds.test.iter()).all(|e| e.dim() == 3));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -164,5 +258,8 @@ mod tests {
         assert_eq!(ex.len(), 3);
         assert_eq!(ex[0].y, 1.0);
         assert_eq!(ex[1].y, -1.0);
+        // the dimension covers kept rows only: the filtered label-3 row's
+        // index 3 must not widen the pair dataset
+        assert!(ex.iter().all(|e| e.dim() == 2));
     }
 }

@@ -232,7 +232,7 @@ mod tests {
     fn pixels_are_normalized() {
         let ds = mnist89_small(2, 50, 10);
         for e in &ds.train {
-            assert!(e.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(e.x.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
         }
     }
 

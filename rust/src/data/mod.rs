@@ -7,6 +7,14 @@
 //! `w3a_like` build structured simulated equivalents that preserve the
 //! dimensionality, class balance and difficulty regime (see DESIGN.md §2).
 //! Real data in LIBSVM format can be substituted via [`libsvm_format`].
+//!
+//! Features come in two physical representations behind one [`Features`]
+//! value: dense `Vec<f32>` (the generators) and [`SparseVec`] index/value
+//! pairs (LIBSVM streams, where w3a-like data is ~4% dense). The hot
+//! paths consume borrowed [`FeaturesView`]s so per-example work is
+//! O(nnz) for sparse rows instead of O(D).
+
+use std::borrow::Cow;
 
 pub mod ijcnn_like;
 pub mod libsvm_format;
@@ -16,17 +24,290 @@ pub mod synthetic;
 pub mod w3a_like;
 pub mod waveform;
 
-/// One labeled example: a dense feature vector and a ±1 label.
+/// A sparse vector as parallel `idx`/`val` arrays. Indices are 0-based,
+/// strictly increasing, and `val` entries are the non-zero coordinates
+/// (zeros are permitted but wasteful).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Build from parallel arrays; panics if the arrays disagree in
+    /// length or `idx` is not strictly increasing.
+    pub fn new(idx: Vec<u32>, val: Vec<f32>) -> Self {
+        assert_eq!(idx.len(), val.len(), "idx/val length mismatch");
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "sparse indices must be strictly increasing"
+        );
+        SparseVec { idx, val }
+    }
+
+    /// Number of stored (index, value) pairs.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// The non-zero coordinates of a dense slice.
+    pub fn from_dense(x: &[f32]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+        SparseVec { idx, val }
+    }
+
+    /// Materialize as a dense vector of length `dim`.
+    pub fn to_dense(&self, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Coordinate `i` (0 if unstored), by binary search.
+    pub fn get(&self, i: usize) -> f32 {
+        match self.idx.binary_search(&(i as u32)) {
+            Ok(p) => self.val[p],
+            Err(_) => 0.0,
+        }
+    }
+}
+
+/// Feature storage: dense or sparse. Both carry their logical dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Features {
+    Dense(Vec<f32>),
+    Sparse { dim: usize, v: SparseVec },
+}
+
+/// A borrowed, `Copy` view of one example's features — what the O(nnz)
+/// kernels in [`crate::linalg`] and the ball update consume.
+#[derive(Clone, Copy, Debug)]
+pub enum FeaturesView<'a> {
+    Dense(&'a [f32]),
+    Sparse { dim: usize, idx: &'a [u32], val: &'a [f32] },
+}
+
+impl Features {
+    /// A sparse feature vector of logical dimension `dim`. Panics if an
+    /// index is out of range (indices must be < `dim`).
+    pub fn sparse(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Self {
+        let v = SparseVec::new(idx, val);
+        assert!(
+            v.idx.last().map(|&i| (i as usize) < dim).unwrap_or(true),
+            "sparse index out of range for dim {dim}"
+        );
+        Features::Sparse { dim, v }
+    }
+
+    /// Logical dimension.
+    pub fn len(&self) -> usize {
+        match self {
+            Features::Dense(x) => x.len(),
+            Features::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored coordinates (= `len()` for dense).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Features::Dense(x) => x.len(),
+            Features::Sparse { v, .. } => v.nnz(),
+        }
+    }
+
+    /// Borrowed view for the O(nnz) kernels.
+    pub fn view(&self) -> FeaturesView<'_> {
+        match self {
+            Features::Dense(x) => FeaturesView::Dense(x),
+            Features::Sparse { dim, v } => {
+                FeaturesView::Sparse { dim: *dim, idx: &v.idx, val: &v.val }
+            }
+        }
+    }
+
+    /// Dense coordinates: borrowed for dense storage, materialized for
+    /// sparse. The escape hatch for consumers that genuinely need a
+    /// contiguous slice (baselines, JSON encoding, PJRT blocks).
+    pub fn dense(&self) -> Cow<'_, [f32]> {
+        match self {
+            Features::Dense(x) => Cow::Borrowed(x.as_slice()),
+            Features::Sparse { dim, v } => Cow::Owned(v.to_dense(*dim)),
+        }
+    }
+
+    /// The dense slice; panics on sparse storage (generator/test paths
+    /// that construct dense examples by hand).
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Features::Dense(x) => x,
+            Features::Sparse { .. } => panic!("as_slice() on sparse features"),
+        }
+    }
+
+    /// Convert to the sparse representation (drops explicit zeros).
+    pub fn to_sparse(&self) -> Features {
+        match self {
+            Features::Dense(x) => {
+                Features::Sparse { dim: x.len(), v: SparseVec::from_dense(x) }
+            }
+            s => s.clone(),
+        }
+    }
+
+    /// Every stored value finite?
+    pub fn is_finite(&self) -> bool {
+        match self {
+            Features::Dense(x) => x.iter().all(|v| v.is_finite()),
+            Features::Sparse { v, .. } => v.val.iter().all(|v| v.is_finite()),
+        }
+    }
+
+    /// Coordinate `i` (0-filled for sparse gaps).
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            Features::Dense(x) => x[i],
+            Features::Sparse { v, .. } => v.get(i),
+        }
+    }
+
+    /// Iterate stored non-zero coordinates as `(index, value)`.
+    pub fn iter_nonzero(&self) -> Box<dyn Iterator<Item = (usize, f32)> + '_> {
+        match self {
+            Features::Dense(x) => Box::new(
+                x.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(i, &v)| (i, v)),
+            ),
+            Features::Sparse { v, .. } => Box::new(
+                v.idx.iter().zip(&v.val).map(|(&i, &v)| (i as usize, v)),
+            ),
+        }
+    }
+}
+
+impl From<Vec<f32>> for Features {
+    fn from(x: Vec<f32>) -> Self {
+        Features::Dense(x)
+    }
+}
+
+impl std::ops::Index<usize> for Features {
+    type Output = f32;
+
+    fn index(&self, i: usize) -> &f32 {
+        match self {
+            Features::Dense(x) => &x[i],
+            Features::Sparse { v, .. } => match v.idx.binary_search(&(i as u32)) {
+                Ok(p) => &v.val[p],
+                Err(_) => &0.0,
+            },
+        }
+    }
+}
+
+impl FeaturesView<'_> {
+    /// Logical dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            FeaturesView::Dense(x) => x.len(),
+            FeaturesView::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            FeaturesView::Dense(x) => x.len(),
+            FeaturesView::Sparse { idx, .. } => idx.len(),
+        }
+    }
+
+    /// `||x||²` — O(nnz).
+    pub fn norm2(&self) -> f64 {
+        match self {
+            FeaturesView::Dense(x) => crate::linalg::norm2(x),
+            FeaturesView::Sparse { val, .. } => crate::linalg::norm2(val),
+        }
+    }
+
+    /// `<w, x>` against a dense `w` of the same logical dimension —
+    /// O(nnz).
+    pub fn dot(&self, w: &[f32]) -> f64 {
+        match self {
+            FeaturesView::Dense(x) => crate::linalg::dot(w, x),
+            FeaturesView::Sparse { dim, idx, val } => {
+                debug_assert_eq!(w.len(), *dim);
+                crate::linalg::sparse_dot(w, idx, val)
+            }
+        }
+    }
+
+    /// `a += s * x` — O(nnz) scatter for sparse `x`.
+    pub fn axpy_into(&self, a: &mut [f32], s: f32) {
+        match self {
+            FeaturesView::Dense(x) => crate::linalg::axpy(a, s, x),
+            FeaturesView::Sparse { dim, idx, val } => {
+                debug_assert_eq!(a.len(), *dim);
+                crate::linalg::sparse_axpy(a, s, idx, val)
+            }
+        }
+    }
+
+    /// Scatter into `out[..dim]` (used by the block batcher; `out` may
+    /// be wider than `dim` for padded layouts). Overwrites only stored
+    /// coordinates for sparse views, so `out` must be pre-zeroed.
+    pub fn write_into(&self, out: &mut [f32]) {
+        match self {
+            FeaturesView::Dense(x) => out[..x.len()].copy_from_slice(x),
+            FeaturesView::Sparse { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(*val) {
+                    out[i as usize] = v;
+                }
+            }
+        }
+    }
+
+    /// Materialize a dense copy.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim()];
+        self.write_into(&mut out);
+        out
+    }
+
+    pub fn is_finite(&self) -> bool {
+        match self {
+            FeaturesView::Dense(x) => x.iter().all(|v| v.is_finite()),
+            FeaturesView::Sparse { val, .. } => val.iter().all(|v| v.is_finite()),
+        }
+    }
+}
+
+/// One labeled example: features (dense or sparse) and a ±1 label.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Example {
-    pub x: Vec<f32>,
+    pub x: Features,
     pub y: f32,
 }
 
 impl Example {
-    pub fn new(x: Vec<f32>, y: f32) -> Self {
+    pub fn new(x: impl Into<Features>, y: f32) -> Self {
         debug_assert!(y == 1.0 || y == -1.0, "labels must be ±1, got {y}");
-        Example { x, y }
+        Example { x: x.into(), y }
+    }
+
+    /// A sparse example of logical dimension `dim`.
+    pub fn sparse(dim: usize, idx: Vec<u32>, val: Vec<f32>, y: f32) -> Self {
+        Example::new(Features::sparse(dim, idx, val), y)
     }
 
     pub fn dim(&self) -> usize {
@@ -55,6 +336,24 @@ impl Dataset {
         let pos = self.train.iter().filter(|e| e.y > 0.0).count();
         pos as f64 / self.train.len().max(1) as f64
     }
+
+    /// Convert every example to the sparse representation in place (the
+    /// CLI `--sparse` toggle; dense datasets then exercise the O(nnz)
+    /// hot path).
+    pub fn sparsify(&mut self) {
+        for e in self.train.iter_mut().chain(self.test.iter_mut()) {
+            e.x = e.x.to_sparse();
+        }
+    }
+
+    /// Mean stored-nonzero fraction of the training split.
+    pub fn density(&self) -> f64 {
+        if self.train.is_empty() || self.dim == 0 {
+            return 0.0;
+        }
+        let nnz: usize = self.train.iter().map(|e| e.x.iter_nonzero().count()).sum();
+        nnz as f64 / (self.train.len() * self.dim) as f64
+    }
 }
 
 #[cfg(test)]
@@ -72,5 +371,69 @@ mod tests {
         let mk = |y| Example::new(vec![0.0], y);
         let ds = Dataset::new("t", 1, vec![mk(1.0), mk(-1.0), mk(-1.0), mk(-1.0)], vec![]);
         assert_eq!(ds.positive_rate(), 0.25);
+    }
+
+    #[test]
+    fn sparse_roundtrip_and_access() {
+        let e = Example::sparse(5, vec![1, 4], vec![2.0, -3.0], -1.0);
+        assert_eq!(e.dim(), 5);
+        assert_eq!(e.x.nnz(), 2);
+        assert_eq!(e.x.dense().as_ref(), &[0.0, 2.0, 0.0, 0.0, -3.0]);
+        assert_eq!(e.x[1], 2.0);
+        assert_eq!(e.x[2], 0.0);
+        assert_eq!(e.x.get(4), -3.0);
+        let nz: Vec<(usize, f32)> = e.x.iter_nonzero().collect();
+        assert_eq!(nz, vec![(1, 2.0), (4, -3.0)]);
+    }
+
+    #[test]
+    fn dense_sparse_conversion() {
+        let d = Features::Dense(vec![0.0, 1.5, 0.0, -2.0]);
+        let s = d.to_sparse();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.dense().as_ref(), d.dense().as_ref());
+        // sparse → sparse is a no-op
+        assert_eq!(s.to_sparse(), s);
+    }
+
+    #[test]
+    fn view_kernels_match_dense() {
+        let s = Features::sparse(6, vec![0, 3, 5], vec![1.0, -2.0, 0.5]);
+        let w = [0.5f32, 1.0, 1.0, 2.0, 1.0, 4.0];
+        let dense = s.dense();
+        assert_eq!(s.view().dot(&w), crate::linalg::dot(&w, &dense));
+        assert_eq!(s.view().norm2(), crate::linalg::norm2(&dense));
+        let mut a = vec![1.0f32; 6];
+        s.view().axpy_into(&mut a, 2.0);
+        assert_eq!(a, vec![3.0, 1.0, 1.0, -3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn finiteness_checks() {
+        assert!(Features::Dense(vec![1.0, 2.0]).is_finite());
+        assert!(!Features::Dense(vec![1.0, f32::NAN]).is_finite());
+        assert!(!Features::sparse(3, vec![1], vec![f32::INFINITY]).is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_sparse_rejected() {
+        SparseVec::new(vec![3, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn sparsify_dataset() {
+        let mut ds = Dataset::new(
+            "t",
+            3,
+            vec![Example::new(vec![1.0, 0.0, 2.0], 1.0)],
+            vec![Example::new(vec![0.0, 0.0, 0.0], -1.0)],
+        );
+        ds.sparsify();
+        assert_eq!(ds.train[0].x.nnz(), 2);
+        assert_eq!(ds.test[0].x.nnz(), 0);
+        assert_eq!(ds.train[0].dim(), 3);
+        assert!((ds.density() - 2.0 / 3.0).abs() < 1e-12);
     }
 }

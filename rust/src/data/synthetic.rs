@@ -103,7 +103,7 @@ mod tests {
                 .test
                 .iter()
                 .filter(|e| {
-                    let s: f64 = e.x.iter().zip(mean).map(|(&xi, &m)| xi as f64 * m).sum();
+                    let s: f64 = e.x.as_slice().iter().zip(mean).map(|(&xi, &m)| xi as f64 * m).sum();
                     (s > 0.0) == (e.y > 0.0)
                 })
                 .count();

@@ -82,7 +82,7 @@ mod tests {
         let avg_active: f64 = ds
             .train
             .iter()
-            .map(|e| e.x.iter().filter(|&&v| v > 0.0).count() as f64)
+            .map(|e| e.x.as_slice().iter().filter(|&&v| v > 0.0).count() as f64)
             .sum::<f64>()
             / ds.train.len() as f64;
         assert!((6.0..20.0).contains(&avg_active), "avg active {avg_active}");
@@ -92,7 +92,7 @@ mod tests {
     fn binary_features() {
         let ds = w3a_small(2, 200, 10);
         for e in &ds.train {
-            assert!(e.x.iter().all(|&v| v == 0.0 || v == 1.0));
+            assert!(e.x.as_slice().iter().all(|&v| v == 0.0 || v == 1.0));
         }
     }
 
@@ -102,7 +102,7 @@ mod tests {
         let mass = |y: f32| -> f64 {
             let sel: Vec<_> = ds.train.iter().filter(|e| e.y == y).collect();
             sel.iter()
-                .map(|e| e.x[..N_INDIC].iter().sum::<f32>() as f64)
+                .map(|e| e.x.as_slice()[..N_INDIC].iter().sum::<f32>() as f64)
                 .sum::<f64>()
                 / sel.len() as f64
         };

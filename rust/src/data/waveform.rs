@@ -85,7 +85,7 @@ mod tests {
             let sel: Vec<_> = ds.train.iter().filter(|e| e.y == y).collect();
             let mut m = vec![0.0; DIM];
             for e in &sel {
-                for (mi, &xi) in m.iter_mut().zip(e.x.iter()) {
+                for (mi, &xi) in m.iter_mut().zip(e.x.as_slice().iter()) {
                     *mi += xi as f64;
                 }
             }

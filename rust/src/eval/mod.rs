@@ -1,15 +1,34 @@
 //! Evaluation: classifier trait, accuracy/confusion metrics, and
 //! mean/std aggregation used by all experiment harnesses.
 
-use crate::data::Example;
+use crate::data::{Example, FeaturesView};
 
 /// Anything that scores an example (sign of the score = predicted label).
 pub trait Classifier {
     /// Raw margin; the predicted label is `score(x).signum()`.
     fn score(&self, x: &[f32]) -> f64;
 
+    /// [`Self::score`] for a dense-or-sparse feature view. The default
+    /// densifies sparse views; models with a dense weight vector should
+    /// override with an O(nnz) dot (as [`crate::svm::streamsvm::StreamSvm`]
+    /// does).
+    fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        match x {
+            FeaturesView::Dense(d) => self.score(d),
+            sparse => self.score(&sparse.to_dense()),
+        }
+    }
+
     fn predict(&self, x: &[f32]) -> f32 {
         if self.score(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn predict_view(&self, x: FeaturesView<'_>) -> f32 {
+        if self.score_view(x) >= 0.0 {
             1.0
         } else {
             -1.0
@@ -24,7 +43,7 @@ pub fn accuracy<M: Classifier + ?Sized>(model: &M, examples: &[Example]) -> f64 
     }
     let ok = examples
         .iter()
-        .filter(|e| model.predict(&e.x) == e.y)
+        .filter(|e| model.predict_view(e.x.view()) == e.y)
         .count();
     ok as f64 / examples.len() as f64
 }
@@ -42,7 +61,7 @@ impl Confusion {
     pub fn of<M: Classifier + ?Sized>(model: &M, examples: &[Example]) -> Self {
         let mut c = Confusion::default();
         for e in examples {
-            match (model.predict(&e.x) > 0.0, e.y > 0.0) {
+            match (model.predict_view(e.x.view()) > 0.0, e.y > 0.0) {
                 (true, true) => c.tp += 1,
                 (false, false) => c.tn += 1,
                 (true, false) => c.fp += 1,

@@ -32,6 +32,14 @@
 //! load generator ([`server::loadgen`]) measures throughput, latency
 //! quantiles and shed rate into `BENCH_serve.json`.
 //!
+//! The **sparse path**: features live behind [`data::Features`] (dense
+//! `Vec<f32>` or `idx`/`val` pairs) with a borrowed [`data::FeaturesView`]
+//! consumed by the hot paths. The ball center is stored lazily scaled
+//! (`w = σ·v` with a cached `‖w‖²`), so the per-example distance test and
+//! the Algorithm-1 update both cost O(nnz) instead of O(D) — LIBSVM
+//! streams (w3a is ~4% dense) never densify, and the server accepts
+//! sparse `{"idx":[...],"val":[...]}` payloads.
+//!
 //! The **sketch layer** ([`sketch`]) turns the tiny ball state into
 //! durable, composable model files: [`sketch::MebSketch`] is a
 //! versioned, checksummed binary encoding of ball + stream provenance;

@@ -1,8 +1,12 @@
-//! Dense f32 vector kernels for the Rust-side hot paths.
+//! Dense and sparse f32 vector kernels for the Rust-side hot paths.
 //!
-//! The per-example StreamSVM update is O(D) vector work; these helpers are
-//! written so LLVM auto-vectorizes them (simple indexed loops over equal
-//! length slices, no bounds checks after the explicit `assert_eq!`).
+//! The per-example StreamSVM update is O(D) vector work on dense rows;
+//! these helpers are written so LLVM auto-vectorizes them (simple indexed
+//! loops over equal length slices, no bounds checks after the explicit
+//! `assert_eq!`). The `sparse_*` variants take parallel `idx`/`val`
+//! arrays (0-based, strictly increasing indices) and cost O(nnz), which
+//! is what makes the sparse LIBSVM hot path scale with the number of
+//! stored coordinates instead of the ambient dimension.
 
 /// Dot product `<a, b>` in f64 accumulation (streamed sums over hundreds of
 /// f32 terms lose precision fast in f32; the ball geometry is sensitive
@@ -64,6 +68,37 @@ pub fn scale(a: &mut [f32], s: f32) {
     for v in a.iter_mut() {
         *v *= s;
     }
+}
+
+/// Sparse dot `<w, x>` for `x` given as `idx`/`val` pairs — O(nnz).
+/// Accumulates in f64 like [`dot`]; indices must be within `w`.
+#[inline]
+pub fn sparse_dot(w: &[f32], idx: &[u32], val: &[f32]) -> f64 {
+    assert_eq!(idx.len(), val.len());
+    let mut acc = 0.0f64;
+    for k in 0..idx.len() {
+        acc += w[idx[k] as usize] as f64 * val[k] as f64;
+    }
+    acc
+}
+
+/// Sparse scatter-add `a[idx[k]] += s * val[k]` — O(nnz).
+#[inline]
+pub fn sparse_axpy(a: &mut [f32], s: f32, idx: &[u32], val: &[f32]) {
+    assert_eq!(idx.len(), val.len());
+    for k in 0..idx.len() {
+        a[idx[k] as usize] += s * val[k];
+    }
+}
+
+/// `||w - y x||²` for sparse `x`, given the cached `||w||²` — O(nnz) via
+/// the expansion `||w||² − 2y⟨w,x⟩ + ||x||²` (clamped at 0 against
+/// cancellation in the nearly-coincident case).
+#[inline]
+pub fn sparse_sqdist_scaled(w: &[f32], wnorm2: f64, idx: &[u32], val: &[f32], y: f32) -> f64 {
+    let wx = sparse_dot(w, idx, val);
+    let xn2 = norm2(val);
+    (wnorm2 - 2.0 * y as f64 * wx + xn2).max(0.0)
 }
 
 /// Dense matvec `out[i] = <m[i], v>` for a row-major `(rows, cols)` matrix
@@ -132,6 +167,38 @@ mod tests {
         let mut out = [0.0f32; 2];
         matvec(&m, 2, 3, &[1.0, 0.0, -1.0], &mut out);
         assert_eq!(out, [-2.0, -2.0]);
+    }
+
+    #[test]
+    fn sparse_kernels_match_dense() {
+        let w = [1.0f32, -2.0, 0.5, 0.0, 3.0];
+        let idx = [0u32, 2, 4];
+        let val = [2.0f32, -1.0, 0.5];
+        let dense = [2.0f32, 0.0, -1.0, 0.0, 0.5];
+        assert_eq!(sparse_dot(&w, &idx, &val), dot(&w, &dense));
+        for y in [-1.0f32, 1.0] {
+            let got = sparse_sqdist_scaled(&w, norm2(&w), &idx, &val, y);
+            let want = sqdist_scaled(&w, &dense, y);
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        let mut a = w;
+        let mut b = w;
+        sparse_axpy(&mut a, 2.0, &idx, &val);
+        axpy(&mut b, 2.0, &dense);
+        assert_eq!(a, b);
+        // empty sparse vector is a no-op / zero
+        assert_eq!(sparse_dot(&w, &[], &[]), 0.0);
+        sparse_axpy(&mut a, 5.0, &[], &[]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_sqdist_clamps_cancellation() {
+        // w == y x exactly: the expansion can go tiny-negative in float;
+        // the clamp keeps it at 0.
+        let w = [3.0f32, 0.0, 4.0];
+        let got = sparse_sqdist_scaled(&w, norm2(&w), &[0, 2], &[3.0, 4.0], 1.0);
+        assert_eq!(got, 0.0);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! ```text
 //! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
 //!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
+//!                    [--sparse true]   (convert the stream to the O(nnz) sparse path)
 //! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
 //! streamsvm loadgen  --addr 127.0.0.1:7878 [--dataset mnist01] [--qps 500] [--requests 2000]
@@ -68,7 +69,16 @@ fn open_runtime_opt(mode: ExecMode) -> Option<Runtime> {
 fn cmd_train(args: &Args) -> Result<()> {
     let name = args.str("dataset", "synthA");
     let frac: f64 = args.get("frac", 1.0)?;
-    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, frac)?;
+    let mut ds = load_dataset_sized(&name, args.get("seed", 42u64)?, frac)?;
+    if args.has("sparse") && args.get("sparse", true)? {
+        ds.sparsify();
+        println!(
+            "sparse stream: dim={} density={:.2}% (O(nnz) updates)",
+            ds.dim,
+            ds.density() * 100.0
+        );
+    }
+    let ds = ds;
     let train = train_opts(args)?;
     // C defaults per dataset unless explicitly given
     let train = if args.has("c") {
@@ -171,7 +181,7 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
     let at: usize = args.get("at", usize::MAX)?;
     let mut model = StreamSvm::new(ds.dim, train);
     for e in stream_for(args, &ds)?.take(at) {
-        model.observe(&e.x, e.y);
+        model.observe_view(e.x.view(), e.y);
     }
     let out = args.str("out", "model.meb");
     let sk = MebSketch::from_model(&model, &name);
@@ -195,7 +205,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
         // the sketch's options, at the dataset's dimension
         let mut m = StreamSvm::new(ds.dim, sk.opts);
         for e in stream_for(args, &ds)? {
-            m.observe(&e.x, e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         m
     } else {
@@ -377,10 +387,8 @@ fn main() -> Result<()> {
                 let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
                 for e in exs {
                     write!(f, "{}", if e.y > 0.0 { "+1" } else { "-1" })?;
-                    for (i, &v) in e.x.iter().enumerate() {
-                        if v != 0.0 {
-                            write!(f, " {}:{}", i + 1, v)?;
-                        }
+                    for (i, v) in e.x.iter_nonzero() {
+                        write!(f, " {}:{}", i + 1, v)?;
                     }
                     writeln!(f)?;
                 }

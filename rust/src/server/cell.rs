@@ -12,6 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::data::FeaturesView;
 use crate::linalg;
 use crate::sketch::codec::MebSketch;
 use crate::svm::streamsvm::StreamSvm;
@@ -37,7 +38,7 @@ pub struct ModelSnapshot {
 impl ModelSnapshot {
     fn build(model: &StreamSvm, tag: &str, version: u64) -> Self {
         let dim = model.dim();
-        let mut w = model.weights().to_vec();
+        let mut w = model.weights();
         w.resize(dim, 0.0);
         ModelSnapshot {
             w,
@@ -56,6 +57,20 @@ impl ModelSnapshot {
     pub fn score(&self, x: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), self.dim);
         linalg::dot(&self.w, x)
+    }
+
+    /// O(nnz) margin for a sparse request payload (`idx`/`val` pairs,
+    /// validated in-range at the protocol boundary).
+    pub fn score_sparse(&self, idx: &[u32], val: &[f32]) -> f64 {
+        linalg::sparse_dot(&self.w, idx, val)
+    }
+
+    /// Margin for either payload shape.
+    pub fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        match x {
+            FeaturesView::Dense(d) => self.score(d),
+            FeaturesView::Sparse { idx, val, .. } => self.score_sparse(idx, val),
+        }
     }
 }
 

@@ -81,6 +81,22 @@ impl Json {
         }
         Some(out)
     }
+
+    /// An array of non-negative integers as `u32` (the sparse `idx`
+    /// payload shape). Rejects negatives, fractions and out-of-range
+    /// values rather than truncating them.
+    pub fn u32_vec(&self) -> Option<Vec<u32>> {
+        let arr = self.as_array()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            let f = v.as_f64()?;
+            if !(0.0..=u32::MAX as f64).contains(&f) || f.fract() != 0.0 {
+                return None;
+            }
+            out.push(f as u32);
+        }
+        Some(out)
+    }
 }
 
 struct Parser<'a> {
@@ -309,6 +325,20 @@ pub fn escape(s: &str) -> String {
     out
 }
 
+/// Format a `u32` slice as a JSON array (the sparse `idx` payload).
+pub fn fmt_u32_array(xs: &[u32]) -> String {
+    let mut out = String::with_capacity(2 + 4 * xs.len());
+    out.push('[');
+    for (i, &v) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&v.to_string());
+    }
+    out.push(']');
+    out
+}
+
 /// Format an `f32` slice as a JSON array of numbers.
 pub fn fmt_f32_array(xs: &[f32]) -> String {
     let mut out = String::with_capacity(2 + 8 * xs.len());
@@ -379,11 +409,24 @@ mod tests {
     }
 
     #[test]
+    fn u32_vec_accepts_indices_rejects_junk() {
+        assert_eq!(
+            Json::parse("[0,3,4294967295]").unwrap().u32_vec(),
+            Some(vec![0, 3, u32::MAX])
+        );
+        for bad in ["[-1]", "[1.5]", "[4294967296]", r#"["x"]"#, "1"] {
+            assert!(Json::parse(bad).unwrap().u32_vec().is_none(), "{bad}");
+        }
+    }
+
+    #[test]
     fn formatting_helpers() {
         assert_eq!(fmt_num(1.5), "1.5");
         assert_eq!(fmt_num(f64::NAN), "null");
         assert_eq!(fmt_num(f64::INFINITY), "null");
         assert_eq!(fmt_f32_array(&[1.0, -0.5]), "[1,-0.5]");
+        assert_eq!(fmt_u32_array(&[0, 7, 42]), "[0,7,42]");
+        assert_eq!(fmt_u32_array(&[]), "[]");
         assert_eq!(escape("a\"b\n"), "a\\\"b\\n");
         // round-trip through the parser
         let doc = format!(r#"{{"s":"{}","v":{}}}"#, escape("x\"y"), fmt_num(2.25));

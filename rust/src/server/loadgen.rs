@@ -15,7 +15,7 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::LatencyHistogram;
-use crate::data::Example;
+use crate::data::{Example, Features, FeaturesView};
 use crate::error::{Error, Result};
 use crate::rng::Pcg32;
 use crate::server::http::{self, HttpResponse, Limits};
@@ -74,15 +74,45 @@ impl LoadClient {
         }
     }
 
-    /// `POST /predict` with one feature vector.
+    /// `POST /predict` with one dense feature vector.
     pub fn predict(&mut self, x: &[f32]) -> Result<Outcome> {
         let body = format!(r#"{{"x":{}}}"#, json::fmt_f32_array(x));
         Ok(Self::outcome_of(self.round_trip("POST", "/predict", body.as_bytes())?))
     }
 
-    /// `POST /train` with one labeled example.
+    /// `POST /train` with one dense labeled example.
     pub fn train(&mut self, x: &[f32], y: f32) -> Result<Outcome> {
         let body = format!(r#"{{"x":{},"y":{}}}"#, json::fmt_f32_array(x), json::fmt_num(y as f64));
+        Ok(Self::outcome_of(self.round_trip("POST", "/train", body.as_bytes())?))
+    }
+
+    /// Encode features in their natural payload shape: dense `"x"` or
+    /// sparse `"idx"`/`"val"`.
+    fn features_body(x: &Features) -> String {
+        match x.view() {
+            FeaturesView::Dense(d) => format!(r#""x":{}"#, json::fmt_f32_array(d)),
+            FeaturesView::Sparse { idx, val, .. } => format!(
+                r#""idx":{},"val":{}"#,
+                json::fmt_u32_array(idx),
+                json::fmt_f32_array(val)
+            ),
+        }
+    }
+
+    /// `POST /predict` in the features' natural shape (sparse examples
+    /// send the O(nnz) sparse payload).
+    pub fn predict_features(&mut self, x: &Features) -> Result<Outcome> {
+        let body = format!("{{{}}}", Self::features_body(x));
+        Ok(Self::outcome_of(self.round_trip("POST", "/predict", body.as_bytes())?))
+    }
+
+    /// `POST /train` in the features' natural shape.
+    pub fn train_features(&mut self, x: &Features, y: f32) -> Result<Outcome> {
+        let body = format!(
+            "{{{},\"y\":{}}}",
+            Self::features_body(x),
+            json::fmt_num(y as f64)
+        );
         Ok(Self::outcome_of(self.round_trip("POST", "/train", body.as_bytes())?))
     }
 
@@ -329,7 +359,8 @@ fn drive_one(
             rep.predicts += 1;
         }
         let sent_at = Instant::now();
-        let outcome = if is_train { c.train(&e.x, e.y) } else { c.predict(&e.x) };
+        let outcome =
+            if is_train { c.train_features(&e.x, e.y) } else { c.predict_features(&e.x) };
         match outcome {
             Ok(o) => {
                 // a 2xx predict only counts as ok with a finite score

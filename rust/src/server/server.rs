@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::data::Features;
 use crate::error::{Error, Result};
 use crate::server::admission::{bounded, Bounded, Endpoint, ServerStats};
 use crate::server::cell::ModelCell;
@@ -88,7 +89,7 @@ impl Default for ServerConfig {
 struct Shared {
     cell: ModelCell,
     stats: ServerStats,
-    train: Bounded<(Vec<f32>, f32)>,
+    train: Bounded<(Features, f32)>,
     /// Stops the acceptor and the handler pool (checked between requests).
     shutdown: AtomicBool,
     /// Stops the trainer — set only after the handler pool has joined,
@@ -135,7 +136,7 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
     }
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
-    let (train_tx, train_rx) = bounded::<(Vec<f32>, f32)>(cfg.train_queue.max(1));
+    let (train_tx, train_rx) = bounded::<(Features, f32)>(cfg.train_queue.max(1));
     let shared = Arc::new(Shared {
         cell: ModelCell::new(&model, &cfg.tag),
         stats: ServerStats::default(),
@@ -432,6 +433,55 @@ fn parse_body(body: &[u8]) -> Option<Json> {
     std::str::from_utf8(body).ok().and_then(|s| Json::parse(s).ok())
 }
 
+const BODY_SHAPE: &str = r#"body must carry features as "x":[...] or "idx":[...],"val":[...]"#;
+
+/// Extract the feature payload from a parsed body: dense `{"x":[...]}`
+/// or sparse `{"idx":[...],"val":[...]}` (parallel arrays, 0-based
+/// strictly-increasing indices). Validates dimension, index range and
+/// finiteness at the protocol boundary; `Err` is the ready-made 400
+/// body.
+fn parse_features(
+    parsed: Option<&Json>,
+    dim: usize,
+) -> std::result::Result<Features, Vec<u8>> {
+    let body = parsed.ok_or_else(|| err_body(BODY_SHAPE))?;
+    if let Some(xv) = body.get("x") {
+        let x = xv.f32_vec().ok_or_else(|| err_body(BODY_SHAPE))?;
+        if let Some(err) = check_features(&x, dim) {
+            return Err(err);
+        }
+        return Ok(Features::Dense(x));
+    }
+    let idx = body.get("idx").and_then(|v| v.u32_vec());
+    let val = body.get("val").and_then(|v| v.f32_vec());
+    match (idx, val) {
+        (Some(idx), Some(val)) => {
+            if idx.len() != val.len() {
+                return Err(err_body(&format!(
+                    "idx has {} entries but val has {}",
+                    idx.len(),
+                    val.len()
+                )));
+            }
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err(err_body("idx must be strictly increasing"));
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= dim {
+                    return Err(err_body(&format!(
+                        "idx {last} is out of range for model dimension {dim}"
+                    )));
+                }
+            }
+            if let Some(i) = val.iter().position(|v| !v.is_finite()) {
+                return Err(err_body(&format!("val[{i}] is not finite")));
+            }
+            Ok(Features::sparse(dim, idx, val))
+        }
+        _ => Err(err_body(BODY_SHAPE)),
+    }
+}
+
 /// Validate a feature vector at the protocol boundary: right dimension
 /// and every value finite. Non-finite features would poison the ball
 /// geometry on `/train` (inf radius forever, then persisted to the
@@ -452,15 +502,12 @@ fn check_features(x: &[f32], dim: usize) -> Option<Vec<u8>> {
 
 fn handle_predict(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
     let parsed = parse_body(body);
-    let x = match parsed.as_ref().and_then(|v| v.get("x")).and_then(|v| v.f32_vec()) {
-        Some(x) => x,
-        None => return (400, err_body(r#"body must be {"x":[n0,n1,...]}"#)),
+    let x = match parse_features(parsed.as_ref(), sh.dim) {
+        Ok(x) => x,
+        Err(e) => return (400, e),
     };
-    if let Some(err) = check_features(&x, sh.dim) {
-        return (400, err);
-    }
     let snap = sh.cell.load();
-    let score = snap.score(&x);
+    let score = snap.score_view(x.view());
     (
         200,
         format!(
@@ -515,19 +562,17 @@ fn handle_predict_batch(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
 
 fn handle_train(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
     let parsed = parse_body(body);
-    let (x, y) = match parsed.as_ref().map(|v| (v.get("x"), v.get("y"))) {
-        Some((Some(xv), Some(yv))) => match (xv.f32_vec(), yv.as_f64()) {
-            (Some(x), Some(y)) => (x, y as f32),
-            _ => return (400, err_body(r#"body must be {"x":[...],"y":±1}"#)),
-        },
-        _ => return (400, err_body(r#"body must be {"x":[...],"y":±1}"#)),
+    let y = match parsed.as_ref().and_then(|v| v.get("y")).and_then(|v| v.as_f64()) {
+        Some(y) => y as f32,
+        None => return (400, err_body(r#"body must be {"x":[...]|"idx"/"val",  "y":±1}"#)),
     };
     if y != 1.0 && y != -1.0 {
         return (400, err_body("y must be 1 or -1"));
     }
-    if let Some(err) = check_features(&x, sh.dim) {
-        return (400, err);
-    }
+    let x = match parse_features(parsed.as_ref(), sh.dim) {
+        Ok(x) => x,
+        Err(e) => return (400, e),
+    };
     match sh.train.try_admit((x, y)) {
         Ok(()) => (
             202,
@@ -579,17 +624,30 @@ fn stats_json(sh: &Shared) -> String {
 fn trainer_loop(
     sh: Arc<Shared>,
     mut model: StreamSvm,
-    rx: Receiver<(Vec<f32>, f32)>,
+    rx: Receiver<(Features, f32)>,
     republish_every: usize,
     snapshot: Option<PathBuf>,
 ) -> StreamSvm {
     let mut since_publish = 0usize;
+    // Admitted examples were validated at the protocol boundary, but the
+    // fallible entry point keeps a defective example (e.g. a dim change
+    // across hot-swap experiments) from panicking the trainer thread.
+    fn absorb(model: &mut StreamSvm, x: Features, y: f32) -> bool {
+        match model.try_observe(x.view(), y) {
+            Ok(_) => true,
+            Err(e) => {
+                eprintln!("warning: trainer rejected an admitted example: {e}");
+                false
+            }
+        }
+    }
     loop {
         match rx.recv_timeout(Duration::from_millis(20)) {
             Ok((x, y)) => {
-                model.observe(&x, y);
-                sh.trained.fetch_add(1, Ordering::Relaxed);
-                since_publish += 1;
+                if absorb(&mut model, x, y) {
+                    sh.trained.fetch_add(1, Ordering::Relaxed);
+                    since_publish += 1;
+                }
                 if since_publish >= republish_every {
                     since_publish = 0;
                     publish(&sh, &model, &snapshot);
@@ -599,9 +657,10 @@ fn trainer_loop(
                 if sh.trainer_stop.load(Ordering::Acquire) {
                     // The handler pool has joined: this drain is exact.
                     while let Ok((x, y)) = rx.try_recv() {
-                        model.observe(&x, y);
-                        sh.trained.fetch_add(1, Ordering::Relaxed);
-                        since_publish += 1;
+                        if absorb(&mut model, x, y) {
+                            sh.trained.fetch_add(1, Ordering::Relaxed);
+                            since_publish += 1;
+                        }
                     }
                     break;
                 }
@@ -647,7 +706,7 @@ mod tests {
         (status, body)
     }
 
-    fn test_shared(train_queue: usize) -> (Arc<Shared>, Receiver<(Vec<f32>, f32)>) {
+    fn test_shared(train_queue: usize) -> (Arc<Shared>, Receiver<(Features, f32)>) {
         let model = toy_model();
         let (train_tx, train_rx) = bounded(train_queue);
         let sh = Arc::new(Shared {
@@ -711,6 +770,42 @@ mod tests {
         assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[1],"y":1}"#).0, 400);
         assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[1e999,0],"y":1}"#).0, 400);
         drop(rx);
+    }
+
+    #[test]
+    fn sparse_predict_and_train_payloads() {
+        let (sh, rx) = test_shared(4);
+        // sparse predict scores identically to the equivalent dense body
+        let (s1, b1) = route_raw(&sh, "POST", "/predict", br#"{"x":[1.0,0.0]}"#);
+        let (s2, b2) = route_raw(&sh, "POST", "/predict", br#"{"idx":[0],"val":[1.0]}"#);
+        assert_eq!((s1, s2), (200, 200));
+        let score = |b: &[u8]| {
+            Json::parse(std::str::from_utf8(b).unwrap())
+                .unwrap()
+                .get("score")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(score(&b1), score(&b2));
+        // the all-zeros sparse vector is valid
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[],"val":[]}"#).0, 200);
+        // malformed sparse payloads are explicit 400s, never 500s
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[0,1],"val":[1.0]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[1,0],"val":[1,2]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[2],"val":[1.0]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[0],"val":[1e999]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[0]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[-1],"val":[1.0]}"#).0, 400);
+        // sparse /train admits the example to the queue *as sparse*
+        assert_eq!(
+            route_raw(&sh, "POST", "/train", br#"{"idx":[1],"val":[2.0],"y":-1}"#).0,
+            202
+        );
+        let (x, y) = rx.try_recv().unwrap();
+        assert_eq!(y, -1.0);
+        assert_eq!(x.nnz(), 1);
+        assert_eq!(x.dense().as_ref(), &[0.0, 2.0]);
     }
 
     #[test]

@@ -133,7 +133,7 @@ pub fn resume_fit<I: IntoIterator<Item = Example>>(sketch: &MebSketch, stream: I
             None => crate::svm::lookahead::LookaheadSvm::new(sketch.dim, sketch.opts),
         };
         for e in rest {
-            m.observe(&e.x, e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         m.finish();
         let mut out = StreamSvm::new(sketch.dim, sketch.opts);
@@ -144,7 +144,7 @@ pub fn resume_fit<I: IntoIterator<Item = Example>>(sketch: &MebSketch, stream: I
     }
     let mut model = sketch.to_model();
     for e in rest {
-        model.observe(&e.x, e.y);
+        model.observe_view(e.x.view(), e.y);
     }
     model
 }
@@ -180,7 +180,7 @@ mod tests {
 
             let mut partial = StreamSvm::new(d, opts);
             for e in exs.iter().take(k) {
-                partial.observe(&e.x, e.y);
+                partial.observe_view(e.x.view(), e.y);
             }
             let sk = MebSketch::from_model(&partial, "resume-test");
             // round-trip through bytes, as a real interruption would
@@ -213,7 +213,7 @@ mod tests {
         let mut model = StreamSvm::new(4, opts);
         let mut saves = 0usize;
         for (i, e) in exs.iter().enumerate() {
-            model.observe(&e.x, e.y);
+            model.observe_view(e.x.view(), e.y);
             // simulate block boundaries of 10 examples
             if (i + 1) % 10 == 0
                 && ck.maybe_save(model.ball(), 4, model.examples_seen(), &opts).unwrap()
@@ -251,7 +251,7 @@ mod tests {
             let mut m = LookaheadSvm::new(d, opts);
             let mut sk: Option<MebSketch> = None;
             for (i, e) in exs.iter().enumerate() {
-                m.observe(&e.x, e.y);
+                m.observe_view(e.x.view(), e.y);
                 if sk.is_none() && i + 1 >= n / 2 && i + 1 < n && m.buffered() == 0 {
                     sk = Some(MebSketch::new(d, m.ball().cloned(), i + 1, opts, "la"));
                 }
@@ -262,7 +262,7 @@ mod tests {
             let sk = MebSketch::decode(&sk.encode()).map_err(|e| e.to_string())?;
             let resumed = resume_fit(&sk, exs.clone());
             let fb = full.ball().expect("trained");
-            if resumed.weights() != fb.w.as_slice()
+            if resumed.weights() != fb.weights()
                 || resumed.radius().to_bits() != fb.r.to_bits()
                 || resumed.num_support() != fb.m
                 || resumed.examples_seen() != n

@@ -17,10 +17,14 @@
 //! Payload, all little-endian:
 //! `tag(u32 len + utf8) · c(f64) · slack_mode(u8) · lookahead(u64) ·
 //! merge_iters(u64) · seen(u64) · dim(u64) · has_ball(u8) ·
-//! [m(u64) · r(f64) · xi2(f64) · w(dim × f32)]`.
+//! [m(u64) · r(f64) · xi2(f64) · sigma(f64) · wnorm2(f64) ·
+//! v(dim × f32)]`.
 //!
-//! Every numeric field round-trips bit-exactly, so decode → resume →
-//! continue training reproduces an uninterrupted run bit-for-bit.
+//! Version 2 serializes the ball's *factored* center `w = σ·v` (plus
+//! the cached `‖w‖²`) exactly as the live state holds it, so decode →
+//! resume → continue training reproduces an uninterrupted run
+//! bit-for-bit — including the lazy-scaling fold schedule. Version-1
+//! sketches (explicit dense `w`) still decode (as `σ = 1`, `v = w`).
 
 use std::path::Path;
 
@@ -29,8 +33,9 @@ use crate::svm::ball::BallState;
 use crate::svm::streamsvm::StreamSvm;
 use crate::svm::{SlackMode, TrainOptions};
 
-/// Current wire-format version.
-pub const SKETCH_VERSION: u16 = 1;
+/// Current wire-format version (2 = lazily-scaled center; 1 = explicit
+/// dense `w`, still readable).
+pub const SKETCH_VERSION: u16 = 2;
 
 const MAGIC: &[u8; 4] = b"MEBS";
 /// Fixed header bytes before the payload.
@@ -203,7 +208,9 @@ impl MebSketch {
                 p.extend_from_slice(&(b.m as u64).to_le_bytes());
                 p.extend_from_slice(&b.r.to_bits().to_le_bytes());
                 p.extend_from_slice(&b.xi2.to_bits().to_le_bytes());
-                for &v in &b.w {
+                p.extend_from_slice(&b.sigma().to_bits().to_le_bytes());
+                p.extend_from_slice(&b.wnorm2().to_bits().to_le_bytes());
+                for &v in b.direction() {
                     p.extend_from_slice(&v.to_bits().to_le_bytes());
                 }
             }
@@ -276,6 +283,12 @@ impl MebSketch {
                 let m = usize_of(r.u64("m")?, "m")?;
                 let rad = r.f64("r")?;
                 let xi2 = r.f64("xi2")?;
+                // v2 carries the factored center; v1 stored dense w.
+                let (sigma, wnorm2) = if version >= 2 {
+                    (Some(r.f64("sigma")?), Some(r.f64("wnorm2")?))
+                } else {
+                    (None, None)
+                };
                 let wb = r.take(dim.checked_mul(4).ok_or_else(|| {
                     Error::sketch(format!("dim {dim} overflows the weight size"))
                 })?, "weights")?;
@@ -283,7 +296,12 @@ impl MebSketch {
                     .chunks_exact(4)
                     .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
                     .collect();
-                Some(BallState { w, r: rad, xi2, m })
+                Some(match (sigma, wnorm2) {
+                    (Some(sigma), Some(wnorm2)) => {
+                        BallState::from_scaled(w, sigma, wnorm2, rad, xi2, m)
+                    }
+                    _ => BallState::from_parts(w, rad, xi2, m),
+                })
             }
             other => return Err(Error::sketch(format!("bad has_ball byte {other}"))),
         };
@@ -341,7 +359,9 @@ mod tests {
             }
             let m2 = back.to_model();
             let (a, b) = (model.ball().unwrap(), m2.ball().unwrap());
-            if a.w != b.w
+            if a.direction() != b.direction()
+                || a.sigma().to_bits() != b.sigma().to_bits()
+                || a.wnorm2().to_bits() != b.wnorm2().to_bits()
                 || a.r.to_bits() != b.r.to_bits()
                 || a.xi2.to_bits() != b.xi2.to_bits()
                 || a.m != b.m
@@ -409,6 +429,53 @@ mod tests {
         let back = MebSketch::read_from(&path).unwrap();
         assert_eq!(back, sk);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn decodes_version1_sketches() {
+        // Hand-assemble a v1 payload (explicit dense w, no sigma/wnorm2)
+        // and check it decodes to the equivalent factored state.
+        let w = [1.5f32, -2.0, 0.5];
+        let (rad, xi2, m, seen) = (3.25f64, 0.5f64, 4usize, 17usize);
+        let opts = TrainOptions::default().with_c(2.0);
+        let mut p: Vec<u8> = Vec::new();
+        p.extend_from_slice(&(2u32).to_le_bytes()); // tag len
+        p.extend_from_slice(b"v1");
+        p.extend_from_slice(&opts.c.to_bits().to_le_bytes());
+        p.push(1); // Consistent
+        p.extend_from_slice(&(opts.lookahead as u64).to_le_bytes());
+        p.extend_from_slice(&(opts.merge_iters as u64).to_le_bytes());
+        p.extend_from_slice(&(seen as u64).to_le_bytes());
+        p.extend_from_slice(&(w.len() as u64).to_le_bytes());
+        p.push(1); // has_ball
+        p.extend_from_slice(&(m as u64).to_le_bytes());
+        p.extend_from_slice(&rad.to_bits().to_le_bytes());
+        p.extend_from_slice(&xi2.to_bits().to_le_bytes());
+        for &v in &w {
+            p.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u16.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&0u16.to_le_bytes());
+        bytes.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        let sum = fnv1a64(&p);
+        bytes.extend_from_slice(&p);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+
+        let sk = MebSketch::decode(&bytes).unwrap();
+        assert_eq!(sk.tag, "v1");
+        assert_eq!(sk.dim, 3);
+        assert_eq!(sk.seen, seen);
+        let b = sk.ball.as_ref().unwrap();
+        assert_eq!(b.weights(), w.to_vec());
+        assert_eq!(b.sigma(), 1.0);
+        assert_eq!(b.r, rad);
+        assert_eq!(b.xi2, xi2);
+        assert_eq!(b.m, m);
+        // and re-encoding writes the current (v2) format
+        let back = MebSketch::decode(&sk.encode()).unwrap();
+        assert_eq!(back, sk);
     }
 
     #[test]

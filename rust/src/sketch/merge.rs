@@ -90,12 +90,12 @@ mod tests {
     use crate::svm::TrainOptions;
 
     fn random_ball(d: usize, rng: &mut Pcg32) -> BallState {
-        BallState {
-            w: (0..d).map(|_| (rng.normal() * 2.0) as f32).collect(),
-            r: rng.uniform() * 3.0,
-            xi2: rng.uniform(),
-            m: 1 + rng.below(10),
-        }
+        BallState::from_parts(
+            (0..d).map(|_| (rng.normal() * 2.0) as f32).collect(),
+            rng.uniform() * 3.0,
+            rng.uniform(),
+            1 + rng.below(10),
+        )
     }
 
     /// A ball paired with its center materialized in the lifted space
@@ -112,9 +112,10 @@ mod tests {
             .iter()
             .enumerate()
             .map(|(i, b)| {
+                let bw = b.weights();
                 let mut c = vec![0.0f64; d + n];
                 for j in 0..d {
-                    c[j] = b.w[j] as f64;
+                    c[j] = bw[j] as f64;
                 }
                 c[d + i] = b.xi2.sqrt();
                 Lifted { ball: b.clone(), center: c }
@@ -153,8 +154,9 @@ mod tests {
                 return Err(format!("xi2 {} vs lifted {slack2}", root.ball.xi2));
             }
             // explicit part matches w
+            let rw = root.ball.weights();
             for j in 0..d {
-                if (root.center[j] - root.ball.w[j] as f64).abs() > 1e-3 {
+                if (root.center[j] - rw[j] as f64).abs() > 1e-3 {
                     return Err(format!("w[{j}] diverged from lifted center"));
                 }
             }

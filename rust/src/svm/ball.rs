@@ -5,15 +5,46 @@
 //! implicit slack mass `ξ²` (the squared norm of the center's component
 //! in the mutually-orthogonal slack subspace — never materialized because
 //! one pass touches each `e_n` at most once).
+//!
+//! # Lazily-scaled center
+//!
+//! The center is stored factored as `w = σ·v` with a cached `‖w‖²`.
+//! Algorithm 1's blend `w ← (1−β)w + βyx` then costs one scalar multiply
+//! (`σ ← (1−β)σ`) plus a scatter-add into `v`, and the line-5 distance
+//! uses the expansion `‖w − yx‖² = ‖w‖² − 2y⟨w,x⟩ + ‖x‖²` — so both the
+//! reject test and the update are O(nnz) in the example's stored
+//! coordinates, not O(D). `σ` only shrinks (by at most ×½ per update);
+//! when it drifts below [`SIGMA_FOLD`] it is folded back into `v` (an
+//! amortized-O(D/updates) renormalization that also refreshes the cached
+//! norm).
 
+use crate::data::FeaturesView;
 use crate::linalg;
 use crate::svm::TrainOptions;
 
-/// Streaming MEB / StreamSVM state: `(w, R, ξ², M)`.
+/// Fold `σ` into `v` once `|σ|` drops below this (β ≤ ½ ⇒ at least ~20
+/// updates between folds). Keeps `v` within comfortable f32 range: with
+/// `|σ| ≥ 1e-6`, `|v| ≤ 1e6·|w|`.
+const SIGMA_FOLD: f64 = 1e-6;
+
+/// Also renormalize every this many updates regardless of `σ`: the
+/// incremental `‖w‖²` recurrence tracks the ideal center while `v`
+/// rounds to f32 per scatter-add, so on very long streams (where β→0
+/// and `σ` may never cross [`SIGMA_FOLD`]) the cache would otherwise
+/// random-walk away from the stored center. Amortized cost O(D/2²⁰)
+/// per update — noise. The schedule depends only on `m`, so resume
+/// from a sketch replays it deterministically.
+const RENORM_EVERY: usize = 1 << 20;
+
+/// Streaming MEB / StreamSVM state: `(w, R, ξ², M)` with `w = σ·v`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BallState {
-    /// Explicit center part = SVM weight vector.
-    pub w: Vec<f32>,
+    /// Unscaled center direction; the true center is `w = σ·v`.
+    v: Vec<f32>,
+    /// Lazy scale on `v`.
+    sigma: f64,
+    /// Cached `‖w‖²` (f64, maintained incrementally).
+    wnorm2: f64,
     /// Ball radius.
     pub r: f64,
     /// Slack mass of the center.
@@ -23,53 +54,191 @@ pub struct BallState {
 }
 
 impl BallState {
-    /// Initialize from the first streamed example (Algorithm 1 line 3).
+    /// Initialize from the first streamed example (Algorithm 1 line 3):
+    /// `w = y x`, stored as `σ = y`, `v = x`.
     pub fn init(x: &[f32], y: f32, opts: &TrainOptions) -> Self {
-        let mut w = vec![0.0f32; x.len()];
-        linalg::blend_into(&mut w, x, y, 1.0);
-        BallState { w, r: 0.0, xi2: opts.s2(), m: 1 }
+        Self::init_view(FeaturesView::Dense(x), y, opts)
+    }
+
+    /// [`Self::init`] for a dense-or-sparse feature view.
+    pub fn init_view(x: FeaturesView<'_>, y: f32, opts: &TrainOptions) -> Self {
+        debug_assert!(y == 1.0 || y == -1.0, "labels must be ±1, got {y}");
+        let wnorm2 = x.norm2();
+        BallState {
+            v: x.to_dense(),
+            sigma: y as f64,
+            wnorm2,
+            r: 0.0,
+            xi2: opts.s2(),
+            m: 1,
+        }
     }
 
     /// A zero-radius ball at the origin (used by pipeline warm starts).
     pub fn zero(dim: usize, opts: &TrainOptions) -> Self {
-        BallState { w: vec![0.0; dim], r: 0.0, xi2: opts.s2(), m: 0 }
+        BallState { v: vec![0.0; dim], sigma: 1.0, wnorm2: 0.0, r: 0.0, xi2: opts.s2(), m: 0 }
+    }
+
+    /// Build from an explicit dense center (merges, device write-backs,
+    /// legacy sketches): `σ = 1`, cached norm computed once.
+    pub fn from_parts(w: Vec<f32>, r: f64, xi2: f64, m: usize) -> Self {
+        let wnorm2 = linalg::norm2(&w);
+        BallState { v: w, sigma: 1.0, wnorm2, r, xi2, m }
+    }
+
+    /// Rebuild the exact factored state (the sketch codec's decode path;
+    /// round-tripping `(v, σ, ‖w‖²)` bit-exactly is what keeps
+    /// checkpoint/resume bit-identical).
+    pub fn from_scaled(v: Vec<f32>, sigma: f64, wnorm2: f64, r: f64, xi2: f64, m: usize) -> Self {
+        BallState { v, sigma, wnorm2, r, xi2, m }
+    }
+
+    /// The lazy scale `σ` (codec / diagnostics).
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// The unscaled direction `v` (codec / diagnostics).
+    pub fn direction(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Cached `‖w‖²`.
+    pub fn wnorm2(&self) -> f64 {
+        self.wnorm2
+    }
+
+    /// Materialize the weight vector `w = σ·v`.
+    pub fn weights(&self) -> Vec<f32> {
+        self.v.iter().map(|&vi| (vi as f64 * self.sigma) as f32).collect()
+    }
+
+    /// Write `w = σ·v` into `out` (must be exactly `dim()` long) without
+    /// allocating — the pipeline's padded-scratch refresh.
+    pub fn write_weights(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.v.len());
+        for (o, &vi) in out.iter_mut().zip(&self.v) {
+            *o = (vi as f64 * self.sigma) as f32;
+        }
+    }
+
+    /// Raw margin `⟨w, x⟩ = σ·⟨v, x⟩` — no materialization.
+    pub fn score(&self, x: &[f32]) -> f64 {
+        self.sigma * linalg::dot(&self.v, x)
+    }
+
+    /// [`Self::score`] for a feature view — O(nnz).
+    pub fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        self.sigma * x.dot(&self.v)
     }
 
     /// Distance of `φ̃((x, y))` to the center (Algorithm 1 line 5):
     /// `d = sqrt(||w - y x||² + ξ² + 1/C)`.
     pub fn distance(&self, x: &[f32], y: f32, opts: &TrainOptions) -> f64 {
-        (linalg::sqdist_scaled(&self.w, x, y) + self.xi2 + opts.invc()).sqrt()
+        self.distance_view(FeaturesView::Dense(x), y, opts)
+    }
+
+    /// [`Self::distance`] for a feature view — O(nnz) via the expansion
+    /// with the cached `‖w‖²`.
+    pub fn distance_view(&self, x: FeaturesView<'_>, y: f32, opts: &TrainOptions) -> f64 {
+        let (wx, xn2) = self.dots(x);
+        let feat2 = (self.wnorm2 - 2.0 * y as f64 * wx + xn2).max(0.0);
+        (feat2 + self.xi2 + opts.invc()).sqrt()
+    }
+
+    /// `(⟨w,x⟩, ‖x‖²)` — the two O(nnz) reductions everything above is
+    /// assembled from.
+    fn dots(&self, x: FeaturesView<'_>) -> (f64, f64) {
+        debug_assert_eq!(x.dim(), self.v.len());
+        match x {
+            FeaturesView::Dense(xs) => {
+                (self.sigma * linalg::dot(&self.v, xs), linalg::norm2(xs))
+            }
+            FeaturesView::Sparse { idx, val, .. } => (
+                self.sigma * linalg::sparse_dot(&self.v, idx, val),
+                linalg::norm2(val),
+            ),
+        }
     }
 
     /// Algorithm 1 lines 5–10: absorb `(x, y)` if it falls outside the
     /// current ball. Returns `true` if an update happened.
     pub fn try_update(&mut self, x: &[f32], y: f32, opts: &TrainOptions) -> bool {
-        let d = self.distance(x, y, opts);
+        self.try_update_view(FeaturesView::Dense(x), y, opts)
+    }
+
+    /// [`Self::try_update`] for a feature view — O(nnz): one scalar
+    /// multiply on `σ`, a scatter-add into `v`, and closed-form `‖w‖²` /
+    /// `ξ²` / `R` refreshes.
+    pub fn try_update_view(&mut self, x: FeaturesView<'_>, y: f32, opts: &TrainOptions) -> bool {
+        let (wx, xn2) = self.dots(x);
+        let feat2 = (self.wnorm2 - 2.0 * y as f64 * wx + xn2).max(0.0);
+        let d = (feat2 + self.xi2 + opts.invc()).sqrt();
+        if !d.is_finite() {
+            // A non-finite distance (NaN features smuggled past the
+            // ingestion guards, or inf overflow) must not poison the
+            // center: `d < r` is false for NaN, so without this guard
+            // the blend below would write NaN into w forever.
+            debug_assert!(false, "non-finite distance in try_update (d = {d})");
+            return false;
+        }
         if d < self.r {
             return false;
         }
         let beta = 0.5 * (1.0 - self.r / d);
-        linalg::blend_into(&mut self.w, x, y, beta as f32);
-        self.r += 0.5 * (d - self.r);
         let omb = 1.0 - beta;
+        self.sigma *= omb;
+        // w' = (1-β)w + βyx  ⇔  v += (βy/σ')x with σ' already scaled.
+        x.axpy_into(&mut self.v, (beta * y as f64 / self.sigma) as f32);
+        self.wnorm2 = (omb * omb * self.wnorm2
+            + 2.0 * omb * beta * y as f64 * wx
+            + beta * beta * xn2)
+            .max(0.0);
+        self.r += 0.5 * (d - self.r);
         self.xi2 = self.xi2 * omb * omb + beta * beta * opts.s2();
         self.m += 1;
+        if self.sigma.abs() < SIGMA_FOLD || self.m % RENORM_EVERY == 0 {
+            self.renormalize();
+        }
         true
+    }
+
+    /// Fold `σ` into `v` and refresh the cached norm (amortized; see the
+    /// module docs).
+    fn renormalize(&mut self) {
+        for vi in self.v.iter_mut() {
+            *vi = (*vi as f64 * self.sigma) as f32;
+        }
+        self.sigma = 1.0;
+        self.wnorm2 = linalg::norm2(&self.v);
+    }
+
+    /// `‖c_a − c_b‖²` of the explicit parts, computed without
+    /// materializing either weight vector (two-ball merge geometry).
+    pub fn center_diff_norm2(&self, other: &BallState) -> f64 {
+        assert_eq!(self.v.len(), other.v.len());
+        let mut acc = 0.0f64;
+        for i in 0..self.v.len() {
+            let d = self.sigma * self.v[i] as f64 - other.sigma * other.v[i] as f64;
+            acc += d * d;
+        }
+        acc
     }
 
     /// `||c||²` in the augmented space.
     pub fn center_norm2(&self) -> f64 {
-        linalg::norm2(&self.w) + self.xi2
+        self.wnorm2 + self.xi2
     }
 
     pub fn dim(&self) -> usize {
-        self.w.len()
+        self.v.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::Features;
     use crate::prop::{check_default, gen};
     use crate::svm::SlackMode;
 
@@ -80,10 +249,11 @@ mod tests {
     #[test]
     fn init_state() {
         let b = BallState::init(&[2.0, -1.0], -1.0, &opts());
-        assert_eq!(b.w, vec![-2.0, 1.0]);
+        assert_eq!(b.weights(), vec![-2.0, 1.0]);
         assert_eq!(b.r, 0.0);
         assert_eq!(b.xi2, 1.0); // consistent mode at C=1 → 1/C = 1
         assert_eq!(b.m, 1);
+        assert_eq!(b.wnorm2(), 5.0);
     }
 
     #[test]
@@ -94,7 +264,7 @@ mod tests {
         let mut b = BallState::init(&[0.0, 0.0], 1.0, &o);
         let d0 = b.distance(&[2.0, 0.0], 1.0, &o);
         assert!(b.try_update(&[2.0, 0.0], 1.0, &o));
-        assert_eq!(b.w, vec![1.0, 0.0]);
+        assert_eq!(b.weights(), vec![1.0, 0.0]);
         assert!((b.r - 0.5 * d0).abs() < 1e-12);
         assert_eq!(b.m, 2);
     }
@@ -109,6 +279,75 @@ mod tests {
         assert!(!b.try_update(&[5.0], 1.0, &o));
         assert_eq!(b.r, r_before);
         assert_eq!(b.m, 2);
+    }
+
+    #[test]
+    fn non_finite_distance_is_skipped_in_release() {
+        // Satellite guard: a NaN feature must not update the ball (in
+        // release; debug builds assert). `d < r` is false for NaN, so the
+        // unguarded update would poison w forever.
+        if cfg!(debug_assertions) {
+            let o = opts();
+            let mut b = BallState::init(&[1.0], 1.0, &o);
+            let r = std::panic::catch_unwind(move || {
+                b.try_update(&[f32::NAN], 1.0, &o);
+            });
+            assert!(r.is_err(), "debug build should assert on NaN distance");
+        } else {
+            let o = opts();
+            let mut b = BallState::init(&[1.0], 1.0, &o);
+            let before = b.clone();
+            assert!(!b.try_update(&[f32::NAN], 1.0, &o));
+            assert_eq!(b, before, "NaN example must leave the ball untouched");
+            assert!(b.weights()[0].is_finite());
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_updates_agree() {
+        let o = opts();
+        let xs: Vec<Vec<f32>> = vec![
+            vec![0.0, 2.0, 0.0, 0.0],
+            vec![1.0, 0.0, 0.0, -1.0],
+            vec![0.0, 0.0, 3.0, 0.0],
+            vec![0.5, 0.5, 0.0, 0.0],
+        ];
+        let ys = [1.0f32, -1.0, 1.0, -1.0];
+        let mut dense = BallState::init(&xs[0], ys[0], &o);
+        let sp = |x: &[f32]| Features::Dense(x.to_vec()).to_sparse();
+        let f0 = sp(&xs[0]);
+        let mut sparse = BallState::init_view(f0.view(), ys[0], &o);
+        for (x, y) in xs[1..].iter().zip(&ys[1..]) {
+            let f = sp(x);
+            let ud = dense.try_update(x, *y, &o);
+            let us = sparse.try_update_view(f.view(), *y, &o);
+            assert_eq!(ud, us);
+        }
+        assert_eq!(dense.m, sparse.m);
+        assert!((dense.r - sparse.r).abs() < 1e-9);
+        assert!((dense.xi2 - sparse.xi2).abs() < 1e-9);
+        for (a, b) in dense.weights().iter().zip(sparse.weights()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sigma_folds_without_changing_geometry() {
+        // An adversarial stream (every point escapes) drives many β≈½
+        // updates; σ must fold back into v without disturbing w.
+        let o = opts();
+        let mut b = BallState::init(&[1.0], 1.0, &o);
+        for i in 1..=200 {
+            b.try_update(&[1.2f32.powi(i)], 1.0, &o);
+        }
+        // every point escapes (geometric growth), so ~200 β≈0.07 updates
+        // shrink σ past the fold threshold at least once
+        assert_eq!(b.m, 201, "geometric stream must always escape");
+        assert!(b.sigma().abs() >= SIGMA_FOLD / 2.0, "sigma = {}", b.sigma());
+        let w = b.weights();
+        assert!(w[0].is_finite());
+        let rel = (b.wnorm2() - (w[0] as f64).powi(2)).abs() / b.wnorm2().max(1e-12);
+        assert!(rel < 1e-4, "cached norm drifted: {rel}");
     }
 
     #[test]
@@ -146,11 +385,7 @@ mod tests {
                     // ||c' - c||² in augmented space: explicit diff plus
                     // slack-mass displacement. With beta the blend weight,
                     // slack displacement² = beta²(ξ²_old + s²).
-                    let mut diff2 = 0.0f64;
-                    for i in 0..b.w.len() {
-                        let dd = b.w[i] as f64 - before.w[i] as f64;
-                        diff2 += dd * dd;
-                    }
+                    let diff2 = b.center_diff_norm2(&before);
                     // recover beta from the radius update: r' = r + (d-r)/2
                     // and beta = (1 - r/d)/2 → d = 2 r' - r ... use defs:
                     let dist = 2.0 * b.r - before.r;
@@ -177,5 +412,18 @@ mod tests {
         let oc = o.with_slack_mode(SlackMode::Consistent);
         let bc = BallState::init(&[1.0], 1.0, &oc);
         assert!((bc.xi2 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_parts_roundtrip() {
+        let b = BallState::from_parts(vec![1.5, -2.0], 3.0, 0.25, 7);
+        assert_eq!(b.weights(), vec![1.5, -2.0]);
+        assert_eq!(b.sigma(), 1.0);
+        assert!((b.wnorm2() - 6.25).abs() < 1e-12);
+        assert_eq!(b.dim(), 2);
+        let mut out = [0.0f32; 2];
+        b.write_weights(&mut out);
+        assert_eq!(out, [1.5, -2.0]);
+        assert_eq!(b.score(&[2.0, 1.0]), 1.0);
     }
 }

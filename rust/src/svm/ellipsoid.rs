@@ -105,7 +105,7 @@ impl EllipsoidSvm {
     ) -> Self {
         let mut m = EllipsoidSvm::new(dim, *opts);
         for e in stream {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m
     }

@@ -99,7 +99,7 @@ impl KernelStreamSvm {
     ) -> Self {
         let mut m = KernelStreamSvm::new(kernel, *opts);
         for e in stream {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m
     }

@@ -9,7 +9,6 @@
 
 use crate::data::Example;
 use crate::eval::Classifier;
-use crate::linalg;
 use crate::svm::ball::BallState;
 use crate::svm::meb::solve_merge;
 use crate::svm::TrainOptions;
@@ -59,22 +58,29 @@ impl LookaheadSvm {
 
     /// Stream one example (Algorithm 2 lines 3–9).
     pub fn observe(&mut self, x: &[f32], y: f32) {
-        debug_assert_eq!(x.len(), self.dim);
+        self.observe_view(crate::data::FeaturesView::Dense(x), y)
+    }
+
+    /// [`Self::observe`] for a dense-or-sparse feature view: the
+    /// enclosure test is O(nnz); buffered survivors densify (the merge
+    /// solve is dense by nature).
+    pub fn observe_view(&mut self, x: crate::data::FeaturesView<'_>, y: f32) {
+        debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
         let Some(ball) = &mut self.ball else {
-            self.ball = Some(BallState::init(x, y, &self.opts));
+            self.ball = Some(BallState::init_view(x, y, &self.opts));
             return;
         };
-        let d = ball.distance(x, y, &self.opts);
+        let d = ball.distance_view(x, y, &self.opts);
         if d < ball.r {
             return; // enclosed: discard
         }
         if self.opts.lookahead == 1 {
             // L = 1 degenerates to the closed-form Algorithm-1 update.
-            ball.try_update(x, y, &self.opts);
+            ball.try_update_view(x, y, &self.opts);
             return;
         }
-        self.buf_x.push(x.to_vec());
+        self.buf_x.push(x.to_dense());
         self.buf_y.push(y);
         if self.buf_x.len() == self.opts.lookahead {
             self.flush();
@@ -109,14 +115,14 @@ impl LookaheadSvm {
     ) -> Self {
         let mut model = LookaheadSvm::new(dim, *opts);
         for e in stream {
-            model.observe(&e.x, e.y);
+            model.observe_view(e.x.view(), e.y);
         }
         model.finish();
         model
     }
 
-    pub fn weights(&self) -> &[f32] {
-        self.ball.as_ref().map(|b| b.w.as_slice()).unwrap_or(&[])
+    pub fn weights(&self) -> Vec<f32> {
+        self.ball.as_ref().map(|b| b.weights()).unwrap_or_default()
     }
 
     pub fn radius(&self) -> f64 {
@@ -150,7 +156,14 @@ impl LookaheadSvm {
 impl Classifier for LookaheadSvm {
     fn score(&self, x: &[f32]) -> f64 {
         match &self.ball {
-            Some(b) => linalg::dot(&b.w, x),
+            Some(b) => b.score(x),
+            None => 0.0,
+        }
+    }
+
+    fn score_view(&self, x: crate::data::FeaturesView<'_>) -> f64 {
+        match &self.ball {
+            Some(b) => b.score_view(x),
             None => 0.0,
         }
     }
@@ -210,7 +223,7 @@ mod tests {
         let train = stream(200, 3, 0.5, 1);
         let mut m = LookaheadSvm::new(3, TrainOptions::default().with_lookahead(8));
         for e in &train {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m.finish();
         let w = m.weights().to_vec();

@@ -37,9 +37,7 @@ pub struct MergeResult {
 pub fn merge_gram(ball: &BallState, xs: &[&[f32]], ys: &[f32], s2: f64) -> Vec<f64> {
     let l = ys.len();
     let cc = ball.center_norm2();
-    let cp: Vec<f64> = (0..l)
-        .map(|i| ys[i] as f64 * linalg::dot(&ball.w, xs[i]))
-        .collect();
+    let cp: Vec<f64> = (0..l).map(|i| ys[i] as f64 * ball.score(xs[i])).collect();
     let mut g = vec![0.0f64; l * l];
     for i in 0..l {
         for j in 0..=i {
@@ -122,14 +120,15 @@ pub fn solve_merge(
 
     let r1 = merge_objective(&mu, &g, r0);
     let tot: f64 = mu.iter().sum();
-    let mut w1: Vec<f32> = ball.w.iter().map(|&v| (1.0 - tot) as f32 * v).collect();
+    let mut w1: Vec<f32> =
+        ball.weights().iter().map(|&v| (1.0 - tot) as f32 * v).collect();
     for i in 0..l {
         linalg::axpy(&mut w1, (mu[i] * ys[i] as f64) as f32, xs[i]);
     }
     let xi1 = (1.0 - tot) * (1.0 - tot) * ball.xi2
         + mu.iter().map(|m| m * m).sum::<f64>() * s2;
     MergeResult {
-        ball: BallState { w: w1, r: r1, xi2: xi1, m: ball.m + l },
+        ball: BallState::from_parts(w1, r1, xi1, ball.m + l),
         mu,
     }
 }
@@ -205,7 +204,7 @@ mod tests {
 
     fn mk_ball(dim: usize, rng: &mut Pcg32) -> BallState {
         let w: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
-        BallState { w, r: 1.0 + rng.uniform(), xi2: 0.5, m: 3 }
+        BallState::from_parts(w, 1.0 + rng.uniform(), 0.5, 3)
     }
 
     /// Explicit-space verification of the merge: materialize c0 and the
@@ -219,11 +218,12 @@ mod tests {
         res: &MergeResult,
         tol: f64,
     ) -> Result<(), String> {
-        let d = ball.w.len();
+        let d = ball.dim();
         let l = ys.len();
+        let bw = ball.weights();
         let mut c0 = vec![0.0f64; d + l + 1];
         for i in 0..d {
-            c0[i] = ball.w[i] as f64;
+            c0[i] = bw[i] as f64;
         }
         c0[d + l] = ball.xi2.sqrt();
         let mut pts = Vec::new();
@@ -259,8 +259,9 @@ mod tests {
             }
         }
         // explicit-part & slack bookkeeping agree
+        let rw = res.ball.weights();
         for j in 0..d {
-            if (c1[j] - res.ball.w[j] as f64).abs() > 1e-3 {
+            if (c1[j] - rw[j] as f64).abs() > 1e-3 {
                 return Err(format!("w mismatch at {j}"));
             }
         }

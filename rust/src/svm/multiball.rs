@@ -15,7 +15,6 @@
 
 use crate::data::Example;
 use crate::eval::Classifier;
-use crate::linalg;
 use crate::svm::ball::BallState;
 use crate::svm::TrainOptions;
 
@@ -43,14 +42,10 @@ pub struct MultiBallSvm {
     merged: Option<BallState>,
 }
 
-/// Augmented-space distance between two ball centers.
+/// Augmented-space distance between two ball centers (no
+/// materialization of either weight vector).
 fn center_dist(a: &BallState, b: &BallState) -> f64 {
-    let mut diff2 = 0.0f64;
-    for i in 0..a.w.len() {
-        let d = a.w[i] as f64 - b.w[i] as f64;
-        diff2 += d * d;
-    }
-    (diff2 + a.xi2 + b.xi2).sqrt()
+    (a.center_diff_norm2(b) + a.xi2 + b.xi2).sqrt()
 }
 
 /// Closed-form MEB of two balls; also returns the blend weight λ
@@ -73,12 +68,14 @@ pub fn merge_two_lambda(a: &BallState, b: &BallState) -> (BallState, f64) {
     let r = 0.5 * (a.r + b.r + t);
     // center at distance (r - a.r) from a toward b
     let lam = if t > 0.0 { (r - a.r) / t } else { 0.5 };
-    let mut w = a.w.clone();
-    for i in 0..w.len() {
-        w[i] = ((1.0 - lam) * a.w[i] as f64 + lam * b.w[i] as f64) as f32;
-    }
+    let (wa, wb) = (a.weights(), b.weights());
+    let w: Vec<f32> = wa
+        .iter()
+        .zip(&wb)
+        .map(|(&x, &y)| ((1.0 - lam) * x as f64 + lam * y as f64) as f32)
+        .collect();
     let xi2 = (1.0 - lam) * (1.0 - lam) * a.xi2 + lam * lam * b.xi2;
-    (BallState { w, r, xi2, m: a.m + b.m }, lam)
+    (BallState::from_parts(w, r, xi2, a.m + b.m), lam)
 }
 
 /// Closed-form MEB of two balls.
@@ -173,7 +170,7 @@ impl MultiBallSvm {
     ) -> Self {
         let mut m = MultiBallSvm::new(dim, max_balls, policy, *opts);
         for e in stream {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m.final_ball();
         m
@@ -197,11 +194,22 @@ impl Classifier for MultiBallSvm {
     /// vote over live balls.
     fn score(&self, x: &[f32]) -> f64 {
         if let Some(m) = &self.merged {
-            return linalg::dot(&m.w, x);
+            return m.score(x);
         }
         self.balls
             .iter()
-            .map(|b| linalg::dot(&b.w, x))
+            .map(|b| b.score(x))
+            .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+            .unwrap_or(0.0)
+    }
+
+    fn score_view(&self, x: crate::data::FeaturesView<'_>) -> f64 {
+        if let Some(m) = &self.merged {
+            return m.score_view(x);
+        }
+        self.balls
+            .iter()
+            .map(|b| b.score_view(x))
             .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
             .unwrap_or(0.0)
     }
@@ -220,17 +228,19 @@ mod tests {
         // and ||m−b|| + r_b ≤ r_m.
         check_default("two-ball-merge-enclosure", |rng, _| {
             let d = gen::dim(rng);
-            let mk = |rng: &mut crate::rng::Pcg32| BallState {
-                w: (0..d).map(|_| rng.normal() as f32 * 2.0).collect(),
-                r: rng.uniform() * 3.0,
-                xi2: rng.uniform(),
-                m: 1,
+            let mk = |rng: &mut crate::rng::Pcg32| {
+                BallState::from_parts(
+                    (0..d).map(|_| rng.normal() as f32 * 2.0).collect(),
+                    rng.uniform() * 3.0,
+                    rng.uniform(),
+                    1,
+                )
             };
             let a = mk(rng);
             let b = mk(rng);
             let (m, lam) = merge_two_lambda(&a, &b);
             let lift = |ball: &BallState, sa: f64, sb: f64| -> Vec<f64> {
-                let mut v: Vec<f64> = ball.w.iter().map(|&x| x as f64).collect();
+                let mut v: Vec<f64> = ball.weights().iter().map(|&x| x as f64).collect();
                 v.push(sa);
                 v.push(sb);
                 v
@@ -266,11 +276,11 @@ mod tests {
 
     #[test]
     fn merge_two_containment_shortcut() {
-        let big = BallState { w: vec![0.0, 0.0], r: 10.0, xi2: 0.0, m: 5 };
-        let small = BallState { w: vec![1.0, 0.0], r: 1.0, xi2: 0.0, m: 2 };
+        let big = BallState::from_parts(vec![0.0, 0.0], 10.0, 0.0, 5);
+        let small = BallState::from_parts(vec![1.0, 0.0], 1.0, 0.0, 2);
         let m = merge_two(&big, &small);
         assert_eq!(m.r, 10.0);
-        assert_eq!(m.w, vec![0.0, 0.0]);
+        assert_eq!(m.weights(), vec![0.0, 0.0]);
         assert_eq!(m.m, 7);
     }
 
@@ -304,7 +314,7 @@ mod tests {
                 mb.observe(x, *y);
             }
             let fb = mb.final_ball().unwrap();
-            if fb.w.as_slice() != a1.weights() {
+            if fb.weights() != a1.weights() {
                 return Err("L=1 multiball diverged from Algorithm 1".into());
             }
             Ok(())

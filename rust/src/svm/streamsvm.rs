@@ -1,8 +1,12 @@
 //! Algorithm 1: StreamSVM — the one-pass, O(D)-memory ℓ₂-SVM learner.
+//!
+//! The per-example hot path accepts a [`FeaturesView`], so sparse
+//! examples cost O(nnz) per update (see [`crate::svm::ball`]); the
+//! `&[f32]` entry points remain for dense callers.
 
-use crate::data::Example;
+use crate::data::{Example, FeaturesView};
+use crate::error::{Error, Result};
 use crate::eval::Classifier;
-use crate::linalg;
 use crate::svm::ball::BallState;
 use crate::svm::TrainOptions;
 
@@ -25,15 +29,42 @@ impl StreamSvm {
 
     /// One streamed example (Algorithm 1 lines 4–11; line 3 on the first).
     pub fn observe(&mut self, x: &[f32], y: f32) -> bool {
-        debug_assert_eq!(x.len(), self.dim);
+        self.observe_view(FeaturesView::Dense(x), y)
+    }
+
+    /// [`Self::observe`] for a dense-or-sparse feature view — O(nnz).
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
         match &mut self.ball {
             None => {
-                self.ball = Some(BallState::init(x, y, &self.opts));
+                self.ball = Some(BallState::init_view(x, y, &self.opts));
                 true
             }
-            Some(b) => b.try_update(x, y, &self.opts),
+            Some(b) => b.try_update_view(x, y, &self.opts),
         }
+    }
+
+    /// Validated [`Self::observe_view`] for untrusted inputs (library
+    /// consumers, the serving path): rejects wrong-dimension examples,
+    /// non-finite features and non-±1 labels with [`Error::Config`] /
+    /// [`Error::Data`] instead of panicking deep inside a `linalg`
+    /// assert in release builds.
+    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
+        if x.dim() != self.dim {
+            return Err(Error::config(format!(
+                "example has dimension {} but the model expects {}",
+                x.dim(),
+                self.dim
+            )));
+        }
+        if !x.is_finite() {
+            return Err(Error::data("example has non-finite feature values"));
+        }
+        if y != 1.0 && y != -1.0 {
+            return Err(Error::data(format!("label must be ±1, got {y}")));
+        }
+        Ok(self.observe_view(x, y))
     }
 
     /// Train on a full stream in one pass.
@@ -44,14 +75,15 @@ impl StreamSvm {
     ) -> Self {
         let mut model = StreamSvm::new(dim, *opts);
         for e in stream {
-            model.observe(&e.x, e.y);
+            model.observe_view(e.x.view(), e.y);
         }
         model
     }
 
-    /// The learned weight vector (zeros before any data).
-    pub fn weights(&self) -> &[f32] {
-        self.ball.as_ref().map(|b| b.w.as_slice()).unwrap_or(&[])
+    /// The learned weight vector, materialized (zeros-length before any
+    /// data; the ball stores the center factored as `σ·v`).
+    pub fn weights(&self) -> Vec<f32> {
+        self.ball.as_ref().map(|b| b.weights()).unwrap_or_default()
     }
 
     /// Current ball radius (the margin surrogate `R`).
@@ -94,7 +126,14 @@ impl StreamSvm {
 impl Classifier for StreamSvm {
     fn score(&self, x: &[f32]) -> f64 {
         match &self.ball {
-            Some(b) => linalg::dot(&b.w, x),
+            Some(b) => b.score(x),
+            None => 0.0,
+        }
+    }
+
+    fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        match &self.ball {
+            Some(b) => b.score_view(x),
             None => 0.0,
         }
     }
@@ -141,6 +180,43 @@ mod tests {
         let model = StreamSvm::new(3, TrainOptions::default());
         assert_eq!(model.score(&[1.0, 2.0, 3.0]), 0.0);
         assert_eq!(model.num_support(), 0);
+    }
+
+    #[test]
+    fn try_observe_validates_inputs() {
+        let mut m = StreamSvm::new(3, TrainOptions::default());
+        // wrong dimension → Error::Config with context, not a panic
+        let err = m.try_observe(FeaturesView::Dense(&[1.0, 2.0]), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("dimension 2"), "{err}");
+        // non-finite features → Error::Data
+        let err = m.try_observe(FeaturesView::Dense(&[1.0, f32::NAN, 0.0]), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        // bad label → Error::Data
+        let err = m.try_observe(FeaturesView::Dense(&[1.0, 2.0, 3.0]), 0.5).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        // none of the rejects consumed a stream position
+        assert_eq!(m.examples_seen(), 0);
+        // a valid example passes through to the ordinary update
+        assert!(m.try_observe(FeaturesView::Dense(&[1.0, 2.0, 3.0]), 1.0).unwrap());
+        assert_eq!(m.examples_seen(), 1);
+    }
+
+    #[test]
+    fn sparse_observe_matches_dense() {
+        let train = toy_stream(400, 8, 0.5, 11);
+        let opts = TrainOptions::default();
+        let dense = StreamSvm::fit(train.iter(), 8, &opts);
+        let mut sparse = StreamSvm::new(8, opts);
+        for e in &train {
+            let s = e.x.to_sparse();
+            sparse.observe_view(s.view(), e.y);
+        }
+        assert_eq!(dense.num_support(), sparse.num_support());
+        assert!((dense.radius() - sparse.radius()).abs() < 1e-6 * dense.radius().max(1.0));
+        for (a, b) in dense.weights().iter().zip(sparse.weights()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -36,7 +36,7 @@ fn interrupt_at_arbitrary_index_resume_bit_identical_on_real_data() {
         let k = rng.below(ds.train.len() + 1);
         let mut partial = StreamSvm::new(ds.dim, opts);
         for e in ds.train.iter().take(k) {
-            partial.observe(&e.x, e.y);
+            partial.observe_view(e.x.view(), e.y);
         }
         let path = dir.join(format!("cut{case}.meb"));
         MebSketch::from_model(&partial, "waveform")
@@ -118,7 +118,7 @@ fn shard_sketch_files_merge_end_to_end() {
     for s in 0..shards {
         let mut m = StreamSvm::new(ds.dim, opts);
         for e in ds.train.iter().skip(s).step_by(shards) {
-            m.observe(&e.x, e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         let p = dir.join(format!("s{s}.meb"));
         MebSketch::from_model(&m, format!("s{s}")).write_to(&p).unwrap();

@@ -101,8 +101,9 @@ fn algorithm1_final_ball_encloses_entire_stream() {
                 ..TrainOptions::default()
             };
             let (ball, tracker) = run_algo1_tracked(&xs, &ys, &opts);
+            let bw = ball.weights();
             for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
-                let dist = tracker.sqdist(&ball.w, x, *y, i).sqrt();
+                let dist = tracker.sqdist(&bw, x, *y, i).sqrt();
                 if dist > ball.r * (1.0 + 2e-3) + 1e-9 {
                     return Err(format!("point {i}: d {dist} > R {}", ball.r));
                 }
@@ -151,8 +152,9 @@ fn algorithm2_final_ball_encloses_entire_stream() {
                 }
             }
             flush(&mut ball, &mut tracker, &mut buf);
+            let bw = ball.weights();
             for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
-                let dist = tracker.sqdist(&ball.w, x, *y, i).sqrt();
+                let dist = tracker.sqdist(&bw, x, *y, i).sqrt();
                 if dist > ball.r * (1.0 + 2e-3) + 1e-9 {
                     return Err(format!("L={l} point {i}: d {dist} > R {}", ball.r));
                 }
@@ -345,14 +347,14 @@ fn multiball_more_balls_never_larger_final_radius_on_clusters() {
     let r1 = {
         let mut m = MultiBallSvm::new(2, 1, MergePolicy::NearestBall, opts);
         for e in &exs {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m.final_ball().unwrap().r
     };
     let r4 = {
         let mut m = MultiBallSvm::new(2, 4, MergePolicy::NewBallMergeClosest, opts);
         for e in &exs {
-            m.observe(&e.x, e.y);
+            m.observe(&e.x.dense(), e.y);
         }
         m.final_ball().unwrap().r
     };

@@ -54,7 +54,7 @@ fn distance_artifact_matches_rust() {
             .distance(&padded(&w, d_pad), &block.x, &block.y, xi2 as f32, invc as f32, b, d_pad)
             .unwrap();
         for (i, e) in exs.iter().enumerate() {
-            let want = (linalg::sqdist_scaled(&w, &e.x, e.y) + xi2 + invc).sqrt();
+            let want = (linalg::sqdist_scaled(&w, &e.x.dense(), e.y) + xi2 + invc).sqrt();
             assert!(
                 (got[i] as f64 - want).abs() < 1e-3 * want.max(1.0),
                 "d={d} row {i}: artifact {} vs rust {want}",
@@ -75,7 +75,7 @@ fn predict_artifact_matches_rust() {
     let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
     let got = rt.predict(&padded(&w, d_pad), &block.x, b, d_pad).unwrap();
     for (i, e) in exs.iter().enumerate() {
-        let want = linalg::dot(&w, &e.x);
+        let want = e.x.view().dot(&w);
         assert!(
             (got[i] as f64 - want).abs() < 1e-3 * want.abs().max(1.0),
             "row {i}: {} vs {want}",
@@ -94,13 +94,13 @@ fn update_artifact_matches_algorithm1() {
     let opts = TrainOptions::default().with_c(2.0);
 
     // rust reference over the block, starting from example 0's init
-    let mut ball = BallState::init(&exs[0].x, exs[0].y, &opts);
+    let mut ball = BallState::init_view(exs[0].x.view(), exs[0].y, &opts);
     let block = Batcher::new(exs.clone().into_iter(), b, d, d_pad).next().unwrap();
     let mut valid = block.valid.clone();
     valid[0] = 0.0; // consumed by init
     let out = rt
         .update(
-            &padded(&ball.w, d_pad),
+            &padded(&ball.weights(), d_pad),
             ball.r as f32,
             ball.xi2 as f32,
             &block.x,
@@ -114,19 +114,20 @@ fn update_artifact_matches_algorithm1() {
         .unwrap();
     let mut updates = 0usize;
     for e in exs.iter().take(b).skip(1) {
-        if ball.try_update(&e.x, e.y, &opts) {
+        if ball.try_update_view(e.x.view(), e.y, &opts) {
             updates += 1;
         }
     }
     assert_eq!(out.m_added, updates, "update counts diverge");
     assert!((out.r - ball.r).abs() < 1e-3 * ball.r.max(1.0), "r {} vs {}", out.r, ball.r);
     assert!((out.xi2 - ball.xi2).abs() < 1e-3 * ball.xi2.max(1.0));
+    let bw = ball.weights();
     for i in 0..d {
         assert!(
-            (out.w[i] as f64 - ball.w[i] as f64).abs() < 2e-3,
+            (out.w[i] as f64 - bw[i] as f64).abs() < 2e-3,
             "w[{i}] {} vs {}",
             out.w[i],
-            ball.w[i]
+            bw[i]
         );
     }
 }
@@ -141,13 +142,13 @@ fn merge_artifact_matches_rust_solver() {
     let exs = toy(l, d, 17);
     let mut rng = Pcg32::seeded(5);
     let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-    let ball = BallState { w: w.clone(), r: 2.5, xi2: 0.6, m: 3 };
+    let ball = BallState::from_parts(w.clone(), 2.5, 0.6, 3);
 
     let mut xs = vec![0.0f32; l * d_pad];
     let mut ys = vec![0.0f32; l];
     let valid = vec![1.0f32; l];
     for (i, e) in exs.iter().enumerate() {
-        xs[i * d_pad..i * d_pad + d].copy_from_slice(&e.x);
+        e.x.view().write_into(&mut xs[i * d_pad..i * d_pad + d]);
         ys[i] = e.y;
     }
     let got = rt
@@ -163,7 +164,8 @@ fn merge_artifact_matches_rust_solver() {
             d_pad,
         )
         .unwrap();
-    let xrefs: Vec<&[f32]> = exs.iter().map(|e| e.x.as_slice()).collect();
+    let dense_rows: Vec<Vec<f32>> = exs.iter().map(|e| e.x.dense().into_owned()).collect();
+    let xrefs: Vec<&[f32]> = dense_rows.iter().map(|v| v.as_slice()).collect();
     let want = solve_merge(&ball, &xrefs, &ys, &opts);
     // Same Badoiu-Clarkson schedule on both sides → near-identical radii.
     assert!(
@@ -173,12 +175,13 @@ fn merge_artifact_matches_rust_solver() {
         want.ball.r
     );
     assert!((got.xi2 - want.ball.xi2).abs() < 1e-2 * want.ball.xi2.max(1.0));
+    let ww = want.ball.weights();
     for i in 0..d {
         assert!(
-            (got.w[i] as f64 - want.ball.w[i] as f64).abs() < 5e-3,
+            (got.w[i] as f64 - ww[i] as f64).abs() < 5e-3,
             "w[{i}] {} vs {}",
             got.w[i],
-            want.ball.w[i]
+            ww[i]
         );
     }
 }

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use streamsvm::data::Example;
+use streamsvm::data::{Example, Features};
 use streamsvm::prop::gen;
 use streamsvm::rng::Pcg32;
 use streamsvm::server::json::Json;
@@ -64,7 +64,7 @@ fn concurrent_train_and_predict_with_hot_swap_and_loadgen() {
                 let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
                 let mut last_version = 0u64;
                 for e in &examples {
-                    let o = client.predict(&e.x).unwrap();
+                    let o = client.predict_features(&e.x).unwrap();
                     // every reply is a 2xx from a published snapshot with
                     // a finite score — a torn model would break this
                     assert_eq!(o.status, 200);
@@ -86,7 +86,7 @@ fn concurrent_train_and_predict_with_hot_swap_and_loadgen() {
             std::thread::spawn(move || {
                 let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
                 for e in &examples {
-                    let o = client.train(&e.x, e.y).unwrap();
+                    let o = client.train_features(&e.x, e.y).unwrap();
                     // either explicitly accepted or explicitly shed
                     assert!(
                         o.status == 202 || o.status == 429,
@@ -248,7 +248,7 @@ fn train_queue_full_is_an_explicit_429() {
     let exs = toy(400, 3);
     let (mut accepted, mut shed) = (0u32, 0u32);
     for e in &exs {
-        let o = client.train(&e.x, e.y).unwrap();
+        let o = client.train_features(&e.x, e.y).unwrap();
         match o.status {
             202 => accepted += 1,
             429 => shed += 1,
@@ -261,4 +261,37 @@ fn train_queue_full_is_an_explicit_429() {
     drop(client);
     let report = handle.shutdown().unwrap();
     assert_eq!(report.trained, accepted as u64, "every accepted example absorbed");
+}
+
+#[test]
+fn sparse_payloads_round_trip_over_the_wire() {
+    let cfg = ServerConfig {
+        threads: 2,
+        conn_queue: 8,
+        train_queue: 64,
+        republish_every: 1,
+        read_timeout: Duration::from_secs(2),
+        tag: "sparse".into(),
+        ..Default::default()
+    };
+    let handle = serve(trained_model(), cfg).unwrap();
+    let addr = handle.addr();
+    let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+
+    // the same vector, dense and sparse: identical score from the server
+    let dense = Features::Dense(vec![0.0, 1.5, 0.0, 0.0, -2.0, 0.0]);
+    let sparse = dense.to_sparse();
+    assert!(matches!(&sparse, Features::Sparse { .. }));
+    let od = client.predict_features(&dense).unwrap();
+    let os = client.predict_features(&sparse).unwrap();
+    assert_eq!(od.status, 200);
+    assert_eq!(os.status, 200);
+    assert_eq!(od.score, os.score, "sparse score must match dense score");
+
+    // sparse training is accepted and absorbed
+    let o = client.train_features(&sparse, 1.0).unwrap();
+    assert_eq!(o.status, 202);
+    drop(client);
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.trained, 1);
 }

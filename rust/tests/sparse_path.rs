@@ -1,0 +1,145 @@
+//! Sparse-path integration suite: the O(nnz) hot path must be
+//! tolerance-identical to the dense path on the same stream, round-trip
+//! through the `.meb` codec, and compose with the LIBSVM loaders and the
+//! serving snapshot.
+
+use streamsvm::data::{Example, Features, SparseVec};
+use streamsvm::prop::{check, PropConfig};
+use streamsvm::rng::Pcg32;
+use streamsvm::sketch::codec::MebSketch;
+use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::TrainOptions;
+
+/// Random sparse stream: each row has `nnz` distinct sorted indices with
+/// N(0,1) values plus a label-aligned shift on a shared coordinate block.
+fn sparse_stream(rng: &mut Pcg32, n: usize, dim: usize, nnz: usize) -> Vec<Example> {
+    let mut out = Vec::with_capacity(n);
+    let mut taken = vec![false; dim];
+    for _ in 0..n {
+        let y = rng.label(0.5);
+        let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+        while idx.len() < nnz {
+            let i = rng.below(dim);
+            if !taken[i] {
+                taken[i] = true;
+                idx.push(i as u32);
+            }
+        }
+        for &i in &idx {
+            taken[i as usize] = false;
+        }
+        idx.sort_unstable();
+        let val: Vec<f32> = idx
+            .iter()
+            .map(|&i| {
+                let shift = if (i as usize) < dim / 8 { 0.5 * y as f64 } else { 0.0 };
+                (rng.normal() + shift) as f32
+            })
+            .collect();
+        out.push(Example::sparse(dim, idx, val, y));
+    }
+    out
+}
+
+fn densify(exs: &[Example]) -> Vec<Example> {
+    exs.iter().map(|e| Example::new(e.x.dense().into_owned(), e.y)).collect()
+}
+
+#[test]
+fn sparse_and_dense_paths_learn_identical_state() {
+    // The property of record for the O(nnz) refactor: on the same
+    // stream, the sparse and dense paths produce tolerance-identical
+    // (w, R, ξ², M).
+    check(
+        "sparse-dense-equivalence",
+        PropConfig { cases: 32, seed: 0x5BA }, // replayable
+        |rng, _| {
+            let dim = 16 + rng.below(200);
+            let nnz = 1 + rng.below(dim.min(24));
+            let n = 20 + rng.below(300);
+            let opts = TrainOptions::default().with_c(0.5 + rng.uniform() * 4.0);
+            let sparse = sparse_stream(rng, n, dim, nnz);
+            let dense = densify(&sparse);
+
+            let ms = StreamSvm::fit(sparse.iter(), dim, &opts);
+            let md = StreamSvm::fit(dense.iter(), dim, &opts);
+
+            if ms.num_support() != md.num_support() {
+                return Err(format!(
+                    "M diverged: sparse {} vs dense {}",
+                    ms.num_support(),
+                    md.num_support()
+                ));
+            }
+            let (bs, bd) = (ms.ball().unwrap(), md.ball().unwrap());
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+            if rel(bs.r, bd.r) > 1e-6 {
+                return Err(format!("R diverged: {} vs {}", bs.r, bd.r));
+            }
+            if rel(bs.xi2, bd.xi2) > 1e-6 {
+                return Err(format!("xi2 diverged: {} vs {}", bs.xi2, bd.xi2));
+            }
+            let (ws, wd) = (ms.weights(), md.weights());
+            let scale = wd.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for (i, (a, b)) in ws.iter().zip(&wd).enumerate() {
+                if (a - b).abs() > 1e-4 * scale {
+                    return Err(format!("w[{i}] diverged: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sparse_trained_model_roundtrips_through_meb_codec() {
+    let mut rng = Pcg32::seeded(0x5BB);
+    let sparse = sparse_stream(&mut rng, 300, 128, 6);
+    let opts = TrainOptions::default().with_c(2.0);
+    let model = StreamSvm::fit(sparse.iter(), 128, &opts);
+    assert!(model.num_support() >= 1);
+
+    let sk = MebSketch::from_model(&model, "sparse-train");
+    let back = MebSketch::decode(&sk.encode()).expect("decode");
+    assert_eq!(back, sk, "sketch must round-trip bit-exactly");
+    let rebuilt = back.to_model();
+    assert_eq!(rebuilt.weights(), model.weights());
+    assert_eq!(rebuilt.radius().to_bits(), model.radius().to_bits());
+    assert_eq!(rebuilt.num_support(), model.num_support());
+
+    // ... and resuming the rebuilt model on more sparse data behaves
+    // identically to never having serialized at all.
+    let more = sparse_stream(&mut rng, 100, 128, 6);
+    let mut a = model;
+    let mut b = rebuilt;
+    for e in &more {
+        a.observe_view(e.x.view(), e.y);
+        b.observe_view(e.x.view(), e.y);
+    }
+    assert_eq!(a.weights(), b.weights());
+    assert_eq!(a.radius().to_bits(), b.radius().to_bits());
+}
+
+#[test]
+fn libsvm_text_trains_sparse_end_to_end() {
+    // LIBSVM text → sparse examples → O(nnz) training → finite scores.
+    let text = "+1 3:1.0 40:0.5\n-1 1:1.0 7:-0.5\n+1 3:0.8 41:0.25\n-1 2:1.0\n";
+    let exs = streamsvm::data::libsvm_format::read_examples(text.as_bytes(), None).unwrap();
+    let dim = exs[0].dim();
+    assert_eq!(dim, 41); // max 1-based index 41 → 0-based dim 41
+    assert!(exs.iter().all(|e| matches!(&e.x, Features::Sparse { .. })));
+    let model = StreamSvm::fit(exs.iter(), dim, &TrainOptions::default());
+    for e in &exs {
+        let s = model.ball().unwrap().score_view(e.x.view());
+        assert!(s.is_finite());
+    }
+}
+
+#[test]
+fn sparse_vec_invariants() {
+    let v = SparseVec::from_dense(&[0.0, 1.5, 0.0, -2.0, 0.0]);
+    assert_eq!(v.nnz(), 2);
+    assert_eq!(v.to_dense(5), vec![0.0, 1.5, 0.0, -2.0, 0.0]);
+    assert_eq!(v.get(3), -2.0);
+    assert_eq!(v.get(0), 0.0);
+}
