@@ -1,12 +1,14 @@
-//! Sparse vs dense Algorithm-1 hot path at w3a-like density
-//! (`BENCH_sparse.json`).
+//! Sparse vs dense hot paths at w3a-like density (`BENCH_sparse.json`):
+//! the Algorithm-1 per-example update and the Algorithm-2 lookahead
+//! flush (L > 1, where the merge Gram used to densify every survivor).
 //!
 //! Generates one synthetic stream at ~4% density and D ≥ 10k, runs the
-//! identical stream through `StreamSvm::observe_view` twice — once with
-//! sparse `idx`/`val` features (O(nnz) per example), once densified
-//! (O(D)) — and reports per-example cost plus the speedup ratio. The two
-//! runs must agree on the learned state (tolerance-checked here; the
-//! exact property test lives in `rust/tests/sparse_path.rs`).
+//! identical stream through `StreamSvm::observe_view` (and
+//! `LookaheadSvm` at L = 8) twice — once with sparse `idx`/`val`
+//! features (O(nnz) per example, O(L²·nnz) per flush), once densified
+//! (O(D) / O(L²·D)) — and reports per-example cost plus the speedup
+//! ratios. The runs must agree on the learned state (tolerance-checked
+//! here; the exact property tests live in `rust/tests/sparse_path.rs`).
 //!
 //! `STREAMSVM_BENCH_SMOKE=1` shrinks the stream for the CI smoke step
 //! (the dimension stays ≥ 10k so the measured regime is the real one).
@@ -17,11 +19,14 @@ use streamsvm::bench_util::{bench, Table};
 use streamsvm::data::Example;
 use streamsvm::rng::Pcg32;
 use streamsvm::server::json::fmt_num;
+use streamsvm::svm::lookahead::LookaheadSvm;
 use streamsvm::svm::streamsvm::StreamSvm;
 use streamsvm::svm::TrainOptions;
 
 const DIM: usize = 16_384;
 const DENSITY: f64 = 0.04;
+/// Lookahead width for the Algorithm-2 column.
+const LOOKAHEAD: usize = 8;
 
 /// A stream of sparse examples: `nnz` random coordinates each, values
 /// N(0,1) plus a label-aligned shift on a shared prefix of coordinates
@@ -65,6 +70,20 @@ fn fit_ns_per_example(stream: &[Example], dim: usize, opts: &TrainOptions, reps:
     (stats.p50.as_nanos() as f64 / stream.len() as f64, model)
 }
 
+fn fit_lookahead_ns(
+    stream: &[Example],
+    dim: usize,
+    opts: &TrainOptions,
+    reps: usize,
+) -> (f64, LookaheadSvm) {
+    let stats = bench(1, reps, || {
+        let m = LookaheadSvm::fit(stream.iter(), dim, opts);
+        std::hint::black_box(m.radius());
+    });
+    let model = LookaheadSvm::fit(stream.iter(), dim, opts);
+    (stats.p50.as_nanos() as f64 / stream.len() as f64, model)
+}
+
 fn main() {
     let smoke = std::env::var("STREAMSVM_BENCH_SMOKE").is_ok();
     let (n, reps) = if smoke { (600, 3) } else { (4000, 5) };
@@ -86,24 +105,58 @@ fn main() {
     assert_eq!(ms.num_support(), md.num_support(), "paths diverged on update count");
     assert!(radius_rel_diff < 1e-6, "paths diverged on radius: {radius_rel_diff}");
 
-    let mut t = Table::new(&["path", "ns/example", "examples/s", "updates"]);
-    for (name, ns, m) in [("dense", dense_ns, &md), ("sparse", sparse_ns, &ms)] {
+    // ---- Algorithm-2 lookahead column: the flush cost (merge Gram +
+    // center reconstruction) is where sparse buffers pay off beyond the
+    // per-example distance test.
+    let la_opts = TrainOptions::default().with_lookahead(LOOKAHEAD);
+    let (la_sparse_ns, las) = fit_lookahead_ns(&sparse, DIM, &la_opts, reps);
+    let (la_dense_ns, lad) = fit_lookahead_ns(&dense, DIM, &la_opts, reps);
+    let la_speedup = la_dense_ns / la_sparse_ns;
+    assert_eq!(las.num_merges(), lad.num_merges(), "lookahead paths diverged on merges");
+    assert_eq!(las.num_support(), lad.num_support(), "lookahead paths diverged on M");
+    let la_radius_rel_diff =
+        (las.radius() - lad.radius()).abs() / lad.radius().max(1e-12);
+    assert!(la_radius_rel_diff < 1e-6, "lookahead paths diverged on radius: {la_radius_rel_diff}");
+
+    let mut t = Table::new(&["path", "ns/example", "examples/s", "updates", "merges"]);
+    for (name, ns, updates, merges) in [
+        ("dense", dense_ns, md.num_support(), 0),
+        ("sparse", sparse_ns, ms.num_support(), 0),
+        (
+            "dense L=8",
+            la_dense_ns,
+            lad.num_support(),
+            lad.num_merges(),
+        ),
+        (
+            "sparse L=8",
+            la_sparse_ns,
+            las.num_support(),
+            las.num_merges(),
+        ),
+    ] {
         t.row(&[
             name.into(),
             format!("{ns:.0}"),
             format!("{:.0}", 1e9 / ns),
-            m.num_support().to_string(),
+            updates.to_string(),
+            merges.to_string(),
         ]);
     }
     t.print();
-    println!("speedup: {speedup:.1}x (density {:.1}%)", DENSITY * 100.0);
+    println!(
+        "speedup: {speedup:.1}x (L=1), {la_speedup:.1}x (L={LOOKAHEAD}) at density {:.1}%",
+        DENSITY * 100.0
+    );
 
     let json = format!(
         concat!(
             r#"{{"dim":{},"n":{},"nnz":{},"density":{},"#,
             r#""dense_ns_per_example":{},"sparse_ns_per_example":{},"#,
             r#""dense_eps":{},"sparse_eps":{},"speedup":{},"#,
-            r#""updates":{},"radius_rel_diff":{}}}"#
+            r#""updates":{},"radius_rel_diff":{},"#,
+            r#""lookahead":{},"la_dense_ns_per_example":{},"la_sparse_ns_per_example":{},"#,
+            r#""la_speedup":{},"la_merges":{},"la_radius_rel_diff":{}}}"#
         ),
         DIM,
         n,
@@ -116,6 +169,12 @@ fn main() {
         fmt_num(speedup),
         ms.num_support(),
         fmt_num(radius_rel_diff),
+        LOOKAHEAD,
+        fmt_num(la_dense_ns),
+        fmt_num(la_sparse_ns),
+        fmt_num(la_speedup),
+        las.num_merges(),
+        fmt_num(la_radius_rel_diff),
     );
     std::fs::write(Path::new("BENCH_sparse.json"), &json).expect("write BENCH_sparse.json");
     println!("wrote BENCH_sparse.json: {json}");

@@ -27,7 +27,7 @@ use crate::error::{Error, Result};
 use crate::runtime::{pad_dim, Runtime};
 use crate::sketch::checkpoint::Checkpointer;
 use crate::svm::ball::BallState;
-use crate::svm::meb::solve_merge;
+use crate::svm::meb::solve_merge_into;
 use crate::svm::streamsvm::StreamSvm;
 use crate::svm::TrainOptions;
 
@@ -189,9 +189,9 @@ impl<'rt> Trainer<'rt> {
         }
         if !merged_on_device {
             let t = ScopeTimer::new(&mut self.metrics.rust_ns);
-            let xrefs: Vec<&[f32]> = self.buf_x.iter().map(|v| v.as_slice()).collect();
-            let res = solve_merge(ball, &xrefs, &self.buf_y, &opts);
-            *ball = res.ball;
+            let views: Vec<crate::data::FeaturesView> =
+                self.buf_x.iter().map(|v| crate::data::FeaturesView::Dense(v.as_slice())).collect();
+            solve_merge_into(ball, &views, &self.buf_y, &opts);
             drop(t);
         }
         self.metrics.updates += l;
@@ -357,6 +357,7 @@ where
                     trainer.ball.as_ref(),
                     dim,
                     trainer.metrics.examples,
+                    trainer.metrics.merges,
                     &trainer.cfg.train,
                 )?;
             }
@@ -517,7 +518,7 @@ mod tests {
             let sk = MebSketch::read_from(&path).unwrap();
             let mut direct = crate::svm::lookahead::LookaheadSvm::new(4, cfg.train);
             for e in exs.iter().take(sk.seen) {
-                direct.observe(&e.x.dense(), e.y);
+                direct.observe_view(e.x.view(), e.y);
             }
             assert_eq!(direct.buffered(), 0, "checkpoint taken mid-buffer");
             assert_eq!(sk.ball.as_ref().unwrap().weights(), direct.weights());

@@ -1,0 +1,245 @@
+//! Signed feature hashing (Weinberger et al., "Feature Hashing for
+//! Large Scale Multitask Learning") — the front-end that folds an
+//! unbounded-vocabulary sparse stream into a fixed dimension `D`, so the
+//! single-pass MEB center stays constant-size as the paper's streaming
+//! model demands.
+//!
+//! Each input index `i` maps to a bucket `h(i) ∈ [0, D)` and a sign
+//! `σ(i) ∈ {±1}`; the hashed vector accumulates `σ(i)·v` into bucket
+//! `h(i)`. Both functions derive from one seeded 64-bit mix (splitmix64
+//! over pure integer arithmetic), so the mapping is deterministic across
+//! platforms and reproducible from `(seed, D)` alone — which is why the
+//! `.meb` codec records exactly that pair in provenance and refuses to
+//! resume or merge across mismatched hash spaces.
+
+use super::{Dataset, Example, Features, SparseVec};
+use crate::svm::HashSpec;
+
+/// splitmix64 finalizer (Steele et al.) — full-avalanche integer mix.
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A seeded signed feature hasher: `h: u32 → [0, D)`, `σ: u32 → ±1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeatureHasher {
+    dim: usize,
+    seed: u64,
+}
+
+impl FeatureHasher {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        assert!(dim >= 1, "hash dimension must be >= 1");
+        FeatureHasher { dim, seed }
+    }
+
+    /// Build from the spec the `.meb` codec stores in provenance.
+    pub fn from_spec(spec: HashSpec) -> Self {
+        Self::new(spec.dim, spec.seed)
+    }
+
+    /// The spec this hasher realizes.
+    pub fn spec(&self) -> HashSpec {
+        HashSpec { dim: self.dim, seed: self.seed }
+    }
+
+    /// Output dimension `D`.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `(h(i), σ(i))` for one input index. The bucket comes from the low
+    /// bits of the mix (via modulo), the sign from the top bit, so the
+    /// two are effectively independent.
+    #[inline]
+    pub fn bucket(&self, i: u32) -> (u32, f32) {
+        let m = splitmix64(self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let b = (m % self.dim as u64) as u32;
+        let s = if m >> 63 == 1 { -1.0 } else { 1.0 };
+        (b, s)
+    }
+
+    /// Hash a stream of `(index, value)` coordinates (indices may be
+    /// *arbitrary* u32 — this is the point: wire payloads and
+    /// unbounded-vocabulary streams need no range check) into a sparse
+    /// dim-`D` vector. Colliding buckets accumulate; output indices are
+    /// strictly increasing.
+    fn hash_iter(&self, coords: impl Iterator<Item = (u32, f32)>) -> Features {
+        let mut pairs: Vec<(u32, f32)> = coords
+            .map(|(i, v)| {
+                let (b, s) = self.bucket(i);
+                (b, s * v)
+            })
+            .collect();
+        // Stable sort: colliding buckets accumulate in input order, so
+        // the float sum is bit-reproducible across platforms/releases.
+        pairs.sort_by_key(|&(b, _)| b);
+        let mut out_idx: Vec<u32> = Vec::with_capacity(pairs.len());
+        let mut out_val: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (b, v) in pairs {
+            match out_idx.last() {
+                Some(&last) if last == b => *out_val.last_mut().unwrap() += v,
+                _ => {
+                    out_idx.push(b);
+                    out_val.push(v);
+                }
+            }
+        }
+        Features::Sparse { dim: self.dim, v: SparseVec { idx: out_idx, val: out_val } }
+    }
+
+    /// [`Self::hash_iter`] over parallel `idx`/`val` arrays (the wire
+    /// payload shape).
+    pub fn hash_pairs(&self, idx: &[u32], val: &[f32]) -> Features {
+        assert_eq!(idx.len(), val.len(), "idx/val length mismatch");
+        self.hash_iter(idx.iter().zip(val).map(|(&i, &v)| (i, v)))
+    }
+
+    /// Hash any feature vector (dense or sparse) into the dim-`D` space.
+    pub fn hash_features(&self, x: &Features) -> Features {
+        self.hash_iter(x.iter_nonzero().map(|(i, v)| (i as u32, v)))
+    }
+
+    /// Hash one labeled example.
+    pub fn hash_example(&self, e: &Example) -> Example {
+        Example { x: self.hash_features(&e.x), y: e.y }
+    }
+
+    /// Hash a whole dataset (both splits) into the dim-`D` space — the
+    /// CLI front-end for training and evaluating in one hash space.
+    pub fn hash_dataset(&self, ds: &Dataset) -> Dataset {
+        Dataset {
+            name: ds.name.clone(),
+            dim: self.dim,
+            train: ds.train.iter().map(|e| self.hash_example(e)).collect(),
+            test: ds.test.iter().map(|e| self.hash_example(e)).collect(),
+        }
+    }
+}
+
+/// Adapter that hashes every example of an inner stream on the fly —
+/// wraps any `Iterator<Item = Example>` (VecStream, FileStream, ...) so
+/// the pipeline consumes a fixed-dimension stream without materializing
+/// the hashed dataset.
+pub struct HashedStream<S> {
+    inner: S,
+    hasher: FeatureHasher,
+}
+
+impl<S: Iterator<Item = Example>> HashedStream<S> {
+    pub fn new(inner: S, hasher: FeatureHasher) -> Self {
+        HashedStream { inner, hasher }
+    }
+}
+
+impl<S: Iterator<Item = Example>> Iterator for HashedStream<S> {
+    type Item = Example;
+
+    fn next(&mut self) -> Option<Example> {
+        self.inner.next().map(|e| self.hasher.hash_example(&e))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.inner.size_hint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_in_range_and_signed() {
+        let h = FeatureHasher::new(64, 7);
+        for i in 0..10_000u32 {
+            let (b, s) = h.bucket(i);
+            assert!((b as usize) < 64);
+            assert!(s == 1.0 || s == -1.0);
+        }
+    }
+
+    #[test]
+    fn signs_are_roughly_balanced() {
+        let h = FeatureHasher::new(1 << 20, 42);
+        let neg = (0..20_000u32).filter(|&i| h.bucket(i).1 < 0.0).count();
+        assert!((8_000..12_000).contains(&neg), "neg = {neg}");
+    }
+
+    #[test]
+    fn deterministic_across_instances_and_seed_sensitive() {
+        let a = FeatureHasher::new(4096, 1);
+        let b = FeatureHasher::new(4096, 1);
+        let c = FeatureHasher::new(4096, 2);
+        let idx: Vec<u32> = (0..50).map(|i| i * 977).collect();
+        let val: Vec<f32> = (0..50).map(|i| i as f32 + 0.5).collect();
+        assert_eq!(a.hash_pairs(&idx, &val), b.hash_pairs(&idx, &val));
+        assert_ne!(a.hash_pairs(&idx, &val), c.hash_pairs(&idx, &val));
+    }
+
+    #[test]
+    fn collisions_accumulate_and_indices_sorted() {
+        // D = 1: everything lands in bucket 0 with signs ±1.
+        let h = FeatureHasher::new(1, 3);
+        let hashed = h.hash_pairs(&[5, 9, 1000], &[1.0, 2.0, 4.0]);
+        assert_eq!(hashed.len(), 1);
+        assert_eq!(hashed.nnz(), 1);
+        let expect: f32 = [5u32, 9, 1000]
+            .iter()
+            .zip([1.0f32, 2.0, 4.0])
+            .map(|(&i, v)| h.bucket(i).1 * v)
+            .sum();
+        assert_eq!(hashed.get(0), expect);
+        // general case: strictly increasing output indices
+        let h = FeatureHasher::new(32, 3);
+        let idx: Vec<u32> = (0..200).collect();
+        let val = vec![1.0f32; 200];
+        if let Features::Sparse { v, .. } = h.hash_pairs(&idx, &val) {
+            assert!(v.idx.windows(2).all(|w| w[0] < w[1]));
+        } else {
+            panic!("hashed output must be sparse");
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_inputs_hash_identically() {
+        let h = FeatureHasher::new(16, 9);
+        let dense = Features::Dense(vec![0.0, 1.5, 0.0, -2.0, 0.25]);
+        let sparse = dense.to_sparse();
+        assert_eq!(h.hash_features(&dense), h.hash_features(&sparse));
+    }
+
+    #[test]
+    fn hashed_stream_maps_examples() {
+        let h = FeatureHasher::new(8, 11);
+        let exs = vec![
+            Example::sparse(100, vec![3, 97], vec![1.0, -1.0], 1.0),
+            Example::new(vec![0.0; 100], -1.0),
+        ];
+        let out: Vec<Example> = HashedStream::new(exs.clone().into_iter(), h).collect();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].dim(), 8);
+        assert_eq!(out[0], h.hash_example(&exs[0]));
+        assert_eq!(out[1].y, -1.0);
+        assert_eq!(out[1].x.nnz(), 0);
+    }
+
+    #[test]
+    fn hash_dataset_rewrites_both_splits() {
+        let h = FeatureHasher::new(4, 5);
+        let ds = Dataset::new(
+            "t",
+            10,
+            vec![Example::sparse(10, vec![9], vec![2.0], 1.0)],
+            vec![Example::sparse(10, vec![0], vec![1.0], -1.0)],
+        );
+        let hd = h.hash_dataset(&ds);
+        assert_eq!(hd.dim, 4);
+        assert_eq!(hd.train[0].dim(), 4);
+        assert_eq!(hd.test[0].dim(), 4);
+        assert_eq!(hd.name, "t");
+    }
+}

@@ -16,6 +16,7 @@
 
 use std::borrow::Cow;
 
+pub mod hashing;
 pub mod ijcnn_like;
 pub mod libsvm_format;
 pub mod mnist_like;
@@ -240,6 +241,26 @@ impl FeaturesView<'_> {
         }
     }
 
+    /// `<x, z>` between two views of the same logical dimension —
+    /// O(nnz) for mixed pairs, O(nnz_x + nnz_z) merge-join for two
+    /// sparse views (the Algorithm-2 merge-Gram kernel).
+    pub fn dot_view(&self, other: &FeaturesView<'_>) -> f64 {
+        debug_assert_eq!(self.dim(), other.dim());
+        match (self, other) {
+            (FeaturesView::Dense(a), FeaturesView::Dense(b)) => crate::linalg::dot(a, b),
+            (FeaturesView::Dense(a), FeaturesView::Sparse { idx, val, .. }) => {
+                crate::linalg::sparse_dot(a, idx, val)
+            }
+            (FeaturesView::Sparse { idx, val, .. }, FeaturesView::Dense(b)) => {
+                crate::linalg::sparse_dot(b, idx, val)
+            }
+            (
+                FeaturesView::Sparse { idx: ia, val: va, .. },
+                FeaturesView::Sparse { idx: ib, val: vb, .. },
+            ) => crate::linalg::sparse_sparse_dot(ia, va, ib, vb),
+        }
+    }
+
     /// `<w, x>` against a dense `w` of the same logical dimension —
     /// O(nnz).
     pub fn dot(&self, w: &[f32]) -> f64 {
@@ -282,6 +303,20 @@ impl FeaturesView<'_> {
         let mut out = vec![0.0f32; self.dim()];
         self.write_into(&mut out);
         out
+    }
+
+    /// An owned copy that *preserves the physical representation*:
+    /// sparse views stay sparse (unlike [`Self::to_dense`]). This is
+    /// what lets the Algorithm-2 lookahead buffer hold survivors without
+    /// densifying them.
+    pub fn to_features(&self) -> Features {
+        match self {
+            FeaturesView::Dense(x) => Features::Dense(x.to_vec()),
+            FeaturesView::Sparse { dim, idx, val } => Features::Sparse {
+                dim: *dim,
+                v: SparseVec { idx: idx.to_vec(), val: val.to_vec() },
+            },
+        }
     }
 
     pub fn is_finite(&self) -> bool {
@@ -407,6 +442,31 @@ mod tests {
         let mut a = vec![1.0f32; 6];
         s.view().axpy_into(&mut a, 2.0);
         assert_eq!(a, vec![3.0, 1.0, 1.0, -3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_view_all_representation_pairs() {
+        let a = Features::sparse(6, vec![0, 3, 5], vec![1.0, -2.0, 0.5]);
+        let b = Features::sparse(6, vec![1, 3, 4], vec![2.0, 3.0, 1.0]);
+        let (ad, bd) = (a.dense().into_owned(), b.dense().into_owned());
+        let want = crate::linalg::dot(&ad, &bd);
+        let dv = |x: FeaturesView, y: FeaturesView| x.dot_view(&y);
+        assert_eq!(dv(a.view(), b.view()), want);
+        assert_eq!(dv(FeaturesView::Dense(&ad), b.view()), want);
+        assert_eq!(dv(a.view(), FeaturesView::Dense(&bd)), want);
+        assert_eq!(dv(FeaturesView::Dense(&ad), FeaturesView::Dense(&bd)), want);
+    }
+
+    #[test]
+    fn to_features_preserves_representation() {
+        let s = Features::sparse(5, vec![1, 4], vec![2.0, -3.0]);
+        let owned = s.view().to_features();
+        assert_eq!(owned, s);
+        assert!(matches!(owned, Features::Sparse { .. }));
+        let d = Features::Dense(vec![1.0, 0.0]);
+        let owned = d.view().to_features();
+        assert_eq!(owned, d);
+        assert!(matches!(owned, Features::Dense(_)));
     }
 
     #[test]

@@ -38,7 +38,14 @@
 //! (`w = σ·v` with a cached `‖w‖²`), so the per-example distance test and
 //! the Algorithm-1 update both cost O(nnz) instead of O(D) — LIBSVM
 //! streams (w3a is ~4% dense) never densify, and the server accepts
-//! sparse `{"idx":[...],"val":[...]}` payloads.
+//! sparse `{"idx":[...],"val":[...]}` payloads. Algorithm 2 buffers
+//! survivors in their arriving representation and solves the merge Gram
+//! with merge-join sparse dots (O(L²·nnz)), and a seeded signed feature
+//! hasher ([`data::hashing`]) folds unbounded-vocabulary streams into a
+//! fixed dimension `D` — on the CLI (`--hash-dim`), in the pipeline (a
+//! [`data::hashing::HashedStream`] adapter), and on the server's ingest
+//! path, with the `(seed, D)` pair recorded in `.meb` provenance so
+//! resume/merge refuse mismatched hash spaces.
 //!
 //! The **sketch layer** ([`sketch`]) turns the tiny ball state into
 //! durable, composable model files: [`sketch::MebSketch`] is a

@@ -91,6 +91,29 @@ pub fn sparse_axpy(a: &mut [f32], s: f32, idx: &[u32], val: &[f32]) {
     }
 }
 
+/// Sparse–sparse dot `<a, b>` for two `idx`/`val` pairs by merge-join on
+/// the (strictly increasing) index arrays — O(nnz_a + nnz_b). This is
+/// what makes the Algorithm-2 merge Gram O(L²·nnz) instead of O(L²·D).
+#[inline]
+pub fn sparse_sparse_dot(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32]) -> f64 {
+    assert_eq!(ia.len(), va.len());
+    assert_eq!(ib.len(), vb.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut acc = 0.0f64;
+    while i < ia.len() && j < ib.len() {
+        match ia[i].cmp(&ib[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                acc += va[i] as f64 * vb[j] as f64;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    acc
+}
+
 /// `||w - y x||²` for sparse `x`, given the cached `||w||²` — O(nnz) via
 /// the expansion `||w||² − 2y⟨w,x⟩ + ||x||²` (clamped at 0 against
 /// cancellation in the nearly-coincident case).
@@ -190,6 +213,21 @@ mod tests {
         assert_eq!(sparse_dot(&w, &[], &[]), 0.0);
         sparse_axpy(&mut a, 5.0, &[], &[]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_sparse_dot_matches_dense() {
+        let a_idx = [0u32, 2, 5, 9];
+        let a_val = [1.0f32, -2.0, 0.5, 3.0];
+        let b_idx = [2u32, 3, 5, 8];
+        let b_val = [4.0f32, 1.0, -1.0, 2.0];
+        // overlap at 2 and 5: -2*4 + 0.5*-1 = -8.5
+        assert_eq!(sparse_sparse_dot(&a_idx, &a_val, &b_idx, &b_val), -8.5);
+        // symmetric
+        assert_eq!(sparse_sparse_dot(&b_idx, &b_val, &a_idx, &a_val), -8.5);
+        // disjoint and empty
+        assert_eq!(sparse_sparse_dot(&[0, 1], &[1.0, 1.0], &[2, 3], &[1.0, 1.0]), 0.0);
+        assert_eq!(sparse_sparse_dot(&[], &[], &b_idx, &b_val), 0.0);
     }
 
     #[test]

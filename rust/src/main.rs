@@ -6,8 +6,10 @@
 //! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
 //!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
 //!                    [--sparse true]   (convert the stream to the O(nnz) sparse path)
+//!                    [--hash-dim 4096 [--hash-seed 24301]]  (signed feature hashing to D)
 //! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
+//!                    [--hash-dim 4096 [--hash-seed 24301]]  (hash wire payloads on ingest)
 //! streamsvm loadgen  --addr 127.0.0.1:7878 [--dataset mnist01] [--qps 500] [--requests 2000]
 //!                    [--threads 4] [--train-share 0.1] [--out BENCH_serve.json]
 //! streamsvm snapshot --dataset synthA [--at 5000] --out model.meb
@@ -21,6 +23,7 @@
 //! streamsvm artifacts
 //! ```
 
+use std::borrow::Cow;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -29,22 +32,67 @@ use streamsvm::cli::Args;
 use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
 use streamsvm::coordinator::sharded::train_sharded;
 use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::hashing::{FeatureHasher, HashedStream};
 use streamsvm::data::registry::{load_dataset, load_dataset_sized};
+use streamsvm::data::Example;
 use streamsvm::error::{Error, Result};
 use streamsvm::eval::accuracy;
 use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
 use streamsvm::runtime::Runtime;
 use streamsvm::server::{run_loadgen, serve, LoadgenConfig, ServerConfig};
-use streamsvm::sketch::checkpoint::{resume_fit, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::checkpoint::{resume_fit, resume_lookahead, CheckpointConfig, Checkpointer};
 use streamsvm::sketch::codec::MebSketch;
 use streamsvm::sketch::merge::merge_sketches;
 use streamsvm::svm::streamsvm::StreamSvm;
-use streamsvm::svm::{SlackMode, TrainOptions};
+use streamsvm::svm::{HashSpec, SlackMode, TrainOptions};
+
+/// Default hash seed (spells "seed"); override with `--hash-seed`.
+const DEFAULT_HASH_SEED: u64 = 0x5EED;
+
+/// Parse the `--hash-dim`/`--hash-seed` pair into a [`HashSpec`].
+fn parse_hash(args: &Args) -> Result<Option<HashSpec>> {
+    if !args.has("hash-dim") {
+        if args.has("hash-seed") {
+            return Err(Error::config("--hash-seed needs --hash-dim"));
+        }
+        return Ok(None);
+    }
+    let dim: usize = args.get("hash-dim", 4096usize)?;
+    if dim == 0 {
+        return Err(Error::config("--hash-dim must be >= 1"));
+    }
+    Ok(Some(HashSpec { dim, seed: args.get("hash-seed", DEFAULT_HASH_SEED)? }))
+}
+
+/// The split to evaluate on: hashed into dim-`D` when a hash space is
+/// configured (the model lives there; raw test rows have the wrong
+/// dimension), borrowed as-is otherwise.
+fn eval_split(hash: Option<HashSpec>, test: &[Example]) -> Cow<'_, [Example]> {
+    match hash {
+        Some(spec) => {
+            let h = FeatureHasher::from_spec(spec);
+            Cow::Owned(test.iter().map(|e| h.hash_example(e)).collect())
+        }
+        None => Cow::Borrowed(test),
+    }
+}
+
+/// Wrap a stream in the hash-on-the-fly adapter when configured.
+fn hashed_stream(
+    hash: Option<HashSpec>,
+    stream: VecStream,
+) -> Box<dyn Iterator<Item = Example> + Send> {
+    match hash {
+        Some(spec) => Box::new(HashedStream::new(stream, FeatureHasher::from_spec(spec))),
+        None => Box::new(stream),
+    }
+}
 
 fn train_opts(args: &Args) -> Result<TrainOptions> {
     let mut o = TrainOptions::default()
         .with_c(args.get("c", 1.0)?)
-        .with_lookahead(args.get("lookahead", 1usize)?);
+        .with_lookahead(args.get("lookahead", 1usize)?)
+        .with_hash(parse_hash(args)?);
     o.slack_mode = match args.str("slack", "consistent").as_str() {
         "paper" => SlackMode::Paper,
         "consistent" => SlackMode::Consistent,
@@ -86,8 +134,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         train.with_c(table1::c_for(&name))
     };
+    if let Some(spec) = train.hash {
+        println!(
+            "feature hashing: dim {} -> D={} (seed {:#x}); wire/stream indices unbounded",
+            ds.dim, spec.dim, spec.seed
+        );
+    }
+    // The learner's dimension is the hashed D when hashing is on.
+    let dim = train.hash.map_or(ds.dim, |h| h.dim);
     let perm: i64 = args.get("perm-seed", -1i64)?;
-    let stream = VecStream::of_train(&ds, (perm >= 0).then_some(perm as u64));
+    let stream = hashed_stream(
+        train.hash,
+        VecStream::of_train(&ds, (perm >= 0).then_some(perm as u64)),
+    );
 
     // Validate flags up front so no combination silently ignores them.
     let mode = match args.str("mode", "filter").as_str() {
@@ -112,15 +171,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     // ---- sharded path: S parallel one-pass learners, merge-and-reduce
-    let model = if shards > 1 {
-        let rep = train_sharded(stream, ds.dim, shards, train, args.get("queue", 64usize)?)?;
+    let (model, merges) = if shards > 1 {
+        let rep = train_sharded(stream, dim, shards, train, args.get("queue", 64usize)?)?;
         let max_r = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
         println!(
             "sharded: {} examples over {shards} shards | max shard R={max_r:.4}",
             rep.examples
         );
         println!("sharded aggregate: {}", rep.metrics.summary());
-        rep.model
+        let merges = rep.metrics.merges;
+        (rep.model, merges)
     } else {
         // ---- pipeline path, with optional periodic checkpoints
         let cfg = PipelineConfig { train, mode, block: None, queue: args.get("queue", 4usize)? };
@@ -139,7 +199,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         } else {
             None
         };
-        let report = train_stream_ckpt(rt.as_mut(), stream, ds.dim, cfg, ckpt.as_mut())?;
+        let report = train_stream_ckpt(rt.as_mut(), stream, dim, cfg, ckpt.as_mut())?;
         println!("pipeline: {}", report.metrics.summary());
         if let Some(ck) = &ckpt {
             println!(
@@ -149,17 +209,21 @@ fn cmd_train(args: &Args) -> Result<()> {
                 ck.last_saved()
             );
         }
-        report.model
+        let merges = report.metrics.merges;
+        (report.model, merges)
     };
+    let test = eval_split(train.hash, &ds.test);
     println!(
         "model: R={:.4} supports={} | test acc = {:.2}%",
         model.radius(),
         model.num_support(),
-        accuracy(&model, &ds.test) * 100.0
+        accuracy(&model, &test) * 100.0
     );
     if args.has("out") {
         let out = args.str("out", "model.meb");
-        let sk = MebSketch::from_model(&model, &name);
+        // record the Algorithm-2 merge count so a later `resume` keeps
+        // reporting the paper's O(N/L) bound (0 for Algorithm 1)
+        let sk = MebSketch::from_model(&model, &name).with_merges(merges);
         sk.write_to(Path::new(&out))?;
         println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
     }
@@ -179,15 +243,17 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
     let train = train_opts(args)?;
     let train = if args.has("c") { train } else { train.with_c(table1::c_for(&name)) };
     let at: usize = args.get("at", usize::MAX)?;
-    let mut model = StreamSvm::new(ds.dim, train);
-    for e in stream_for(args, &ds)?.take(at) {
+    let dim = train.hash.map_or(ds.dim, |h| h.dim);
+    let mut model = StreamSvm::new(dim, train);
+    for e in hashed_stream(train.hash, stream_for(args, &ds)?).take(at) {
         model.observe_view(e.x.view(), e.y);
     }
     let out = args.str("out", "model.meb");
     let sk = MebSketch::from_model(&model, &name);
     sk.write_to(Path::new(&out))?;
     println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
-    println!("test acc = {:.2}%", accuracy(&model, &ds.test) * 100.0);
+    let test = eval_split(train.hash, &ds.test);
+    println!("test acc = {:.2}%", accuracy(&model, &test) * 100.0);
     Ok(())
 }
 
@@ -195,39 +261,60 @@ fn cmd_resume(args: &Args) -> Result<()> {
     let from = args.str("from", "model.meb");
     let sk = MebSketch::read_from(Path::new(&from))?;
     println!("loaded {from}: {}", sk.summary());
+    // Resume always uses the hash space recorded in provenance; explicit
+    // flags must agree, never silently re-map the stream into a
+    // different space (buckets would be unrelated coordinates).
+    if args.has("hash-dim") || args.has("hash-seed") {
+        let want = parse_hash(args)?;
+        if want != sk.opts.hash {
+            return Err(Error::config(format!(
+                "--hash-dim/--hash-seed ({want:?}) disagree with the sketch's hash \
+                 space ({:?}); resume uses the space recorded in provenance",
+                sk.opts.hash
+            )));
+        }
+    }
     let name = args.str("dataset", if sk.tag.is_empty() { "synthA" } else { sk.tag.as_str() });
     if name != sk.tag && !sk.tag.is_empty() {
         eprintln!("warning: sketch was trained on `{}`, resuming on `{name}`", sk.tag);
     }
     let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
-    let model = if sk.ball.is_none() {
-        // empty sketch (no examples absorbed): train from scratch with
-        // the sketch's options, at the dataset's dimension
-        let mut m = StreamSvm::new(ds.dim, sk.opts);
-        for e in stream_for(args, &ds)? {
-            m.observe_view(e.x.view(), e.y);
-        }
-        m
+    let replay = if sk.ball.is_none() {
+        // empty sketch (no examples absorbed): replay the whole stream
+        // with the sketch's options, at the sketch's dimension when a
+        // hash space fixes it, else at the dataset's dimension
+        let dim = if sk.opts.hash.is_some() { sk.dim } else { ds.dim };
+        MebSketch::new(dim, None, 0, sk.opts, sk.tag.clone())
     } else {
-        if ds.dim != sk.dim {
+        if sk.opts.hash.is_none() && ds.dim != sk.dim {
             return Err(Error::config(format!(
                 "sketch dimension {} does not match dataset `{name}` dimension {}",
                 sk.dim, ds.dim
             )));
         }
-        resume_fit(&sk, stream_for(args, &ds)?)
+        sk.clone()
     };
+    let stream = hashed_stream(sk.opts.hash, stream_for(args, &ds)?);
+    // Route Algorithm-2 sketches through the lookahead resume so the
+    // merge count restored from provenance survives into `--out`.
+    let (model, merges) = if sk.opts.lookahead > 1 {
+        let m = resume_lookahead(&replay, stream);
+        (m.to_stream_svm(), m.num_merges())
+    } else {
+        (resume_fit(&replay, stream), 0)
+    };
+    let test = eval_split(sk.opts.hash, &ds.test);
     println!(
         "resumed {} -> {} examples | R={:.4} supports={} | test acc = {:.2}%",
         sk.seen,
         model.examples_seen(),
         model.radius(),
         model.num_support(),
-        accuracy(&model, &ds.test) * 100.0
+        accuracy(&model, &test) * 100.0
     );
     if args.has("out") {
         let out = args.str("out", "model.meb");
-        let sk2 = MebSketch::from_model(&model, &sk.tag);
+        let sk2 = MebSketch::from_model(&model, &sk.tag).with_merges(merges);
         sk2.write_to(Path::new(&out))?;
         println!("wrote {out}: {}", sk2.summary());
     }
@@ -245,6 +332,17 @@ fn cmd_merge(args: &Args) -> Result<()> {
         println!("  in  {p}: {}", sk.summary());
         sketches.push(sk);
     }
+    // Like resume: explicit hash flags must agree with provenance, never
+    // be silently dropped.
+    if args.has("hash-dim") || args.has("hash-seed") {
+        let want = parse_hash(args)?;
+        if sketches.iter().any(|s| s.opts.hash != want) {
+            return Err(Error::config(format!(
+                "--hash-dim/--hash-seed ({want:?}) disagree with the input sketches' \
+                 hash spaces; merge uses the space recorded in provenance"
+            )));
+        }
+    }
     let merged = merge_sketches(&sketches)?;
     println!("  out {}", merged.summary());
     let out = args.str("out", "merged.meb");
@@ -254,7 +352,8 @@ fn cmd_merge(args: &Args) -> Result<()> {
         let name = args.str("dataset", "synthA");
         let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
         let model = merged.to_model();
-        println!("test acc on {name} = {:.2}%", accuracy(&model, &ds.test) * 100.0);
+        let test = eval_split(merged.opts.hash, &ds.test);
+        println!("test acc on {name} = {:.2}%", accuracy(&model, &test) * 100.0);
     }
     Ok(())
 }
@@ -267,12 +366,21 @@ fn cmd_merge(args: &Args) -> Result<()> {
 /// `/train` examples.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.str("dataset", "mnist01");
-    let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 0.25)?)?;
+    let hash = parse_hash(args)?;
+    let mut ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 0.25)?)?;
+    if let Some(spec) = hash {
+        println!(
+            "feature hashing on ingest: D={} (seed {:#x}); wire payloads may carry arbitrary indices",
+            spec.dim, spec.seed
+        );
+        ds = FeatureHasher::from_spec(spec).hash_dataset(&ds);
+    }
     let train = if args.has("c") {
         TrainOptions::default().with_c(args.get("c", 1.0)?)
     } else {
         TrainOptions::default().with_c(table1::c_for(&name))
-    };
+    }
+    .with_hash(hash);
     let model = StreamSvm::fit(ds.train.iter(), ds.dim, &train);
     println!(
         "trained on {}: dim={} supports={} | test acc = {:.2}%",
@@ -292,6 +400,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .then(|| PathBuf::from(args.str("snapshot", "live.meb"))),
         read_timeout: Duration::from_millis(args.get("read-timeout-ms", 10_000u64)?),
         tag: name.clone(),
+        hash,
         ..Default::default()
     };
     let handle = serve(model, cfg)?;

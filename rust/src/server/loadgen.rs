@@ -116,6 +116,26 @@ impl LoadClient {
         Ok(Self::outcome_of(self.round_trip("POST", "/train", body.as_bytes())?))
     }
 
+    /// `POST /predict_batch` with the `{"rows":[...]}` shape: each row
+    /// is sent in its natural dense-or-sparse payload form (rows may
+    /// mix representations freely). Returns the status and parsed body.
+    pub fn predict_batch_features(&mut self, rows: &[Features]) -> Result<(u16, Json)> {
+        let mut body = String::from(r#"{"rows":["#);
+        for (i, x) in rows.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push('{');
+            body.push_str(&Self::features_body(x));
+            body.push('}');
+        }
+        body.push_str("]}");
+        let resp = self.round_trip("POST", "/predict_batch", body.as_bytes())?;
+        let text = std::str::from_utf8(&resp.body)
+            .map_err(|_| Error::Pipeline("predict_batch body is not UTF-8".into()))?;
+        Ok((resp.status, Json::parse(text)?))
+    }
+
     /// `GET /stats`, parsed.
     pub fn stats(&mut self) -> Result<Json> {
         let resp = self.round_trip("GET", "/stats", b"")?;

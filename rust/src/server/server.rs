@@ -28,8 +28,10 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::data::hashing::FeatureHasher;
 use crate::data::Features;
 use crate::error::{Error, Result};
+use crate::svm::HashSpec;
 use crate::server::admission::{bounded, Bounded, Endpoint, ServerStats};
 use crate::server::cell::ModelCell;
 use crate::server::http::{self, HttpRequest, Limits};
@@ -67,6 +69,12 @@ pub struct ServerConfig {
     pub tag: String,
     /// HTTP parse limits.
     pub limits: Limits,
+    /// Feature-hashing front-end: when set, `/predict*` and `/train`
+    /// payloads are hashed on ingest, so wire features may carry
+    /// *arbitrary* indices (unbounded vocabularies) and any dense
+    /// length; the model itself lives in the hashed dim-`D` space. Must
+    /// match the served model's hash spec.
+    pub hash: Option<HashSpec>,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +89,7 @@ impl Default for ServerConfig {
             read_timeout: Duration::from_secs(5),
             tag: "serve".into(),
             limits: Limits::default(),
+            hash: None,
         }
     }
 }
@@ -101,6 +110,8 @@ struct Shared {
     dim: usize,
     tag: String,
     limits: Limits,
+    /// Hash-on-ingest front-end (see [`ServerConfig::hash`]).
+    hasher: Option<FeatureHasher>,
 }
 
 /// A running server; dropping it without [`ServerHandle::shutdown`]
@@ -134,6 +145,22 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
     if cfg.threads == 0 {
         return Err(Error::config("server threads must be >= 1"));
     }
+    if let Some(spec) = cfg.hash {
+        if spec.dim != model.dim() {
+            return Err(Error::config(format!(
+                "hash dimension {} does not match the served model dimension {}",
+                spec.dim,
+                model.dim()
+            )));
+        }
+        if model.options().hash != Some(spec) {
+            return Err(Error::config(
+                "the served model was not trained in the configured hash space \
+                 (train it with TrainOptions.hash = the server's spec so snapshot \
+                 provenance and ingest hashing agree)",
+            ));
+        }
+    }
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let (train_tx, train_rx) = bounded::<(Features, f32)>(cfg.train_queue.max(1));
@@ -148,6 +175,7 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
         dim: model.dim(),
         tag: cfg.tag.clone(),
         limits: cfg.limits,
+        hasher: cfg.hash.map(FeatureHasher::from_spec),
     });
 
     let (conn_tx, conn_rx) = bounded::<TcpStream>(cfg.conn_queue);
@@ -434,77 +462,95 @@ fn parse_body(body: &[u8]) -> Option<Json> {
 }
 
 const BODY_SHAPE: &str = r#"body must carry features as "x":[...] or "idx":[...],"val":[...]"#;
+const BATCH_SHAPE: &str = r#"body must be {"xs":[[...],...]} or {"rows":[{"x":[...]} | {"idx":[...],"val":[...]}, ...]}"#;
+
+/// Validate a dense feature vector at the protocol boundary and (when a
+/// hasher is configured) fold it into the model's hash space. Non-finite
+/// features would poison the ball geometry on `/train` (inf radius
+/// forever, then persisted to the snapshot) and produce meaningless
+/// scores on `/predict` — both are client errors, rejected with the
+/// returned message. Without a hasher the length must equal the model
+/// dimension; with one, any length hashes down to `D`.
+fn dense_features(
+    x: Vec<f32>,
+    dim: usize,
+    hasher: Option<&FeatureHasher>,
+) -> std::result::Result<Features, String> {
+    if let Some(i) = x.iter().position(|v| !v.is_finite()) {
+        return Err(format!("x[{i}] is not finite"));
+    }
+    match hasher {
+        Some(h) => Ok(h.hash_features(&Features::Dense(x))),
+        None => {
+            if x.len() != dim {
+                return Err(format!("x has dimension {}, model expects {dim}", x.len()));
+            }
+            Ok(Features::Dense(x))
+        }
+    }
+}
+
+/// Validate a sparse `idx`/`val` payload (parallel arrays, finite
+/// values). Without a hasher the indices must be 0-based, strictly
+/// increasing and in the model's range; with one they may be *arbitrary*
+/// u32 in *any* order, duplicates included (the hasher sorts and
+/// accumulates) — the hash front-end is exactly what makes unbounded
+/// wire vocabularies legal.
+fn sparse_features(
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    dim: usize,
+    hasher: Option<&FeatureHasher>,
+) -> std::result::Result<Features, String> {
+    if idx.len() != val.len() {
+        return Err(format!("idx has {} entries but val has {}", idx.len(), val.len()));
+    }
+    if let Some(i) = val.iter().position(|v| !v.is_finite()) {
+        return Err(format!("val[{i}] is not finite"));
+    }
+    match hasher {
+        Some(h) => Ok(h.hash_pairs(&idx, &val)),
+        None => {
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err("idx must be strictly increasing".into());
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= dim {
+                    return Err(format!(
+                        "idx {last} is out of range for model dimension {dim}"
+                    ));
+                }
+            }
+            Ok(Features::sparse(dim, idx, val))
+        }
+    }
+}
 
 /// Extract the feature payload from a parsed body: dense `{"x":[...]}`
-/// or sparse `{"idx":[...],"val":[...]}` (parallel arrays, 0-based
-/// strictly-increasing indices). Validates dimension, index range and
-/// finiteness at the protocol boundary; `Err` is the ready-made 400
-/// body.
+/// or sparse `{"idx":[...],"val":[...]}`. `Err` is the 400 message.
 fn parse_features(
     parsed: Option<&Json>,
     dim: usize,
-) -> std::result::Result<Features, Vec<u8>> {
-    let body = parsed.ok_or_else(|| err_body(BODY_SHAPE))?;
+    hasher: Option<&FeatureHasher>,
+) -> std::result::Result<Features, String> {
+    let body = parsed.ok_or_else(|| BODY_SHAPE.to_string())?;
     if let Some(xv) = body.get("x") {
-        let x = xv.f32_vec().ok_or_else(|| err_body(BODY_SHAPE))?;
-        if let Some(err) = check_features(&x, dim) {
-            return Err(err);
-        }
-        return Ok(Features::Dense(x));
+        let x = xv.f32_vec().ok_or_else(|| BODY_SHAPE.to_string())?;
+        return dense_features(x, dim, hasher);
     }
     let idx = body.get("idx").and_then(|v| v.u32_vec());
     let val = body.get("val").and_then(|v| v.f32_vec());
     match (idx, val) {
-        (Some(idx), Some(val)) => {
-            if idx.len() != val.len() {
-                return Err(err_body(&format!(
-                    "idx has {} entries but val has {}",
-                    idx.len(),
-                    val.len()
-                )));
-            }
-            if !idx.windows(2).all(|w| w[0] < w[1]) {
-                return Err(err_body("idx must be strictly increasing"));
-            }
-            if let Some(&last) = idx.last() {
-                if last as usize >= dim {
-                    return Err(err_body(&format!(
-                        "idx {last} is out of range for model dimension {dim}"
-                    )));
-                }
-            }
-            if let Some(i) = val.iter().position(|v| !v.is_finite()) {
-                return Err(err_body(&format!("val[{i}] is not finite")));
-            }
-            Ok(Features::sparse(dim, idx, val))
-        }
-        _ => Err(err_body(BODY_SHAPE)),
+        (Some(idx), Some(val)) => sparse_features(idx, val, dim, hasher),
+        _ => Err(BODY_SHAPE.to_string()),
     }
-}
-
-/// Validate a feature vector at the protocol boundary: right dimension
-/// and every value finite. Non-finite features would poison the ball
-/// geometry on `/train` (inf radius forever, then persisted to the
-/// snapshot) and produce meaningless scores on `/predict` — both are
-/// client errors, rejected with the returned 400 body.
-fn check_features(x: &[f32], dim: usize) -> Option<Vec<u8>> {
-    if x.len() != dim {
-        return Some(err_body(&format!(
-            "x has dimension {}, model expects {dim}",
-            x.len()
-        )));
-    }
-    if let Some(i) = x.iter().position(|v| !v.is_finite()) {
-        return Some(err_body(&format!("x[{i}] is not finite")));
-    }
-    None
 }
 
 fn handle_predict(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
     let parsed = parse_body(body);
-    let x = match parse_features(parsed.as_ref(), sh.dim) {
+    let x = match parse_features(parsed.as_ref(), sh.dim, sh.hasher.as_ref()) {
         Ok(x) => x,
-        Err(e) => return (400, e),
+        Err(e) => return (400, err_body(&e)),
     };
     let snap = sh.cell.load();
     let score = snap.score_view(x.view());
@@ -522,9 +568,20 @@ fn handle_predict(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
 
 fn handle_predict_batch(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
     let parsed = parse_body(body);
-    let rows = match parsed.as_ref().and_then(|v| v.get("xs")).and_then(|v| v.as_array()) {
-        Some(rows) => rows,
-        None => return (400, err_body(r#"body must be {"xs":[[...],[...]]}"#)),
+    let obj = match parsed.as_ref() {
+        Some(v) => v,
+        None => return (400, err_body(BATCH_SHAPE)),
+    };
+    // Two shapes: legacy `"xs"` (dense rows as bare arrays) and `"rows"`
+    // (row objects in the same dense-or-sparse shape `/predict` takes,
+    // freely mixed within one request).
+    let (rows, shaped) = match (
+        obj.get("xs").and_then(|v| v.as_array()),
+        obj.get("rows").and_then(|v| v.as_array()),
+    ) {
+        (Some(xs), None) => (xs, false),
+        (None, Some(rows)) => (rows, true),
+        _ => return (400, err_body(BATCH_SHAPE)),
     };
     if rows.len() > MAX_BATCH_ROWS {
         return (
@@ -535,18 +592,20 @@ fn handle_predict_batch(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
     // One snapshot for the whole batch: every row scores against the
     // same published version.
     let snap = sh.cell.load();
+    let hasher = sh.hasher.as_ref();
     let mut scores = Vec::with_capacity(rows.len());
     for (i, row) in rows.iter().enumerate() {
-        let x = match row.f32_vec() {
-            Some(x) if check_features(&x, sh.dim).is_none() => x,
-            _ => {
-                return (
-                    400,
-                    err_body(&format!("row {i} is not a finite dim-{} vector", sh.dim)),
-                )
-            }
+        let feats = if shaped {
+            parse_features(Some(row), sh.dim, hasher)
+        } else {
+            row.f32_vec()
+                .ok_or_else(|| "not a numeric vector".to_string())
+                .and_then(|x| dense_features(x, sh.dim, hasher))
         };
-        scores.push(json::fmt_num(snap.score(&x)));
+        match feats {
+            Ok(f) => scores.push(json::fmt_num(snap.score_view(f.view()))),
+            Err(e) => return (400, err_body(&format!("row {i}: {e}"))),
+        }
     }
     (
         200,
@@ -569,9 +628,9 @@ fn handle_train(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
     if y != 1.0 && y != -1.0 {
         return (400, err_body("y must be 1 or -1"));
     }
-    let x = match parse_features(parsed.as_ref(), sh.dim) {
+    let x = match parse_features(parsed.as_ref(), sh.dim, sh.hasher.as_ref()) {
         Ok(x) => x,
-        Err(e) => return (400, e),
+        Err(e) => return (400, err_body(&e)),
     };
     match sh.train.try_admit((x, y)) {
         Ok(()) => (
@@ -586,12 +645,13 @@ fn stats_json(sh: &Shared) -> String {
     let snap = sh.cell.load();
     let mut out = String::with_capacity(1024);
     out.push_str(&format!(
-        r#"{{"version":{},"seen":{},"radius":{},"supports":{},"trained":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
+        r#"{{"version":{},"seen":{},"radius":{},"supports":{},"trained":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
         snap.version,
         snap.seen,
         json::fmt_num(snap.radius),
         snap.supports,
         sh.trained.load(Ordering::Relaxed),
+        sh.hasher.as_ref().map(|h| h.dim().to_string()).unwrap_or_else(|| "null".into()),
         json::fmt_num(sh.started.elapsed().as_secs_f64()),
         sh.stats.conns_accepted.load(Ordering::Relaxed),
         sh.stats.conns_shed.load(Ordering::Relaxed),
@@ -707,6 +767,13 @@ mod tests {
     }
 
     fn test_shared(train_queue: usize) -> (Arc<Shared>, Receiver<(Features, f32)>) {
+        test_shared_hashed(train_queue, None)
+    }
+
+    fn test_shared_hashed(
+        train_queue: usize,
+        hash: Option<HashSpec>,
+    ) -> (Arc<Shared>, Receiver<(Features, f32)>) {
         let model = toy_model();
         let (train_tx, train_rx) = bounded(train_queue);
         let sh = Arc::new(Shared {
@@ -720,6 +787,7 @@ mod tests {
             dim: 2,
             tag: "t".into(),
             limits: Limits::default(),
+            hasher: hash.map(FeatureHasher::from_spec),
         });
         (sh, train_rx)
     }
@@ -806,6 +874,128 @@ mod tests {
         assert_eq!(y, -1.0);
         assert_eq!(x.nnz(), 1);
         assert_eq!(x.dense().as_ref(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn predict_batch_rows_mixes_dense_and_sparse() {
+        let (sh, _rx) = test_shared(4);
+        // the sparse row is the same vector as the dense one: equal scores
+        let (status, body) = route_raw(
+            &sh,
+            "POST",
+            "/predict_batch",
+            br#"{"rows":[{"x":[1.0,0.0]},{"idx":[0],"val":[1.0]},{"idx":[],"val":[]}]}"#,
+        );
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert_eq!(scores.len(), 3);
+        assert_eq!(scores[0].as_f64(), scores[1].as_f64());
+        assert_eq!(scores[2].as_f64(), Some(0.0));
+        // same idx/val validation as /predict: bad rows are explicit 400s
+        for bad in [
+            br#"{"rows":[{"idx":[0,1],"val":[1.0]}]}"#.as_slice(),
+            br#"{"rows":[{"idx":[1,0],"val":[1,2]}]}"#.as_slice(),
+            br#"{"rows":[{"idx":[2],"val":[1.0]}]}"#.as_slice(),
+            br#"{"rows":[{"idx":[0],"val":[1e999]}]}"#.as_slice(),
+            br#"{"rows":[{"y":1}]}"#.as_slice(),
+            br#"{"rows":[[1,0]],"xs":[[1,0]]}"#.as_slice(),
+        ] {
+            let (status, body) = route_raw(&sh, "POST", "/predict_batch", bad);
+            assert_eq!(status, 400, "{}", String::from_utf8_lossy(bad));
+            assert!(!body.is_empty());
+        }
+        // error messages carry the failing row index
+        let (_, body) = route_raw(
+            &sh,
+            "POST",
+            "/predict_batch",
+            br#"{"rows":[{"x":[1.0,0.0]},{"idx":[9],"val":[1.0]}]}"#,
+        );
+        assert!(String::from_utf8(body).unwrap().contains("row 1"));
+    }
+
+    #[test]
+    fn hashed_ingest_accepts_arbitrary_indices() {
+        let spec = HashSpec { dim: 2, seed: 42 };
+        let (sh, rx) = test_shared_hashed(4, Some(spec));
+        let h = FeatureHasher::from_spec(spec);
+        // out-of-range indices are legal now: they hash into [0, D)
+        let (status, body) =
+            route_raw(&sh, "POST", "/predict", br#"{"idx":[123456789],"val":[2.0]}"#);
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let got = v.get("score").unwrap().as_f64().unwrap();
+        let want = {
+            let snap = sh.cell.load();
+            snap.score_view(h.hash_pairs(&[123456789], &[2.0]).view())
+        };
+        assert_eq!(got, want, "served score must equal hashing then scoring");
+        // dense payloads of any length hash down to D
+        assert_eq!(
+            route_raw(&sh, "POST", "/predict", br#"{"x":[1,2,3,4,5,6,7]}"#).0,
+            200
+        );
+        // /train admits the hashed example (dim D on the queue)
+        assert_eq!(
+            route_raw(&sh, "POST", "/train", br#"{"idx":[7,900000],"val":[1.0,1.0],"y":1}"#).0,
+            202
+        );
+        let (x, _y) = rx.try_recv().unwrap();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x, h.hash_pairs(&[7, 900000], &[1.0, 1.0]));
+        // batch rows hash too
+        let (status, _) = route_raw(
+            &sh,
+            "POST",
+            "/predict_batch",
+            br#"{"rows":[{"idx":[31337],"val":[1.0]},{"x":[1,2,3]}]}"#,
+        );
+        assert_eq!(status, 200);
+        // hashed ingest accepts any index order and duplicates (the
+        // hasher sorts and accumulates) — equal score either way
+        let (s_sorted, b_sorted) =
+            route_raw(&sh, "POST", "/predict", br#"{"idx":[2,5],"val":[2.0,1.0]}"#);
+        let (s_unsorted, b_unsorted) =
+            route_raw(&sh, "POST", "/predict", br#"{"idx":[5,2],"val":[1.0,2.0]}"#);
+        assert_eq!((s_sorted, s_unsorted), (200, 200));
+        let score = |b: &[u8]| {
+            Json::parse(std::str::from_utf8(b).unwrap())
+                .unwrap()
+                .get("score")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(score(&b_sorted), score(&b_unsorted));
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[7,7],"val":[1,1]}"#).0, 200);
+        // still-invalid payloads stay rejected: NaN values, length mismatch
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[0],"val":[1e999]}"#).0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/predict", br#"{"idx":[5,2],"val":[1.0]}"#).0, 400);
+        // ... and the unhashed server still requires sorted indices
+        let (plain, _rx2) = test_shared(4);
+        assert_eq!(route_raw(&plain, "POST", "/predict", br#"{"idx":[1,0],"val":[1,2]}"#).0, 400);
+    }
+
+    #[test]
+    fn serve_rejects_mismatched_hash_config() {
+        // model not trained in the hash space → explicit config error
+        let model = toy_model();
+        let cfg = ServerConfig {
+            hash: Some(HashSpec { dim: 2, seed: 1 }),
+            ..Default::default()
+        };
+        let err = serve(model, cfg).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // hash dim disagreeing with the model dim → config error
+        let mut m = StreamSvm::new(4, TrainOptions::default().with_hash(Some(HashSpec { dim: 2, seed: 1 })));
+        m.observe(&[1.0, 0.0, 0.0, 0.0], 1.0);
+        let cfg = ServerConfig {
+            hash: Some(HashSpec { dim: 2, seed: 1 }),
+            ..Default::default()
+        };
+        let err = serve(m, cfg).unwrap_err();
+        assert!(err.to_string().contains("dimension"), "{err}");
     }
 
     #[test]

@@ -52,18 +52,22 @@ impl Checkpointer {
     /// Observe the training position; snapshot if the interval elapsed.
     /// Returns whether a snapshot was written. `dim` is the stream's
     /// feature dimension (recorded even when no ball exists yet, so an
-    /// empty sketch still resumes at the right dimension).
+    /// empty sketch still resumes at the right dimension); `merges` is
+    /// the Algorithm-2 merge count at this position (0 for Algorithm 1),
+    /// recorded so a resumed run keeps reporting the paper's O(N/L)
+    /// bound correctly.
     pub fn maybe_save(
         &mut self,
         ball: Option<&BallState>,
         dim: usize,
         seen: usize,
+        merges: usize,
         opts: &TrainOptions,
     ) -> Result<bool> {
         if seen < self.last_saved + self.cfg.every {
             return Ok(false);
         }
-        self.save(ball, dim, seen, opts)?;
+        self.save(ball, dim, seen, merges, opts)?;
         Ok(true)
     }
 
@@ -73,10 +77,12 @@ impl Checkpointer {
         ball: Option<&BallState>,
         dim: usize,
         seen: usize,
+        merges: usize,
         opts: &TrainOptions,
     ) -> Result<()> {
         debug_assert!(ball.map(|b| b.dim() == dim).unwrap_or(true), "ball/stream dim mismatch");
-        let sk = MebSketch::new(dim, ball.cloned(), seen, *opts, self.cfg.tag.clone());
+        let sk = MebSketch::new(dim, ball.cloned(), seen, *opts, self.cfg.tag.clone())
+            .with_merges(merges);
         sk.write_to(&self.cfg.path)?;
         self.last_saved = seen;
         self.saves += 1;
@@ -121,32 +127,41 @@ pub fn resume_model(path: &Path) -> Result<StreamSvm> {
 /// lookahead merges executed on-device (PJRT) resumes within float
 /// tolerance instead — the replay uses the Rust reference solver.
 pub fn resume_fit<I: IntoIterator<Item = Example>>(sketch: &MebSketch, stream: I) -> StreamSvm {
-    let rest = stream.into_iter().skip(sketch.seen);
     if sketch.opts.lookahead > 1 {
-        let mut m = match &sketch.ball {
-            Some(b) => crate::svm::lookahead::LookaheadSvm::from_ball(
-                sketch.dim,
-                sketch.opts,
-                b.clone(),
-                sketch.seen,
-            ),
-            None => crate::svm::lookahead::LookaheadSvm::new(sketch.dim, sketch.opts),
-        };
-        for e in rest {
-            m.observe_view(e.x.view(), e.y);
-        }
-        m.finish();
-        let mut out = StreamSvm::new(sketch.dim, sketch.opts);
-        if let Some(b) = m.ball() {
-            out.set_ball(b.clone(), m.examples_seen());
-        }
-        return out;
+        return resume_lookahead(sketch, stream).to_stream_svm();
     }
+    let rest = stream.into_iter().skip(sketch.seen);
     let mut model = sketch.to_model();
     for e in rest {
         model.observe_view(e.x.view(), e.y);
     }
     model
+}
+
+/// [`resume_fit`] for Algorithm 2, returning the live lookahead learner
+/// so callers can inspect merge counts and buffer state. The sketch's
+/// stored merge count seeds the resumed counter, so `num_merges()` after
+/// the replay equals an uninterrupted run's.
+pub fn resume_lookahead<I: IntoIterator<Item = Example>>(
+    sketch: &MebSketch,
+    stream: I,
+) -> crate::svm::lookahead::LookaheadSvm {
+    let rest = stream.into_iter().skip(sketch.seen);
+    let mut m = match &sketch.ball {
+        Some(b) => crate::svm::lookahead::LookaheadSvm::from_ball(
+            sketch.dim,
+            sketch.opts,
+            b.clone(),
+            sketch.seen,
+            sketch.merges,
+        ),
+        None => crate::svm::lookahead::LookaheadSvm::new(sketch.dim, sketch.opts),
+    };
+    for e in rest {
+        m.observe_view(e.x.view(), e.y);
+    }
+    m.finish();
+    m
 }
 
 #[cfg(test)]
@@ -216,7 +231,7 @@ mod tests {
             model.observe_view(e.x.view(), e.y);
             // simulate block boundaries of 10 examples
             if (i + 1) % 10 == 0
-                && ck.maybe_save(model.ball(), 4, model.examples_seen(), &opts).unwrap()
+                && ck.maybe_save(model.ball(), 4, model.examples_seen(), 0, &opts).unwrap()
             {
                 saves += 1;
             }
@@ -253,7 +268,10 @@ mod tests {
             for (i, e) in exs.iter().enumerate() {
                 m.observe_view(e.x.view(), e.y);
                 if sk.is_none() && i + 1 >= n / 2 && i + 1 < n && m.buffered() == 0 {
-                    sk = Some(MebSketch::new(d, m.ball().cloned(), i + 1, opts, "la"));
+                    sk = Some(
+                        MebSketch::new(d, m.ball().cloned(), i + 1, opts, "la")
+                            .with_merges(m.num_merges()),
+                    );
                 }
             }
             let Some(sk) = sk else {

@@ -16,26 +16,31 @@
 //!
 //! Payload, all little-endian:
 //! `tag(u32 len + utf8) · c(f64) · slack_mode(u8) · lookahead(u64) ·
-//! merge_iters(u64) · seen(u64) · dim(u64) · has_ball(u8) ·
+//! merge_iters(u64) · merges(u64) · has_hash(u8) · [hash_seed(u64) ·
+//! hash_dim(u64)] · seen(u64) · dim(u64) · has_ball(u8) ·
 //! [m(u64) · r(f64) · xi2(f64) · sigma(f64) · wnorm2(f64) ·
 //! v(dim × f32)]`.
 //!
 //! Version 2 serializes the ball's *factored* center `w = σ·v` (plus
 //! the cached `‖w‖²`) exactly as the live state holds it, so decode →
 //! resume → continue training reproduces an uninterrupted run
-//! bit-for-bit — including the lazy-scaling fold schedule. Version-1
-//! sketches (explicit dense `w`) still decode (as `σ = 1`, `v = w`).
+//! bit-for-bit — including the lazy-scaling fold schedule. Version 3
+//! adds two provenance fields: the Algorithm-2 merge count (so a
+//! resumed run reports the paper's O(N/L) bound correctly) and the
+//! feature-hashing spec `(seed, D)` (so resume and merge can refuse
+//! mismatched hash spaces). Version-1 sketches (explicit dense `w`)
+//! and version-2 sketches still decode (`merges = 0`, no hash).
 
 use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::svm::ball::BallState;
 use crate::svm::streamsvm::StreamSvm;
-use crate::svm::{SlackMode, TrainOptions};
+use crate::svm::{HashSpec, SlackMode, TrainOptions};
 
-/// Current wire-format version (2 = lazily-scaled center; 1 = explicit
-/// dense `w`, still readable).
-pub const SKETCH_VERSION: u16 = 2;
+/// Current wire-format version (3 = merge-count + hash provenance;
+/// 2 = lazily-scaled center; 1 = explicit dense `w`; all readable).
+pub const SKETCH_VERSION: u16 = 3;
 
 const MAGIC: &[u8; 4] = b"MEBS";
 /// Fixed header bytes before the payload.
@@ -53,10 +58,15 @@ pub struct MebSketch {
     /// Stream position: examples consumed so far.
     pub seen: usize,
     /// Training-option fingerprint (merge compatibility is checked on
-    /// `c`, `slack_mode` and `dim`).
+    /// `c`, `slack_mode`, `dim` and the hash spec).
     pub opts: TrainOptions,
     /// Free-form provenance tag (dataset name, shard id, ...).
     pub tag: String,
+    /// Algorithm-2 merge solves performed up to `seen` (0 for
+    /// Algorithm-1 learners): resuming threads this through
+    /// [`crate::svm::lookahead::LookaheadSvm::from_ball`] so the paper's
+    /// O(N/L) merge count survives an interruption.
+    pub merges: usize,
 }
 
 /// FNV-1a 64-bit — tiny, deterministic, dependency-free integrity check.
@@ -128,7 +138,14 @@ impl MebSketch {
         if let Some(b) = &ball {
             debug_assert_eq!(b.dim(), dim, "ball/sketch dim mismatch");
         }
-        MebSketch { dim, ball, seen, opts, tag: tag.into() }
+        MebSketch { dim, ball, seen, opts, tag: tag.into(), merges: 0 }
+    }
+
+    /// Record the Algorithm-2 merge count in provenance (builder-style;
+    /// Algorithm-1 sketches leave it at 0).
+    pub fn with_merges(mut self, merges: usize) -> Self {
+        self.merges = merges;
+        self
     }
 
     /// Snapshot a live model.
@@ -164,19 +181,24 @@ impl MebSketch {
     }
 
     /// Can `self` and `other` be merged into one model? Requires the same
-    /// feature dimension and the same `(C, slack_mode)` geometry —
-    /// lookahead and merge-iteration budgets are training-time tuning and
-    /// may differ between shards.
+    /// feature dimension, the same `(C, slack_mode)` geometry and the
+    /// same feature-hash space — lookahead and merge-iteration budgets
+    /// are training-time tuning and may differ between shards.
     pub fn compatible(&self, other: &MebSketch) -> bool {
         self.dim == other.dim
             && self.opts.c.to_bits() == other.opts.c.to_bits()
             && self.opts.slack_mode == other.opts.slack_mode
+            && self.opts.hash == other.opts.hash
     }
 
     /// One-line human summary for CLI output.
     pub fn summary(&self) -> String {
+        let hash = match self.opts.hash {
+            Some(h) => format!(" hash=D{}@{:#x}", h.dim, h.seed),
+            None => String::new(),
+        };
         format!(
-            "tag={} dim={} seen={} supports={} R={:.4} C={} slack={:?}",
+            "tag={} dim={} seen={} supports={} R={:.4} C={} slack={:?}{hash}",
             if self.tag.is_empty() { "-" } else { &self.tag },
             self.dim,
             self.seen,
@@ -199,6 +221,15 @@ impl MebSketch {
         });
         p.extend_from_slice(&(self.opts.lookahead as u64).to_le_bytes());
         p.extend_from_slice(&(self.opts.merge_iters as u64).to_le_bytes());
+        p.extend_from_slice(&(self.merges as u64).to_le_bytes());
+        match self.opts.hash {
+            None => p.push(0),
+            Some(h) => {
+                p.push(1);
+                p.extend_from_slice(&h.seed.to_le_bytes());
+                p.extend_from_slice(&(h.dim as u64).to_le_bytes());
+            }
+        }
         p.extend_from_slice(&(self.seen as u64).to_le_bytes());
         p.extend_from_slice(&(self.dim as u64).to_le_bytes());
         match &self.ball {
@@ -275,6 +306,25 @@ impl MebSketch {
         };
         let lookahead = usize_of(r.u64("lookahead")?, "lookahead")?;
         let merge_iters = usize_of(r.u64("merge_iters")?, "merge_iters")?;
+        // v3 provenance: merge count + feature-hash spec.
+        let (merges, hash) = if version >= 3 {
+            let merges = usize_of(r.u64("merges")?, "merges")?;
+            let hash = match r.u8("has_hash")? {
+                0 => None,
+                1 => {
+                    let seed = r.u64("hash_seed")?;
+                    let dim = usize_of(r.u64("hash_dim")?, "hash_dim")?;
+                    if dim == 0 {
+                        return Err(Error::sketch("hash_dim must be >= 1"));
+                    }
+                    Some(HashSpec { dim, seed })
+                }
+                other => return Err(Error::sketch(format!("bad has_hash byte {other}"))),
+            };
+            (merges, hash)
+        } else {
+            (0, None)
+        };
         let seen = usize_of(r.u64("seen")?, "seen")?;
         let dim = usize_of(r.u64("dim")?, "dim")?;
         let ball = match r.u8("has_ball")? {
@@ -308,8 +358,8 @@ impl MebSketch {
         if !r.done() {
             return Err(Error::sketch("trailing bytes after sketch payload"));
         }
-        let opts = TrainOptions { c, slack_mode, lookahead, merge_iters };
-        Ok(MebSketch { dim, ball, seen, opts, tag })
+        let opts = TrainOptions { c, slack_mode, lookahead, merge_iters, hash };
+        Ok(MebSketch { dim, ball, seen, opts, tag, merges })
     }
 
     /// Write atomically: encode to `<path>.tmp`, then rename over `path`,
@@ -479,6 +529,67 @@ mod tests {
     }
 
     #[test]
+    fn merges_and_hash_provenance_roundtrip() {
+        let model = trained(80, 6, 13, &TrainOptions::default().with_lookahead(4));
+        let mut sk = MebSketch::from_model(&model, "prov").with_merges(7);
+        sk.opts.hash = Some(HashSpec { dim: 4096, seed: 0xDEAD_BEEF });
+        let back = MebSketch::decode(&sk.encode()).unwrap();
+        assert_eq!(back, sk);
+        assert_eq!(back.merges, 7);
+        assert_eq!(back.opts.hash, Some(HashSpec { dim: 4096, seed: 0xDEAD_BEEF }));
+        // no-hash sketches roundtrip too
+        let sk2 = MebSketch::from_model(&model, "prov2").with_merges(3);
+        let back2 = MebSketch::decode(&sk2.encode()).unwrap();
+        assert_eq!(back2.merges, 3);
+        assert_eq!(back2.opts.hash, None);
+    }
+
+    #[test]
+    fn decodes_version2_sketches() {
+        // Hand-assemble a v2 payload (factored center, no merges/hash
+        // fields) and check it decodes with merges = 0 and no hash spec.
+        let v = [1.5f32, -2.0];
+        let (sigma, wnorm2) = (0.5f64, 1.5625f64);
+        let (rad, xi2, m, seen) = (2.0f64, 0.25f64, 3usize, 9usize);
+        let opts = TrainOptions::default();
+        let mut p: Vec<u8> = Vec::new();
+        p.extend_from_slice(&(2u32).to_le_bytes());
+        p.extend_from_slice(b"v2");
+        p.extend_from_slice(&opts.c.to_bits().to_le_bytes());
+        p.push(1); // Consistent
+        p.extend_from_slice(&(opts.lookahead as u64).to_le_bytes());
+        p.extend_from_slice(&(opts.merge_iters as u64).to_le_bytes());
+        p.extend_from_slice(&(seen as u64).to_le_bytes());
+        p.extend_from_slice(&(v.len() as u64).to_le_bytes());
+        p.push(1); // has_ball
+        p.extend_from_slice(&(m as u64).to_le_bytes());
+        p.extend_from_slice(&rad.to_bits().to_le_bytes());
+        p.extend_from_slice(&xi2.to_bits().to_le_bytes());
+        p.extend_from_slice(&sigma.to_bits().to_le_bytes());
+        p.extend_from_slice(&wnorm2.to_bits().to_le_bytes());
+        for &x in &v {
+            p.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u16.to_le_bytes()); // version 2
+        bytes.extend_from_slice(&0u16.to_le_bytes());
+        bytes.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        let sum = fnv1a64(&p);
+        bytes.extend_from_slice(&p);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+
+        let sk = MebSketch::decode(&bytes).unwrap();
+        assert_eq!(sk.tag, "v2");
+        assert_eq!(sk.merges, 0);
+        assert_eq!(sk.opts.hash, None);
+        let b = sk.ball.as_ref().unwrap();
+        assert_eq!(b.sigma(), sigma);
+        assert_eq!(b.direction(), &v);
+        assert_eq!(b.wnorm2(), wnorm2);
+    }
+
+    #[test]
     fn compatibility_fingerprint() {
         let a = MebSketch::new(4, None, 0, TrainOptions::default(), "a");
         let b = MebSketch::new(4, None, 0, TrainOptions::default().with_lookahead(10), "b");
@@ -495,5 +606,20 @@ mod tests {
             "e",
         );
         assert!(!a.compatible(&e));
+        // mismatched hash spaces are incompatible (dim, seed, presence)
+        let h = |dim, seed| {
+            MebSketch::new(
+                4,
+                None,
+                0,
+                TrainOptions::default().with_hash(Some(HashSpec { dim, seed })),
+                "h",
+            )
+        };
+        assert!(!a.compatible(&h(4, 1)), "hashed vs unhashed must differ");
+        assert!(!h(4, 1).compatible(&h(4, 2)), "seeds must match");
+        assert!(h(4, 1).compatible(&h(4, 1)));
+        // merge count is provenance, not compatibility
+        assert!(a.compatible(&MebSketch::new(4, None, 0, TrainOptions::default(), "m").with_merges(9)));
     }
 }

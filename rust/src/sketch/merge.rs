@@ -62,6 +62,24 @@ pub fn merge_sketches(sketches: &[MebSketch]) -> Result<MebSketch> {
         .first()
         .ok_or_else(|| Error::sketch("cannot merge zero sketches"))?;
     for (i, s) in sketches.iter().enumerate().skip(1) {
+        if s.opts.hash != first.opts.hash {
+            // A hash-space mismatch is an operator configuration error
+            // (wrong --hash-dim/--hash-seed), not a corrupt sketch:
+            // buckets from different (seed, D) pairs are unrelated
+            // coordinates and must never be folded together.
+            let fmt = |h: Option<crate::svm::HashSpec>| match h {
+                Some(h) => format!("D{}@{:#x}", h.dim, h.seed),
+                None => "unhashed".into(),
+            };
+            return Err(Error::config(format!(
+                "sketch {i} (tag={}) lives in hash space {} but sketch 0 (tag={}) in {}; \
+                 models from different hash spaces cannot be merged",
+                s.tag,
+                fmt(s.opts.hash),
+                first.tag,
+                fmt(first.opts.hash),
+            )));
+        }
         if !first.compatible(s) {
             return Err(Error::sketch(format!(
                 "sketch {i} (tag={}, dim={}, C={}, slack={:?}) is incompatible with \
@@ -248,6 +266,25 @@ mod tests {
 
         // zero sketches rejected
         assert!(merge_sketches(&[]).is_err());
+
+        // mismatched hash spaces rejected with Error::Config
+        use crate::svm::HashSpec;
+        let hashed = |seed| {
+            MebSketch::new(
+                4,
+                None,
+                0,
+                opts.with_hash(Some(HashSpec { dim: 4, seed })),
+                "hashed",
+            )
+        };
+        let err = merge_sketches(&[parts[0].clone(), hashed(1)]).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("hash space"), "{err}");
+        let err = merge_sketches(&[hashed(1), hashed(2)]).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+        // same hash space merges fine
+        assert!(merge_sketches(&[hashed(1), hashed(1)]).is_ok());
     }
 
     #[test]

@@ -203,6 +203,51 @@ impl BallState {
         true
     }
 
+    /// Rebuild the ball in place as a merge result: the new explicit
+    /// center is `w' = keep·w + Σ coefs[i]·xs[i]` — one scalar multiply
+    /// on `σ` plus sparse scatter-adds into `v`, so the Algorithm-2
+    /// flush costs O(Σ nnz) instead of O(L·D). The caller supplies the
+    /// closed-form `‖w'‖²` (computable in O(L²) from the merge Gram),
+    /// or `None` when that expression suffered heavy cancellation — then
+    /// the norm is recomputed exactly from the stored center (O(D), the
+    /// precision the pre-factored code always paid).
+    pub fn merge_into(
+        &mut self,
+        keep: f64,
+        xs: &[FeaturesView<'_>],
+        coefs: &[f64],
+        wnorm2: Option<f64>,
+        r: f64,
+        xi2: f64,
+        absorbed: usize,
+    ) {
+        debug_assert_eq!(xs.len(), coefs.len());
+        self.sigma *= keep;
+        if self.sigma.abs() < SIGMA_FOLD {
+            // Fold before the scatter-adds so `coef/σ` stays bounded.
+            // `keep == 0` lands here too and zeroes `v` exactly.
+            for vi in self.v.iter_mut() {
+                *vi = (*vi as f64 * self.sigma) as f32;
+            }
+            self.sigma = 1.0;
+        }
+        for (x, &c) in xs.iter().zip(coefs) {
+            x.axpy_into(&mut self.v, (c / self.sigma) as f32);
+        }
+        self.r = r;
+        self.xi2 = xi2;
+        let crossed = (self.m / RENORM_EVERY) != ((self.m + absorbed) / RENORM_EVERY);
+        self.m += absorbed;
+        match wnorm2 {
+            Some(w2) if !crossed => self.wnorm2 = w2.max(0.0),
+            // Re-anchor from the stored center: on the amortized schedule
+            // (same `m`-boundary rule as the per-example update, so it is
+            // deterministic under resume), or whenever the caller flagged
+            // the closed form as cancellation-damaged.
+            _ => self.renormalize(),
+        }
+    }
+
     /// Fold `σ` into `v` and refresh the cached norm (amortized; see the
     /// module docs).
     fn renormalize(&mut self) {

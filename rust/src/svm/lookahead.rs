@@ -7,17 +7,21 @@
 //! enclosure is guaranteed by construction). `L = 1` short-circuits to
 //! the closed-form Algorithm-1 update, exactly as the paper notes.
 
-use crate::data::Example;
+use crate::data::{Example, Features, FeaturesView};
+use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::ball::BallState;
-use crate::svm::meb::solve_merge;
+use crate::svm::meb::solve_merge_into;
+use crate::svm::streamsvm::StreamSvm;
 use crate::svm::TrainOptions;
 
 /// A StreamSVM-with-lookahead model (Algorithm 2).
 #[derive(Clone, Debug)]
 pub struct LookaheadSvm {
     ball: Option<BallState>,
-    buf_x: Vec<Vec<f32>>,
+    /// Buffered survivors in their arriving representation — sparse rows
+    /// stay sparse, so the merge solve is O(L²·nnz), not O(L²·D).
+    buf_x: Vec<Features>,
     buf_y: Vec<f32>,
     opts: TrainOptions,
     dim: usize,
@@ -41,9 +45,17 @@ impl LookaheadSvm {
 
     /// Rebuild a learner mid-stream from checkpointed state: `ball` as
     /// it stood at the buffer-empty stream position `seen` (the only
-    /// positions the sketch checkpointer snapshots). Continuing the
-    /// stream from `seen` reproduces an uninterrupted run exactly.
-    pub fn from_ball(dim: usize, opts: TrainOptions, ball: BallState, seen: usize) -> Self {
+    /// positions the sketch checkpointer snapshots), with `merges` QP
+    /// solves already performed. Continuing the stream from `seen`
+    /// reproduces an uninterrupted run exactly — including the paper's
+    /// O(N/L) merge count, which a zeroed counter used to misreport.
+    pub fn from_ball(
+        dim: usize,
+        opts: TrainOptions,
+        ball: BallState,
+        seen: usize,
+        merges: usize,
+    ) -> Self {
         assert!(opts.lookahead >= 1, "lookahead must be >= 1");
         LookaheadSvm {
             ball: Some(ball),
@@ -52,26 +64,39 @@ impl LookaheadSvm {
             opts,
             dim,
             seen,
-            merges: 0,
+            merges,
         }
     }
 
     /// Stream one example (Algorithm 2 lines 3–9).
     pub fn observe(&mut self, x: &[f32], y: f32) {
-        self.observe_view(crate::data::FeaturesView::Dense(x), y)
+        self.observe_view(FeaturesView::Dense(x), y)
     }
 
     /// [`Self::observe`] for a dense-or-sparse feature view: the
-    /// enclosure test is O(nnz); buffered survivors densify (the merge
-    /// solve is dense by nature).
-    pub fn observe_view(&mut self, x: crate::data::FeaturesView<'_>, y: f32) {
+    /// enclosure test is O(nnz), and buffered survivors keep their
+    /// representation (no densify) for the sparse merge solve.
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) {
         debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
         let Some(ball) = &mut self.ball else {
+            if !x.is_finite() {
+                // keep NaN out of a fresh ball's center
+                debug_assert!(false, "non-finite features in LookaheadSvm::observe");
+                return;
+            }
             self.ball = Some(BallState::init_view(x, y, &self.opts));
             return;
         };
         let d = ball.distance_view(x, y, &self.opts);
+        if !d.is_finite() {
+            // Same skip-and-surface path as BallState::try_update_view: a
+            // NaN/Inf example must not reach the buffer — one poisoned
+            // survivor would NaN the merge Gram and the merged center
+            // forever (and get persisted into snapshots).
+            debug_assert!(false, "non-finite distance in LookaheadSvm::observe (d = {d})");
+            return;
+        }
         if d < ball.r {
             return; // enclosed: discard
         }
@@ -80,7 +105,7 @@ impl LookaheadSvm {
             ball.try_update_view(x, y, &self.opts);
             return;
         }
-        self.buf_x.push(x.to_dense());
+        self.buf_x.push(x.to_features());
         self.buf_y.push(y);
         if self.buf_x.len() == self.opts.lookahead {
             self.flush();
@@ -94,9 +119,8 @@ impl LookaheadSvm {
             return;
         }
         let ball = self.ball.as_mut().expect("buffer implies an initialized ball");
-        let xrefs: Vec<&[f32]> = self.buf_x.iter().map(|v| v.as_slice()).collect();
-        let res = solve_merge(ball, &xrefs, &self.buf_y, &self.opts);
-        *ball = res.ball;
+        let views: Vec<FeaturesView> = self.buf_x.iter().map(|f| f.view()).collect();
+        solve_merge_into(ball, &views, &self.buf_y, &self.opts);
         self.buf_x.clear();
         self.buf_y.clear();
         self.merges += 1;
@@ -105,6 +129,29 @@ impl LookaheadSvm {
     /// End-of-stream: flush the partial buffer. Idempotent.
     pub fn finish(&mut self) {
         self.flush();
+    }
+
+    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
+    /// wrong-dimension examples, non-finite features and non-±1 labels
+    /// with [`crate::svm::validate_example`]'s errors instead of
+    /// skipping silently.
+    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<()> {
+        crate::svm::validate_example(x, y, self.dim)?;
+        self.observe_view(x, y);
+        Ok(())
+    }
+
+    /// The equivalent Algorithm-1 view of the current state (ball +
+    /// stream position) as a [`StreamSvm`] — the shape sketches, the
+    /// serving layer and the CLI consume. Callers should [`Self::finish`]
+    /// first; a non-empty buffer is not part of the ball.
+    pub fn to_stream_svm(&self) -> StreamSvm {
+        debug_assert!(self.buf_x.is_empty(), "to_stream_svm with buffered survivors");
+        let mut out = StreamSvm::new(self.dim, self.opts);
+        if let Some(b) = &self.ball {
+            out.set_ball(b.clone(), self.seen);
+        }
+        out
     }
 
     /// One-pass training over a slice/iterator.
@@ -219,11 +266,57 @@ mod tests {
     }
 
     #[test]
+    fn nan_features_never_reach_the_buffer() {
+        // Regression: a NaN feature's distance is NaN, `d < r` is false,
+        // and L > 1 used to buffer the poisoned survivor — the next
+        // flush then wrote NaN into (w, R, ξ²) forever. The guarded path
+        // skips it (debug builds assert with an explicit message).
+        let mk = || {
+            let mut m = LookaheadSvm::new(1, TrainOptions::default().with_lookahead(4));
+            m.observe(&[1.0], 1.0);
+            m.observe(&[4.0], 1.0);
+            m
+        };
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(|| {
+                let mut m = mk();
+                m.observe(&[f32::NAN], 1.0);
+            });
+            let payload = r.expect_err("debug build should assert");
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            assert!(msg.contains("non-finite"), "unexpected panic: {msg}");
+        } else {
+            let mut m = mk();
+            let buffered = m.buffered();
+            m.observe(&[f32::NAN], 1.0);
+            assert_eq!(m.buffered(), buffered, "NaN example reached the buffer");
+            m.observe(&[8.0], 1.0);
+            m.finish();
+            assert!(m.radius().is_finite());
+            assert!(m.weights()[0].is_finite(), "NaN poisoned the merged center");
+            // a NaN first example must not seed the ball either
+            let mut m = LookaheadSvm::new(1, TrainOptions::default().with_lookahead(4));
+            m.observe(&[f32::NAN], 1.0);
+            assert!(m.ball().is_none());
+        }
+        // the validated entry point surfaces the defect as an error
+        let mut m = mk();
+        let err = m.try_observe(crate::data::FeaturesView::Dense(&[f32::NAN]), 1.0).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Data(_)), "{err}");
+        let err = m.try_observe(crate::data::FeaturesView::Dense(&[1.0, 2.0]), 1.0).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+    }
+
+    #[test]
     fn finish_is_idempotent() {
         let train = stream(200, 3, 0.5, 1);
         let mut m = LookaheadSvm::new(3, TrainOptions::default().with_lookahead(8));
         for e in &train {
-            m.observe(&e.x.dense(), e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         m.finish();
         let w = m.weights().to_vec();

@@ -14,6 +14,7 @@
 //!   as an explicit convex combination (used by the CVM baseline where
 //!   the point set is the growing core set).
 
+use crate::data::FeaturesView;
 use crate::linalg;
 use crate::svm::ball::BallState;
 use crate::svm::TrainOptions;
@@ -28,20 +29,21 @@ pub struct MergeResult {
     pub mu: Vec<f64>,
 }
 
-/// Gram matrix of `v_i = p_i − c0` in the augmented space (row-major L×L).
-///
-/// `<p_i,p_j> = y_i y_j <x_i,x_j> + [i==j]·s²` (fresh orthogonal slacks),
-/// `<c0,p_i> = y_i <w,x_i>` (the old center's slack mass is supported on
-/// earlier stream indices, orthogonal to the buffer's), and
-/// `<c0,c0> = ||w||² + ξ²`.
-pub fn merge_gram(ball: &BallState, xs: &[&[f32]], ys: &[f32], s2: f64) -> Vec<f64> {
+/// Gram of `v_i = p_i − c0` plus the cross terms `cp_i = y_i⟨w, x_i⟩`
+/// (needed again for the closed-form `‖w'‖²` of the merged center).
+fn gram_with_cp(
+    ball: &BallState,
+    xs: &[FeaturesView<'_>],
+    ys: &[f32],
+    s2: f64,
+) -> (Vec<f64>, Vec<f64>) {
     let l = ys.len();
     let cc = ball.center_norm2();
-    let cp: Vec<f64> = (0..l).map(|i| ys[i] as f64 * ball.score(xs[i])).collect();
+    let cp: Vec<f64> = (0..l).map(|i| ys[i] as f64 * ball.score_view(xs[i])).collect();
     let mut g = vec![0.0f64; l * l];
     for i in 0..l {
         for j in 0..=i {
-            let mut v = ys[i] as f64 * ys[j] as f64 * linalg::dot(xs[i], xs[j]);
+            let mut v = ys[i] as f64 * ys[j] as f64 * xs[i].dot_view(&xs[j]);
             if i == j {
                 v += s2;
             }
@@ -50,7 +52,19 @@ pub fn merge_gram(ball: &BallState, xs: &[&[f32]], ys: &[f32], s2: f64) -> Vec<f
             g[j * l + i] = v;
         }
     }
-    g
+    (g, cp)
+}
+
+/// Gram matrix of `v_i = p_i − c0` in the augmented space (row-major L×L),
+/// computed with the O(nnz) view kernels — O(L²·nnz) for sparse buffers
+/// instead of O(L²·D).
+///
+/// `<p_i,p_j> = y_i y_j <x_i,x_j> + [i==j]·s²` (fresh orthogonal slacks),
+/// `<c0,p_i> = y_i <w,x_i>` (the old center's slack mass is supported on
+/// earlier stream indices, orthogonal to the buffer's), and
+/// `<c0,c0> = ||w||² + ξ²`.
+pub fn merge_gram(ball: &BallState, xs: &[FeaturesView<'_>], ys: &[f32], s2: f64) -> Vec<f64> {
+    gram_with_cp(ball, xs, ys, s2).0
 }
 
 /// `max(||Vμ|| + r0, maxᵢ ||Vμ − vᵢ||)` evaluated from the Gram.
@@ -68,21 +82,38 @@ pub fn merge_objective(mu: &[f64], g: &[f64], r0: f64) -> f64 {
     best
 }
 
-/// MEB of (ball ∪ points) via Badoiu-Clarkson in μ-space.
+/// MEB of (ball ∪ points) via Badoiu-Clarkson in μ-space — the
+/// non-mutating wrapper around [`solve_merge_into`] (tests, the PJRT
+/// cross-checks). Hot paths call the in-place form to skip the O(D)
+/// center copy.
+pub fn solve_merge(
+    ball: &BallState,
+    xs: &[FeaturesView<'_>],
+    ys: &[f32],
+    opts: &TrainOptions,
+) -> MergeResult {
+    let mut out = ball.clone();
+    let mu = solve_merge_into(&mut out, xs, ys, opts);
+    MergeResult { ball: out, mu }
+}
+
+/// [`solve_merge`], updating `ball` in place: the Algorithm-2 flush
+/// then costs O(L²·nnz) for the Gram plus O(Σ nnz) scatter-adds, with
+/// no O(D) copy. Returns the convex coefficients μ.
 ///
 /// Exactly mirrors the AOT `merge_graph`: at each step move 1/(t+2) of the
 /// way toward the farthest entity — a buffered point, or the far pole of
 /// the old ball (`q_μ = −μ·r0/||Vμ||`).
-pub fn solve_merge(
-    ball: &BallState,
-    xs: &[&[f32]],
+pub fn solve_merge_into(
+    ball: &mut BallState,
+    xs: &[FeaturesView<'_>],
     ys: &[f32],
     opts: &TrainOptions,
-) -> MergeResult {
+) -> Vec<f64> {
     let l = ys.len();
     assert_eq!(xs.len(), l);
     let s2 = opts.s2();
-    let g = merge_gram(ball, xs, ys, s2);
+    let (g, cp) = gram_with_cp(ball, xs, ys, s2);
     let r0 = ball.r;
     let mut mu = vec![0.0f64; l];
     let mut q = vec![0.0f64; l];
@@ -107,7 +138,14 @@ pub fn solve_merge(
             if mgm <= EPS {
                 continue; // center == c0 and the ball is farthest: stay
             }
-            let scale = (1.0 - step) - step * r0 / mgm.sqrt();
+            // Step toward the ball's far pole `q_μ = −μ·r0/||Vμ||`. When
+            // `r0 ≫ ||Vμ||` the pole overshoots the origin and the raw
+            // scale goes negative, which would push μ outside the simplex
+            // and silently break the convex-coefficient invariant the
+            // enclosure check and the ξ² bookkeeping assume — clamp the
+            // scaled μ at 0 (the μ-space projection of that step back
+            // onto the simplex).
+            let scale = ((1.0 - step) - step * r0 / mgm.sqrt()).max(0.0);
             for m in mu.iter_mut() {
                 *m *= scale;
             }
@@ -120,17 +158,38 @@ pub fn solve_merge(
 
     let r1 = merge_objective(&mu, &g, r0);
     let tot: f64 = mu.iter().sum();
-    let mut w1: Vec<f32> =
-        ball.weights().iter().map(|&v| (1.0 - tot) as f32 * v).collect();
-    for i in 0..l {
-        linalg::axpy(&mut w1, (mu[i] * ys[i] as f64) as f32, xs[i]);
-    }
-    let xi1 = (1.0 - tot) * (1.0 - tot) * ball.xi2
-        + mu.iter().map(|m| m * m).sum::<f64>() * s2;
-    MergeResult {
-        ball: BallState::from_parts(w1, r1, xi1, ball.m + l),
-        mu,
-    }
+    let mcp: f64 = mu.iter().zip(&cp).map(|(m, c)| m * c).sum();
+    let mu2: f64 = mu.iter().map(|m| m * m).sum();
+    // μᵀGμ at the final μ (one more O(L²) pass; the loop's value is stale
+    // after the last update).
+    let mgm: f64 = (0..l)
+        .map(|i| mu[i] * (0..l).map(|j| g[i * l + j] * mu[j]).sum::<f64>())
+        .sum();
+    // Closed-form ‖w'‖² of w' = (1−Σμ)·w + Σ μᵢyᵢxᵢ, recovered from the
+    // Gram (G folds in s², ⟨c0,c0⟩ and the cp cross terms):
+    //   μᵀKμ = μᵀGμ − s²·Σμ² − ⟨c0,c0⟩·(Σμ)² + 2·Σμ·Σμᵢcpᵢ
+    //   ‖w'‖² = (1−Σμ)²‖w‖² + 2(1−Σμ)·Σμᵢcpᵢ + μᵀKμ
+    // which simplifies (the cp terms combine) to the expression below.
+    let cc = ball.center_norm2();
+    let wnorm2 = (1.0 - tot) * (1.0 - tot) * ball.wnorm2() + 2.0 * mcp + mgm
+        - s2 * mu2
+        - cc * tot * tot;
+    // The expression differences O(cc)-sized terms: when the result is
+    // tiny relative to them (the new center nearly cancels), its f64
+    // error is amplified and the cached norm would poison every later
+    // distance test — flag it so the ball recomputes the norm exactly
+    // from the stored center instead (O(D), what the pre-factored code
+    // always paid).
+    let magnitude = (1.0 - tot) * (1.0 - tot) * ball.wnorm2()
+        + 2.0 * mcp.abs()
+        + mgm
+        + s2 * mu2
+        + cc * tot * tot;
+    let wnorm2 = (wnorm2 > 1e-7 * magnitude).then_some(wnorm2);
+    let xi1 = (1.0 - tot) * (1.0 - tot) * ball.xi2 + mu2 * s2;
+    let coefs: Vec<f64> = mu.iter().zip(ys).map(|(m, &y)| m * y as f64).collect();
+    ball.merge_into(1.0 - tot, xs, &coefs, wnorm2, r1, xi1, l);
+    mu
 }
 
 /// MEB of a set of augmented points `φ̃(zᵢ)` via Badoiu-Clarkson with an
@@ -272,6 +331,10 @@ mod tests {
         Ok(())
     }
 
+    fn dense_views(xs: &[Vec<f32>]) -> Vec<FeaturesView<'_>> {
+        xs.iter().map(|v| FeaturesView::Dense(v.as_slice())).collect()
+    }
+
     #[test]
     fn merge_encloses_ball_and_points_property() {
         check_default("merge-enclosure", |rng, _| {
@@ -281,7 +344,7 @@ mod tests {
             let ball = mk_ball(d, rng);
             let opts = TrainOptions::default().with_c(2.0);
             let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
-            let res = solve_merge(&ball, &xrefs, &ys, &opts);
+            let res = solve_merge(&ball, &dense_views(&xs), &ys, &opts);
             verify_enclosure(&ball, &xrefs, &ys, opts.s2(), &res, 1e-3 * res.ball.r.max(1.0))
         });
     }
@@ -292,8 +355,7 @@ mod tests {
             let d = gen::dim(rng);
             let (xs, ys) = gen::labeled_points(rng, 4, d, 1.0, 0.0);
             let ball = mk_ball(d, rng);
-            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
-            let res = solve_merge(&ball, &xrefs, &ys, &TrainOptions::default());
+            let res = solve_merge(&ball, &dense_views(&xs), &ys, &TrainOptions::default());
             if res.ball.r + 1e-9 < ball.r {
                 return Err(format!("radius shrank {} -> {}", ball.r, res.ball.r));
             }
@@ -310,8 +372,7 @@ mod tests {
             let (xs, ys) = gen::labeled_points(rng, 1, d, 1.0, 0.0);
             let ball = mk_ball(d, rng);
             let opts = TrainOptions { merge_iters: 512, ..TrainOptions::default() };
-            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
-            let res = solve_merge(&ball, &xrefs, &ys, &opts);
+            let res = solve_merge(&ball, &dense_views(&xs), &ys, &opts);
             let mut closed = ball.clone();
             closed.try_update(&xs[0], ys[0], &opts);
             let rel = (res.ball.r - closed.r).abs() / closed.r.max(1e-9);
@@ -320,6 +381,67 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn sparse_and_dense_merge_agree() {
+        // The O(L²·nnz) sparse Gram + scatter-add reconstruction must
+        // match the dense-view path on the same buffer.
+        check_default("merge-sparse-dense", |rng, _| {
+            let d = gen::dim(rng);
+            let l = 1 + rng.below(10);
+            let (xs, ys) = gen::labeled_points(rng, l, d, 1.5, 0.4);
+            let ball = mk_ball(d, rng);
+            let opts = TrainOptions::default().with_c(2.0);
+            let sparse: Vec<crate::data::Features> =
+                xs.iter().map(|x| crate::data::Features::Dense(x.clone()).to_sparse()).collect();
+            let sviews: Vec<FeaturesView> = sparse.iter().map(|f| f.view()).collect();
+            let rd = solve_merge(&ball, &dense_views(&xs), &ys, &opts);
+            let rs = solve_merge(&ball, &sviews, &ys, &opts);
+            if (rd.ball.r - rs.ball.r).abs() > 1e-9 * rd.ball.r.max(1.0) {
+                return Err(format!("R diverged: {} vs {}", rd.ball.r, rs.ball.r));
+            }
+            if (rd.ball.xi2 - rs.ball.xi2).abs() > 1e-9 * rd.ball.xi2.max(1.0) {
+                return Err(format!("xi2 diverged: {} vs {}", rd.ball.xi2, rs.ball.xi2));
+            }
+            let (wd, ws) = (rd.ball.weights(), rs.ball.weights());
+            let scale = wd.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for (i, (a, b)) in wd.iter().zip(&ws).enumerate() {
+                if (a - b).abs() > 1e-5 * scale {
+                    return Err(format!("w[{i}] diverged: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ball_pole_step_keeps_mu_on_the_simplex() {
+        // Regression (pre-fix the scaled μ went negative): with a large
+        // C (tiny s²) two antipodal survivors barely outside a big ball
+        // nearly cancel, so after two far-point steps ‖Vμ‖ ≈ √(2s²)/3
+        // while r0 = 10 — the pole step scale `(1−η) − η·r0/‖Vμ‖` is
+        // hugely negative (≈ −52) and the unclamped solver pushed μ to
+        // ≈ −17 mid-run and ended at μ ≈ [−0.161, −0.168], off the
+        // simplex — breaking the convex-coefficient invariant that
+        // `verify_enclosure` and the ξ² bookkeeping assume.
+        let opts = TrainOptions::default().with_c(100.0);
+        let ball = BallState::from_parts(vec![0.0], 10.0, 0.0, 3);
+        let xs = vec![vec![10.05f32], vec![10.05f32]];
+        let ys = [1.0f32, -1.0];
+        let res = solve_merge(&ball, &dense_views(&xs), &ys, &opts);
+        let tot: f64 = res.mu.iter().sum();
+        for (i, &m) in res.mu.iter().enumerate() {
+            assert!(m >= 0.0, "mu[{i}] = {m} left the simplex");
+        }
+        assert!(tot <= 1.0 + 1e-12, "sum mu = {tot} > 1");
+        assert!(res.ball.r + 1e-9 >= ball.r, "radius shrank");
+        assert!(res.ball.xi2 >= 0.0 && res.ball.xi2.is_finite());
+        assert!(res.ball.weights().iter().all(|w| w.is_finite()));
+        // enclosure still holds with the clamped step
+        let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        verify_enclosure(&ball, &xrefs, &ys, opts.s2(), &res, 1e-3 * res.ball.r.max(1.0))
+            .unwrap();
     }
 
     #[test]

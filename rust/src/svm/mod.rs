@@ -2,6 +2,9 @@
 //! (Algorithm 2), the kernelized variant, and the multiball extension,
 //! plus the MEB machinery they share.
 
+use crate::data::FeaturesView;
+use crate::error::{Error, Result};
+
 pub mod ball;
 pub mod ellipsoid;
 pub mod kernelfn;
@@ -25,6 +28,41 @@ pub enum SlackMode {
     Consistent,
 }
 
+/// Validate one untrusted example against a learner of dimension `dim`:
+/// wrong dimension is [`Error::Config`], non-finite features or a
+/// non-±1 label are [`Error::Data`]. Shared by every learner's
+/// `try_observe` so the rejection rules (and messages) cannot drift
+/// between algorithms.
+pub fn validate_example(x: FeaturesView<'_>, y: f32, dim: usize) -> Result<()> {
+    if x.dim() != dim {
+        return Err(Error::config(format!(
+            "example has dimension {} but the model expects {dim}",
+            x.dim()
+        )));
+    }
+    if !x.is_finite() {
+        return Err(Error::data("example has non-finite feature values"));
+    }
+    if y != 1.0 && y != -1.0 {
+        return Err(Error::data(format!("label must be ±1, got {y}")));
+    }
+    Ok(())
+}
+
+/// The feature-hashing front-end a model was trained behind: inputs are
+/// folded into `dim` buckets by the seeded signed hasher
+/// ([`crate::data::hashing::FeatureHasher`]). Two models (or a
+/// checkpoint and its resume stream) live in the same geometry only if
+/// `(dim, seed)` match exactly, so the pair rides in [`TrainOptions`]
+/// and is serialized into `.meb` provenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HashSpec {
+    /// Hashed feature dimension `D`.
+    pub dim: usize,
+    /// Hash seed (determines both bucket and sign functions).
+    pub seed: u64,
+}
+
 /// Shared training options for all StreamSVM variants.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrainOptions {
@@ -36,6 +74,8 @@ pub struct TrainOptions {
     pub lookahead: usize,
     /// Badoiu-Clarkson iterations for the lookahead merge solve.
     pub merge_iters: usize,
+    /// Feature-hashing front-end, if the stream was hashed on ingest.
+    pub hash: Option<HashSpec>,
 }
 
 impl Default for TrainOptions {
@@ -45,6 +85,7 @@ impl Default for TrainOptions {
             slack_mode: SlackMode::Consistent,
             lookahead: 1,
             merge_iters: 128,
+            hash: None,
         }
     }
 }
@@ -62,6 +103,11 @@ impl TrainOptions {
 
     pub fn with_slack_mode(mut self, m: SlackMode) -> Self {
         self.slack_mode = m;
+        self
+    }
+
+    pub fn with_hash(mut self, h: Option<HashSpec>) -> Self {
+        self.hash = h;
         self
     }
 

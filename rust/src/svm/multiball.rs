@@ -13,7 +13,8 @@
 //! other). Slack masses of distinct balls live on disjoint stream indices
 //! and are orthogonal, so `t² = ||w₁−w₂||² + ξ₁² + ξ₂²`.
 
-use crate::data::Example;
+use crate::data::{Example, FeaturesView};
+use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::ball::BallState;
 use crate::svm::TrainOptions;
@@ -98,14 +99,32 @@ impl MultiBallSvm {
     }
 
     pub fn observe(&mut self, x: &[f32], y: f32) {
-        debug_assert_eq!(x.len(), self.dim);
+        self.observe_view(FeaturesView::Dense(x), y)
+    }
+
+    /// [`Self::observe`] for a dense-or-sparse feature view — every
+    /// enclosure test and the nearest-ball update are O(nnz).
+    ///
+    /// Non-finite distances (NaN features smuggled past the ingestion
+    /// guards) take the same skip-and-surface path as
+    /// [`BallState::try_update_view`]: the example is dropped, never
+    /// indexed into the ball list. Before this guard, a NaN gap could
+    /// never beat the `f64::INFINITY` sentinel, so `NearestBall` panicked
+    /// at `self.balls[usize::MAX]`.
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) {
+        debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
         self.merged = None;
         // enclosed by any ball?
         let mut nearest = usize::MAX;
         let mut nearest_gap = f64::INFINITY;
+        let mut non_finite = false;
         for (i, b) in self.balls.iter().enumerate() {
-            let d = b.distance(x, y, &self.opts);
+            let d = b.distance_view(x, y, &self.opts);
+            if !d.is_finite() {
+                non_finite = true;
+                continue;
+            }
             if d < b.r {
                 return; // discard
             }
@@ -115,17 +134,39 @@ impl MultiBallSvm {
                 nearest = i;
             }
         }
+        if non_finite && nearest == usize::MAX {
+            // Every distance was non-finite: skip the example rather than
+            // index self.balls[usize::MAX] or seed a poisoned new ball.
+            debug_assert!(false, "non-finite distances in MultiBallSvm::observe");
+            return;
+        }
         match self.policy {
             MergePolicy::NearestBall if !self.balls.is_empty() => {
-                self.balls[nearest].try_update(x, y, &self.opts);
+                self.balls[nearest].try_update_view(x, y, &self.opts);
             }
             _ => {
-                self.balls.push(BallState::init(x, y, &self.opts));
+                if !x.is_finite() {
+                    // No existing ball screened the example (the list may
+                    // be empty): keep NaN out of a fresh ball's center.
+                    debug_assert!(false, "non-finite features in MultiBallSvm::observe");
+                    return;
+                }
+                self.balls.push(BallState::init_view(x, y, &self.opts));
                 while self.balls.len() > self.max_balls {
                     self.collapse_closest_pair();
                 }
             }
         }
+    }
+
+    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
+    /// wrong-dimension examples, non-finite features and non-±1 labels
+    /// with [`crate::svm::validate_example`]'s errors instead of
+    /// skipping silently.
+    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<()> {
+        crate::svm::validate_example(x, y, self.dim)?;
+        self.observe_view(x, y);
+        Ok(())
     }
 
     fn collapse_closest_pair(&mut self) {
@@ -170,7 +211,7 @@ impl MultiBallSvm {
     ) -> Self {
         let mut m = MultiBallSvm::new(dim, max_balls, policy, *opts);
         for e in stream {
-            m.observe(&e.x.dense(), e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         m.final_ball();
         m
@@ -218,6 +259,7 @@ impl Classifier for MultiBallSvm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::prop::{check_default, gen};
 
     #[test]
@@ -295,6 +337,90 @@ mod tests {
                 m.observe(x, *y);
                 if m.num_balls() > l {
                     return Err(format!("{} balls > L={l}", m.num_balls()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_features_never_panic_nearest_ball() {
+        // Regression: with MergePolicy::NearestBall a NaN feature made
+        // every gap NaN, the INFINITY sentinel never lost, and observe
+        // panicked at `self.balls[usize::MAX]`. The guarded path skips
+        // the example (debug builds assert with an explicit message).
+        let mk = || {
+            let mut m = MultiBallSvm::new(2, 3, MergePolicy::NearestBall, TrainOptions::default());
+            m.observe(&[1.0, 0.0], 1.0);
+            m.observe(&[0.0, 1.0], -1.0);
+            m
+        };
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(|| {
+                let mut m = mk();
+                m.observe(&[f32::NAN, 0.0], 1.0);
+            });
+            let payload = r.expect_err("debug build should assert");
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            assert!(
+                msg.contains("non-finite"),
+                "expected the explicit non-finite assert, got: {msg}"
+            );
+        } else {
+            let mut m = mk();
+            let balls_before = m.num_balls();
+            m.observe(&[f32::NAN, 0.0], 1.0);
+            assert_eq!(m.num_balls(), balls_before);
+            let fb = m.final_ball().unwrap();
+            assert!(fb.weights().iter().all(|w| w.is_finite()), "NaN poisoned a ball");
+        }
+        // the validated entry point surfaces the defect as an error
+        let mut m = mk();
+        let err = m
+            .try_observe(FeaturesView::Dense(&[f32::NAN, 0.0]), 1.0)
+            .unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        // NewBallMergeClosest must not seed a poisoned ball either
+        if !cfg!(debug_assertions) {
+            let mut m =
+                MultiBallSvm::new(2, 3, MergePolicy::NewBallMergeClosest, TrainOptions::default());
+            m.observe(&[f32::NAN, 0.0], 1.0);
+            assert_eq!(m.num_balls(), 0);
+        }
+    }
+
+    #[test]
+    fn sparse_observe_matches_dense() {
+        check_default("multiball-sparse-dense", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 60, d, 1.5, 0.3);
+            for policy in [MergePolicy::NearestBall, MergePolicy::NewBallMergeClosest] {
+                let opts = TrainOptions::default();
+                let mut dense = MultiBallSvm::new(d, 3, policy, opts);
+                let mut sparse = MultiBallSvm::new(d, 3, policy, opts);
+                for (x, y) in xs.iter().zip(&ys) {
+                    dense.observe(x, *y);
+                    let f = crate::data::Features::Dense(x.clone()).to_sparse();
+                    sparse.observe_view(f.view(), *y);
+                }
+                if dense.num_balls() != sparse.num_balls()
+                    || dense.num_support() != sparse.num_support()
+                {
+                    return Err(format!(
+                        "{policy:?}: diverged (balls {} vs {}, supports {} vs {})",
+                        dense.num_balls(),
+                        sparse.num_balls(),
+                        dense.num_support(),
+                        sparse.num_support()
+                    ));
+                }
+                let (fd, fs) = (dense.final_ball().unwrap(), sparse.final_ball().unwrap());
+                if (fd.r - fs.r).abs() > 1e-6 * fd.r.max(1.0) {
+                    return Err(format!("{policy:?}: R diverged {} vs {}", fd.r, fs.r));
                 }
             }
             Ok(())

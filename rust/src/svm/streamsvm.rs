@@ -5,7 +5,7 @@
 //! `&[f32]` entry points remain for dense callers.
 
 use crate::data::{Example, FeaturesView};
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::ball::BallState;
 use crate::svm::TrainOptions;
@@ -47,23 +47,11 @@ impl StreamSvm {
 
     /// Validated [`Self::observe_view`] for untrusted inputs (library
     /// consumers, the serving path): rejects wrong-dimension examples,
-    /// non-finite features and non-±1 labels with [`Error::Config`] /
-    /// [`Error::Data`] instead of panicking deep inside a `linalg`
-    /// assert in release builds.
+    /// non-finite features and non-±1 labels with
+    /// [`crate::svm::validate_example`]'s errors instead of panicking
+    /// deep inside a `linalg` assert in release builds.
     pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
-        if x.dim() != self.dim {
-            return Err(Error::config(format!(
-                "example has dimension {} but the model expects {}",
-                x.dim(),
-                self.dim
-            )));
-        }
-        if !x.is_finite() {
-            return Err(Error::data("example has non-finite feature values"));
-        }
-        if y != 1.0 && y != -1.0 {
-            return Err(Error::data(format!("label must be ±1, got {y}")));
-        }
+        crate::svm::validate_example(x, y, self.dim)?;
         Ok(self.observe_view(x, y))
     }
 
@@ -142,6 +130,7 @@ impl Classifier for StreamSvm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::eval::accuracy;
     use crate::prop::{check_default, gen};
     use crate::rng::Pcg32;

@@ -10,7 +10,7 @@ use streamsvm::data::registry::load_dataset_sized;
 use streamsvm::data::Example;
 use streamsvm::eval::accuracy;
 use streamsvm::prop::{check, PropConfig};
-use streamsvm::sketch::checkpoint::{resume_fit, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::checkpoint::{resume_fit, resume_lookahead, CheckpointConfig, Checkpointer};
 use streamsvm::sketch::codec::MebSketch;
 use streamsvm::sketch::merge::merge_sketches;
 use streamsvm::svm::streamsvm::StreamSvm;
@@ -139,6 +139,69 @@ fn shard_sketch_files_merge_end_to_end() {
     merged.write_to(&out).unwrap();
     let back = MebSketch::read_from(&out).unwrap();
     assert_eq!(back, merged);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The paper's O(N/L) merge count must survive an interruption: a
+/// checkpoint taken mid-stream records the merges so far, and the
+/// resumed learner's final `num_merges()` equals the uninterrupted
+/// run's. (Regression: `LookaheadSvm::from_ball` used to zero the
+/// counter, so a resumed run under-reported merges by however many
+/// happened before the checkpoint.)
+#[test]
+fn lookahead_resume_preserves_merge_count() {
+    use streamsvm::svm::lookahead::LookaheadSvm;
+    let dir = tmpdir("merges");
+    // Adversarial 1-D stream (geometric growth, the same family the
+    // lookahead unit tests use): points escape the ball essentially
+    // always, so the buffer flushes regularly and a mid-stream cut has
+    // merges on both sides of it.
+    let n = 40usize;
+    let exs: Vec<Example> =
+        (0..n).map(|i| Example::new(vec![2.0f32.powi(i as i32)], 1.0)).collect();
+    let l = 4usize;
+    let opts = TrainOptions::default().with_lookahead(l);
+
+    let full = LookaheadSvm::fit(exs.iter(), 1, &opts);
+    assert!(full.num_merges() >= 2, "stream too tame: {} merges", full.num_merges());
+
+    // walk to a buffer-empty cut past the midpoint (the checkpointer's
+    // save precondition) and checkpoint there, recording the merge
+    // count in provenance
+    let mut m = LookaheadSvm::new(1, opts);
+    let mut sk = None;
+    for (i, e) in exs.iter().enumerate() {
+        m.observe_view(e.x.view(), e.y);
+        if sk.is_none()
+            && i + 1 >= n / 2
+            && i + 1 < n
+            && m.buffered() == 0
+            && m.num_merges() > 0
+        {
+            sk = Some(
+                MebSketch::new(1, m.ball().cloned(), i + 1, opts, "merge-count")
+                    .with_merges(m.num_merges()),
+            );
+        }
+    }
+    let sk = sk.expect("the adversarial stream has a buffer-empty cut past the midpoint");
+    assert!(sk.merges > 0, "checkpoint must land after at least one merge");
+
+    // round-trip through a real file, as an interruption would
+    let path = dir.join("merges.meb");
+    sk.write_to(&path).unwrap();
+    let sk = MebSketch::read_from(&path).unwrap();
+    assert!(sk.merges > 0);
+
+    let resumed = resume_lookahead(&sk, exs.clone());
+    assert_eq!(
+        resumed.num_merges(),
+        full.num_merges(),
+        "resumed run misreports the O(N/L) merge count"
+    );
+    assert_eq!(resumed.weights(), full.weights());
+    assert_eq!(resumed.radius().to_bits(), full.radius().to_bits());
+    assert_eq!(resumed.examples_seen(), n);
     std::fs::remove_dir_all(&dir).ok();
 }
 

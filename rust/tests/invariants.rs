@@ -135,7 +135,10 @@ fn algorithm2_final_ball_encloses_entire_stream() {
                     if buf.is_empty() {
                         return;
                     }
-                    let bx: Vec<&[f32]> = buf.iter().map(|&i| xs[i].as_slice()).collect();
+                    let bx: Vec<streamsvm::data::FeaturesView> = buf
+                        .iter()
+                        .map(|&i| streamsvm::data::FeaturesView::Dense(xs[i].as_slice()))
+                        .collect();
                     let by: Vec<f32> = buf.iter().map(|&i| ys[i]).collect();
                     let res = solve_merge(ball, &bx, &by, &opts);
                     tracker.merge(buf, &res.mu);

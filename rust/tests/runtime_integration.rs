@@ -164,9 +164,8 @@ fn merge_artifact_matches_rust_solver() {
             d_pad,
         )
         .unwrap();
-    let dense_rows: Vec<Vec<f32>> = exs.iter().map(|e| e.x.dense().into_owned()).collect();
-    let xrefs: Vec<&[f32]> = dense_rows.iter().map(|v| v.as_slice()).collect();
-    let want = solve_merge(&ball, &xrefs, &ys, &opts);
+    let views: Vec<streamsvm::data::FeaturesView> = exs.iter().map(|e| e.x.view()).collect();
+    let want = solve_merge(&ball, &views, &ys, &opts);
     // Same Badoiu-Clarkson schedule on both sides → near-identical radii.
     assert!(
         (got.r - want.ball.r).abs() < 1e-3 * want.ball.r.max(1.0),

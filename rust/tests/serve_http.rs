@@ -264,6 +264,44 @@ fn train_queue_full_is_an_explicit_429() {
 }
 
 #[test]
+fn predict_batch_mixes_dense_and_sparse_rows_over_the_wire() {
+    let cfg = ServerConfig {
+        threads: 2,
+        conn_queue: 8,
+        train_queue: 16,
+        read_timeout: Duration::from_secs(2),
+        tag: "batch".into(),
+        ..Default::default()
+    };
+    let handle = serve(trained_model(), cfg).unwrap();
+    let mut client = LoadClient::connect(handle.addr(), Duration::from_secs(2)).unwrap();
+
+    // one batch, mixed representations: a dense row and its sparse twin
+    // must score identically, against one snapshot version
+    let dense = Features::Dense(vec![0.0, 1.5, 0.0, 0.0, -2.0, 0.0]);
+    let sparse = dense.to_sparse();
+    assert!(matches!(&sparse, Features::Sparse { .. }));
+    let (status, body) = client
+        .predict_batch_features(&[dense.clone(), sparse.clone(), Features::Dense(vec![0.0; DIM])])
+        .unwrap();
+    assert_eq!(status, 200);
+    let scores = body.get("scores").unwrap().as_array().unwrap();
+    assert_eq!(scores.len(), 3);
+    assert_eq!(scores[0].as_f64(), scores[1].as_f64(), "sparse row must score like dense");
+    assert_eq!(scores[2].as_f64(), Some(0.0));
+    assert!(body.get("version").unwrap().as_f64().unwrap() >= 1.0);
+
+    // same idx/val validation as /predict, surfaced with the row index:
+    // single /predict accepts the same sparse shape in this process
+    let op = client.predict_features(&sparse).unwrap();
+    assert_eq!(op.status, 200);
+    assert_eq!(op.score, scores[0].as_f64());
+
+    drop(client);
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn sparse_payloads_round_trip_over_the_wire() {
     let cfg = ServerConfig {
         threads: 2,
