@@ -1,14 +1,16 @@
 //! Sparse vs dense hot paths at w3a-like density (`BENCH_sparse.json`):
-//! the Algorithm-1 per-example update and the Algorithm-2 lookahead
-//! flush (L > 1, where the merge Gram used to densify every survivor).
+//! the Algorithm-1 per-example update, the Algorithm-2 lookahead flush
+//! (L > 1, where the merge Gram used to densify every survivor), the
+//! kernelized variant (O(M·nnz) norm-expansion kernel evals vs O(M·D)
+//! densified ones) and the diagonal-metric ellipsoid (O(nnz) scaled
+//! reductions vs O(D)).
 //!
 //! Generates one synthetic stream at ~4% density and D ≥ 10k, runs the
-//! identical stream through `StreamSvm::observe_view` (and
-//! `LookaheadSvm` at L = 8) twice — once with sparse `idx`/`val`
-//! features (O(nnz) per example, O(L²·nnz) per flush), once densified
-//! (O(D) / O(L²·D)) — and reports per-example cost plus the speedup
-//! ratios. The runs must agree on the learned state (tolerance-checked
-//! here; the exact property tests live in `rust/tests/sparse_path.rs`).
+//! identical stream through each learner twice — once with sparse
+//! `idx`/`val` features, once densified — and reports per-example cost
+//! plus the speedup ratios. The runs must agree on the learned state
+//! (tolerance-checked here; the exact property tests live in
+//! `rust/tests/sparse_path.rs` and `rust/tests/variant_conformance.rs`).
 //!
 //! `STREAMSVM_BENCH_SMOKE=1` shrinks the stream for the CI smoke step
 //! (the dimension stays ≥ 10k so the measured regime is the real one).
@@ -19,6 +21,9 @@ use streamsvm::bench_util::{bench, Table};
 use streamsvm::data::Example;
 use streamsvm::rng::Pcg32;
 use streamsvm::server::json::fmt_num;
+use streamsvm::svm::ellipsoid::EllipsoidSvm;
+use streamsvm::svm::kernelfn::Kernel;
+use streamsvm::svm::kernelized::KernelStreamSvm;
 use streamsvm::svm::lookahead::LookaheadSvm;
 use streamsvm::svm::streamsvm::StreamSvm;
 use streamsvm::svm::TrainOptions;
@@ -84,6 +89,34 @@ fn fit_lookahead_ns(
     (stats.p50.as_nanos() as f64 / stream.len() as f64, model)
 }
 
+fn fit_kernel_ns(
+    stream: &[Example],
+    kernel: Kernel,
+    opts: &TrainOptions,
+    reps: usize,
+) -> (f64, KernelStreamSvm) {
+    let stats = bench(1, reps, || {
+        let m = KernelStreamSvm::fit(stream.iter(), kernel, opts);
+        std::hint::black_box(m.radius());
+    });
+    let model = KernelStreamSvm::fit(stream.iter(), kernel, opts);
+    (stats.p50.as_nanos() as f64 / stream.len() as f64, model)
+}
+
+fn fit_ellipsoid_ns(
+    stream: &[Example],
+    dim: usize,
+    opts: &TrainOptions,
+    reps: usize,
+) -> (f64, EllipsoidSvm) {
+    let stats = bench(1, reps, || {
+        let m = EllipsoidSvm::fit(stream.iter(), dim, opts);
+        std::hint::black_box(m.radius());
+    });
+    let model = EllipsoidSvm::fit(stream.iter(), dim, opts);
+    (stats.p50.as_nanos() as f64 / stream.len() as f64, model)
+}
+
 fn main() {
     let smoke = std::env::var("STREAMSVM_BENCH_SMOKE").is_ok();
     let (n, reps) = if smoke { (600, 3) } else { (4000, 5) };
@@ -118,6 +151,40 @@ fn main() {
         (las.radius() - lad.radius()).abs() / lad.radius().max(1e-12);
     assert!(la_radius_rel_diff < 1e-6, "lookahead paths diverged on radius: {la_radius_rel_diff}");
 
+    // ---- kernelized column: each example pays O(M) kernel evals, so the
+    // dense path is O(M·D) against O(M·nnz) (merge-join between stored
+    // sparse core points). The core set grows with updates — a shorter
+    // prefix keeps the densified reference affordable.
+    let kern_n = if smoke { 150 } else { 500 };
+    let kern_reps = reps.min(3);
+    let kopts = TrainOptions::default();
+    let (kern_sparse_ns, kms) =
+        fit_kernel_ns(&sparse[..kern_n], Kernel::Linear, &kopts, kern_reps);
+    let (kern_dense_ns, kmd) = fit_kernel_ns(&dense[..kern_n], Kernel::Linear, &kopts, kern_reps);
+    let kern_speedup = kern_dense_ns / kern_sparse_ns;
+    assert_eq!(
+        kms.num_support(),
+        kmd.num_support(),
+        "kernelized paths diverged on the core-set size"
+    );
+    let kern_radius_rel_diff = (kms.radius() - kmd.radius()).abs() / kmd.radius().max(1e-12);
+    assert!(
+        kern_radius_rel_diff < 1e-6,
+        "kernelized paths diverged on radius: {kern_radius_rel_diff}"
+    );
+
+    // ---- ellipsoid column: O(nnz) scaled reductions + per-touched-axis
+    // metric adaptation vs the O(D) densified pass.
+    let (ell_sparse_ns, ems) = fit_ellipsoid_ns(&sparse, DIM, &opts, reps);
+    let (ell_dense_ns, emd) = fit_ellipsoid_ns(&dense, DIM, &opts, reps);
+    let ell_speedup = ell_dense_ns / ell_sparse_ns;
+    assert_eq!(ems.num_support(), emd.num_support(), "ellipsoid paths diverged on updates");
+    let ell_radius_rel_diff = (ems.radius() - emd.radius()).abs() / emd.radius().max(1e-12);
+    assert!(
+        ell_radius_rel_diff < 1e-6,
+        "ellipsoid paths diverged on radius: {ell_radius_rel_diff}"
+    );
+
     let mut t = Table::new(&["path", "ns/example", "examples/s", "updates", "merges"]);
     for (name, ns, updates, merges) in [
         ("dense", dense_ns, md.num_support(), 0),
@@ -134,6 +201,10 @@ fn main() {
             las.num_support(),
             las.num_merges(),
         ),
+        ("dense kern", kern_dense_ns, kmd.num_support(), 0),
+        ("sparse kern", kern_sparse_ns, kms.num_support(), 0),
+        ("dense ell", ell_dense_ns, emd.num_support(), 0),
+        ("sparse ell", ell_sparse_ns, ems.num_support(), 0),
     ] {
         t.row(&[
             name.into(),
@@ -145,7 +216,9 @@ fn main() {
     }
     t.print();
     println!(
-        "speedup: {speedup:.1}x (L=1), {la_speedup:.1}x (L={LOOKAHEAD}) at density {:.1}%",
+        "speedup: {speedup:.1}x (L=1), {la_speedup:.1}x (L={LOOKAHEAD}), \
+         {kern_speedup:.1}x (kernelized, n={kern_n}), {ell_speedup:.1}x (ellipsoid) \
+         at density {:.1}%",
         DENSITY * 100.0
     );
 
@@ -156,7 +229,11 @@ fn main() {
             r#""dense_eps":{},"sparse_eps":{},"speedup":{},"#,
             r#""updates":{},"radius_rel_diff":{},"#,
             r#""lookahead":{},"la_dense_ns_per_example":{},"la_sparse_ns_per_example":{},"#,
-            r#""la_speedup":{},"la_merges":{},"la_radius_rel_diff":{}}}"#
+            r#""la_speedup":{},"la_merges":{},"la_radius_rel_diff":{},"#,
+            r#""kern_n":{},"kern_dense_ns_per_example":{},"kern_sparse_ns_per_example":{},"#,
+            r#""kern_speedup":{},"kern_supports":{},"kern_radius_rel_diff":{},"#,
+            r#""ell_dense_ns_per_example":{},"ell_sparse_ns_per_example":{},"#,
+            r#""ell_speedup":{},"ell_updates":{},"ell_radius_rel_diff":{}}}"#
         ),
         DIM,
         n,
@@ -175,6 +252,17 @@ fn main() {
         fmt_num(la_speedup),
         las.num_merges(),
         fmt_num(la_radius_rel_diff),
+        kern_n,
+        fmt_num(kern_dense_ns),
+        fmt_num(kern_sparse_ns),
+        fmt_num(kern_speedup),
+        kms.num_support(),
+        fmt_num(kern_radius_rel_diff),
+        fmt_num(ell_dense_ns),
+        fmt_num(ell_sparse_ns),
+        fmt_num(ell_speedup),
+        ems.num_support(),
+        fmt_num(ell_radius_rel_diff),
     );
     std::fs::write(Path::new("BENCH_sparse.json"), &json).expect("write BENCH_sparse.json");
     println!("wrote BENCH_sparse.json: {json}");

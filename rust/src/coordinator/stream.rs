@@ -61,14 +61,19 @@ impl Iterator for VecStream {
 /// examples (the file is never materialized or densified), so the
 /// downstream update cost is O(nnz) per row. Dimension must be known up
 /// front (`dim`). This reader is tolerant: out-of-range indices are
-/// dropped and rows with non-finite labels/values are skipped whole —
-/// one poisoned row must not truncate the rest of a long stream (the
-/// strict loaders in [`crate::data::libsvm_format`] reject instead).
+/// dropped, and rows with non-finite labels/values *or malformed tokens*
+/// (`qid:3` fields, garbage, unparsable numbers) are skipped whole and
+/// counted in [`Self::rows_skipped`] — one bad row must never truncate
+/// the rest of a long stream (the strict loaders in
+/// [`crate::data::libsvm_format`] reject instead). Only EOF or an I/O
+/// error ends the stream.
 pub struct FileStream<R: std::io::Read> {
     reader: BufReader<R>,
     dim: usize,
     line: String,
     lineno: usize,
+    yielded: usize,
+    skipped: usize,
 }
 
 impl FileStream<std::fs::File> {
@@ -78,13 +83,65 @@ impl FileStream<std::fs::File> {
             dim,
             line: String::new(),
             lineno: 0,
+            yielded: 0,
+            skipped: 0,
         })
     }
 }
 
 impl<R: std::io::Read> FileStream<R> {
     pub fn from_reader(r: R, dim: usize) -> Self {
-        FileStream { reader: BufReader::new(r), dim, line: String::new(), lineno: 0 }
+        FileStream {
+            reader: BufReader::new(r),
+            dim,
+            line: String::new(),
+            lineno: 0,
+            yielded: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Examples yielded so far (the `serve --train-stream` progress
+    /// counter behind `/stats`).
+    pub fn rows_yielded(&self) -> usize {
+        self.yielded
+    }
+
+    /// Rows skipped so far (non-finite labels/values, malformed tokens).
+    pub fn rows_skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Parse one non-empty, non-comment line; `None` = skip this row
+    /// (malformed or poisoned), never end the stream.
+    fn parse_row(&self, t: &str) -> Option<Example> {
+        let mut it = t.split_whitespace();
+        let label: f64 = it.next()?.parse().ok()?;
+        if !label.is_finite() {
+            return None;
+        }
+        let mut pairs: Vec<(u32, f32)> = Vec::new();
+        for tok in it {
+            let (i, v) = tok.split_once(':')?;
+            let idx: usize = i.parse().ok()?;
+            if idx == 0 || idx > self.dim {
+                continue;
+            }
+            let val: f32 = v.parse().ok()?;
+            if !val.is_finite() {
+                return None;
+            }
+            pairs.push((idx as u32 - 1, val));
+        }
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs.dedup_by_key(|&mut (i, _)| i);
+        let (idx, val): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+        Some(Example::sparse(
+            self.dim,
+            idx,
+            val,
+            if label > 0.0 { 1.0 } else { -1.0 },
+        ))
     }
 }
 
@@ -102,38 +159,19 @@ impl<R: std::io::Read> Iterator for FileStream<R> {
             if t.is_empty() || t.starts_with('#') {
                 continue;
             }
-            let mut it = t.split_whitespace();
-            let label: f64 = it.next()?.parse().ok()?;
-            if !label.is_finite() {
-                continue; // skip the poisoned row, keep streaming
-            }
-            let mut pairs: Vec<(u32, f32)> = Vec::new();
-            let mut poisoned = false;
-            for tok in it {
-                let (i, v) = tok.split_once(':')?;
-                let idx: usize = i.parse().ok()?;
-                if idx == 0 || idx > self.dim {
+            // A malformed or poisoned row must not end the stream: with
+            // `--train-stream` a `None` here would be reported as a
+            // *completed* file while silently dropping every later row.
+            match self.parse_row(t) {
+                Some(e) => {
+                    self.yielded += 1;
+                    return Some(e);
+                }
+                None => {
+                    self.skipped += 1;
                     continue;
                 }
-                let val: f32 = v.parse().ok()?;
-                if !val.is_finite() {
-                    poisoned = true;
-                    break;
-                }
-                pairs.push((idx as u32 - 1, val));
             }
-            if poisoned {
-                continue; // skip the poisoned row, keep streaming
-            }
-            pairs.sort_unstable_by_key(|&(i, _)| i);
-            pairs.dedup_by_key(|&mut (i, _)| i);
-            let (idx, val): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
-            return Some(Example::sparse(
-                self.dim,
-                idx,
-                val,
-                if label > 0.0 { 1.0 } else { -1.0 },
-            ));
         }
     }
 }
@@ -190,9 +228,42 @@ mod tests {
     #[test]
     fn file_stream_skips_non_finite_rows_without_truncating() {
         let text = "+1 1:nan\nnan 1:1\n+1 1:inf\n-1 1:1\n";
-        let got: Vec<Example> = FileStream::from_reader(text.as_bytes(), 2).collect();
+        let mut fs = FileStream::from_reader(text.as_bytes(), 2);
+        let got: Vec<Example> = (&mut fs).collect();
         assert_eq!(got.len(), 1, "good rows after a poisoned row must survive");
         assert_eq!(got[0].y, -1.0);
         assert_eq!(got[0].x.dense().as_ref(), &[1.0, 0.0]);
+        assert_eq!(fs.rows_yielded(), 1);
+        assert_eq!(fs.rows_skipped(), 3);
+    }
+
+    #[test]
+    fn file_stream_skips_malformed_rows_without_truncating() {
+        // qid fields, garbage labels, unparsable values: each bad row is
+        // skipped and counted; rows after it must still stream (before
+        // this guard, the first malformed token silently ended the
+        // iterator — fatal for `serve --train-stream`, which would then
+        // report the file as fully consumed).
+        let text = "+1 qid:3 1:0.5\nnot-a-label 1:1\n+1 1:bad\n+1 1:0.5\n-1 2:2.0\n";
+        let mut fs = FileStream::from_reader(text.as_bytes(), 2);
+        let got: Vec<Example> = (&mut fs).collect();
+        assert_eq!(got.len(), 2, "good rows after malformed rows must survive");
+        assert_eq!(got[0].x.dense().as_ref(), &[0.5, 0.0]);
+        assert_eq!(got[1].y, -1.0);
+        assert_eq!(fs.rows_yielded(), 2);
+        assert_eq!(fs.rows_skipped(), 3);
+    }
+
+    #[test]
+    fn file_stream_counts_progress() {
+        let text = "# header\n+1 1:0.5\n\n-1 2:2.0\n";
+        let mut fs = FileStream::from_reader(text.as_bytes(), 2);
+        assert_eq!(fs.rows_yielded(), 0);
+        assert!(fs.next().is_some());
+        assert_eq!(fs.rows_yielded(), 1);
+        assert!(fs.next().is_some());
+        assert!(fs.next().is_none());
+        assert_eq!(fs.rows_yielded(), 2);
+        assert_eq!(fs.rows_skipped(), 0, "comments/blanks are not skipped rows");
     }
 }

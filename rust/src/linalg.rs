@@ -124,6 +124,51 @@ pub fn sparse_sqdist_scaled(w: &[f32], wnorm2: f64, idx: &[u32], val: &[f32], y:
     (wnorm2 - 2.0 * y as f64 * wx + xn2).max(0.0)
 }
 
+/// Metric dot `Σ a_i b_i s_i` — the diagonal-metric inner product
+/// `⟨a, b⟩_S` with per-axis weights `s` (the ellipsoid variant passes
+/// `s_i = 1/σ_i²`). With `s ≡ 1.0` this is bit-identical to [`dot`]
+/// (multiplying by exactly 1.0 is exact), which is what lets the
+/// isotropic ellipsoid reproduce `BallState` exactly.
+#[inline]
+pub fn dot_scaled(a: &[f32], b: &[f32], s: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), s.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64 * s[i];
+    }
+    acc
+}
+
+/// Metric squared norm `Σ a_i² s_i`.
+#[inline]
+pub fn norm2_scaled(a: &[f32], s: &[f64]) -> f64 {
+    dot_scaled(a, a, s)
+}
+
+/// Sparse metric dot `Σ w[idx_k] · val_k · s[idx_k]` — O(nnz).
+#[inline]
+pub fn sparse_dot_scaled(w: &[f32], s: &[f64], idx: &[u32], val: &[f32]) -> f64 {
+    assert_eq!(idx.len(), val.len());
+    let mut acc = 0.0f64;
+    for k in 0..idx.len() {
+        let i = idx[k] as usize;
+        acc += w[i] as f64 * val[k] as f64 * s[i];
+    }
+    acc
+}
+
+/// Sparse metric squared norm `Σ val_k² · s[idx_k]` — O(nnz).
+#[inline]
+pub fn sparse_norm2_scaled(s: &[f64], idx: &[u32], val: &[f32]) -> f64 {
+    assert_eq!(idx.len(), val.len());
+    let mut acc = 0.0f64;
+    for k in 0..idx.len() {
+        acc += val[k] as f64 * val[k] as f64 * s[idx[k] as usize];
+    }
+    acc
+}
+
 /// Dense matvec `out[i] = <m[i], v>` for a row-major `(rows, cols)` matrix
 /// stored contiguously. Used by the pure-Rust fallback of the predict
 /// path and by tests that cross-check the PJRT executables.
@@ -237,6 +282,37 @@ mod tests {
         let w = [3.0f32, 0.0, 4.0];
         let got = sparse_sqdist_scaled(&w, norm2(&w), &[0, 2], &[3.0, 4.0], 1.0);
         assert_eq!(got, 0.0);
+    }
+
+    #[test]
+    fn scaled_kernels_match_unscaled_at_unit_metric() {
+        let w = [1.0f32, -2.0, 0.5, 0.0, 3.0];
+        let x = [2.0f32, 0.0, -1.0, 0.0, 0.5];
+        let ones = [1.0f64; 5];
+        // multiplying by exactly 1.0 is exact: bit-identical to dot/norm2
+        assert_eq!(dot_scaled(&w, &x, &ones), dot(&w, &x));
+        assert_eq!(norm2_scaled(&w, &ones), norm2(&w));
+        let idx = [0u32, 2, 4];
+        let val = [2.0f32, -1.0, 0.5];
+        assert_eq!(sparse_dot_scaled(&w, &ones, &idx, &val), sparse_dot(&w, &idx, &val));
+        assert_eq!(sparse_norm2_scaled(&ones, &idx, &val), norm2(&val));
+    }
+
+    #[test]
+    fn scaled_kernels_apply_the_metric() {
+        let w = [1.0f32, 2.0, 3.0];
+        let s = [0.5f64, 2.0, 1.0];
+        // Σ w_i² s_i = 0.5 + 8 + 9
+        assert!((norm2_scaled(&w, &s) - 17.5).abs() < 1e-12);
+        // sparse agrees with dense on the same logical vector
+        let idx = [1u32, 2];
+        let val = [4.0f32, -1.0];
+        let dense = [0.0f32, 4.0, -1.0];
+        assert_eq!(sparse_dot_scaled(&w, &s, &idx, &val), dot_scaled(&w, &dense, &s));
+        assert_eq!(sparse_norm2_scaled(&s, &idx, &val), norm2_scaled(&dense, &s));
+        // empty sparse vector is zero
+        assert_eq!(sparse_dot_scaled(&w, &s, &[], &[]), 0.0);
+        assert_eq!(sparse_norm2_scaled(&s, &[], &[]), 0.0);
     }
 
     #[test]

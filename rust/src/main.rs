@@ -9,6 +9,7 @@
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (signed feature hashing to D)
 //! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
+//!                    [--train-stream data.libsvm]  (background-train from a local file)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (hash wire payloads on ingest)
 //! streamsvm loadgen  --addr 127.0.0.1:7878 [--dataset mnist01] [--qps 500] [--requests 2000]
 //!                    [--threads 4] [--train-share 0.1] [--out BENCH_serve.json]
@@ -363,7 +364,10 @@ fn cmd_merge(args: &Args) -> Result<()> {
 /// until the process is killed. `--republish-every N` is the hot-swap
 /// interval: the background trainer republishes the serving snapshot
 /// (and rewrites `--snapshot <path>.meb`, if given) every N absorbed
-/// `/train` examples.
+/// examples across both training sources. `--train-stream <path>` feeds
+/// the trainer from a local LIBSVM file, interleaved with the `/train`
+/// queue; progress is live in `/stats` under `"stream"` and the
+/// snapshot is rewritten once more when the file is fully consumed.
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.str("dataset", "mnist01");
     let hash = parse_hash(args)?;
@@ -401,8 +405,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         read_timeout: Duration::from_millis(args.get("read-timeout-ms", 10_000u64)?),
         tag: name.clone(),
         hash,
+        train_stream: args
+            .has("train-stream")
+            .then(|| PathBuf::from(args.str("train-stream", "train.libsvm"))),
         ..Default::default()
     };
+    if let Some(p) = &cfg.train_stream {
+        println!(
+            "background train stream: {} (interleaved with /train; progress in /stats)",
+            p.display()
+        );
+    }
     let handle = serve(model, cfg)?;
     println!("serving {name} on http://{}/ (predict, predict_batch, train, snapshot, stats)", handle.addr());
     handle.run_forever()

@@ -7,7 +7,7 @@
 //! *explicit, immediate* 429-style reject — never a silent drop, never
 //! an unbounded backlog, never a hang.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -101,6 +101,50 @@ pub struct EndpointStats {
     pub latency: LatencyHistogram,
 }
 
+/// Progress of the background `--train-stream` file feed: how many rows
+/// the trainer has absorbed from the local stream (interleaved with the
+/// `/train` queue) and whether the file has been fully consumed.
+/// Reported in `/stats` next to the admission counters.
+#[derive(Default)]
+pub struct StreamProgress {
+    /// Stream rows absorbed by the trainer so far.
+    pub rows: AtomicU64,
+    /// Rows not absorbed: poisoned/malformed rows the tolerant reader
+    /// skipped plus rows the trainer's validated entry point rejected.
+    /// Updated live (per row), not just at EOF.
+    pub skipped: AtomicU64,
+    /// The stream file has been consumed to EOF.
+    pub done: AtomicBool,
+}
+
+impl StreamProgress {
+    pub fn record_row(&self) {
+        self.rows.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the current not-absorbed count (reader skips + trainer
+    /// rejects); called every iteration so `/stats` is live.
+    pub fn set_skipped(&self, skipped: u64) {
+        self.skipped.store(skipped, Ordering::Relaxed);
+    }
+
+    pub fn finish(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    pub fn skipped_rows(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+}
+
 /// Shared, thread-safe stats registry for the whole server.
 #[derive(Default)]
 pub struct ServerStats {
@@ -109,6 +153,8 @@ pub struct ServerStats {
     pub conns_accepted: AtomicU64,
     /// Connections shed at the acceptor (handler pool + queue full).
     pub conns_shed: AtomicU64,
+    /// `--train-stream` progress (zero/false when no stream configured).
+    pub stream: StreamProgress,
 }
 
 impl ServerStats {
@@ -187,6 +233,22 @@ mod tests {
         }
         assert!(admitted, "rendezvous admit must succeed once a consumer waits");
         assert_eq!(waiter.join().unwrap(), 9);
+    }
+
+    #[test]
+    fn stream_progress_records_and_finishes() {
+        let p = StreamProgress::default();
+        assert_eq!(p.rows(), 0);
+        assert!(!p.is_done());
+        p.record_row();
+        p.record_row();
+        p.set_skipped(1); // live, before EOF
+        assert_eq!(p.rows(), 2);
+        assert_eq!(p.skipped_rows(), 1);
+        assert!(!p.is_done());
+        p.finish();
+        assert!(p.is_done());
+        assert_eq!(p.skipped_rows(), 1);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!                                                     │ /predict, /predict_batch:
 //!                                                     │    score vs cell.load()
 //!   trainer ◀─(bounded train queue, shed ⇒ 429)────── │ /train: enqueue example
-//!      │                                              │ /snapshot: sketch bytes
+//!      │  ◀─(FileStream --train-stream, interleaved)  │ /snapshot: sketch bytes
 //!      └── observe → republish every k ──▶ ModelCell  │ /stats: counters+quantiles
 //! ```
 //!
@@ -18,6 +18,14 @@
 //! [`StreamSvm`] exclusively and republishes a complete snapshot every
 //! `republish_every` absorbed examples (and once more at shutdown), so
 //! accepted `/train` examples are never lost.
+//!
+//! With [`ServerConfig::train_stream`] set, the trainer also feeds from a
+//! local LIBSVM file through the lazy [`FileStream`] reader, strictly
+//! interleaved with the `/train` queue (one queued example, one stream
+//! row per iteration — neither source starves the other), sharing the
+//! same republish/snapshot machinery. Stream progress is live in
+//! `/stats` under `"stream"`, and the `.meb` snapshot is rewritten once
+//! more when the file is consumed to EOF.
 
 use std::io::{BufReader, BufWriter, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -28,6 +36,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::stream::FileStream;
 use crate::data::hashing::FeatureHasher;
 use crate::data::Features;
 use crate::error::{Error, Result};
@@ -75,6 +84,13 @@ pub struct ServerConfig {
     /// length; the model itself lives in the hashed dim-`D` space. Must
     /// match the served model's hash spec.
     pub hash: Option<HashSpec>,
+    /// Train from this local LIBSVM file in the background, interleaved
+    /// with the `/train` queue (`serve --train-stream` on the CLI). The
+    /// tolerant [`FileStream`] reader is used: rows stream lazily as
+    /// sparse examples, poisoned rows are skipped and counted. With
+    /// [`Self::hash`] set the file's indices are unbounded and hashed on
+    /// ingest; otherwise out-of-range indices are dropped per row.
+    pub train_stream: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +106,7 @@ impl Default for ServerConfig {
             tag: "serve".into(),
             limits: Limits::default(),
             hash: None,
+            train_stream: None,
         }
     }
 }
@@ -112,6 +129,9 @@ struct Shared {
     limits: Limits,
     /// Hash-on-ingest front-end (see [`ServerConfig::hash`]).
     hasher: Option<FeatureHasher>,
+    /// A `--train-stream` file feed is configured (drives the `/stats`
+    /// `"stream"` object; progress lives in `stats.stream`).
+    stream_configured: bool,
 }
 
 /// A running server; dropping it without [`ServerHandle::shutdown`]
@@ -136,6 +156,10 @@ pub struct ServerReport {
     pub requests_shed: u64,
     pub conns_accepted: u64,
     pub conns_shed: u64,
+    /// `--train-stream` rows absorbed by the trainer (0 without one).
+    pub stream_rows: u64,
+    /// The `--train-stream` file was consumed to EOF before shutdown.
+    pub stream_done: bool,
 }
 
 /// Start serving `model` according to `cfg`. Returns once the listener
@@ -161,6 +185,17 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
             ));
         }
     }
+    // Open the background train stream up front so a bad path is a
+    // synchronous config/io error, not a silent dead trainer feed. When
+    // hashing is on, file indices are unbounded (they hash down to D);
+    // otherwise the tolerant reader drops out-of-range indices per row.
+    let stream = match &cfg.train_stream {
+        Some(path) => {
+            let raw_dim = if cfg.hash.is_some() { u32::MAX as usize } else { model.dim() };
+            Some(FileStream::open(path, raw_dim)?)
+        }
+        None => None,
+    };
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let (train_tx, train_rx) = bounded::<(Features, f32)>(cfg.train_queue.max(1));
@@ -176,6 +211,7 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
         tag: cfg.tag.clone(),
         limits: cfg.limits,
         hasher: cfg.hash.map(FeatureHasher::from_spec),
+        stream_configured: stream.is_some(),
     });
 
     let (conn_tx, conn_rx) = bounded::<TcpStream>(cfg.conn_queue);
@@ -232,7 +268,9 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
         let sh = shared.clone();
         let republish_every = cfg.republish_every.max(1);
         let snapshot = cfg.snapshot.clone();
-        std::thread::spawn(move || trainer_loop(sh, model, train_rx, republish_every, snapshot))
+        std::thread::spawn(move || {
+            trainer_loop(sh, model, train_rx, republish_every, snapshot, stream)
+        })
     };
 
     Ok(ServerHandle {
@@ -305,6 +343,8 @@ impl ServerHandle {
             requests_shed: sh.stats.total_shed(),
             conns_accepted: sh.stats.conns_accepted.load(Ordering::Relaxed),
             conns_shed: sh.stats.conns_shed.load(Ordering::Relaxed),
+            stream_rows: sh.stats.stream.rows(),
+            stream_done: sh.stats.stream.is_done(),
         })
     }
 }
@@ -643,14 +683,25 @@ fn handle_train(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
 
 fn stats_json(sh: &Shared) -> String {
     let snap = sh.cell.load();
+    let stream = if sh.stream_configured {
+        format!(
+            r#"{{"rows":{},"skipped":{},"done":{}}}"#,
+            sh.stats.stream.rows(),
+            sh.stats.stream.skipped_rows(),
+            sh.stats.stream.is_done(),
+        )
+    } else {
+        "null".into()
+    };
     let mut out = String::with_capacity(1024);
     out.push_str(&format!(
-        r#"{{"version":{},"seen":{},"radius":{},"supports":{},"trained":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
+        r#"{{"version":{},"seen":{},"radius":{},"supports":{},"trained":{},"stream":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
         snap.version,
         snap.seen,
         json::fmt_num(snap.radius),
         snap.supports,
         sh.trained.load(Ordering::Relaxed),
+        stream,
         sh.hasher.as_ref().map(|h| h.dim().to_string()).unwrap_or_else(|| "null".into()),
         json::fmt_num(sh.started.elapsed().as_secs_f64()),
         sh.stats.conns_accepted.load(Ordering::Relaxed),
@@ -678,17 +729,26 @@ fn stats_json(sh: &Shared) -> String {
     out
 }
 
-/// The background trainer: consume admitted examples, republish the
-/// hot-swap snapshot every `republish_every` absorbed examples, persist
-/// the sketch if configured, and drain exactly once at shutdown.
+/// The background trainer: consume admitted examples (and, when
+/// configured, a local `--train-stream` file, strictly interleaved so
+/// neither source starves the other), republish the hot-swap snapshot
+/// every `republish_every` absorbed examples across both sources,
+/// persist the sketch if configured, and drain exactly once at
+/// shutdown. Stream EOF triggers one extra republish + snapshot so the
+/// persisted `.meb` reflects the fully-streamed model.
 fn trainer_loop(
     sh: Arc<Shared>,
     mut model: StreamSvm,
     rx: Receiver<(Features, f32)>,
     republish_every: usize,
     snapshot: Option<PathBuf>,
+    mut stream: Option<FileStream<std::fs::File>>,
 ) -> StreamSvm {
     let mut since_publish = 0usize;
+    // Stream rows the trainer's validated entry point rejected (counted
+    // into the live `skipped` stat so `rows + skipped` always accounts
+    // for every row the reader produced or dropped).
+    let mut stream_rejected = 0u64;
     // Admitted examples were validated at the protocol boundary, but the
     // fallible entry point keeps a defective example (e.g. a dim change
     // across hot-swap experiments) from panicking the trainer thread.
@@ -702,6 +762,69 @@ fn trainer_loop(
         }
     }
     loop {
+        if sh.trainer_stop.load(Ordering::Acquire) {
+            // The handler pool has joined: this drain is exact. The file
+            // stream is left wherever it is — its progress (and that it
+            // did not finish) stays visible in the stats.
+            while let Ok((x, y)) = rx.try_recv() {
+                if absorb(&mut model, x, y) {
+                    sh.trained.fetch_add(1, Ordering::Relaxed);
+                    since_publish += 1;
+                }
+            }
+            break;
+        }
+        let mut progressed = false;
+        // one queued /train example (non-blocking: wire traffic never
+        // waits behind the file stream)
+        if let Ok((x, y)) = rx.try_recv() {
+            if absorb(&mut model, x, y) {
+                sh.trained.fetch_add(1, Ordering::Relaxed);
+                since_publish += 1;
+            }
+            progressed = true;
+        }
+        // one file-stream row
+        let mut stream_finished = false;
+        if let Some(s) = stream.as_mut() {
+            match s.next() {
+                Some(e) => {
+                    let e = match &sh.hasher {
+                        Some(h) => h.hash_example(&e),
+                        None => e,
+                    };
+                    if absorb(&mut model, e.x, e.y) {
+                        sh.stats.stream.record_row();
+                        since_publish += 1;
+                    } else {
+                        stream_rejected += 1;
+                    }
+                    sh.stats.stream.set_skipped(s.rows_skipped() as u64 + stream_rejected);
+                    progressed = true;
+                }
+                None => {
+                    sh.stats.stream.set_skipped(s.rows_skipped() as u64 + stream_rejected);
+                    sh.stats.stream.finish();
+                    stream_finished = true;
+                }
+            }
+        }
+        if stream_finished {
+            stream = None;
+            // EOF republish: the published snapshot (and the persisted
+            // .meb) must include the whole stream.
+            since_publish = 0;
+            publish(&sh, &model, &snapshot);
+        }
+        if progressed {
+            if since_publish >= republish_every {
+                since_publish = 0;
+                publish(&sh, &model, &snapshot);
+            }
+            continue;
+        }
+        // both sources idle: block briefly on the queue, then re-check
+        // the stop flag at the top of the loop
         match rx.recv_timeout(Duration::from_millis(20)) {
             Ok((x, y)) => {
                 if absorb(&mut model, x, y) {
@@ -713,18 +836,7 @@ fn trainer_loop(
                     publish(&sh, &model, &snapshot);
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if sh.trainer_stop.load(Ordering::Acquire) {
-                    // The handler pool has joined: this drain is exact.
-                    while let Ok((x, y)) = rx.try_recv() {
-                        if absorb(&mut model, x, y) {
-                            sh.trained.fetch_add(1, Ordering::Relaxed);
-                            since_publish += 1;
-                        }
-                    }
-                    break;
-                }
-            }
+            Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
@@ -788,6 +900,7 @@ mod tests {
             tag: "t".into(),
             limits: Limits::default(),
             hasher: hash.map(FeatureHasher::from_spec),
+            stream_configured: false,
         });
         (sh, train_rx)
     }
@@ -1017,6 +1130,8 @@ mod tests {
         assert_eq!(status, 200);
         let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(v.get("version").unwrap().as_f64(), Some(1.0));
+        // no --train-stream configured → explicit null, not a stale object
+        assert_eq!(v.get("stream"), Some(&Json::Null));
         let eps = v.get("endpoints").unwrap();
         for ep in Endpoint::ALL {
             assert!(eps.get(ep.name()).is_some(), "missing endpoint {}", ep.name());
@@ -1025,6 +1140,18 @@ mod tests {
             eps.get("predict").unwrap().get("ok").unwrap().as_f64(),
             Some(1.0)
         );
+    }
+
+    #[test]
+    fn serve_rejects_missing_train_stream_file() {
+        // a bad --train-stream path must fail serve() synchronously, not
+        // leave a silently dead trainer feed behind a running listener
+        let cfg = ServerConfig {
+            train_stream: Some(PathBuf::from("/definitely/not/here.libsvm")),
+            ..Default::default()
+        };
+        let err = serve(toy_model(), cfg).unwrap_err();
+        assert!(matches!(err, Error::Io(_)), "{err}");
     }
 
     #[test]

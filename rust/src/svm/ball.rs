@@ -24,8 +24,10 @@ use crate::svm::TrainOptions;
 
 /// Fold `σ` into `v` once `|σ|` drops below this (β ≤ ½ ⇒ at least ~20
 /// updates between folds). Keeps `v` within comfortable f32 range: with
-/// `|σ| ≥ 1e-6`, `|v| ≤ 1e6·|w|`.
-const SIGMA_FOLD: f64 = 1e-6;
+/// `|σ| ≥ 1e-6`, `|v| ≤ 1e6·|w|`. Shared with the diagonal-metric
+/// [`crate::svm::ellipsoid::EllipsoidSvm`], whose isotropic mode must
+/// replay this exact schedule to stay bit-identical to the ball.
+pub(crate) const SIGMA_FOLD: f64 = 1e-6;
 
 /// Also renormalize every this many updates regardless of `σ`: the
 /// incremental `‖w‖²` recurrence tracks the ideal center while `v`
@@ -33,8 +35,9 @@ const SIGMA_FOLD: f64 = 1e-6;
 /// and `σ` may never cross [`SIGMA_FOLD`]) the cache would otherwise
 /// random-walk away from the stored center. Amortized cost O(D/2²⁰)
 /// per update — noise. The schedule depends only on `m`, so resume
-/// from a sketch replays it deterministically.
-const RENORM_EVERY: usize = 1 << 20;
+/// from a sketch replays it deterministically. Shared with the
+/// ellipsoid variant like [`SIGMA_FOLD`].
+pub(crate) const RENORM_EVERY: usize = 1 << 20;
 
 /// Streaming MEB / StreamSVM state: `(w, R, ξ², M)` with `w = σ·v`.
 #[derive(Clone, Debug, PartialEq)]

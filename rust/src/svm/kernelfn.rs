@@ -3,7 +3,15 @@
 //! The MEB↔SVM duality requires `K(x, x) = κ` constant; linear kernels on
 //! unnormalized inputs violate this mildly (the paper still uses them for
 //! all experiments), RBF satisfies it exactly with κ = 1.
+//!
+//! The view entry points ([`Kernel::eval_view`], [`Kernel::self_eval_n2`])
+//! compute `K(x, z)` from the norm expansion
+//! `‖x − z‖² = ‖x‖² + ‖z‖² − 2⟨x, z⟩` with the squared norms supplied by
+//! the caller — the kernelized learner caches `‖x‖²` per core-set point,
+//! so every evaluation against a sparse example is a single O(nnz)
+//! (or merge-join) dot instead of an O(D) densified pass.
 
+use crate::data::FeaturesView;
 use crate::linalg;
 
 /// Supported kernels.
@@ -36,6 +44,30 @@ impl Kernel {
             Kernel::Poly { degree, coef } => (linalg::norm2(a) + coef).powi(degree as i32),
         }
     }
+
+    /// `K(a, b)` for dense-or-sparse views with the squared norms `‖a‖²`,
+    /// `‖b‖²` supplied (cached by the caller) — cost is one
+    /// [`FeaturesView::dot_view`], i.e. O(nnz) against a sparse operand
+    /// and a merge-join for two sparse operands.
+    pub fn eval_view(&self, a: FeaturesView<'_>, an2: f64, b: FeaturesView<'_>, bn2: f64) -> f64 {
+        match *self {
+            Kernel::Linear => a.dot_view(&b),
+            Kernel::Rbf { gamma } => {
+                let d2 = an2 + bn2 - 2.0 * a.dot_view(&b);
+                (-gamma * d2.max(0.0)).exp()
+            }
+            Kernel::Poly { degree, coef } => (a.dot_view(&b) + coef).powi(degree as i32),
+        }
+    }
+
+    /// `K(x, x)` from the cached squared norm alone — O(1).
+    pub fn self_eval_n2(&self, n2: f64) -> f64 {
+        match *self {
+            Kernel::Linear => n2,
+            Kernel::Rbf { .. } => 1.0,
+            Kernel::Poly { degree, coef } => (n2 + coef).powi(degree as i32),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -64,5 +96,30 @@ mod tests {
         let k = Kernel::Poly { degree: 2, coef: 1.0 };
         // (<(1,1),(2,0)> + 1)^2 = 9
         assert_eq!(k.eval(&[1.0, 1.0], &[2.0, 0.0]), 9.0);
+    }
+
+    #[test]
+    fn view_evals_match_dense_evals() {
+        use crate::data::Features;
+        let a = Features::sparse(6, vec![0, 3, 5], vec![1.0, -2.0, 0.5]);
+        let b = Features::sparse(6, vec![1, 3, 4], vec![2.0, 3.0, 1.0]);
+        let (ad, bd) = (a.dense().into_owned(), b.dense().into_owned());
+        let (an2, bn2) = (a.view().norm2(), b.view().norm2());
+        for k in [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.7 },
+            Kernel::Poly { degree: 3, coef: 0.5 },
+        ] {
+            let want = k.eval(&ad, &bd);
+            // all four representation pairs agree with the dense eval
+            let got_ss = k.eval_view(a.view(), an2, b.view(), bn2);
+            let got_sd = k.eval_view(a.view(), an2, FeaturesView::Dense(&bd), bn2);
+            let got_ds = k.eval_view(FeaturesView::Dense(&ad), an2, b.view(), bn2);
+            for got in [got_ss, got_sd, got_ds] {
+                assert!((got - want).abs() <= 1e-12 * want.abs().max(1.0), "{got} vs {want}");
+            }
+            // cached-norm self-eval matches the slice self-eval
+            assert!((k.self_eval_n2(an2) - k.self_eval(&ad)).abs() < 1e-12);
+        }
     }
 }

@@ -9,18 +9,33 @@
 //! The quadratic term (the center's feature-space norm) is maintained
 //! incrementally across updates, so each example costs O(M·cost(K))
 //! rather than O(M²).
+//!
+//! Core-set points keep their arriving representation (sparse rows stay
+//! sparse) and cache their squared norm, so every kernel evaluation goes
+//! through the norm expansion `‖x‖² + ‖z‖² − 2⟨x,z⟩` and `cost(K)` is
+//! O(nnz) per stored point — the observe path never densifies.
 
-use crate::data::Example;
+use crate::data::{Example, Features, FeaturesView};
+use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::kernelfn::Kernel;
 use crate::svm::TrainOptions;
+
+/// One absorbed core-set point: features in their arriving
+/// representation plus the cached `‖x‖²` the norm-expansion kernel
+/// evaluations need.
+#[derive(Clone, Debug)]
+struct CorePoint {
+    x: Features,
+    norm2: f64,
+}
 
 /// Kernelized Algorithm 1.
 #[derive(Clone, Debug)]
 pub struct KernelStreamSvm {
     kernel: Kernel,
-    /// Stored core vectors.
-    svs: Vec<(Vec<f32>, f32)>,
+    /// Stored core vectors (sparse rows stay sparse; `‖x‖²` cached).
+    svs: Vec<CorePoint>,
     /// Signed coefficients (include the label factor).
     alpha: Vec<f64>,
     /// `||feature part of center||²`, maintained incrementally.
@@ -28,6 +43,8 @@ pub struct KernelStreamSvm {
     r: f64,
     xi2: f64,
     opts: TrainOptions,
+    /// Dimension pinned by the first observed example.
+    dim: Option<usize>,
     seen: usize,
 }
 
@@ -41,48 +58,90 @@ impl KernelStreamSvm {
             r: 0.0,
             xi2: opts.s2(),
             opts,
+            dim: None,
             seen: 0,
         }
     }
 
-    /// `f(x) = Σ αₘ K(xₘ, x)` — the raw decision value.
-    fn f(&self, x: &[f32]) -> f64 {
+    /// `f(x) = Σ αₘ K(xₘ, x)` — the raw decision value, O(Σ nnz) over
+    /// the core set given the example's cached `‖x‖²`.
+    fn f_view(&self, x: FeaturesView<'_>, xn2: f64) -> f64 {
         self.svs
             .iter()
             .zip(&self.alpha)
-            .map(|((sx, _), &a)| a * self.kernel.eval(sx, x))
+            .map(|(sv, &a)| a * self.kernel.eval_view(sv.x.view(), sv.norm2, x, xn2))
             .sum()
     }
 
     /// Distance of `φ̃((x, y))` to the current center.
     pub fn distance(&self, x: &[f32], y: f32) -> f64 {
-        let kxx = self.kernel.self_eval(x);
-        let d2 = self.feat_norm2 + kxx - 2.0 * y as f64 * self.f(x) + self.xi2 + self.opts.invc();
+        self.distance_view(FeaturesView::Dense(x), y)
+    }
+
+    /// [`Self::distance`] for a dense-or-sparse feature view — O(M·nnz).
+    pub fn distance_view(&self, x: FeaturesView<'_>, y: f32) -> f64 {
+        let xn2 = x.norm2();
+        let kxx = self.kernel.self_eval_n2(xn2);
+        let d2 =
+            self.feat_norm2 + kxx - 2.0 * y as f64 * self.f_view(x, xn2) + self.xi2
+                + self.opts.invc();
         d2.max(0.0).sqrt()
     }
 
     /// Stream one example.
     pub fn observe(&mut self, x: &[f32], y: f32) -> bool {
+        self.observe_view(FeaturesView::Dense(x), y)
+    }
+
+    /// [`Self::observe`] for a dense-or-sparse feature view: the distance
+    /// test and the coefficient update cost O(M·nnz) kernel work, and the
+    /// absorbed point is stored in its arriving representation (sparse
+    /// stays sparse — no densify anywhere on this path).
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        debug_assert!(
+            self.dim.map_or(true, |d| d == x.dim()),
+            "example dimension {} but the model saw {:?}",
+            x.dim(),
+            self.dim
+        );
         self.seen += 1;
+        let xn2 = x.norm2();
         if self.svs.is_empty() {
-            self.feat_norm2 = self.kernel.self_eval(x);
-            self.svs.push((x.to_vec(), y));
+            if !xn2.is_finite() {
+                // keep NaN/Inf out of the seed core point (mirrors
+                // BallState::init guards; see try_observe for the
+                // surfaced-error entry point)
+                debug_assert!(false, "non-finite features in KernelStreamSvm::observe");
+                return false;
+            }
+            self.dim = Some(x.dim());
+            self.feat_norm2 = self.kernel.self_eval_n2(xn2);
+            self.svs.push(CorePoint { x: x.to_features(), norm2: xn2 });
             self.alpha.push(y as f64);
             return true;
         }
-        let d = self.distance(x, y);
+        let fx = self.f_view(x, xn2);
+        let kxx = self.kernel.self_eval_n2(xn2);
+        let d2 = self.feat_norm2 + kxx - 2.0 * y as f64 * fx + self.xi2 + self.opts.invc();
+        let d = d2.max(0.0).sqrt();
+        if !d.is_finite() {
+            // A non-finite distance (NaN features smuggled past the
+            // ingestion guards) must not poison the core set: `d < r` is
+            // false for NaN, so the unguarded blend below would corrupt
+            // α and the cached norm forever.
+            debug_assert!(false, "non-finite distance in KernelStreamSvm::observe (d = {d})");
+            return false;
+        }
         if d < self.r {
             return false;
         }
         let beta = 0.5 * (1.0 - self.r / d);
-        let fx = self.f(x);
-        let kxx = self.kernel.self_eval(x);
         // α ← (1−β) α ; α_new = β y   (paper §4.2)
         for a in self.alpha.iter_mut() {
             *a *= 1.0 - beta;
         }
         self.alpha.push(beta * y as f64);
-        self.svs.push((x.to_vec(), y));
+        self.svs.push(CorePoint { x: x.to_features(), norm2: xn2 });
         // ||c'||² = (1−β)²||c||² + 2(1−β)β y f(x) + β² K(x,x)
         let omb = 1.0 - beta;
         self.feat_norm2 =
@@ -92,6 +151,17 @@ impl KernelStreamSvm {
         true
     }
 
+    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
+    /// wrong-dimension examples (against the dimension pinned by the
+    /// first example), non-finite features and non-±1 labels with
+    /// [`crate::svm::validate_example`]'s errors instead of skipping
+    /// silently or asserting deep inside a kernel evaluation.
+    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
+        let dim = self.dim.unwrap_or(x.dim());
+        crate::svm::validate_example(x, y, dim)?;
+        Ok(self.observe_view(x, y))
+    }
+
     pub fn fit<'a, I: IntoIterator<Item = &'a Example>>(
         stream: I,
         kernel: Kernel,
@@ -99,7 +169,7 @@ impl KernelStreamSvm {
     ) -> Self {
         let mut m = KernelStreamSvm::new(kernel, *opts);
         for e in stream {
-            m.observe(&e.x.dense(), e.y);
+            m.observe_view(e.x.view(), e.y);
         }
         m
     }
@@ -112,6 +182,24 @@ impl KernelStreamSvm {
         self.r
     }
 
+    /// Slack mass of the center (the ξ² bookkeeping term).
+    pub fn xi2(&self) -> f64 {
+        self.xi2
+    }
+
+    /// The signed coefficients over the core set. Invariant of the
+    /// Algorithm-1 blend: `α_m = c_m · y_m` with `c_m ≥ 0` and
+    /// `Σ c_m = 1`, i.e. `Σ |α_m| = 1` (the convex-combination law the
+    /// conformance suite checks).
+    pub fn coefficients(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Dimension pinned by the first observed example (`None` before).
+    pub fn dim(&self) -> Option<usize> {
+        self.dim
+    }
+
     pub fn examples_seen(&self) -> usize {
         self.seen
     }
@@ -119,13 +207,18 @@ impl KernelStreamSvm {
 
 impl Classifier for KernelStreamSvm {
     fn score(&self, x: &[f32]) -> f64 {
-        self.f(x)
+        self.score_view(FeaturesView::Dense(x))
+    }
+
+    fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        self.f_view(x, x.norm2())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
     use crate::eval::accuracy;
     use crate::prop::{check_default, gen};
     use crate::rng::Pcg32;
@@ -158,6 +251,47 @@ mod tests {
                 let s2 = ker.score(&probe);
                 if (s1 - s2).abs() > 1e-4 * s1.abs().max(1.0) {
                     return Err(format!("scores {s1} vs {s2}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_observe_matches_dense() {
+        // The O(nnz) view path must follow the identical trajectory as
+        // densified input, for every kernel.
+        check_default("kernelized-sparse-dense", |rng, _| {
+            let d = gen::dim(rng);
+            let (xs, ys) = gen::labeled_points(rng, 40, d, 1.0, 0.4);
+            for kernel in [
+                Kernel::Linear,
+                Kernel::Rbf { gamma: 0.4 },
+                Kernel::Poly { degree: 2, coef: 1.0 },
+            ] {
+                let opts = TrainOptions::default();
+                let mut dense = KernelStreamSvm::new(kernel, opts);
+                let mut sparse = KernelStreamSvm::new(kernel, opts);
+                for (x, y) in xs.iter().zip(&ys) {
+                    let f = crate::data::Features::Dense(x.clone()).to_sparse();
+                    let ud = dense.observe(x, *y);
+                    let us = sparse.observe_view(f.view(), *y);
+                    if ud != us {
+                        return Err(format!("{kernel:?}: update decisions diverged"));
+                    }
+                }
+                if dense.num_support() != sparse.num_support() {
+                    return Err(format!("{kernel:?}: support counts diverged"));
+                }
+                let rel = (dense.radius() - sparse.radius()).abs() / dense.radius().max(1.0);
+                if rel > 1e-9 {
+                    return Err(format!("{kernel:?}: radius diverged ({rel})"));
+                }
+                // sparse storage actually survived (no densify): probe scores agree
+                let probe: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let (s1, s2) = (dense.score(&probe), sparse.score(&probe));
+                if (s1 - s2).abs() > 1e-6 * s1.abs().max(1.0) {
+                    return Err(format!("{kernel:?}: scores {s1} vs {s2}"));
                 }
             }
             Ok(())
@@ -199,5 +333,71 @@ mod tests {
             assert!(m.radius() >= prev - 1e-9);
             prev = m.radius();
         }
+    }
+
+    #[test]
+    fn coefficients_stay_a_signed_convex_combination() {
+        let mut rng = Pcg32::seeded(7);
+        let (xs, ys) = gen::labeled_points(&mut rng, 80, 5, 1.2, 0.3);
+        let mut m = KernelStreamSvm::new(Kernel::Rbf { gamma: 0.5 }, TrainOptions::default());
+        for (x, y) in xs.iter().zip(&ys) {
+            m.observe(x, *y);
+            let sum_abs: f64 = m.coefficients().iter().map(|a| a.abs()).sum();
+            assert!((sum_abs - 1.0).abs() < 1e-9, "Σ|α| = {sum_abs}");
+            assert!(m.coefficients().iter().all(|a| a.abs() <= 1.0 + 1e-12));
+        }
+    }
+
+    #[test]
+    fn nan_features_never_poison_the_core_set() {
+        // Regression (mirrors the PR-4 multiball/lookahead fixes): a NaN
+        // feature's distance is NaN, `d < r` is false, and the unguarded
+        // blend used to corrupt α and the cached norm forever.
+        let mk = || {
+            let mut m = KernelStreamSvm::new(Kernel::Rbf { gamma: 0.5 }, TrainOptions::default());
+            m.observe(&[1.0, 0.0], 1.0);
+            m.observe(&[0.0, 4.0], -1.0);
+            m
+        };
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(|| {
+                let mut m = mk();
+                m.observe(&[f32::NAN, 0.0], 1.0);
+            });
+            let payload = r.expect_err("debug build should assert");
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            assert!(msg.contains("non-finite"), "unexpected panic: {msg}");
+        } else {
+            let mut m = mk();
+            let supports = m.num_support();
+            assert!(!m.observe(&[f32::NAN, 0.0], 1.0));
+            assert_eq!(m.num_support(), supports, "NaN example reached the core set");
+            assert!(m.radius().is_finite());
+            assert!(m.score(&[1.0, 1.0]).is_finite(), "NaN poisoned the coefficients");
+            // a NaN first example must not seed the core set either
+            let mut m = KernelStreamSvm::new(Kernel::Linear, TrainOptions::default());
+            assert!(!m.observe(&[f32::NAN], 1.0));
+            assert_eq!(m.num_support(), 0);
+        }
+        // the validated entry point surfaces the defect as an error
+        let mut m = mk();
+        let err = m.try_observe(FeaturesView::Dense(&[f32::NAN, 0.0]), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        // wrong dimension (vs the pinned first-example dim) → Config
+        let err = m.try_observe(FeaturesView::Dense(&[1.0, 2.0, 3.0]), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // bad label → Data
+        let err = m.try_observe(FeaturesView::Dense(&[1.0, 2.0]), 0.5).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        // none of the rejects consumed a stream position or grew the set
+        assert_eq!(m.examples_seen(), 2);
+        assert_eq!(m.num_support(), 2);
+        // a valid example still flows through
+        assert!(m.try_observe(FeaturesView::Dense(&[9.0, -9.0]), 1.0).is_ok());
+        assert_eq!(m.examples_seen(), 3);
     }
 }

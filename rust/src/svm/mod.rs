@@ -1,6 +1,15 @@
 //! The paper's algorithms: StreamSVM (Algorithm 1), the lookahead variant
-//! (Algorithm 2), the kernelized variant, and the multiball extension,
-//! plus the MEB machinery they share.
+//! (Algorithm 2), the kernelized variant, the multiball extension and the
+//! diagonal-metric ellipsoid prototype (§6.2), plus the MEB machinery
+//! they share.
+//!
+//! Every variant's observe path is O(nnz) in the example's stored
+//! coordinates, and all expose the same `observe_view`/`try_observe`
+//! surface (validated via [`validate_example`]); the cross-variant
+//! conformance suite (`rust/tests/variant_conformance.rs`) pins the
+//! shared invariants — radius monotonicity, convex-coefficient laws, and
+//! that the linear-kernelized and isotropic-ellipsoid variants reproduce
+//! [`ball::BallState`]'s `(w, R, ξ²)` on identical streams.
 
 use crate::data::FeaturesView;
 use crate::error::{Error, Result};

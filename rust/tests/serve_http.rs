@@ -167,6 +167,140 @@ fn concurrent_train_and_predict_with_hot_swap_and_loadgen() {
 }
 
 #[test]
+fn train_stream_feeds_the_trainer_while_serving() {
+    use streamsvm::eval::accuracy;
+
+    let dir = std::env::temp_dir().join(format!("ssvm_train_stream_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let stream_path = dir.join("stream.libsvm");
+    let live_path = dir.join("live.meb");
+
+    // One coherent pool: toy(n, seed) draws a fresh class-mean direction
+    // per seed, so initial training, the stream file, wire traffic and
+    // the accuracy eval must all slice the same draw.
+    let pool = toy(1000, 1);
+    let initial = StreamSvm::fit(pool[..300].iter(), DIM, &TrainOptions::default());
+
+    // Write a LIBSVM file the background trainer will consume: 240 good
+    // rows (1-based indices, zeros dropped) plus one poisoned row the
+    // tolerant reader must skip without truncating the stream.
+    let rows: Vec<Example> = pool[300..540].to_vec();
+    {
+        use std::io::Write as _;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&stream_path).unwrap());
+        for (i, e) in rows.iter().enumerate() {
+            if i == 100 {
+                writeln!(f, "+1 1:nan").unwrap();
+            }
+            write!(f, "{}", if e.y > 0.0 { "+1" } else { "-1" }).unwrap();
+            for (j, v) in e.x.iter_nonzero() {
+                write!(f, " {}:{}", j + 1, v).unwrap();
+            }
+            writeln!(f).unwrap();
+        }
+    }
+
+    let cfg = ServerConfig {
+        threads: 4,
+        conn_queue: 16,
+        train_queue: 1024,
+        republish_every: 16,
+        snapshot: Some(live_path.clone()),
+        read_timeout: Duration::from_secs(2),
+        tag: "stream".into(),
+        train_stream: Some(stream_path.clone()),
+        ..Default::default()
+    };
+    let handle = serve(initial, cfg).unwrap();
+    let addr = handle.addr();
+
+    // Concurrent wire traffic while the file stream drains: /train posts
+    // interleave with stream rows, /predict stays healthy throughout.
+    let wire_accepted = Arc::new(AtomicU64::new(0));
+    let trainer_thread = {
+        let examples: Vec<Example> = pool[540..620].to_vec();
+        let accepted = wire_accepted.clone();
+        std::thread::spawn(move || {
+            let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+            for e in &examples {
+                let o = client.train_features(&e.x, e.y).unwrap();
+                assert!(o.status == 202 || o.status == 429, "train status {}", o.status);
+                if o.status == 202 {
+                    accepted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        })
+    };
+    let predictor = {
+        let examples: Vec<Example> = pool[620..680].to_vec();
+        std::thread::spawn(move || {
+            let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+            for e in &examples {
+                let o = client.predict_features(&e.x).unwrap();
+                assert_eq!(o.status, 200);
+                assert!(o.score.unwrap().is_finite());
+            }
+        })
+    };
+    trainer_thread.join().unwrap();
+    predictor.join().unwrap();
+
+    // /stats reports live stream progress; poll until the file is done
+    // (the trainer consumes it at full speed — this is generous).
+    let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+    let mut done = false;
+    let mut last = None;
+    for _ in 0..500 {
+        let stats = client.stats().unwrap();
+        let stream = stats.get("stream").expect("stats carries a stream object").clone();
+        if stream.get("done").and_then(|v| v.as_bool()) == Some(true) {
+            done = true;
+            last = Some(stream);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(done, "train stream never finished");
+    let stream = last.unwrap();
+    assert_eq!(
+        stream.get("rows").and_then(|v| v.as_f64()),
+        Some(240.0),
+        "all good rows absorbed"
+    );
+    assert_eq!(
+        stream.get("skipped").and_then(|v| v.as_f64()),
+        Some(1.0),
+        "the poisoned row was skipped, not fatal"
+    );
+    drop(client);
+
+    // Shutdown: the report carries the stream accounting, the final
+    // model has absorbed initial + stream + accepted wire examples, and
+    // its dimension/accuracy are intact.
+    let accepted = wire_accepted.load(Ordering::Relaxed);
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.stream_rows, 240);
+    assert!(report.stream_done);
+    assert!(report.trained >= accepted, "trained {} < accepted {accepted}", report.trained);
+    assert_eq!(report.model.dim(), DIM);
+    assert!(
+        report.model.examples_seen() >= 300 + 240 + accepted as usize,
+        "examples_seen {} < initial+stream+wire",
+        report.model.examples_seen()
+    );
+    assert!(report.version > 1, "stream training never republished");
+    let acc = accuracy(&report.model, &pool[800..]);
+    assert!(acc > 0.8, "final model degraded: acc {acc:.3}");
+
+    // the snapshot on disk reflects the fully-streamed model
+    let disk = MebSketch::read_from(&live_path).unwrap();
+    assert_eq!(disk.dim, DIM);
+    assert!(disk.seen >= 300 + 240);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn overload_gets_explicit_reject_never_a_hang() {
     // One handler, rendezvous connection queue: while the handler owns a
     // connection, any further connection must be shed with an explicit
