@@ -136,11 +136,19 @@ impl LatencyHistogram {
     }
 
     /// Upper edge of the bucket holding quantile `q` (0..1).
+    ///
+    /// Edge behavior (pinned by tests, relied on by `/metrics`):
+    /// * **empty histogram** → `Duration::ZERO` for every `q` — never a
+    ///   misleading max.
+    /// * **`q = 0.0`** → the upper edge of the *first non-empty* bucket
+    ///   (the minimum recorded latency's bucket). The rank target is
+    ///   clamped to `[1, count]`, so `q ≤ 0` can't fall through to the
+    ///   max and `q ≥ 1` reports the last non-empty bucket.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
         }
-        let target = (q * self.count as f64).ceil() as u64;
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
         let mut acc = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
@@ -149,6 +157,23 @@ impl LatencyHistogram {
             }
         }
         self.max()
+    }
+
+    /// Raw per-bucket counts; bucket `i` holds samples in
+    /// `[2^i µs, 2^(i+1) µs)`. Exposed for Prometheus histogram
+    /// rendering (`GET /metrics`).
+    pub fn bucket_counts(&self) -> &[u64; 32] {
+        &self.buckets
+    }
+
+    /// Total recorded nanoseconds (the Prometheus `_sum`).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Upper edge of bucket `i`, in microseconds.
+    pub const fn bucket_edge_us(i: usize) -> u64 {
+        1u64 << (i + 1)
     }
 
     /// Fold another histogram into this one (bucket-wise). Used to
@@ -221,8 +246,28 @@ mod tests {
     #[test]
     fn empty_histogram() {
         let h = LatencyHistogram::default();
-        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        // pinned: an empty histogram is ZERO at every quantile, never a
+        // misleading max
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Duration::ZERO, "q={q}");
+        }
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantile_zero_reports_the_min_bucket() {
+        // One slow outlier plus a cluster of fast samples: q=0 must land
+        // in the fast cluster's bucket, not bucket 0 and not the max.
+        let mut h = LatencyHistogram::default();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(300)); // bucket [256µs, 512µs)
+        }
+        h.record(Duration::from_millis(80)); // bucket [65ms, 131ms)
+        assert_eq!(h.quantile(0.0), Duration::from_micros(512));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(131_072));
+        // out-of-range q clamps rather than falling off either end
+        assert_eq!(h.quantile(-0.5), h.quantile(0.0));
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
     }
 
     #[test]
@@ -305,6 +350,44 @@ mod tests {
                 if got != edge {
                     return Err(format!("q={q}: got {got:?}, want bucket edge {edge:?}"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_then_quantile_equals_single_histogram_property() {
+        crate::prop::check_default("hist-merge-quantile", |rng, _| {
+            // Scatter random samples across k shard histograms; merging
+            // the shards must reproduce the single-histogram quantiles
+            // exactly (including the q=0 / q=1 edges).
+            let k = 2 + rng.below(6);
+            let mut shards: Vec<LatencyHistogram> =
+                (0..k).map(|_| LatencyHistogram::default()).collect();
+            let mut all = LatencyHistogram::default();
+            let n = 1 + rng.below(400);
+            for _ in 0..n {
+                let us = 1 + rng.below(1_000_000) as u64;
+                let d = Duration::from_micros(us);
+                all.record(d);
+                let s = rng.below(k);
+                shards[s].record(d);
+            }
+            let mut merged = LatencyHistogram::default();
+            for s in &shards {
+                merged.merge(s);
+            }
+            if merged.count() != all.count() {
+                return Err(format!("count {} != {}", merged.count(), all.count()));
+            }
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let (m, a) = (merged.quantile(q), all.quantile(q));
+                if m != a {
+                    return Err(format!("q={q}: merged {m:?} != single {a:?}"));
+                }
+            }
+            if merged.mean() != all.mean() || merged.max() != all.max() {
+                return Err("mean/max diverged after merge".into());
             }
             Ok(())
         });

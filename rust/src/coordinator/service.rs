@@ -255,7 +255,7 @@ impl PredictService {
                             self.stats.snapshots += 1;
                             self.snapshot_fresh = true;
                         }
-                        Err(e) => eprintln!("warning: live snapshot failed: {e}"),
+                        Err(e) => crate::obs_warn!("coordinator", "live snapshot failed: {e}"),
                     }
                 }
             }

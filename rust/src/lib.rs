@@ -57,6 +57,15 @@
 //! resumed from its sketch finishes with bit-identical weights. The CLI
 //! exposes all of it as `snapshot`, `resume` and `merge` subcommands.
 //!
+//! The **observability layer** ([`obs`]) gives the running system eyes
+//! with zero dependencies: a lock-cheap leveled tracing core
+//! (`PALLAS_LOG`-filtered stderr + a bounded in-process ring served by
+//! `GET /trace`), training-dynamics telemetry from every variant and the
+//! sketch layer (radius/‖w‖ trajectory, per-window violation rate,
+//! merge cadence, core-set size — all behind a one-atomic-load disabled
+//! fast path), Prometheus text exposition on `GET /metrics`, and a
+//! `train --trace-out` JSONL stream for offline plotting.
+//!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -80,6 +89,7 @@ pub mod error;
 pub mod eval;
 pub mod exp;
 pub mod linalg;
+pub mod obs;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

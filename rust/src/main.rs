@@ -7,6 +7,7 @@
 //!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
 //!                    [--sparse true]   (convert the stream to the O(nnz) sparse path)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (signed feature hashing to D)
+//!                    [--trace-out trace.jsonl [--trace-every 1000]]  (training-dynamics JSONL)
 //! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
 //!                    [--train-stream data.libsvm]  (background-train from a local file)
@@ -21,8 +22,13 @@
 //! streamsvm fig3     [--dataset mnist89] [--perms 100] [--frac 1.0]
 //! streamsvm bounds   [--n 2001] [--trials 50]
 //! streamsvm gen-data --dataset synthA --out dir/
+//! streamsvm metrics-check --file metrics.txt [--sum pallas_requests_total]
 //! streamsvm artifacts
 //! ```
+//!
+//! Diagnostics go to stderr through the [`streamsvm::obs`] recorder
+//! (`PALLAS_LOG=off|error|warn|info|debug|trace`); primary results stay
+//! on stdout so scripts can keep grepping them.
 
 use std::borrow::Cow;
 use std::io::Write as _;
@@ -39,6 +45,7 @@ use streamsvm::data::Example;
 use streamsvm::error::{Error, Result};
 use streamsvm::eval::accuracy;
 use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
+use streamsvm::obs::trace::{TracedStream, TraceWriter};
 use streamsvm::runtime::Runtime;
 use streamsvm::server::{run_loadgen, serve, LoadgenConfig, ServerConfig};
 use streamsvm::sketch::checkpoint::{resume_fit, resume_lookahead, CheckpointConfig, Checkpointer};
@@ -109,7 +116,7 @@ fn open_runtime_opt(mode: ExecMode) -> Option<Runtime> {
     match Runtime::open_default() {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("warning: {e}; falling back to pure mode");
+            streamsvm::obs_warn!("cli", "{e}; falling back to pure mode");
             None
         }
     }
@@ -148,6 +155,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         train.hash,
         VecStream::of_train(&ds, (perm >= 0).then_some(perm as u64)),
     );
+
+    // --trace-out: stream sampled training-dynamics snapshots as JSONL.
+    // Telemetry feeds the trace, so the gauges/counters are turned on
+    // (and zeroed) for the run.
+    let trace = if args.has("trace-out") {
+        let path = PathBuf::from(args.str("trace-out", "trace.jsonl"));
+        let every: u64 = args.get("trace-every", 1000u64)?;
+        streamsvm::obs::telemetry::reset_all();
+        streamsvm::obs::set_telemetry(true);
+        Some(std::sync::Arc::new(std::sync::Mutex::new(TraceWriter::create(&path, every)?)))
+    } else {
+        if args.has("trace-every") {
+            return Err(Error::config("--trace-every needs --trace-out"));
+        }
+        None
+    };
+    let stream: Box<dyn Iterator<Item = Example> + Send> = match &trace {
+        Some(w) => Box::new(TracedStream::new(stream, w.clone())),
+        None => stream,
+    };
 
     // Validate flags up front so no combination silently ignores them.
     let mode = match args.str("mode", "filter").as_str() {
@@ -220,6 +247,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         model.num_support(),
         accuracy(&model, &test) * 100.0
     );
+    if let Some(w) = trace {
+        let writer = std::sync::Arc::try_unwrap(w)
+            .map_err(|_| Error::Pipeline("trace writer still shared after training".into()))?
+            .into_inner()
+            .unwrap_or_else(|e| e.into_inner());
+        let lines = writer.lines();
+        let path = writer.finish(model.radius(), merges as u64)?;
+        println!("wrote trace {} ({lines} snapshots + final)", path.display());
+    }
     if args.has("out") {
         let out = args.str("out", "model.meb");
         // record the Algorithm-2 merge count so a later `resume` keeps
@@ -277,7 +313,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
     }
     let name = args.str("dataset", if sk.tag.is_empty() { "synthA" } else { sk.tag.as_str() });
     if name != sk.tag && !sk.tag.is_empty() {
-        eprintln!("warning: sketch was trained on `{}`, resuming on `{name}`", sk.tag);
+        streamsvm::obs_warn!("cli", "sketch was trained on `{}`, resuming on `{name}`", sk.tag);
     }
     let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
     let replay = if sk.ball.is_none() {
@@ -417,7 +453,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     let handle = serve(model, cfg)?;
-    println!("serving {name} on http://{}/ (predict, predict_batch, train, snapshot, stats)", handle.addr());
+    println!(
+        "serving {name} on http://{}/ (predict, predict_batch, train, snapshot, stats, metrics, trace)",
+        handle.addr()
+    );
     handle.run_forever()
 }
 
@@ -459,6 +498,7 @@ fn scale_from(args: &Args) -> Result<ExpScale> {
 }
 
 fn main() -> Result<()> {
+    streamsvm::obs::init_cli();
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "train" => cmd_train(&args)?,
@@ -517,6 +557,27 @@ fn main() -> Result<()> {
                 println!("wrote {path} ({} examples)", exs.len());
             }
         }
+        "metrics-check" => {
+            // CI helper: validate a scraped /metrics body against the
+            // strict exposition grammar, or sum one metric family.
+            let path = args.str("file", "metrics.txt");
+            let body = std::fs::read_to_string(&path)?;
+            if args.has("sum") {
+                let metric = args.str("sum", "");
+                match streamsvm::obs::prom::sum_metric(&body, &metric) {
+                    Some(v) => println!("{v}"),
+                    None => {
+                        return Err(Error::config(format!(
+                            "metric `{metric}` not found in {path}"
+                        )))
+                    }
+                }
+            } else {
+                let fams = streamsvm::obs::prom::check_exposition(&body)
+                    .map_err(|e| Error::Pipeline(format!("{path}: {e}")))?;
+                println!("{path}: valid Prometheus exposition ({fams} families)");
+            }
+        }
         "artifacts" => match Runtime::open_default() {
             Ok(rt) => {
                 println!("artifact dir: {}", rt.artifact_dir().display());
@@ -530,7 +591,7 @@ fn main() -> Result<()> {
             println!("streamsvm — one-pass streaming l2-SVM (IJCAI'09 reproduction)");
             println!(
                 "commands: train serve loadgen snapshot resume merge table1 fig2 \
-                 fig3 bounds gen-data artifacts"
+                 fig3 bounds gen-data metrics-check artifacts"
             );
             println!("see README.md for flags (--key value and --key=value)");
         }

@@ -1,0 +1,39 @@
+//! Zero-dependency observability: tracing, training telemetry, exposition.
+//!
+//! The paper's central claims are *dynamic* — polylog work per example, a
+//! radius that grows monotonically and stabilizes, O(N/L) merges — and this
+//! module is how the running system surfaces them, live, without pulling in
+//! a single external crate:
+//!
+//! * [`recorder`] — the lock-cheap global tracing core: leveled structured
+//!   [`Event`]s, monotonic-clock [`Span`]s, a bounded ring buffer of recent
+//!   events for in-process scraping (`GET /trace`), and a stderr sink
+//!   filtered by `PALLAS_LOG=off|error|warn|info|debug|trace`. Every emit
+//!   site is gated by one relaxed atomic load; when nothing listens, the
+//!   format machinery never runs.
+//! * [`telemetry`] — training-dynamics counters/gauges shared by all five
+//!   SVM variants and the sketch layer: per-window violation rate, radius
+//!   `R` and `‖w‖` trajectory, σ re-fold count, lookahead buffer occupancy,
+//!   merge count/duration, kernel core-set size, checkpoint/codec bytes.
+//!   All sit behind a separate single-atomic-load gate ([`telemetry_on`])
+//!   so the streaming hot path stays O(nnz) with telemetry disabled.
+//! * [`prom`] — Prometheus text exposition (format 0.0.4) rendering for
+//!   `GET /metrics`, plus a strict line-grammar checker used by tests and
+//!   the `metrics-check` CLI subcommand.
+//! * [`trace`] — `train --trace-out trace.jsonl`: a sampling JSONL writer
+//!   ([`trace::TraceWriter`]) and a stream adapter ([`trace::TracedStream`])
+//!   that snapshot the telemetry gauges every k examples for offline
+//!   plotting, ending with a `"final"` line carrying the trained radius.
+//!
+//! The fleet/gossip and drift-detection roadmap items consume these same
+//! signals; this module is their substrate.
+
+pub mod prom;
+pub mod recorder;
+pub mod telemetry;
+pub mod trace;
+
+pub use recorder::{
+    configure, emit, enabled, init_cli, recent_events, ring_len, span, Event, Level, Span, Value,
+};
+pub use telemetry::{set_telemetry, telemetry_on};

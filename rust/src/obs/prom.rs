@@ -1,0 +1,505 @@
+//! Prometheus text exposition (format 0.0.4) — rendering and a strict
+//! line-grammar checker.
+//!
+//! [`PromWriter`] renders `# HELP`/`# TYPE` headers and sample lines;
+//! [`render_registry`] dumps every registered telemetry counter/gauge;
+//! [`render_latency_histogram`] maps the coordinator's log₂-bucketed
+//! [`LatencyHistogram`] onto a Prometheus histogram (cumulative `le`
+//! buckets in seconds, `+Inf`, `_sum`, `_count`).
+//!
+//! [`check_exposition`] is the other direction: a hand-rolled validator
+//! for the exact grammar Prometheus scrapes — run over the `/metrics`
+//! body in `serve_http.rs` and by the `metrics-check` CLI subcommand so
+//! CI fails the moment the endpoint emits a malformed line.
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::obs::telemetry;
+
+/// Format an `f64` the way Prometheus expects: `+Inf`/`-Inf`/`NaN`
+/// spelled exactly, integers without a fraction, everything else via
+/// Rust's shortest round-trip `{}`.
+pub fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Format an `f64` as a *JSON* number: non-finite values become `null`
+/// (JSON has no Inf/NaN). Shared by the `/trace` dump and the JSONL
+/// trace writer.
+pub fn fmt_f64_json(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// JSON-escape and quote a string.
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Escape a label *value* per the exposition format (`\\`, `\"`, `\n`).
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental exposition-body builder.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit the `# HELP` + `# TYPE` pair for a metric family. `kind` is
+    /// `counter`, `gauge` or `histogram`.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        // HELP text runs to end of line; strip anything that would fork it.
+        self.out.push_str(&help.replace('\\', "\\\\").replace('\n', "\\n"));
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// Emit one sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_f64(value));
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Render every registered telemetry counter and gauge.
+pub fn render_registry(w: &mut PromWriter) {
+    for c in telemetry::counters() {
+        w.header(c.name, c.help, "counter");
+        w.sample(c.name, &[], c.get() as f64);
+    }
+    for g in telemetry::gauges() {
+        w.header(g.name, g.help, "gauge");
+        w.sample(g.name, &[], g.get());
+    }
+}
+
+/// Render a [`LatencyHistogram`] as a Prometheus histogram in seconds.
+///
+/// Bucket `i` of the source holds samples in `[2^i µs, 2^(i+1) µs)`, so
+/// the cumulative `le` edges are `2^(i+1)` µs converted to seconds; the
+/// mandatory `+Inf` bucket equals `_count`. Empty trailing buckets above
+/// the last non-empty one are elided (the first four edges are always
+/// kept so the family never renders bucket-less).
+pub fn render_latency_histogram(
+    w: &mut PromWriter,
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    h: &LatencyHistogram,
+) {
+    w.header(name, help, "histogram");
+    render_histogram_samples(w, name, labels, h);
+}
+
+/// The sample lines of [`render_latency_histogram`] without the
+/// `# HELP`/`# TYPE` header — for families with several label sets
+/// (e.g. one latency histogram per endpoint), where the header must be
+/// emitted exactly once.
+pub fn render_histogram_samples(
+    w: &mut PromWriter,
+    name: &str,
+    labels: &[(&str, &str)],
+    h: &LatencyHistogram,
+) {
+    let counts = h.bucket_counts();
+    let last = counts.iter().rposition(|&c| c > 0).map_or(3, |i| i.max(3));
+    let mut cum = 0u64;
+    let bucket_name = format!("{name}_bucket");
+    for (i, &c) in counts.iter().enumerate().take(last + 1) {
+        cum += c;
+        let le = fmt_f64(LatencyHistogram::bucket_edge_us(i) as f64 * 1e-6);
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", &le));
+        w.sample(&bucket_name, &ls, cum as f64);
+    }
+    let mut ls: Vec<(&str, &str)> = labels.to_vec();
+    ls.push(("le", "+Inf"));
+    w.sample(&bucket_name, &ls, h.count() as f64);
+    w.sample(&format!("{name}_sum"), labels, h.sum_ns() as f64 * 1e-9);
+    w.sample(&format!("{name}_count"), labels, h.count() as f64);
+}
+
+// ---- the strict grammar checker --------------------------------------
+
+fn is_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn is_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn is_sample_value(s: &str) -> bool {
+    matches!(s, "+Inf" | "-Inf" | "Inf" | "NaN") || s.parse::<f64>().is_ok()
+}
+
+/// Parse `name{l="v",...}` from a sample line; returns
+/// `(name, rest-after-labels)` or an error description.
+fn parse_name_and_labels(line: &str) -> Result<(&str, &str), String> {
+    let name_end = line
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == ':'))
+        .unwrap_or(line.len());
+    let name = &line[..name_end];
+    if !is_metric_name(name) {
+        return Err(format!("invalid metric name {name:?}"));
+    }
+    let rest = &line[name_end..];
+    if !rest.starts_with('{') {
+        return Ok((name, rest));
+    }
+    // label block: l="v" (,l="v")* }
+    let mut chars = rest[1..].char_indices().peekable();
+    loop {
+        // label name
+        let start = match chars.peek() {
+            Some(&(i, _)) => i,
+            None => return Err("unterminated label block".into()),
+        };
+        let mut end = start;
+        while let Some(&(i, c)) = chars.peek() {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                end = i + c.len_utf8();
+                chars.next();
+            } else {
+                break;
+            }
+        }
+        let lname = &rest[1 + start..1 + end];
+        if !is_label_name(lname) {
+            return Err(format!("invalid label name {lname:?}"));
+        }
+        match chars.next() {
+            Some((_, '=')) => {}
+            other => return Err(format!("expected '=' after label {lname:?}, got {other:?}")),
+        }
+        match chars.next() {
+            Some((_, '"')) => {}
+            other => return Err(format!("expected '\"' opening label value, got {other:?}")),
+        }
+        // label value with escapes
+        loop {
+            match chars.next() {
+                None => return Err("unterminated label value".into()),
+                Some((_, '\\')) => match chars.next() {
+                    Some((_, '\\' | '"' | 'n')) => {}
+                    other => return Err(format!("bad escape in label value: {other:?}")),
+                },
+                Some((_, '"')) => break,
+                Some(_) => {}
+            }
+        }
+        match chars.next() {
+            Some((_, ',')) => continue,
+            Some((i, '}')) => {
+                return Ok((name, &rest[1 + i + 1..]));
+            }
+            other => return Err(format!("expected ',' or '}}' after label value, got {other:?}")),
+        }
+    }
+}
+
+/// For histogram children (`x_bucket`, `x_sum`, `x_count`), the declared
+/// family is `x`.
+fn family_of(name: &str) -> &str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            return base;
+        }
+    }
+    name
+}
+
+/// Validate a full `/metrics` body against the text exposition format
+/// (0.0.4), strictly:
+///
+/// * only `# HELP <name> <text>` / `# TYPE <name> <kind>` comments;
+/// * `TYPE` at most once per family, and *before* any of its samples;
+/// * metric/label names match the spec charset; label values use only
+///   the `\\`, `\"`, `\n` escapes;
+/// * sample values parse as Prometheus floats (`+Inf`, `NaN`, ...),
+///   optional integer timestamp;
+/// * no duplicate `(name, labels)` sample line;
+/// * body ends with a newline.
+///
+/// Returns `Ok(families)` — the number of `# TYPE`d families — so
+/// callers can assert non-triviality.
+pub fn check_exposition(body: &str) -> Result<usize, String> {
+    if !body.is_empty() && !body.ends_with('\n') {
+        return Err("body does not end with a newline".into());
+    }
+    let mut typed: Vec<(String, String)> = Vec::new(); // (family, kind)
+    let mut seen_samples: Vec<String> = Vec::new();
+    for (lineno, line) in body.lines().enumerate() {
+        let n = lineno + 1;
+        let fail = |msg: String| Err(format!("line {n}: {msg} — {line:?}"));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let comment = comment.strip_prefix(' ').unwrap_or(comment);
+            if let Some(rest) = comment.strip_prefix("HELP ") {
+                let (name, _help) = match rest.split_once(' ') {
+                    Some(p) => p,
+                    None => (rest, ""),
+                };
+                if !is_metric_name(name) {
+                    return fail(format!("HELP names invalid metric {name:?}"));
+                }
+            } else if let Some(rest) = comment.strip_prefix("TYPE ") {
+                let (name, kind) = match rest.split_once(' ') {
+                    Some(p) => p,
+                    None => return fail("TYPE line missing kind".into()),
+                };
+                if !is_metric_name(name) {
+                    return fail(format!("TYPE names invalid metric {name:?}"));
+                }
+                if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                    return fail(format!("unknown TYPE kind {kind:?}"));
+                }
+                if typed.iter().any(|(f, _)| f == name) {
+                    return fail(format!("duplicate TYPE for family {name:?}"));
+                }
+                typed.push((name.to_string(), kind.to_string()));
+            } else {
+                return fail("only HELP/TYPE comments are allowed".into());
+            }
+            continue;
+        }
+        // sample line
+        let (name, rest) = match parse_name_and_labels(line) {
+            Ok(p) => p,
+            Err(e) => return fail(e),
+        };
+        let rest = rest.trim_start();
+        let mut parts = rest.split_whitespace();
+        let value = match parts.next() {
+            Some(v) => v,
+            None => return fail("sample line missing value".into()),
+        };
+        if !is_sample_value(value) {
+            return fail(format!("invalid sample value {value:?}"));
+        }
+        if let Some(ts) = parts.next() {
+            if ts.parse::<i64>().is_err() {
+                return fail(format!("invalid timestamp {ts:?}"));
+            }
+        }
+        if parts.next().is_some() {
+            return fail("trailing tokens after timestamp".into());
+        }
+        let fam = family_of(name);
+        match typed.iter().find(|(f, _)| f == fam || f == name) {
+            Some(_) => {}
+            None => {
+                return fail(format!("sample for {name:?} before its TYPE declaration"));
+            }
+        }
+        let key = {
+            let end = line.len() - rest.len();
+            line[..end].trim_end().to_string()
+        };
+        if seen_samples.contains(&key) {
+            return fail(format!("duplicate sample {key:?}"));
+        }
+        seen_samples.push(key);
+    }
+    Ok(typed.len())
+}
+
+/// Sum every sample of `metric` (all label sets) in an exposition body.
+/// `None` if the metric never appears. Backs the `metrics-check --sum`
+/// CLI used by the CI smoke to assert counters moved.
+pub fn sum_metric(body: &str, metric: &str) -> Option<f64> {
+    let mut total = 0.0;
+    let mut seen = false;
+    for line in body.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        if let Ok((name, rest)) = parse_name_and_labels(line) {
+            if name == metric {
+                if let Some(v) = rest.split_whitespace().next() {
+                    if let Ok(f) = v.parse::<f64>() {
+                        total += f;
+                        seen = true;
+                    }
+                }
+            }
+        }
+    }
+    seen.then_some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn writer_emits_valid_exposition() {
+        let mut w = PromWriter::new();
+        w.header("pallas_requests_total", "Requests by endpoint.", "counter");
+        w.sample("pallas_requests_total", &[("endpoint", "predict")], 42.0);
+        w.sample("pallas_requests_total", &[("endpoint", "train")], 7.0);
+        w.header("pallas_train_radius", "Radius.", "gauge");
+        w.sample("pallas_train_radius", &[], 1.25);
+        let body = w.finish();
+        assert!(body.contains("pallas_requests_total{endpoint=\"predict\"} 42\n"));
+        assert_eq!(check_exposition(&body), Ok(2));
+        assert_eq!(sum_metric(&body, "pallas_requests_total"), Some(49.0));
+        assert_eq!(sum_metric(&body, "pallas_absent"), None);
+    }
+
+    #[test]
+    fn histogram_rendering_is_cumulative_and_valid() {
+        let mut h = LatencyHistogram::default();
+        for us in [3u64, 3, 5, 100, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        let mut w = PromWriter::new();
+        render_latency_histogram(&mut w, "pallas_latency_seconds", "lat", &[("endpoint", "predict")], &h);
+        let body = w.finish();
+        assert_eq!(check_exposition(&body), Ok(1));
+        // +Inf bucket must equal _count
+        assert!(body.contains("le=\"+Inf\"} 5\n"), "{body}");
+        assert!(body.contains("pallas_latency_seconds_count{endpoint=\"predict\"} 5\n"));
+        // cumulative: [2,4)µs holds 2 samples → le="4e-6"-ish edge carries 2
+        let lines: Vec<&str> = body.lines().filter(|l| l.contains("_bucket")).collect();
+        let mut prev = -1.0;
+        for l in lines {
+            let v: f64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-cumulative bucket line: {l}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn registry_renders_clean() {
+        let mut w = PromWriter::new();
+        render_registry(&mut w);
+        let body = w.finish();
+        let fams = check_exposition(&body).expect("registry body valid");
+        assert!(fams >= 15, "expected the full registry, got {fams} families");
+        assert!(body.contains("pallas_train_radius"));
+        assert!(body.contains("pallas_train_violation_rate"));
+        assert!(body.contains("pallas_train_merges_total"));
+    }
+
+    #[test]
+    fn checker_rejects_malformed_bodies() {
+        // missing trailing newline
+        assert!(check_exposition("# TYPE a counter\na 1").is_err());
+        // sample before TYPE
+        assert!(check_exposition("a 1\n# TYPE a counter\n").is_err());
+        // bad metric name
+        assert!(check_exposition("# TYPE 9a counter\n9a 1\n").is_err());
+        // bad value
+        assert!(check_exposition("# TYPE a counter\na one\n").is_err());
+        // bad label grammar
+        assert!(check_exposition("# TYPE a counter\na{x=\"unterminated} 1\n").is_err());
+        // unknown escape in label value
+        assert!(check_exposition("# TYPE a counter\na{x=\"bad\\t\"} 1\n").is_err());
+        // duplicate sample
+        assert!(check_exposition("# TYPE a counter\na 1\na 2\n").is_err());
+        // duplicate TYPE
+        assert!(check_exposition("# TYPE a counter\n# TYPE a counter\na 1\n").is_err());
+        // free-form comment
+        assert!(check_exposition("# hello\n").is_err());
+        // valid: histogram children under one family, label sets distinct
+        let ok = "# TYPE h histogram\nh_bucket{le=\"0.1\"} 1\nh_bucket{le=\"+Inf\"} 2\nh_sum 0.5\nh_count 2\n";
+        assert_eq!(check_exposition(ok), Ok(1));
+        // valid: timestamps and escapes
+        let ok2 = "# HELP m says \"hi\"\n# TYPE m gauge\nm{p=\"a\\\\b\\\"c\\n\"} -1.5e3 1700000000\n";
+        assert_eq!(check_exposition(ok2), Ok(1));
+        // NaN/Inf values are legal
+        let ok3 = "# TYPE g gauge\ng NaN\ng{k=\"v\"} +Inf\n";
+        assert_eq!(check_exposition(ok3), Ok(1));
+    }
+
+    #[test]
+    fn prom_float_formatting() {
+        assert_eq!(fmt_f64(1.0), "1");
+        assert_eq!(fmt_f64(1.5), "1.5");
+        assert_eq!(fmt_f64(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_f64(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_f64(f64::NAN), "NaN");
+        assert_eq!(fmt_f64_json(f64::NAN), "null");
+        assert_eq!(json_string("a\"b\\c\n"), r#""a\"b\\c\n""#);
+    }
+}

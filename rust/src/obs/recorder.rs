@@ -1,0 +1,561 @@
+//! The global tracing core: leveled structured events, spans, ring buffer.
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Disabled is near-free.** Every `obs_*!` macro expands to a single
+//!    relaxed load of a combined gate byte before any argument is
+//!    evaluated or any string formatted. The streaming hot path calls
+//!    this millions of times per second; the acceptance bar is < 3%
+//!    regression on the sparse bench with the recorder off.
+//! 2. **No dependencies.** `std::sync::atomic` + one `Mutex` around the
+//!    ring buffer (taken only when an event is actually retained).
+//! 3. **Two independent sinks.** stderr (human, filtered by
+//!    `PALLAS_LOG`) and the in-process ring buffer (machine, served by
+//!    `GET /trace`). Either can be off; the gate is the max of the two.
+//!
+//! Timestamps are monotonic microseconds since the first recorder touch
+//! (process-relative, never wall clock — spans must not go backwards).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Severity, ordered: a sink at level `L` accepts events with
+/// `level <= L`. The discriminants are the gate encoding.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// Parse a `PALLAS_LOG` word. `Ok(None)` means "off".
+    pub fn parse(s: &str) -> Result<Option<Level>, ()> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Ok(None),
+            "error" => Ok(Some(Level::Error)),
+            "warn" | "warning" => Ok(Some(Level::Warn)),
+            "info" => Ok(Some(Level::Info)),
+            "debug" => Ok(Some(Level::Debug)),
+            "trace" => Ok(Some(Level::Trace)),
+            _ => Err(()),
+        }
+    }
+}
+
+fn level_from_u8(v: u8) -> Option<Level> {
+    match v {
+        1 => Some(Level::Error),
+        2 => Some(Level::Warn),
+        3 => Some(Level::Info),
+        4 => Some(Level::Debug),
+        5 => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// A structured field value. `From` impls cover the types emit sites use
+/// so `obs_info!("t"; n = 3, p = path_str, "msg")` just works.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    /// Render as a JSON value (for `/trace`).
+    pub fn to_json(&self) -> String {
+        match self {
+            Value::U64(v) => v.to_string(),
+            Value::I64(v) => v.to_string(),
+            Value::F64(v) => crate::obs::prom::fmt_f64_json(*v),
+            Value::Bool(v) => v.to_string(),
+            Value::Str(s) => crate::obs::prom::json_string(s),
+        }
+    }
+
+    /// Render for the stderr `k=v` tail.
+    fn to_display(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            other => other.to_json(),
+        }
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::U64(v)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Self {
+        Value::U64(v as u64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::U64(v as u64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::I64(v)
+    }
+}
+impl From<i32> for Value {
+    fn from(v: i32) -> Self {
+        Value::I64(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Self {
+        Value::F64(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+/// One retained event: what `GET /trace` serves and stderr prints.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotonic µs since recorder start.
+    pub ts_us: u64,
+    pub level: Level,
+    /// Subsystem tag (`"server"`, `"svm"`, `"sketch"`, `"cli"`, ...).
+    pub target: &'static str,
+    pub msg: String,
+    pub fields: Vec<(&'static str, Value)>,
+    /// For span-close events: the span's duration in µs.
+    pub span_us: Option<u64>,
+}
+
+impl Event {
+    /// One JSON object, e.g.
+    /// `{"ts_us":12,"level":"info","target":"server","msg":"up","fields":{"port":80}}`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"ts_us\":");
+        s.push_str(&self.ts_us.to_string());
+        s.push_str(",\"level\":\"");
+        s.push_str(self.level.name());
+        s.push_str("\",\"target\":");
+        s.push_str(&crate::obs::prom::json_string(self.target));
+        s.push_str(",\"msg\":");
+        s.push_str(&crate::obs::prom::json_string(&self.msg));
+        if let Some(us) = self.span_us {
+            s.push_str(",\"span_us\":");
+            s.push_str(&us.to_string());
+        }
+        if !self.fields.is_empty() {
+            s.push_str(",\"fields\":{");
+            for (i, (k, v)) in self.fields.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&crate::obs::prom::json_string(k));
+                s.push(':');
+                s.push_str(&v.to_json());
+            }
+            s.push('}');
+        }
+        s.push('}');
+        s
+    }
+}
+
+// Gate encoding: 0 = everything off, 1..=5 = max accepted level,
+// UNINIT = not yet configured (forces the slow init path once).
+const UNINIT: u8 = 0xff;
+
+/// Combined gate: `max(stderr level, ring level)`. The only atomic the
+/// disabled fast path touches.
+static GATE: AtomicU8 = AtomicU8::new(UNINIT);
+static STDERR_LEVEL: AtomicU8 = AtomicU8::new(0);
+static RING_LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Events retained for `GET /trace`. Oldest are dropped beyond
+/// [`RING_CAP`].
+static RING: Mutex<VecDeque<Event>> = Mutex::new(VecDeque::new());
+
+/// Ring capacity: enough for a useful tail, bounded so a hot trace level
+/// cannot grow memory.
+pub const RING_CAP: usize = 1024;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// µs since the recorder was first touched.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+#[cold]
+fn init_from_env() {
+    // Library/test default: stderr at `warn` (quiet unless something is
+    // wrong), ring at `info` so /trace has content once a server runs.
+    let stderr = match std::env::var("PALLAS_LOG") {
+        Ok(s) => match Level::parse(&s) {
+            Ok(l) => l,
+            Err(()) => {
+                eprintln!("warning: unrecognized PALLAS_LOG={s:?}, using \"warn\"");
+                Some(Level::Warn)
+            }
+        },
+        Err(_) => Some(Level::Warn),
+    };
+    apply(stderr, Some(Level::Info));
+}
+
+fn apply(stderr: Option<Level>, ring: Option<Level>) {
+    let s = stderr.map_or(0, |l| l as u8);
+    let r = ring.map_or(0, |l| l as u8);
+    STDERR_LEVEL.store(s, Ordering::Relaxed);
+    RING_LEVEL.store(r, Ordering::Relaxed);
+    GATE.store(s.max(r), Ordering::Relaxed);
+}
+
+/// Explicitly set both sink levels (`None` = sink off). Tests and the
+/// CLI use this; anything not configured falls back to `PALLAS_LOG` on
+/// first use.
+pub fn configure(stderr: Option<Level>, ring: Option<Level>) {
+    epoch();
+    apply(stderr, ring);
+}
+
+/// CLI entry: like the env default but stderr floors at `info`, so
+/// `streamsvm train`/`serve` narrate progress unless PALLAS_LOG says
+/// otherwise.
+pub fn init_cli() {
+    epoch();
+    let stderr = match std::env::var("PALLAS_LOG") {
+        Ok(s) => match Level::parse(&s) {
+            Ok(l) => l,
+            Err(()) => {
+                eprintln!("warning: unrecognized PALLAS_LOG={s:?}, using \"info\"");
+                Some(Level::Info)
+            }
+        },
+        Err(_) => Some(Level::Info),
+    };
+    apply(stderr, Some(Level::Info));
+}
+
+#[cold]
+fn enabled_slow(level: Level) -> bool {
+    init_from_env();
+    level as u8 <= GATE.load(Ordering::Relaxed)
+}
+
+/// The hot-path gate: one relaxed load (plus a one-time lazy env init).
+/// `false` means no sink wants this level and the caller must skip all
+/// formatting work.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    let g = GATE.load(Ordering::Relaxed);
+    if g == UNINIT {
+        return enabled_slow(level);
+    }
+    level as u8 <= g
+}
+
+/// Deliver an event to whichever sinks accept its level. Call through
+/// the `obs_*!` macros, which pre-check [`enabled`].
+pub fn emit(
+    level: Level,
+    target: &'static str,
+    msg: String,
+    fields: Vec<(&'static str, Value)>,
+    span_us: Option<u64>,
+) {
+    let ev = Event { ts_us: now_us(), level, target, msg, fields, span_us };
+    if level as u8 <= STDERR_LEVEL.load(Ordering::Relaxed) {
+        let mut line = format!(
+            "[{:>9.3}s {:5} {}] {}",
+            ev.ts_us as f64 / 1e6,
+            level.name(),
+            target,
+            ev.msg
+        );
+        for (k, v) in &ev.fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(&v.to_display());
+        }
+        if let Some(us) = ev.span_us {
+            line.push_str(&format!(" span_us={us}"));
+        }
+        eprintln!("{line}");
+    }
+    if level as u8 <= RING_LEVEL.load(Ordering::Relaxed) {
+        let mut ring = RING.lock().unwrap();
+        if ring.len() == RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+}
+
+/// Snapshot the ring buffer, oldest first (what `GET /trace` serves).
+pub fn recent_events() -> Vec<Event> {
+    RING.lock().unwrap().iter().cloned().collect()
+}
+
+/// Current ring occupancy.
+pub fn ring_len() -> usize {
+    RING.lock().unwrap().len()
+}
+
+/// Drop all retained events (tests).
+pub fn clear_ring() {
+    RING.lock().unwrap().clear();
+}
+
+/// A monotonic-clock span: measures from construction to drop, then
+/// emits a `Debug` event carrying `span_us`. Inert (no clock read, no
+/// emission) when `Debug` is not enabled at construction time.
+pub struct Span {
+    start: Option<Instant>,
+    target: &'static str,
+    name: &'static str,
+    fields: Vec<(&'static str, Value)>,
+}
+
+impl Span {
+    /// Attach a structured field to the close event. No-op when the
+    /// span is inert.
+    pub fn field(mut self, k: &'static str, v: impl Into<Value>) -> Self {
+        if self.start.is_some() {
+            self.fields.push((k, v.into()));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let us = start.elapsed().as_micros() as u64;
+            emit(
+                Level::Debug,
+                self.target,
+                self.name.to_string(),
+                std::mem::take(&mut self.fields),
+                Some(us),
+            );
+        }
+    }
+}
+
+/// Open a span (see [`Span`]). Usage: `let _sp = span("svm",
+/// "merge").field("l", len);` — the close event fires when `_sp` drops.
+pub fn span(target: &'static str, name: &'static str) -> Span {
+    let start = if enabled(Level::Debug) { Some(Instant::now()) } else { None };
+    Span { start, target, name, fields: Vec::new() }
+}
+
+/// Current sink levels `(stderr, ring)`, for tests and `/trace` headers.
+pub fn sink_levels() -> (Option<Level>, Option<Level>) {
+    if GATE.load(Ordering::Relaxed) == UNINIT {
+        init_from_env();
+    }
+    (
+        level_from_u8(STDERR_LEVEL.load(Ordering::Relaxed)),
+        level_from_u8(RING_LEVEL.load(Ordering::Relaxed)),
+    )
+}
+
+/// Core leveled-event macro. Two shapes:
+/// `obs_log!(level, "target", "fmt {}", x)` and
+/// `obs_log!(level, "target"; k = v, k2 = v2; "fmt {}", x)`.
+/// Arguments after the gate are not evaluated when the level is off.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:expr, $target:expr; $($k:ident = $v:expr),+ ; $($fmt:tt)+) => {
+        if $crate::obs::enabled($lvl) {
+            $crate::obs::emit(
+                $lvl,
+                $target,
+                ::std::format!($($fmt)+),
+                ::std::vec![$((::std::stringify!($k), $crate::obs::Value::from($v))),+],
+                ::std::option::Option::None,
+            );
+        }
+    };
+    ($lvl:expr, $target:expr, $($fmt:tt)+) => {
+        if $crate::obs::enabled($lvl) {
+            $crate::obs::emit(
+                $lvl,
+                $target,
+                ::std::format!($($fmt)+),
+                ::std::vec::Vec::new(),
+                ::std::option::Option::None,
+            );
+        }
+    };
+}
+
+/// `obs_error!("target", "fmt", ..)` or `obs_error!("target"; k = v; "fmt")`.
+#[macro_export]
+macro_rules! obs_error {
+    ($target:expr; $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Error, $target; $($rest)+) };
+    ($target:expr, $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Error, $target, $($rest)+) };
+}
+
+/// See [`obs_error!`].
+#[macro_export]
+macro_rules! obs_warn {
+    ($target:expr; $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Warn, $target; $($rest)+) };
+    ($target:expr, $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Warn, $target, $($rest)+) };
+}
+
+/// See [`obs_error!`].
+#[macro_export]
+macro_rules! obs_info {
+    ($target:expr; $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Info, $target; $($rest)+) };
+    ($target:expr, $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Info, $target, $($rest)+) };
+}
+
+/// See [`obs_error!`].
+#[macro_export]
+macro_rules! obs_debug {
+    ($target:expr; $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Debug, $target; $($rest)+) };
+    ($target:expr, $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Debug, $target, $($rest)+) };
+}
+
+/// See [`obs_error!`].
+#[macro_export]
+macro_rules! obs_trace {
+    ($target:expr; $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Trace, $target; $($rest)+) };
+    ($target:expr, $($rest:tt)+) => { $crate::obs_log!($crate::obs::Level::Trace, $target, $($rest)+) };
+}
+
+/// Recorder/telemetry state is global; every test that reconfigures it
+/// runs under this lock so parallel test threads cannot interleave.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
+    }
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("warn"), Ok(Some(Level::Warn)));
+        assert_eq!(Level::parse("TRACE"), Ok(Some(Level::Trace)));
+        assert_eq!(Level::parse("off"), Ok(None));
+        assert!(Level::parse("loud").is_err());
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn disabled_recorder_retains_nothing() {
+        let _g = lock();
+        configure(None, None);
+        clear_ring();
+        obs_info!("test", "should vanish {}", 42);
+        obs_error!("test"; n = 7usize; "even errors, with sinks off");
+        assert_eq!(ring_len(), 0);
+        assert!(!enabled(Level::Error));
+        configure(Some(Level::Warn), Some(Level::Info));
+    }
+
+    #[test]
+    fn ring_retains_and_bounds_events() {
+        let _g = lock();
+        configure(None, Some(Level::Info));
+        clear_ring();
+        for i in 0..(RING_CAP + 10) {
+            obs_info!("test"; i = i; "ring fill");
+        }
+        // Debug is above the ring level: not retained.
+        obs_debug!("test", "too detailed");
+        let evs = recent_events();
+        assert_eq!(evs.len(), RING_CAP);
+        // Oldest were dropped: the first retained event is i = 10.
+        assert_eq!(evs[0].fields[0], ("i", Value::U64(10)));
+        assert!(evs.iter().all(|e| e.level == Level::Info));
+        configure(Some(Level::Warn), Some(Level::Info));
+        clear_ring();
+    }
+
+    #[test]
+    fn span_measures_and_carries_fields() {
+        let _g = lock();
+        configure(None, Some(Level::Debug));
+        clear_ring();
+        {
+            let _sp = span("test", "work").field("shard", 3u64);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let evs = recent_events();
+        let ev = evs.iter().find(|e| e.msg == "work").expect("span close event");
+        assert!(ev.span_us.unwrap() >= 1_000, "span_us = {:?}", ev.span_us);
+        assert_eq!(ev.fields[0], ("shard", Value::U64(3)));
+        configure(Some(Level::Warn), Some(Level::Info));
+        clear_ring();
+    }
+
+    #[test]
+    fn event_json_is_parseable() {
+        let ev = Event {
+            ts_us: 12,
+            level: Level::Warn,
+            target: "server",
+            msg: "he said \"hi\"\n".into(),
+            fields: vec![("n", Value::U64(3)), ("r", Value::F64(1.5)), ("p", Value::Str("a/b".into()))],
+            span_us: Some(99),
+        };
+        let j = crate::server::json::Json::parse(&ev.to_json()).expect("valid JSON");
+        assert_eq!(j.get("level").and_then(|v| v.as_str()), Some("warn"));
+        assert_eq!(j.get("span_us").and_then(|v| v.as_f64()), Some(99.0));
+        let f = j.get("fields").unwrap();
+        assert_eq!(f.get("r").and_then(|v| v.as_f64()), Some(1.5));
+    }
+}

@@ -1,0 +1,280 @@
+//! Training-dynamics counters and gauges: the paper-level signals.
+//!
+//! Every SVM variant and the sketch layer report here — violation rate
+//! per window, radius `R` and `‖w‖` trajectory, σ re-fold count,
+//! lookahead buffer occupancy, merge count/duration, kernel core-set
+//! size, checkpoint/codec bytes and durations. `GET /metrics` and
+//! `train --trace-out` both read these statics; nothing else is shared
+//! between the learner and the exposition layer.
+//!
+//! The hot-path contract: instrumented sites check [`telemetry_on`]
+//! (one relaxed `AtomicBool` load) before touching anything else, so a
+//! disabled recorder adds a single predictable branch per example —
+//! the sparse bench must stay within 3% of the uninstrumented build.
+//! Telemetry defaults to *off*; `serve` and `train` switch it on.
+//!
+//! Counters are monotonic `u64`s; gauges are `f64` bit-cast into an
+//! `AtomicU64`. Both are registered by hand in [`counters`]/[`gauges`]
+//! — a conscious trade: no linkme-style distributed registries, the
+//! list *is* the inventory the README documents.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static TELEMETRY: AtomicBool = AtomicBool::new(false);
+
+/// The gate every instrumented hot-path site checks first.
+#[inline]
+pub fn telemetry_on() -> bool {
+    TELEMETRY.load(Ordering::Relaxed)
+}
+
+/// Enable/disable training telemetry process-wide. `serve()` and the
+/// `train` CLI enable it; the library default is off.
+pub fn set_telemetry(on: bool) {
+    TELEMETRY.store(on, Ordering::Relaxed);
+}
+
+/// A monotonic counter with Prometheus metadata.
+pub struct Counter {
+    pub name: &'static str,
+    pub help: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Counter { name, help, v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Tests and `--trace-out` runs reset to get per-run numbers.
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// An `f64` gauge (bits in an `AtomicU64`) with Prometheus metadata.
+pub struct Gauge {
+    pub name: &'static str,
+    pub help: &'static str,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Gauge { name, help, bits: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+// ---- the registry ----------------------------------------------------
+
+/// Examples offered to a learner's observe path.
+pub static EXAMPLES: Counter = Counter::new(
+    "pallas_train_examples_total",
+    "Examples offered to the streaming learner.",
+);
+/// Examples that violated the ball (forced an update / buffered).
+pub static UPDATES: Counter = Counter::new(
+    "pallas_train_updates_total",
+    "Examples outside the ball that forced an update.",
+);
+/// Algorithm-2 lookahead merges performed.
+pub static MERGES: Counter = Counter::new(
+    "pallas_train_merges_total",
+    "Lookahead buffer merges (Badoiu-Clarkson solves).",
+);
+/// Total nanoseconds inside merge solves.
+pub static MERGE_NS: Counter = Counter::new(
+    "pallas_train_merge_ns_total",
+    "Cumulative nanoseconds spent in lookahead merge solves.",
+);
+/// σ re-folds (lazy-scale renormalizations) across all ball states.
+pub static SIGMA_FOLDS: Counter = Counter::new(
+    "pallas_train_sigma_folds_total",
+    "Lazy-scale renormalizations of the ball center (sigma re-folds).",
+);
+/// `.meb` sketch encodes.
+pub static SKETCH_ENCODES: Counter = Counter::new(
+    "pallas_sketch_encodes_total",
+    "MebSketch binary encodes.",
+);
+/// Bytes produced by sketch encodes.
+pub static SKETCH_BYTES: Counter = Counter::new(
+    "pallas_sketch_encoded_bytes_total",
+    "Cumulative bytes produced by MebSketch encodes.",
+);
+/// Nanoseconds spent writing sketches to disk (tmp + rename).
+pub static SKETCH_WRITE_NS: Counter = Counter::new(
+    "pallas_sketch_write_ns_total",
+    "Cumulative nanoseconds writing sketch files (atomic tmp+rename).",
+);
+/// Checkpoint saves performed by the [`crate::sketch::Checkpointer`].
+pub static CHECKPOINT_SAVES: Counter = Counter::new(
+    "pallas_checkpoint_saves_total",
+    "Periodic checkpoint saves.",
+);
+
+/// Current ball radius `R` (max over balls for multiball).
+pub static RADIUS: Gauge = Gauge::new(
+    "pallas_train_radius",
+    "Current enclosing-ball radius R.",
+);
+/// Current `‖w‖` of the (lazily scaled) center.
+pub static WNORM: Gauge = Gauge::new(
+    "pallas_train_wnorm",
+    "Current norm of the ball-center weight vector.",
+);
+/// Violation rate over the last completed window (see [`WINDOW`]).
+pub static VIOLATION_RATE: Gauge = Gauge::new(
+    "pallas_train_violation_rate",
+    "Fraction of examples violating the ball over the last window.",
+);
+/// Lookahead buffer occupancy (Algorithm 2).
+pub static LOOKAHEAD_BUFFERED: Gauge = Gauge::new(
+    "pallas_train_lookahead_buffered",
+    "Examples currently buffered by the lookahead learner.",
+);
+/// Kernel core-set size M.
+pub static CORESET: Gauge = Gauge::new(
+    "pallas_train_coreset_size",
+    "Kernelized core-set size M (support points held).",
+);
+/// Number of balls held by the multiball learner.
+pub static BALLS: Gauge = Gauge::new(
+    "pallas_train_balls",
+    "Balls held by the multiball learner.",
+);
+
+/// Every registered counter, in exposition order.
+pub fn counters() -> [&'static Counter; 9] {
+    [
+        &EXAMPLES,
+        &UPDATES,
+        &MERGES,
+        &MERGE_NS,
+        &SIGMA_FOLDS,
+        &SKETCH_ENCODES,
+        &SKETCH_BYTES,
+        &SKETCH_WRITE_NS,
+        &CHECKPOINT_SAVES,
+    ]
+}
+
+/// Every registered gauge, in exposition order.
+pub fn gauges() -> [&'static Gauge; 6] {
+    [&RADIUS, &WNORM, &VIOLATION_RATE, &LOOKAHEAD_BUFFERED, &CORESET, &BALLS]
+}
+
+/// Zero all registered counters and gauges (per-run baselines for
+/// `--trace-out` and tests).
+pub fn reset_all() {
+    for c in counters() {
+        c.reset();
+    }
+    for g in gauges() {
+        g.reset();
+    }
+    WINDOW_SEEN.store(0, Ordering::Relaxed);
+    WINDOW_VIOL.store(0, Ordering::Relaxed);
+}
+
+// ---- per-window violation rate ---------------------------------------
+
+/// Window length (examples) over which [`VIOLATION_RATE`] is computed.
+pub const WINDOW: u64 = 1024;
+
+static WINDOW_SEEN: AtomicU64 = AtomicU64::new(0);
+static WINDOW_VIOL: AtomicU64 = AtomicU64::new(0);
+
+/// The per-example telemetry tap every variant's observe path calls
+/// (only when [`telemetry_on`]): counts the example, counts the
+/// violation, and folds the violation rate gauge once per [`WINDOW`].
+#[inline]
+pub fn record_example(violated: bool) {
+    EXAMPLES.inc();
+    if violated {
+        UPDATES.inc();
+        WINDOW_VIOL.fetch_add(1, Ordering::Relaxed);
+    }
+    let n = WINDOW_SEEN.fetch_add(1, Ordering::Relaxed) + 1;
+    if n % WINDOW == 0 {
+        let v = WINDOW_VIOL.swap(0, Ordering::Relaxed);
+        VIOLATION_RATE.set(v as f64 / WINDOW as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_work_without_the_recorder() {
+        // Counters are plain atomics: they function (and stay cheap)
+        // regardless of recorder/telemetry gates.
+        let c = Counter::new("pallas_test_total", "test");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new("pallas_test_gauge", "test");
+        g.set(-2.5);
+        assert_eq!(g.get(), -2.5);
+        g.set(f64::INFINITY);
+        assert!(g.get().is_infinite());
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_prefixed() {
+        let mut names: Vec<&str> = counters().iter().map(|c| c.name).collect();
+        names.extend(gauges().iter().map(|g| g.name));
+        for n in &names {
+            assert!(n.starts_with("pallas_"), "{n} lacks the pallas_ prefix");
+        }
+        let total = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric name in registry");
+    }
+
+    #[test]
+    fn window_folds_violation_rate() {
+        let _g = crate::obs::recorder::test_lock();
+        reset_all();
+        // 25% violations over exactly one window.
+        for i in 0..WINDOW {
+            record_example(i % 4 == 0);
+        }
+        assert_eq!(EXAMPLES.get(), WINDOW);
+        assert_eq!(UPDATES.get(), WINDOW / 4);
+        assert!((VIOLATION_RATE.get() - 0.25).abs() < 1e-12);
+        reset_all();
+    }
+}

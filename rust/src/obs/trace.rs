@@ -1,0 +1,182 @@
+//! `train --trace-out`: sampled training-dynamics snapshots as JSONL.
+//!
+//! A [`TraceWriter`] snapshots the global telemetry gauges/counters
+//! every `every` examples and appends one JSON object per line — the
+//! offline-plottable record of the paper's dynamic claims (radius
+//! trajectory, violation-rate decay, merge cadence). [`TracedStream`]
+//! is the iterator adapter that ticks the writer as examples flow by,
+//! so any stream source (file, synthetic, hashed) can be traced without
+//! the training loop knowing.
+//!
+//! The last line is `{"final":true,...}` and carries the trained
+//! model's radius — the acceptance check is that it matches the radius
+//! the in-memory model reports.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::obs::prom::fmt_f64_json;
+use crate::obs::telemetry;
+
+/// Sampling JSONL writer over the global telemetry state.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    /// Snapshot cadence in examples (`>= 1`).
+    every: u64,
+    /// Examples ticked so far.
+    seen: u64,
+    /// Snapshot lines written.
+    lines: u64,
+}
+
+impl TraceWriter {
+    /// Create/truncate `path`; snapshot every `every` examples
+    /// (clamped to ≥ 1).
+    pub fn create(path: &Path, every: u64) -> Result<TraceWriter> {
+        let f = File::create(path).map_err(|e| {
+            Error::Pipeline(format!("cannot create trace file {}: {e}", path.display()))
+        })?;
+        Ok(TraceWriter {
+            out: BufWriter::new(f),
+            path: path.to_path_buf(),
+            every: every.max(1),
+            seen: 0,
+            lines: 0,
+        })
+    }
+
+    /// Count one example; writes a snapshot line at the cadence.
+    pub fn tick(&mut self) {
+        self.seen += 1;
+        if self.seen % self.every == 0 {
+            self.write_snapshot();
+        }
+    }
+
+    /// Append one snapshot line from the live telemetry state.
+    pub fn write_snapshot(&mut self) {
+        let line = format!(
+            concat!(
+                "{{\"example\":{},\"radius\":{},\"wnorm\":{},",
+                "\"violation_rate\":{},\"examples_total\":{},\"updates_total\":{},",
+                "\"merges\":{},\"lookahead_buffered\":{},\"coreset\":{},",
+                "\"sigma_folds\":{},\"sketch_bytes\":{}}}"
+            ),
+            self.seen,
+            fmt_f64_json(telemetry::RADIUS.get()),
+            fmt_f64_json(telemetry::WNORM.get()),
+            fmt_f64_json(telemetry::VIOLATION_RATE.get()),
+            telemetry::EXAMPLES.get(),
+            telemetry::UPDATES.get(),
+            telemetry::MERGES.get(),
+            fmt_f64_json(telemetry::LOOKAHEAD_BUFFERED.get()),
+            fmt_f64_json(telemetry::CORESET.get()),
+            telemetry::SIGMA_FOLDS.get(),
+            telemetry::SKETCH_BYTES.get(),
+        );
+        let _ = writeln!(self.out, "{line}");
+        self.lines += 1;
+    }
+
+    /// Examples ticked so far.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Snapshot lines written so far (excludes the final line).
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// Write the terminal `{"final":true,...}` line carrying the trained
+    /// model's radius and merge count, then flush and close.
+    pub fn finish(mut self, final_radius: f64, merges: u64) -> Result<PathBuf> {
+        let line = format!(
+            "{{\"final\":true,\"example\":{},\"radius\":{},\"merges\":{}}}",
+            self.seen,
+            fmt_f64_json(final_radius),
+            merges,
+        );
+        writeln!(self.out, "{line}")
+            .and_then(|_| self.out.flush())
+            .map_err(|e| {
+                Error::Pipeline(format!("writing trace file {}: {e}", self.path.display()))
+            })?;
+        Ok(self.path)
+    }
+}
+
+/// Iterator adapter: passes items through, ticking a shared
+/// [`TraceWriter`]. The writer is `Arc<Mutex<..>>` so the caller keeps a
+/// handle to `finish()` after the training loop consumed the stream.
+pub struct TracedStream<I> {
+    inner: I,
+    writer: Arc<Mutex<TraceWriter>>,
+}
+
+impl<I> TracedStream<I> {
+    pub fn new(inner: I, writer: Arc<Mutex<TraceWriter>>) -> Self {
+        TracedStream { inner, writer }
+    }
+}
+
+impl<I: Iterator> Iterator for TracedStream<I> {
+    type Item = I::Item;
+
+    fn next(&mut self) -> Option<I::Item> {
+        let item = self.inner.next();
+        if item.is_some() {
+            self.writer.lock().unwrap_or_else(|e| e.into_inner()).tick();
+        }
+        item
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.inner.size_hint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json::Json;
+
+    #[test]
+    fn traced_stream_samples_and_finishes() {
+        let _g = crate::obs::recorder::test_lock();
+        telemetry::reset_all();
+        telemetry::RADIUS.set(1.5);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ssvm_trace_{}.jsonl", std::process::id()));
+        let w = Arc::new(Mutex::new(TraceWriter::create(&path, 10).unwrap()));
+
+        let items: Vec<u32> = (0..35).collect();
+        let seen: Vec<u32> = TracedStream::new(items.into_iter(), w.clone()).collect();
+        assert_eq!(seen.len(), 35);
+
+        let writer = Arc::try_unwrap(w).ok().expect("sole owner").into_inner().unwrap();
+        assert_eq!(writer.seen(), 35);
+        assert_eq!(writer.lines(), 3); // at 10, 20, 30
+        writer.finish(2.25, 4).unwrap();
+
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for l in &lines {
+            Json::parse(l).unwrap_or_else(|e| panic!("unparseable trace line {l:?}: {e}"));
+        }
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("example").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(first.get("radius").and_then(|v| v.as_f64()), Some(1.5));
+        let last = Json::parse(lines[3]).unwrap();
+        assert_eq!(last.get("final").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(last.get("radius").and_then(|v| v.as_f64()), Some(2.25));
+        assert_eq!(last.get("merges").and_then(|v| v.as_f64()), Some(4.0));
+        std::fs::remove_file(&path).ok();
+        telemetry::reset_all();
+    }
+}

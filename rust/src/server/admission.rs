@@ -56,15 +56,19 @@ pub enum Endpoint {
     Train,
     Snapshot,
     Stats,
+    Metrics,
+    Trace,
 }
 
 impl Endpoint {
-    pub const ALL: [Endpoint; 5] = [
+    pub const ALL: [Endpoint; 7] = [
         Endpoint::Predict,
         Endpoint::PredictBatch,
         Endpoint::Train,
         Endpoint::Snapshot,
         Endpoint::Stats,
+        Endpoint::Metrics,
+        Endpoint::Trace,
     ];
 
     pub fn name(self) -> &'static str {
@@ -74,6 +78,8 @@ impl Endpoint {
             Endpoint::Train => "train",
             Endpoint::Snapshot => "snapshot",
             Endpoint::Stats => "stats",
+            Endpoint::Metrics => "metrics",
+            Endpoint::Trace => "trace",
         }
     }
 
@@ -84,6 +90,8 @@ impl Endpoint {
             Endpoint::Train => 2,
             Endpoint::Snapshot => 3,
             Endpoint::Stats => 4,
+            Endpoint::Metrics => 5,
+            Endpoint::Trace => 6,
         }
     }
 }
@@ -148,7 +156,7 @@ impl StreamProgress {
 /// Shared, thread-safe stats registry for the whole server.
 #[derive(Default)]
 pub struct ServerStats {
-    per: [Mutex<EndpointStats>; 5],
+    per: [Mutex<EndpointStats>; 7],
     /// Connections handed to the handler pool.
     pub conns_accepted: AtomicU64,
     /// Connections shed at the acceptor (handler pool + queue full).

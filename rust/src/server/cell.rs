@@ -78,6 +78,10 @@ impl ModelSnapshot {
 pub struct ModelCell {
     slot: RwLock<Arc<ModelSnapshot>>,
     version: AtomicU64,
+    /// Republishes performed after construction (`version - 1` for a
+    /// single-publisher cell; kept separate so `/stats` can report
+    /// swap activity even if versioning semantics ever change).
+    publishes: AtomicU64,
 }
 
 impl ModelCell {
@@ -86,6 +90,7 @@ impl ModelCell {
         ModelCell {
             slot: RwLock::new(Arc::new(ModelSnapshot::build(model, tag, 1))),
             version: AtomicU64::new(1),
+            publishes: AtomicU64::new(0),
         }
     }
 
@@ -114,12 +119,20 @@ impl ModelCell {
             Err(poisoned) => *poisoned.into_inner() = next,
         }
         self.version.store(version, Ordering::Release);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        crate::obs_debug!("server"; version = version, seen = model.examples_seen(), radius = model.radius(); "published model snapshot");
         version
     }
 
     /// The latest published version (monotone, starts at 1).
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
+    }
+
+    /// Hot-swaps performed since construction (the republish count
+    /// behind `/stats` and `pallas_model_publishes_total`).
+    pub fn publishes(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
     }
 }
 
@@ -147,10 +160,12 @@ mod tests {
         assert_eq!(s1.w.len(), 2);
         assert_eq!(s1.seen, 1);
 
+        assert_eq!(cell.publishes(), 0, "construction is not a republish");
         let m2 = toy_model(20);
         let v = cell.publish(&m2, "t");
         assert_eq!(v, 2);
         assert_eq!(cell.version(), 2);
+        assert_eq!(cell.publishes(), 1);
         let s2 = cell.load();
         assert_eq!(s2.version, 2);
         assert_eq!(s2.seen, 20);

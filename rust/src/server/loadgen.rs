@@ -144,6 +144,16 @@ impl LoadClient {
         Json::parse(text)
     }
 
+    /// `GET` any text endpoint (`/metrics`, `/trace`) as a UTF-8 body.
+    pub fn get_text(&mut self, path: &str) -> Result<String> {
+        let resp = self.round_trip("GET", path, b"")?;
+        if !resp.is_2xx() {
+            return Err(Error::Pipeline(format!("{path} returned {}", resp.status)));
+        }
+        String::from_utf8(resp.body)
+            .map_err(|_| Error::Pipeline(format!("{path} body is not UTF-8")))
+    }
+
     /// `GET /snapshot`: the raw `.meb` bytes.
     pub fn snapshot(&mut self) -> Result<Vec<u8>> {
         let resp = self.round_trip("GET", "/snapshot", b"")?;

@@ -16,9 +16,12 @@
 //! * [`admission`] — bounded queues with explicit 429 shedding, plus the
 //!   per-endpoint latency/shed accounting behind `/stats`.
 //! * [`server`] — the listener: `/predict`, `/predict_batch`, `/train`,
-//!   `/snapshot` (live `.meb` bytes), `/stats`; a background training
-//!   thread consumes `/train` examples Algorithm-1 style and republishes
-//!   every k examples via the sketch machinery.
+//!   `/snapshot` (live `.meb` bytes), `/stats`, `/metrics` (Prometheus
+//!   text exposition: request counters, latency histograms, live
+//!   training gauges) and `/trace` (the [`crate::obs`] ring buffer as
+//!   JSON); a background training thread consumes `/train` examples
+//!   Algorithm-1 style and republishes every k examples via the sketch
+//!   machinery.
 //! * [`loadgen`] — the protocol client and a paced open-loop driver
 //!   that emits `BENCH_serve.json` (throughput, p50/p90/p99, shed rate).
 //!

@@ -40,6 +40,7 @@ use crate::coordinator::stream::FileStream;
 use crate::data::hashing::FeatureHasher;
 use crate::data::Features;
 use crate::error::{Error, Result};
+use crate::obs::prom::{render_histogram_samples, PromWriter};
 use crate::svm::HashSpec;
 use crate::server::admission::{bounded, Bounded, Endpoint, ServerStats};
 use crate::server::cell::ModelCell;
@@ -198,6 +199,10 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
     };
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
+    // Serving turns the training-dynamics telemetry on: `/metrics` must
+    // expose live radius/violation-rate gauges while the trainer runs.
+    crate::obs::set_telemetry(true);
+    crate::obs_info!("server"; addr = addr.to_string(), threads = cfg.threads, republish_every = cfg.republish_every; "listening");
     let (train_tx, train_rx) = bounded::<(Features, f32)>(cfg.train_queue.max(1));
     let shared = Arc::new(Shared {
         cell: ModelCell::new(&model, &cfg.tag),
@@ -489,10 +494,19 @@ fn route(sh: &Shared, req: &HttpRequest) -> (u16, &'static str, Vec<u8>, Option<
             Some(Endpoint::Snapshot),
         ),
         ("GET", "/stats") => (200, JSON_CT, stats_json(sh).into_bytes(), Some(Endpoint::Stats)),
+        ("GET", "/metrics") => (
+            200,
+            "text/plain; version=0.0.4",
+            metrics_text(sh).into_bytes(),
+            Some(Endpoint::Metrics),
+        ),
+        ("GET", "/trace") => (200, JSON_CT, trace_json().into_bytes(), Some(Endpoint::Trace)),
         // any other method on a real endpoint is 405, unknown paths 404
-        (_, "/predict" | "/predict_batch" | "/train" | "/snapshot" | "/stats") => {
-            (405, JSON_CT, err_body("method not allowed for this endpoint"), None)
-        }
+        (
+            _,
+            "/predict" | "/predict_batch" | "/train" | "/snapshot" | "/stats" | "/metrics"
+            | "/trace",
+        ) => (405, JSON_CT, err_body("method not allowed for this endpoint"), None),
         _ => (404, JSON_CT, err_body("no such endpoint"), None),
     }
 }
@@ -695,8 +709,10 @@ fn stats_json(sh: &Shared) -> String {
     };
     let mut out = String::with_capacity(1024);
     out.push_str(&format!(
-        r#"{{"version":{},"seen":{},"radius":{},"supports":{},"trained":{},"stream":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
+        r#"{{"version":{},"generation":{},"republishes":{},"seen":{},"radius":{},"supports":{},"trained":{},"stream":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
         snap.version,
+        sh.cell.version(),
+        sh.cell.publishes(),
         snap.seen,
         json::fmt_num(snap.radius),
         snap.supports,
@@ -729,6 +745,125 @@ fn stats_json(sh: &Shared) -> String {
     out
 }
 
+/// The `GET /metrics` body: full Prometheus text exposition — server
+/// request/connection counters, per-endpoint latency histograms mapped
+/// from the log₂-bucket layout, hot-swap bookkeeping, `--train-stream`
+/// progress, and every registered training-dynamics counter/gauge (the
+/// live radius / violation-rate / merge signals). Validated end-to-end
+/// by [`crate::obs::prom::check_exposition`] in `serve_http.rs` and the
+/// CI smoke.
+fn metrics_text(sh: &Shared) -> String {
+    let mut w = PromWriter::new();
+
+    w.header("pallas_uptime_seconds", "Seconds since the server started.", "gauge");
+    w.sample("pallas_uptime_seconds", &[], sh.started.elapsed().as_secs_f64());
+    w.header(
+        "pallas_model_generation",
+        "Version of the currently published model snapshot.",
+        "gauge",
+    );
+    w.sample("pallas_model_generation", &[], sh.cell.version() as f64);
+    w.header(
+        "pallas_model_publishes_total",
+        "Hot-swap republishes since the server started.",
+        "counter",
+    );
+    w.sample("pallas_model_publishes_total", &[], sh.cell.publishes() as f64);
+    w.header(
+        "pallas_trained_examples_total",
+        "Examples absorbed by the background trainer.",
+        "counter",
+    );
+    w.sample("pallas_trained_examples_total", &[], sh.trained.load(Ordering::Relaxed) as f64);
+
+    w.header("pallas_connections_total", "Connections by admission outcome.", "counter");
+    w.sample(
+        "pallas_connections_total",
+        &[("outcome", "accepted")],
+        sh.stats.conns_accepted.load(Ordering::Relaxed) as f64,
+    );
+    w.sample(
+        "pallas_connections_total",
+        &[("outcome", "shed")],
+        sh.stats.conns_shed.load(Ordering::Relaxed) as f64,
+    );
+
+    w.header("pallas_requests_total", "2xx-answered requests by endpoint.", "counter");
+    let snaps: Vec<_> = Endpoint::ALL.iter().map(|&ep| (ep, sh.stats.snapshot(ep))).collect();
+    for (ep, s) in &snaps {
+        w.sample("pallas_requests_total", &[("endpoint", ep.name())], s.ok as f64);
+    }
+    w.header(
+        "pallas_requests_shed_total",
+        "Requests rejected by admission control (429), by endpoint.",
+        "counter",
+    );
+    for (ep, s) in &snaps {
+        w.sample("pallas_requests_shed_total", &[("endpoint", ep.name())], s.shed as f64);
+    }
+    w.header(
+        "pallas_request_errors_total",
+        "Malformed or failed requests (non-429 4xx/5xx), by endpoint.",
+        "counter",
+    );
+    for (ep, s) in &snaps {
+        w.sample("pallas_request_errors_total", &[("endpoint", ep.name())], s.errors as f64);
+    }
+    w.header(
+        "pallas_request_latency_seconds",
+        "Admission-to-response latency of 2xx requests, by endpoint.",
+        "histogram",
+    );
+    for (ep, s) in &snaps {
+        render_histogram_samples(
+            &mut w,
+            "pallas_request_latency_seconds",
+            &[("endpoint", ep.name())],
+            &s.latency,
+        );
+    }
+
+    if sh.stream_configured {
+        w.header(
+            "pallas_stream_rows_total",
+            "Rows absorbed from the --train-stream file.",
+            "counter",
+        );
+        w.sample("pallas_stream_rows_total", &[], sh.stats.stream.rows() as f64);
+        w.header(
+            "pallas_stream_skipped_total",
+            "Stream rows skipped or rejected.",
+            "counter",
+        );
+        w.sample("pallas_stream_skipped_total", &[], sh.stats.stream.skipped_rows() as f64);
+        w.header(
+            "pallas_stream_done",
+            "1 once the --train-stream file is consumed to EOF.",
+            "gauge",
+        );
+        w.sample("pallas_stream_done", &[], if sh.stats.stream.is_done() { 1.0 } else { 0.0 });
+    }
+
+    crate::obs::prom::render_registry(&mut w);
+    w.finish()
+}
+
+/// The `GET /trace` body: the recorder's ring buffer of recent events
+/// as a JSON array, oldest first.
+fn trace_json() -> String {
+    let events = crate::obs::recent_events();
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str("{\"events\":[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&ev.to_json());
+    }
+    out.push_str("]}");
+    out
+}
+
 /// The background trainer: consume admitted examples (and, when
 /// configured, a local `--train-stream` file, strictly interleaved so
 /// neither source starves the other), republish the hot-swap snapshot
@@ -756,7 +891,7 @@ fn trainer_loop(
         match model.try_observe(x.view(), y) {
             Ok(_) => true,
             Err(e) => {
-                eprintln!("warning: trainer rejected an admitted example: {e}");
+                crate::obs_warn!("server", "trainer rejected an admitted example: {e}");
                 false
             }
         }
@@ -850,7 +985,7 @@ fn publish(sh: &Shared, model: &StreamSvm, snapshot: &Option<PathBuf>) {
     sh.cell.publish(model, &sh.tag);
     if let Some(path) = snapshot {
         if let Err(e) = sh.cell.load().sketch.write_to(path) {
-            eprintln!("warning: serving snapshot write failed: {e}");
+            crate::obs_warn!("server", "serving snapshot write failed: {e}");
         }
     }
 }
@@ -1140,6 +1275,81 @@ mod tests {
             eps.get("predict").unwrap().get("ok").unwrap().as_f64(),
             Some(1.0)
         );
+    }
+
+    #[test]
+    fn stats_reports_generation_and_republishes() {
+        let (sh, _rx) = test_shared(4);
+        sh.cell.publish(&toy_model(), "t");
+        sh.cell.publish(&toy_model(), "t");
+        let (status, body) = route_raw(&sh, "GET", "/stats", b"");
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("generation").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("republishes").unwrap().as_f64(), Some(2.0));
+        assert!(v.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn metrics_is_valid_prometheus_exposition() {
+        let (sh, _rx) = test_shared(4);
+        sh.stats.record_ok(Endpoint::Predict, Duration::from_micros(120));
+        sh.stats.record_ok(Endpoint::Predict, Duration::from_micros(480));
+        sh.stats.record_shed(Endpoint::Train);
+        let (status, ctype, body, ep) = {
+            let req = HttpRequest {
+                method: "GET".into(),
+                path: "/metrics".into(),
+                headers: vec![],
+                body: vec![],
+            };
+            route(&sh, &req)
+        };
+        assert_eq!(status, 200);
+        assert!(ctype.starts_with("text/plain"), "{ctype}");
+        assert_eq!(ep, Some(Endpoint::Metrics));
+        let text = String::from_utf8(body).unwrap();
+        let families = crate::obs::prom::check_exposition(&text)
+            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+        assert!(families >= 20, "only {families} families");
+        // request counters present with endpoint labels
+        assert!(text.contains("pallas_requests_total{endpoint=\"predict\"} 2\n"), "{text}");
+        assert!(text.contains("pallas_requests_shed_total{endpoint=\"train\"} 1\n"));
+        // latency histogram buckets from the log₂ layout, +Inf included
+        assert!(text.contains("pallas_request_latency_seconds_bucket{endpoint=\"predict\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("pallas_request_latency_seconds_count{endpoint=\"predict\"} 2\n"));
+        // hot-swap bookkeeping and the training gauges are exposed
+        assert!(text.contains("pallas_model_generation 1\n"));
+        assert!(text.contains("pallas_model_publishes_total 0\n"));
+        assert!(text.contains("pallas_train_radius"));
+        assert!(text.contains("pallas_train_violation_rate"));
+        assert!(text.contains("pallas_train_merges_total"));
+        // no --train-stream → no stream families
+        assert!(!text.contains("pallas_stream_rows_total"));
+    }
+
+    #[test]
+    fn trace_returns_ring_buffer_json() {
+        let _g = crate::obs::recorder::test_lock();
+        crate::obs::configure(None, Some(crate::obs::Level::Info));
+        crate::obs::recorder::clear_ring();
+        let (sh, _rx) = test_shared(4);
+        crate::obs_info!("server"; version = 7u64; "trace test event");
+        let (status, body) = route_raw(&sh, "GET", "/trace", b"");
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let events = v.get("events").unwrap().as_array().unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.get("msg").and_then(|m| m.as_str()) == Some("trace test event"))
+            .expect("emitted event present in /trace");
+        assert_eq!(ev.get("level").and_then(|l| l.as_str()), Some("info"));
+        assert_eq!(
+            ev.get("fields").and_then(|f| f.get("version")).and_then(|x| x.as_f64()),
+            Some(7.0)
+        );
+        crate::obs::configure(Some(crate::obs::Level::Warn), Some(crate::obs::Level::Info));
+        crate::obs::recorder::clear_ring();
     }
 
     #[test]

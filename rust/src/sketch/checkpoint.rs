@@ -86,6 +86,17 @@ impl Checkpointer {
         sk.write_to(&self.cfg.path)?;
         self.last_saved = seen;
         self.saves += 1;
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::CHECKPOINT_SAVES.inc();
+        }
+        crate::obs_info!(
+            "checkpoint";
+            seen = seen,
+            merges = merges,
+            saves = self.saves;
+            "checkpoint saved to {}",
+            self.cfg.path.display()
+        );
         Ok(())
     }
 

@@ -254,6 +254,10 @@ impl MebSketch {
         let sum = fnv1a64(&p);
         out.extend_from_slice(&p);
         out.extend_from_slice(&sum.to_le_bytes());
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::SKETCH_ENCODES.inc();
+            crate::obs::telemetry::SKETCH_BYTES.add(out.len() as u64);
+        }
         out
     }
 
@@ -365,10 +369,22 @@ impl MebSketch {
     /// Write atomically: encode to `<path>.tmp`, then rename over `path`,
     /// so a crash mid-write never leaves a truncated sketch behind.
     pub fn write_to(&self, path: &Path) -> Result<()> {
+        let t0 = std::time::Instant::now();
         let bytes = self.encode();
         let tmp = path.with_extension("meb.tmp");
         std::fs::write(&tmp, &bytes)?;
         std::fs::rename(&tmp, path)?;
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::SKETCH_WRITE_NS.add(t0.elapsed().as_nanos() as u64);
+        }
+        crate::obs_debug!(
+            "sketch";
+            bytes = bytes.len(),
+            seen = self.seen,
+            radius = self.radius();
+            "wrote sketch to {}",
+            path.display()
+        );
         Ok(())
     }
 

@@ -111,6 +111,11 @@ impl BallState {
         self.wnorm2
     }
 
+    /// `‖w‖` from the cached squared norm (telemetry, diagnostics).
+    pub fn wnorm(&self) -> f64 {
+        self.wnorm2.max(0.0).sqrt()
+    }
+
     /// Materialize the weight vector `w = σ·v`.
     pub fn weights(&self) -> Vec<f32> {
         self.v.iter().map(|&vi| (vi as f64 * self.sigma) as f32).collect()
@@ -233,6 +238,9 @@ impl BallState {
                 *vi = (*vi as f64 * self.sigma) as f32;
             }
             self.sigma = 1.0;
+            if crate::obs::telemetry_on() {
+                crate::obs::telemetry::SIGMA_FOLDS.inc();
+            }
         }
         for (x, &c) in xs.iter().zip(coefs) {
             x.axpy_into(&mut self.v, (c / self.sigma) as f32);
@@ -259,6 +267,11 @@ impl BallState {
         }
         self.sigma = 1.0;
         self.wnorm2 = linalg::norm2(&self.v);
+        // Cold path by construction (amortized O(D/updates)), so one
+        // gated counter bump is free relative to the O(D) fold above.
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::SIGMA_FOLDS.inc();
+        }
     }
 
     /// `‖c_a − c_b‖²` of the explicit parts, computed without

@@ -147,6 +147,7 @@ impl EllipsoidSvm {
             self.r = 0.0;
             self.xi2 = self.opts.s2();
             self.m = 1;
+            self.tap_telemetry(true);
             return true;
         }
         let (wx, xn2) = self.metric_dots(x);
@@ -160,6 +161,7 @@ impl EllipsoidSvm {
             return false;
         }
         if d < self.r {
+            self.tap_telemetry(false);
             return false;
         }
         let beta = 0.5 * (1.0 - self.r / d);
@@ -180,7 +182,19 @@ impl EllipsoidSvm {
         if self.adapt {
             self.adapt_axes(x, y);
         }
+        self.tap_telemetry(true);
         true
+    }
+
+    /// Training-dynamics tap: one relaxed load when telemetry is off.
+    /// `‖w‖` is reported in the learner's own (diagonal) metric.
+    #[inline]
+    fn tap_telemetry(&self, updated: bool) {
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::record_example(updated);
+            crate::obs::telemetry::RADIUS.set(self.r);
+            crate::obs::telemetry::WNORM.set(self.wnorm2s.max(0.0).sqrt());
+        }
     }
 
     /// Validated [`Self::observe_view`] for untrusted inputs: rejects

@@ -118,6 +118,7 @@ impl KernelStreamSvm {
             self.feat_norm2 = self.kernel.self_eval_n2(xn2);
             self.svs.push(CorePoint { x: x.to_features(), norm2: xn2 });
             self.alpha.push(y as f64);
+            self.tap_telemetry(true);
             return true;
         }
         let fx = self.f_view(x, xn2);
@@ -133,6 +134,7 @@ impl KernelStreamSvm {
             return false;
         }
         if d < self.r {
+            self.tap_telemetry(false);
             return false;
         }
         let beta = 0.5 * (1.0 - self.r / d);
@@ -148,7 +150,18 @@ impl KernelStreamSvm {
             omb * omb * self.feat_norm2 + 2.0 * omb * beta * y as f64 * fx + beta * beta * kxx;
         self.r += 0.5 * (d - self.r);
         self.xi2 = self.xi2 * omb * omb + beta * beta * self.opts.s2();
+        self.tap_telemetry(true);
         true
+    }
+
+    /// Training-dynamics tap: one relaxed load when telemetry is off.
+    #[inline]
+    fn tap_telemetry(&self, updated: bool) {
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::record_example(updated);
+            crate::obs::telemetry::RADIUS.set(self.r);
+            crate::obs::telemetry::CORESET.set(self.svs.len() as f64);
+        }
     }
 
     /// Validated [`Self::observe_view`] for untrusted inputs: rejects

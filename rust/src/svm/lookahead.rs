@@ -86,6 +86,9 @@ impl LookaheadSvm {
                 return;
             }
             self.ball = Some(BallState::init_view(x, y, &self.opts));
+            if crate::obs::telemetry_on() {
+                crate::obs::telemetry::record_example(true);
+            }
             return;
         };
         let d = ball.distance_view(x, y, &self.opts);
@@ -98,15 +101,28 @@ impl LookaheadSvm {
             return;
         }
         if d < ball.r {
+            if crate::obs::telemetry_on() {
+                crate::obs::telemetry::record_example(false);
+            }
             return; // enclosed: discard
         }
         if self.opts.lookahead == 1 {
             // L = 1 degenerates to the closed-form Algorithm-1 update.
-            ball.try_update_view(x, y, &self.opts);
+            let updated = ball.try_update_view(x, y, &self.opts);
+            if crate::obs::telemetry_on() {
+                crate::obs::telemetry::record_example(updated);
+                crate::obs::telemetry::RADIUS.set(ball.r);
+                crate::obs::telemetry::WNORM.set(ball.wnorm());
+            }
             return;
         }
         self.buf_x.push(x.to_features());
         self.buf_y.push(y);
+        if crate::obs::telemetry_on() {
+            // An escaped (buffered) point is Algorithm 2's violation event.
+            crate::obs::telemetry::record_example(true);
+            crate::obs::telemetry::LOOKAHEAD_BUFFERED.set(self.buf_x.len() as f64);
+        }
         if self.buf_x.len() == self.opts.lookahead {
             self.flush();
         }
@@ -120,7 +136,22 @@ impl LookaheadSvm {
         }
         let ball = self.ball.as_mut().expect("buffer implies an initialized ball");
         let views: Vec<FeaturesView> = self.buf_x.iter().map(|f| f.view()).collect();
+        let telemetry = crate::obs::telemetry_on();
+        let t0 = if telemetry { Some(std::time::Instant::now()) } else { None };
         solve_merge_into(ball, &views, &self.buf_y, &self.opts);
+        if let Some(t0) = t0 {
+            crate::obs::telemetry::MERGES.inc();
+            crate::obs::telemetry::MERGE_NS.add(t0.elapsed().as_nanos() as u64);
+            crate::obs::telemetry::LOOKAHEAD_BUFFERED.set(0.0);
+            crate::obs::telemetry::RADIUS.set(ball.r);
+            crate::obs::telemetry::WNORM.set(ball.wnorm());
+            crate::obs_trace!(
+                "svm";
+                buffered = self.buf_x.len(),
+                radius = ball.r;
+                "merged lookahead buffer"
+            );
+        }
         self.buf_x.clear();
         self.buf_y.clear();
         self.merges += 1;

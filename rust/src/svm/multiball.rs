@@ -126,6 +126,7 @@ impl MultiBallSvm {
                 continue;
             }
             if d < b.r {
+                self.tap_telemetry(false);
                 return; // discard
             }
             let gap = d - b.r;
@@ -142,7 +143,8 @@ impl MultiBallSvm {
         }
         match self.policy {
             MergePolicy::NearestBall if !self.balls.is_empty() => {
-                self.balls[nearest].try_update_view(x, y, &self.opts);
+                let updated = self.balls[nearest].try_update_view(x, y, &self.opts);
+                self.tap_telemetry(updated);
             }
             _ => {
                 if !x.is_finite() {
@@ -155,7 +157,20 @@ impl MultiBallSvm {
                 while self.balls.len() > self.max_balls {
                     self.collapse_closest_pair();
                 }
+                self.tap_telemetry(true);
             }
+        }
+    }
+
+    /// Training-dynamics tap: one relaxed load when telemetry is off.
+    /// Reports the ball count and the largest live radius.
+    #[inline]
+    fn tap_telemetry(&self, updated: bool) {
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::record_example(updated);
+            crate::obs::telemetry::BALLS.set(self.balls.len() as f64);
+            let max_r = self.balls.iter().map(|b| b.r).fold(0.0f64, f64::max);
+            crate::obs::telemetry::RADIUS.set(max_r);
         }
     }
 
@@ -189,6 +204,9 @@ impl MultiBallSvm {
         let b = self.balls.swap_remove(bj);
         let a = std::mem::replace(&mut self.balls[bi], BallState::zero(self.dim, &self.opts));
         self.balls[bi] = merge_two(&a, &b);
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::MERGES.inc();
+        }
     }
 
     /// Final single ball (merging all survivors); cached.

@@ -36,13 +36,21 @@ impl StreamSvm {
     pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
         debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
-        match &mut self.ball {
+        let updated = match &mut self.ball {
             None => {
                 self.ball = Some(BallState::init_view(x, y, &self.opts));
                 true
             }
             Some(b) => b.try_update_view(x, y, &self.opts),
+        };
+        if crate::obs::telemetry_on() {
+            crate::obs::telemetry::record_example(updated);
+            if let Some(b) = &self.ball {
+                crate::obs::telemetry::RADIUS.set(b.r);
+                crate::obs::telemetry::WNORM.set(b.wnorm());
+            }
         }
+        updated
     }
 
     /// Validated [`Self::observe_view`] for untrusted inputs (library

@@ -436,6 +436,69 @@ fn predict_batch_mixes_dense_and_sparse_rows_over_the_wire() {
 }
 
 #[test]
+fn metrics_and_trace_are_served_over_tcp() {
+    let cfg = ServerConfig {
+        threads: 2,
+        conn_queue: 8,
+        train_queue: 64,
+        republish_every: 4,
+        read_timeout: Duration::from_secs(2),
+        tag: "obs".into(),
+        ..Default::default()
+    };
+    let handle = serve(trained_model(), cfg).unwrap();
+    let mut client = LoadClient::connect(handle.addr(), Duration::from_secs(2)).unwrap();
+
+    // traffic burst: predicts + a few absorbed trains
+    let exs = toy(50, 5);
+    for e in &exs {
+        assert_eq!(client.predict_features(&e.x).unwrap().status, 200);
+    }
+    for e in &exs[..10] {
+        let o = client.train_features(&e.x, e.y).unwrap();
+        assert!(o.status == 202 || o.status == 429, "train status {}", o.status);
+    }
+
+    // scrape /metrics: strict grammar + request counters reflect traffic
+    let before = client.get_text("/metrics").unwrap();
+    let fams = streamsvm::obs::prom::check_exposition(&before)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{before}"));
+    assert!(fams >= 20, "only {fams} metric families");
+    let req_before =
+        streamsvm::obs::prom::sum_metric(&before, "pallas_requests_total").unwrap();
+    assert!(req_before >= 50.0, "requests_total = {req_before}");
+
+    // a second burst strictly increases the counter
+    for e in &exs {
+        assert_eq!(client.predict_features(&e.x).unwrap().status, 200);
+    }
+    let after = client.get_text("/metrics").unwrap();
+    streamsvm::obs::prom::check_exposition(&after)
+        .unwrap_or_else(|e| panic!("invalid exposition after burst: {e}"));
+    let req_after = streamsvm::obs::prom::sum_metric(&after, "pallas_requests_total").unwrap();
+    assert!(
+        req_after >= req_before + 50.0,
+        "requests_total {req_before} -> {req_after}"
+    );
+
+    // live training gauges and latency buckets are exposed
+    assert!(after.contains("pallas_train_radius"), "missing training gauge");
+    assert!(
+        after.contains("pallas_request_latency_seconds_bucket"),
+        "missing latency histogram"
+    );
+    assert!(after.contains("pallas_model_generation"), "missing generation gauge");
+
+    // /trace serves the ring buffer as parseable JSON
+    let trace = client.get_text("/trace").unwrap();
+    let j = Json::parse(&trace).unwrap_or_else(|e| panic!("unparseable /trace: {e}"));
+    assert!(j.get("events").and_then(|v| v.as_array()).is_some(), "no events array");
+
+    drop(client);
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn sparse_payloads_round_trip_over_the_wire() {
     let cfg = ServerConfig {
         threads: 2,
