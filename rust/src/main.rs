@@ -8,10 +8,12 @@
 //!                    [--sparse true]   (convert the stream to the O(nnz) sparse path)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (signed feature hashing to D)
 //!                    [--trace-out trace.jsonl [--trace-every 1000]]  (training-dynamics JSONL)
+//!                    [--profile-out profile.json]  (Chrome trace for Perfetto / chrome://tracing)
 //! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
 //!                    [--train-stream data.libsvm]  (background-train from a local file)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (hash wire payloads on ingest)
+//!                    [--trace-slow-us 10000]  (tail-sample slower requests into /debug/trace)
 //! streamsvm loadgen  --addr 127.0.0.1:7878 [--dataset mnist01] [--qps 500] [--requests 2000]
 //!                    [--threads 4] [--train-share 0.1] [--out BENCH_serve.json]
 //! streamsvm snapshot --dataset synthA [--at 5000] --out model.meb
@@ -23,6 +25,13 @@
 //! streamsvm bounds   [--n 2001] [--trials 50]
 //! streamsvm gen-data --dataset synthA --out dir/
 //! streamsvm metrics-check --file metrics.txt [--sum pallas_requests_total]
+//! streamsvm profile  [--rows 20000] [--dim 16384] [--nnz 16] [--hash-dim 4096] [--seed 42]
+//!                    [--lookahead 32] [--out BENCH_obs.json] [--prom-out bench_obs.prom]
+//!                    [--profile-out profile.json]  (Chrome trace for Perfetto)
+//!                    [--baseline benches/baselines/BENCH_obs.json
+//!                     [--warn-frac 0.5] [--fail-frac 0.8]]
+//! streamsvm bench-diff --file BENCH_x.json --baseline benches/baselines/BENCH_x.json
+//!                    --keys rows_per_s,variants.streamsvm [--warn-frac 0.5] [--fail-frac 0.8]
 //! streamsvm artifacts
 //! ```
 //!
@@ -176,6 +185,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => stream,
     };
 
+    // --profile-out: record the run as a span tree and export it as
+    // Chrome trace JSON on completion (load it at https://ui.perfetto.dev
+    // or chrome://tracing). Worker threads attach through the profile
+    // fallback, so pipeline/shard spans land on their own tracks.
+    let profile_out = args
+        .has("profile-out")
+        .then(|| args.str("profile-out", "profile.json"));
+    let profile_t0_us = streamsvm::obs::recorder::now_us();
+    let ptrace = profile_out.as_ref().map(|_| {
+        streamsvm::obs::set_tracing(true);
+        let t = streamsvm::obs::span_tree::Trace::start(
+            streamsvm::obs::span_tree::gen_trace_id(),
+            streamsvm::obs::span_tree::PROFILE_SPAN_CAP,
+        );
+        streamsvm::obs::span_tree::set_profile_trace(Some(&t));
+        t
+    });
+
     // Validate flags up front so no combination silently ignores them.
     let mode = match args.str("mode", "filter").as_str() {
         "filter" => ExecMode::Filter,
@@ -199,6 +226,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     // ---- sharded path: S parallel one-pass learners, merge-and-reduce
+    let fit_span = streamsvm::obs::span("cli", "fit");
     let (model, merges) = if shards > 1 {
         let rep = train_sharded(stream, dim, shards, train, args.get("queue", 64usize)?)?;
         let max_r = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
@@ -240,6 +268,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         let merges = report.metrics.merges;
         (report.model, merges)
     };
+    drop(fit_span);
+    let eval_span = streamsvm::obs::span("cli", "eval");
     let test = eval_split(train.hash, &ds.test);
     println!(
         "model: R={:.4} supports={} | test acc = {:.2}%",
@@ -247,6 +277,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         model.num_support(),
         accuracy(&model, &test) * 100.0
     );
+    drop(eval_span);
     if let Some(w) = trace {
         let writer = std::sync::Arc::try_unwrap(w)
             .map_err(|_| Error::Pipeline("trace writer still shared after training".into()))?
@@ -263,6 +294,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         let sk = MebSketch::from_model(&model, &name).with_merges(merges);
         sk.write_to(Path::new(&out))?;
         println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
+    }
+    if let (Some(path), Some(t)) = (profile_out, ptrace) {
+        streamsvm::obs::span_tree::set_profile_trace(None);
+        streamsvm::obs::set_tracing(false);
+        let now = streamsvm::obs::recorder::now_us();
+        t.finish_root("cli", "train", profile_t0_us, now.saturating_sub(profile_t0_us), vec![]);
+        streamsvm::obs::chrome_trace::write_file(&t, &path)?;
+        println!("wrote {path} (Chrome trace; load at https://ui.perfetto.dev)");
     }
     Ok(())
 }
@@ -444,6 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         train_stream: args
             .has("train-stream")
             .then(|| PathBuf::from(args.str("train-stream", "train.libsvm"))),
+        trace_slow_us: args.get("trace-slow-us", 10_000u64)?,
         ..Default::default()
     };
     if let Some(p) = &cfg.train_stream {
@@ -489,6 +529,138 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Dot-path keys gated by `profile --baseline` (all higher-is-better).
+const PROFILE_GATE_KEYS: [&str; 6] = [
+    "rows_per_s",
+    "variants.streamsvm",
+    "variants.lookahead",
+    "variants.kernelized",
+    "variants.ellipsoid",
+    "variants.multiball",
+];
+
+/// Shared gate driver for `profile --baseline` and `bench-diff`:
+/// regressions inside the warn band print warnings and exit 0; past the
+/// fail band the command errors, which is what fails the CI job.
+fn gate_and_report(current: &str, baseline: &str, keys: &[&str], args: &Args) -> Result<()> {
+    use streamsvm::obs::profiler::{gate_against, Gate};
+    let warn_frac: f64 = args.get("warn-frac", 0.5)?;
+    let fail_frac: f64 = args.get("fail-frac", 0.8)?;
+    match gate_against(current, baseline, keys, warn_frac, fail_frac).map_err(Error::Pipeline)? {
+        Gate::Ok => {
+            println!(
+                "baseline gate: ok ({} keys within {:.0}% of baseline)",
+                keys.len(),
+                warn_frac * 100.0
+            );
+        }
+        Gate::Warn(w) => {
+            for (k, cur, base) in &w {
+                streamsvm::obs_warn!("cli", "{k} regressed: {cur:.1} vs baseline {base:.1}");
+            }
+            println!("baseline gate: WARN on {} key(s) (inside the fail tolerance)", w.len());
+        }
+        Gate::Fail(f) => {
+            for (k, cur, base) in &f {
+                eprintln!(
+                    "FAIL {k}: {cur:.1} vs baseline {base:.1} (> {:.0}% regression)",
+                    fail_frac * 100.0
+                );
+            }
+            return Err(Error::Pipeline(format!(
+                "{} key(s) regressed past the fail tolerance",
+                f.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run the standardized self-profiling workload, write `BENCH_obs.json`
+/// (plus optional Prometheus exposition and Chrome trace), and gate the
+/// numbers against a committed baseline when one is given.
+fn cmd_profile(args: &Args) -> Result<()> {
+    use streamsvm::obs::profiler::{self, ProfileConfig};
+    let d = ProfileConfig::default();
+    let cfg = ProfileConfig {
+        rows: args.get("rows", d.rows)?,
+        dim: args.get("dim", d.dim)?,
+        nnz: args.get("nnz", d.nnz)?,
+        hash_dim: args.get("hash-dim", d.hash_dim)?,
+        seed: args.get("seed", d.seed)?,
+        lookahead: args.get("lookahead", d.lookahead)?,
+        republish_every: d.republish_every,
+    };
+    // The whole run records as a span tree so --profile-out renders the
+    // same timeline the phase table summarizes.
+    streamsvm::obs::set_tracing(true);
+    let t0_us = streamsvm::obs::recorder::now_us();
+    let trace = streamsvm::obs::span_tree::Trace::start(
+        streamsvm::obs::span_tree::gen_trace_id(),
+        streamsvm::obs::span_tree::PROFILE_SPAN_CAP,
+    );
+    streamsvm::obs::span_tree::set_profile_trace(Some(&trace));
+    let report = profiler::run_profile(&cfg);
+    streamsvm::obs::span_tree::set_profile_trace(None);
+    streamsvm::obs::set_tracing(false);
+    let now = streamsvm::obs::recorder::now_us();
+    trace.finish_root("profile", "run", t0_us, now.saturating_sub(t0_us), vec![]);
+
+    let total_s = report.total.as_secs_f64();
+    println!(
+        "profile: {} rows in {total_s:.3}s ({:.0} rows/s; phases cover {:.1}% of wall)",
+        cfg.rows,
+        report.rows_per_s,
+        100.0 * report.phases.sum().as_secs_f64() / total_s.max(1e-9)
+    );
+    for name in profiler::PHASES {
+        println!("  phase   {name:<10} {:>9.4}s", report.phases.get(name).as_secs_f64());
+    }
+    for &(name, rps) in &report.variants {
+        println!("  variant {name:<10} {rps:>9.0} rows/s");
+    }
+    let out = args.str("out", "BENCH_obs.json");
+    std::fs::write(&out, report.to_json())?;
+    println!("wrote {out}");
+    if args.has("prom-out") {
+        let p = args.str("prom-out", "bench_obs.prom");
+        std::fs::write(&p, report.to_prom())?;
+        println!("wrote {p}");
+    }
+    if args.has("profile-out") {
+        let p = args.str("profile-out", "profile.json");
+        streamsvm::obs::chrome_trace::write_file(&trace, &p)?;
+        println!("wrote {p} (Chrome trace; load at https://ui.perfetto.dev)");
+    }
+    if args.has("baseline") {
+        let path = args.str("baseline", "benches/baselines/BENCH_obs.json");
+        let baseline = std::fs::read_to_string(&path)?;
+        println!("gating against {path}");
+        gate_and_report(&report.to_json(), &baseline, &PROFILE_GATE_KEYS, args)?;
+    }
+    Ok(())
+}
+
+/// Compare a freshly produced benchmark JSON against its committed
+/// baseline with the same warn-then-fail tolerance the profile gate
+/// uses. `--keys` are comma-separated dot-paths present in both files.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let file = args.str("file", "BENCH_obs.json");
+    let baseline = args.str("baseline", "");
+    if baseline.is_empty() {
+        return Err(Error::config("bench-diff needs --baseline <committed json>"));
+    }
+    let keys_arg = args.str("keys", "");
+    if keys_arg.is_empty() {
+        return Err(Error::config("bench-diff needs --keys k1,k2,... (dot-paths)"));
+    }
+    let current = std::fs::read_to_string(&file)?;
+    let base = std::fs::read_to_string(&baseline)?;
+    let keys: Vec<&str> = keys_arg.split(',').filter(|k| !k.is_empty()).collect();
+    println!("bench-diff: {file} vs {baseline} ({} key(s))", keys.len());
+    gate_and_report(&current, &base, &keys, args)
+}
+
 fn scale_from(args: &Args) -> Result<ExpScale> {
     Ok(ExpScale {
         train_frac: args.get("frac", 1.0)?,
@@ -507,6 +679,8 @@ fn main() -> Result<()> {
         "snapshot" => cmd_snapshot(&args)?,
         "resume" => cmd_resume(&args)?,
         "merge" => cmd_merge(&args)?,
+        "profile" => cmd_profile(&args)?,
+        "bench-diff" => cmd_bench_diff(&args)?,
         "table1" => {
             let rows = table1::run(&scale_from(&args)?)?;
             table1::print(&rows);
@@ -591,7 +765,7 @@ fn main() -> Result<()> {
             println!("streamsvm — one-pass streaming l2-SVM (IJCAI'09 reproduction)");
             println!(
                 "commands: train serve loadgen snapshot resume merge table1 fig2 \
-                 fig3 bounds gen-data metrics-check artifacts"
+                 fig3 bounds gen-data metrics-check profile bench-diff artifacts"
             );
             println!("see README.md for flags (--key value and --key=value)");
         }

@@ -1,0 +1,241 @@
+//! Chrome-trace-event JSON export for span trees.
+//!
+//! Renders a [`span_tree`](crate::obs::span_tree) trace as the Trace
+//! Event Format consumed by Perfetto (<https://ui.perfetto.dev>) and
+//! `chrome://tracing`: a `{"traceEvents":[...]}` object of complete
+//! (`"ph":"X"`) events with microsecond `ts`/`dur`, one track per
+//! recorded thread index.
+//!
+//! Span timestamps are truncated to whole microseconds independently
+//! at open and close, so a child's recorded interval can overhang its
+//! parent's by a microsecond or two. The exporter clamps every span
+//! into its parent's interval (walking the recorded parent links), so
+//! the emitted timeline is properly nested by construction —
+//! [`check_chrome_trace`] verifies exactly that property and is what
+//! the test suite runs against every export.
+
+use std::collections::HashMap;
+
+use super::span_tree::{SpanRecord, Trace};
+
+/// Render spans as a Chrome trace JSON document. `pid` is arbitrary
+/// (the viewer groups tracks under it); we use 1.
+pub fn render_spans(spans: &[SpanRecord]) -> String {
+    // Clamp children into their parents so µs truncation cannot make a
+    // child overhang. Memoized walk over the parent links.
+    let by_id: HashMap<u64, &SpanRecord> = spans.iter().map(|s| (s.id, s)).collect();
+    let mut bounds: HashMap<u64, (u64, u64)> = HashMap::new();
+    fn clamped(
+        id: u64,
+        by_id: &HashMap<u64, &SpanRecord>,
+        bounds: &mut HashMap<u64, (u64, u64)>,
+        depth: usize,
+    ) -> Option<(u64, u64)> {
+        if let Some(&b) = bounds.get(&id) {
+            return Some(b);
+        }
+        // Parent links are acyclic by construction (ids are allocated
+        // monotonically and parents precede children), but a depth
+        // fuse keeps a corrupted buffer from recursing forever.
+        if depth > 256 {
+            return None;
+        }
+        let s = by_id.get(&id)?;
+        let (mut lo, mut hi) = (s.start_us, s.start_us.saturating_add(s.dur_us));
+        if let Some((plo, phi)) = clamped(s.parent, by_id, bounds, depth + 1) {
+            lo = lo.clamp(plo, phi);
+            hi = hi.clamp(lo, phi);
+        }
+        bounds.insert(id, (lo, hi));
+        Some((lo, hi))
+    }
+
+    let mut out = String::with_capacity(128 + spans.len() * 128);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    for s in spans {
+        let Some((lo, hi)) = clamped(s.id, &by_id, &mut bounds, 0) else {
+            continue;
+        };
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str("{\"name\":");
+        out.push_str(&crate::obs::prom::json_string(s.name));
+        out.push_str(",\"cat\":");
+        out.push_str(&crate::obs::prom::json_string(s.target));
+        out.push_str(",\"ph\":\"X\",\"ts\":");
+        out.push_str(&lo.to_string());
+        out.push_str(",\"dur\":");
+        out.push_str(&(hi - lo).to_string());
+        out.push_str(",\"pid\":1,\"tid\":");
+        out.push_str(&s.thread.to_string());
+        out.push_str(",\"args\":{\"id\":");
+        out.push_str(&s.id.to_string());
+        out.push_str(",\"parent\":");
+        out.push_str(&s.parent.to_string());
+        for (k, v) in &s.fields {
+            out.push(',');
+            out.push_str(&crate::obs::prom::json_string(k));
+            out.push(':');
+            out.push_str(&v.to_json());
+        }
+        out.push_str("}}");
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Render a whole trace (root + children).
+pub fn render(trace: &Trace) -> String {
+    let (spans, dropped) = trace.shared().snapshot();
+    if dropped > 0 {
+        crate::obs_warn!("obs"; dropped = dropped; "chrome trace export is incomplete");
+    }
+    render_spans(&spans)
+}
+
+/// Validate a Chrome trace JSON document: the shape the viewers need,
+/// plus the per-track nesting invariant (any two complete events on
+/// one `(pid, tid)` track are either disjoint or one contains the
+/// other). Returns the event count.
+pub fn check_chrome_trace(json: &str) -> Result<usize, String> {
+    let doc = crate::server::json::Json::parse(json).map_err(|e| format!("bad JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .ok_or("missing traceEvents array")?;
+    // (pid, tid) -> [(ts, end)]
+    let mut tracks: HashMap<(u64, u64), Vec<(u64, u64)>> = HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        if ev.get("name").and_then(|v| v.as_str()).is_none() {
+            return Err(format!("event {i}: missing name"));
+        }
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        if ph != "X" {
+            return Err(format!("event {i}: unsupported ph {ph:?}"));
+        }
+        let num = |k: &str| {
+            ev.get(k)
+                .and_then(|v| v.as_f64())
+                .filter(|v| v.is_finite() && *v >= 0.0)
+                .map(|v| v as u64)
+        };
+        let ts = num("ts").ok_or_else(|| format!("event {i}: bad ts"))?;
+        let dur = num("dur").ok_or_else(|| format!("event {i}: bad dur"))?;
+        let pid = num("pid").ok_or_else(|| format!("event {i}: bad pid"))?;
+        let tid = num("tid").ok_or_else(|| format!("event {i}: bad tid"))?;
+        tracks.entry((pid, tid)).or_default().push((ts, ts + dur));
+    }
+    for ((pid, tid), mut ivals) in tracks {
+        // Sort by start, longest first on ties, then sweep a stack of
+        // open intervals: each new interval must nest inside (or fall
+        // after) everything still open.
+        ivals.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut open: Vec<u64> = Vec::new();
+        for (ts, end) in ivals {
+            while matches!(open.last(), Some(&e) if e <= ts) {
+                open.pop();
+            }
+            if let Some(&e) = open.last() {
+                if end > e {
+                    return Err(format!(
+                        "track pid={pid} tid={tid}: event [{ts},{end}) overlaps [..,{e}) \
+                         without nesting"
+                    ));
+                }
+            }
+            open.push(end);
+        }
+    }
+    Ok(events.len())
+}
+
+/// Render and write a trace to `path`.
+pub fn write_file(trace: &Trace, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, render(trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::Value;
+    use crate::obs::span_tree::{self, gen_trace_id};
+
+    fn rec(id: u64, parent: u64, start: u64, dur: u64, thread: u64) -> SpanRecord {
+        SpanRecord {
+            id,
+            parent,
+            target: "test",
+            name: "s",
+            start_us: start,
+            dur_us: dur,
+            thread,
+            fields: vec![],
+        }
+    }
+
+    #[test]
+    fn export_is_valid_and_nested() {
+        let spans = vec![
+            rec(1, 0, 0, 100, 1),
+            rec(2, 1, 10, 30, 1),
+            rec(3, 2, 15, 10, 1),
+            rec(4, 1, 50, 40, 1),
+            rec(5, 0, 20, 60, 2),
+        ];
+        let json = render_spans(&spans);
+        assert_eq!(check_chrome_trace(&json).expect("valid"), 5);
+    }
+
+    #[test]
+    fn truncation_overhang_is_clamped_into_the_parent() {
+        // Child recorded as [95, 105) under a parent ending at 100 —
+        // the µs-truncation overhang the exporter must clamp away.
+        let spans = vec![rec(1, 0, 0, 100, 1), rec(2, 1, 95, 10, 1)];
+        let json = render_spans(&spans);
+        assert_eq!(check_chrome_trace(&json).expect("clamped"), 2);
+        assert!(json.contains("\"ts\":95,\"dur\":5"), "clamped child in {json}");
+    }
+
+    #[test]
+    fn checker_rejects_overlap_and_garbage() {
+        // Two same-track events that overlap without nesting.
+        let bad = r#"{"traceEvents":[
+            {"name":"a","ph":"X","ts":0,"dur":50,"pid":1,"tid":1},
+            {"name":"b","ph":"X","ts":25,"dur":50,"pid":1,"tid":1}]}"#;
+        assert!(check_chrome_trace(bad).is_err());
+        // Same shape on different tracks is fine.
+        let ok = r#"{"traceEvents":[
+            {"name":"a","ph":"X","ts":0,"dur":50,"pid":1,"tid":1},
+            {"name":"b","ph":"X","ts":25,"dur":50,"pid":1,"tid":2}]}"#;
+        assert_eq!(check_chrome_trace(ok).unwrap(), 2);
+        assert!(check_chrome_trace("not json").is_err());
+        assert!(check_chrome_trace("{\"traceEvents\":3}").is_err());
+        let no_ts = r#"{"traceEvents":[{"name":"a","ph":"X","dur":1,"pid":1,"tid":1}]}"#;
+        assert!(check_chrome_trace(no_ts).is_err());
+    }
+
+    #[test]
+    fn live_trace_exports_clean() {
+        let _g = crate::obs::recorder::test_lock();
+        span_tree::set_tracing(true);
+        let t = span_tree::Trace::start(gen_trace_id(), 64);
+        {
+            let _b = t.bind();
+            let outer = span_tree::enter("test", "outer").unwrap();
+            let inner = span_tree::enter("test", "inner").unwrap();
+            span_tree::exit(inner, "test", "inner", 2, vec![("rows", Value::U64(5))]);
+            span_tree::exit(outer, "test", "outer", 4, vec![]);
+        }
+        span_tree::set_tracing(false);
+        t.finish_root("test", "run", 0, 1000, vec![]);
+        let json = render(&t);
+        assert_eq!(check_chrome_trace(&json).expect("valid"), 3);
+        assert!(json.contains("\"rows\":5"));
+    }
+}

@@ -24,16 +24,32 @@
 //!   ([`trace::TraceWriter`]) and a stream adapter ([`trace::TracedStream`])
 //!   that snapshot the telemetry gauges every k examples for offline
 //!   plotting, ending with a `"final"` line carrying the trained radius.
+//! * [`span_tree`] — structured span *trees*: parented timing records with
+//!   W3C-`traceparent`-compatible 128-bit trace ids, a thread-local
+//!   current-span stack, bounded per-trace buffers with explicit drop
+//!   accounting, and a bounded ring of retained traces served at
+//!   `GET /debug/trace/<id>`. Gated by one relaxed load ([`tracing_on`]).
+//! * [`chrome_trace`] — renders a span tree as Chrome Trace Event JSON
+//!   (Perfetto / `chrome://tracing`), plus the strict well-formedness +
+//!   per-thread-nesting checker the tests enforce on every export.
+//! * [`profiler`] — the `profile` CLI subcommand's standardized synthetic
+//!   workload: per-phase wall-time breakdown (parse → hash → distance →
+//!   update → merge → republish) and rows/sec across all five variants,
+//!   emitted as `BENCH_obs.json` and gated against a committed baseline.
 //!
 //! The fleet/gossip and drift-detection roadmap items consume these same
 //! signals; this module is their substrate.
 
+pub mod chrome_trace;
+pub mod profiler;
 pub mod prom;
 pub mod recorder;
+pub mod span_tree;
 pub mod telemetry;
 pub mod trace;
 
 pub use recorder::{
     configure, emit, enabled, init_cli, recent_events, ring_len, span, Event, Level, Span, Value,
 };
+pub use span_tree::{set_tracing, tracing_on, Trace};
 pub use telemetry::{set_telemetry, telemetry_on};

@@ -1,0 +1,485 @@
+//! The self-profiling perf-regression harness behind `streamsvm
+//! profile`.
+//!
+//! Runs a *standardized* synthetic workload — deterministic sparse
+//! libsvm text, fixed seed — through the real example lifecycle, one
+//! phase at a time, each timed with its own wall-clock accumulator and
+//! wrapped in a tree span (so `--profile-out` renders the same run in
+//! Perfetto):
+//!
+//! | phase       | what runs                                              |
+//! |-------------|--------------------------------------------------------|
+//! | `parse`     | libsvm text → [`FileStream`] tolerant parser           |
+//! | `hash`      | signed feature hashing of every parsed row             |
+//! | `update`    | Algorithm-1 [`StreamSvm`] one-pass fit                 |
+//! | `distance`  | snapshot scoring of every row against the trained ball |
+//! | `merge`     | Algorithm-2 [`LookaheadSvm`] fit + final flush         |
+//! | `republish` | [`ModelCell`] epoch publishes at the serve cadence     |
+//!
+//! The six accumulators are measured *inside* one outer total-wall
+//! timer with nothing else in between, so their sum is within a few
+//! percent of the total — `BENCH_obs.json` records both and the
+//! acceptance test pins the ratio at ≥ 90%. A second section times a
+//! full one-pass fit for each of the five variants (rows/sec each).
+//!
+//! Regression gating: [`gate_against`] compares a fresh report to a
+//! committed baseline (`benches/baselines/BENCH_obs.json`) with a
+//! warn-then-fail tolerance, which is what the CI perf-regression job
+//! runs. Thresholds are deliberately loose — shared runners are noisy
+//! — but a real hot-path regression (2-3×) fails loudly.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::stream::FileStream;
+use crate::data::hashing::FeatureHasher;
+use crate::data::Example;
+use crate::rng::Pcg32;
+use crate::server::cell::ModelCell;
+use crate::svm::ellipsoid::EllipsoidSvm;
+use crate::svm::kernelfn::Kernel;
+use crate::svm::kernelized::KernelStreamSvm;
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::multiball::{MergePolicy, MultiBallSvm};
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::TrainOptions;
+
+/// The canonical phase names, in lifecycle order.
+pub const PHASES: [&str; 6] = ["parse", "hash", "distance", "update", "merge", "republish"];
+
+/// The five variant names, in registry order.
+pub const VARIANTS: [&str; 5] =
+    ["streamsvm", "lookahead", "kernelized", "ellipsoid", "multiball"];
+
+/// Workload shape. [`Default`] is the *standardized* workload the
+/// committed baseline and the CI job both use; changing it invalidates
+/// `benches/baselines/BENCH_obs.json`.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileConfig {
+    pub rows: usize,
+    /// Input (pre-hash) dimension.
+    pub dim: usize,
+    /// Non-zeros per row.
+    pub nnz: usize,
+    /// Hashed dimension for the `hash` phase.
+    pub hash_dim: usize,
+    pub seed: u64,
+    /// Lookahead `L` for the `merge` phase.
+    pub lookahead: usize,
+    /// Publish cadence for the `republish` phase.
+    pub republish_every: usize,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig {
+            rows: 20_000,
+            dim: 1 << 14,
+            nnz: 16,
+            hash_dim: 4096,
+            seed: 42,
+            lookahead: 32,
+            republish_every: 64,
+        }
+    }
+}
+
+/// One phase's wall time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub parse: Duration,
+    pub hash: Duration,
+    pub distance: Duration,
+    pub update: Duration,
+    pub merge: Duration,
+    pub republish: Duration,
+}
+
+impl PhaseTimes {
+    pub fn get(&self, phase: &str) -> Duration {
+        match phase {
+            "parse" => self.parse,
+            "hash" => self.hash,
+            "distance" => self.distance,
+            "update" => self.update,
+            "merge" => self.merge,
+            "republish" => self.republish,
+            _ => Duration::ZERO,
+        }
+    }
+
+    pub fn sum(&self) -> Duration {
+        self.parse + self.hash + self.distance + self.update + self.merge + self.republish
+    }
+}
+
+/// The `profile` run's result: what `BENCH_obs.json` serializes.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    pub cfg: ProfileConfig,
+    pub total: Duration,
+    pub phases: PhaseTimes,
+    /// End-to-end throughput of the phased section.
+    pub rows_per_s: f64,
+    /// `(variant name, one-pass fit rows/sec)` for all five variants.
+    pub variants: Vec<(&'static str, f64)>,
+}
+
+/// Deterministic sparse libsvm text: `rows` lines of `nnz` ascending
+/// 1-based indices in `[1, dim]` with values in `[-1, 1)` and a
+/// halfspace-plus-noise ±1 label.
+pub fn gen_libsvm_text(cfg: &ProfileConfig) -> String {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut out = String::with_capacity(cfg.rows * cfg.nnz * 12);
+    for _ in 0..cfg.rows {
+        let mut idx: Vec<u32> = (0..cfg.nnz)
+            .map(|_| 1 + rng.below(cfg.dim) as u32)
+            .collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let mut acc = 0.0f64;
+        let mut line = String::new();
+        for &i in &idx {
+            let v = rng.range(-1.0, 1.0) as f32;
+            // Labels correlate with a fixed deterministic halfspace so
+            // the learners see a non-degenerate margin structure.
+            let w = if i % 3 == 0 { 1.0 } else { -0.5 };
+            acc += w * v as f64;
+            line.push_str(&format!(" {i}:{v}"));
+        }
+        let noisy = rng.uniform() < 0.15;
+        let label = if (acc >= 0.0) != noisy { 1 } else { -1 };
+        out.push_str(&format!("{label}{line}\n"));
+    }
+    out
+}
+
+fn timed<T>(acc: &mut Duration, name: &'static str, f: impl FnOnce() -> T) -> T {
+    let _sp = crate::obs::span("profile", name);
+    let t = Instant::now();
+    let out = f();
+    *acc += t.elapsed();
+    out
+}
+
+/// Run the standardized workload. Single-threaded and allocation-light
+/// between phases, so `phases.sum()` tracks `total` closely.
+pub fn run_profile(cfg: &ProfileConfig) -> ProfileReport {
+    let text = gen_libsvm_text(cfg);
+    let mut ph = PhaseTimes::default();
+    let opts = TrainOptions::default();
+    let hasher = FeatureHasher::new(cfg.hash_dim, cfg.seed);
+
+    let t_total = Instant::now();
+
+    // parse: the real tolerant libsvm parser, fed from memory.
+    let parsed: Vec<Example> = timed(&mut ph.parse, "parse", || {
+        FileStream::from_reader(text.as_bytes(), cfg.dim).collect()
+    });
+
+    // hash: fold every row into the serving dimension.
+    let hashed: Vec<Example> = timed(&mut ph.hash, "hash", || {
+        parsed.iter().map(|e| hasher.hash_example(e)).collect()
+    });
+
+    // update: Algorithm-1 one-pass fit over the hashed stream.
+    let model = timed(&mut ph.update, "update", || {
+        let mut m = StreamSvm::new(cfg.hash_dim, opts);
+        for e in &hashed {
+            m.observe_view(e.x.view(), e.y);
+        }
+        m
+    });
+
+    // distance: score every row against the trained ball via the same
+    // snapshot path `/predict` serves from.
+    let cell = ModelCell::new(&model, "profile");
+    let snap = cell.load();
+    let checksum = timed(&mut ph.distance, "distance", || {
+        let mut acc = 0.0f64;
+        for e in &hashed {
+            acc += snap.score_view(e.x.view());
+        }
+        acc
+    });
+
+    // merge: Algorithm-2 lookahead fit (buffered solves + final flush).
+    timed(&mut ph.merge, "merge", || {
+        let mut la = LookaheadSvm::new(cfg.hash_dim, opts.with_lookahead(cfg.lookahead));
+        for e in &hashed {
+            la.observe_view(e.x.view(), e.y);
+        }
+        la.finish();
+    });
+
+    // republish: epoch publishes at the serve cadence.
+    timed(&mut ph.republish, "republish", || {
+        for _ in 0..(cfg.rows / cfg.republish_every).max(1) {
+            cell.publish(&model, "profile");
+        }
+    });
+
+    let total = t_total.elapsed();
+    let rows = parsed.len().max(1);
+    std::hint::black_box(checksum);
+
+    // Per-variant one-pass throughput (outside the phased section; the
+    // phase sum is compared against `total`, not against these).
+    let mut variants = Vec::with_capacity(VARIANTS.len());
+    {
+        let _sp = crate::obs::span("profile", "variants");
+        let time_fit = |name: &'static str, f: &mut dyn FnMut()| {
+            let _sp = crate::obs::span("profile", name);
+            let t = Instant::now();
+            f();
+            rows as f64 / t.elapsed().as_secs_f64().max(1e-9)
+        };
+        variants.push((
+            "streamsvm",
+            time_fit("streamsvm", &mut || {
+                let mut m = StreamSvm::new(cfg.hash_dim, opts);
+                for e in &hashed {
+                    m.observe_view(e.x.view(), e.y);
+                }
+            }),
+        ));
+        variants.push((
+            "lookahead",
+            time_fit("lookahead", &mut || {
+                let mut m = LookaheadSvm::new(cfg.hash_dim, opts.with_lookahead(cfg.lookahead));
+                for e in &hashed {
+                    m.observe_view(e.x.view(), e.y);
+                }
+                m.finish();
+            }),
+        ));
+        variants.push((
+            "kernelized",
+            time_fit("kernelized", &mut || {
+                let mut m = KernelStreamSvm::new(Kernel::Linear, opts);
+                for e in &hashed {
+                    m.observe_view(e.x.view(), e.y);
+                }
+            }),
+        ));
+        variants.push((
+            "ellipsoid",
+            time_fit("ellipsoid", &mut || {
+                let mut m = EllipsoidSvm::new(cfg.hash_dim, opts);
+                for e in &hashed {
+                    m.observe_view(e.x.view(), e.y);
+                }
+            }),
+        ));
+        variants.push((
+            "multiball",
+            time_fit("multiball", &mut || {
+                let mut m = MultiBallSvm::new(cfg.hash_dim, 4, MergePolicy::NearestBall, opts);
+                for e in &hashed {
+                    m.observe_view(e.x.view(), e.y);
+                }
+            }),
+        ));
+    }
+
+    ProfileReport {
+        cfg: *cfg,
+        total,
+        phases: ph,
+        rows_per_s: rows as f64 / total.as_secs_f64().max(1e-9),
+        variants,
+    }
+}
+
+impl ProfileReport {
+    /// The `BENCH_obs.json` document.
+    pub fn to_json(&self) -> String {
+        use crate::obs::prom::fmt_f64_json as f;
+        let mut s = String::with_capacity(512);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"rows\": {},\n", self.cfg.rows));
+        s.push_str(&format!("  \"dim\": {},\n", self.cfg.dim));
+        s.push_str(&format!("  \"nnz\": {},\n", self.cfg.nnz));
+        s.push_str(&format!("  \"hash_dim\": {},\n", self.cfg.hash_dim));
+        s.push_str(&format!("  \"seed\": {},\n", self.cfg.seed));
+        s.push_str(&format!("  \"lookahead\": {},\n", self.cfg.lookahead));
+        s.push_str(&format!("  \"total_s\": {},\n", f(self.total.as_secs_f64())));
+        s.push_str(&format!("  \"phase_sum_s\": {},\n", f(self.phases.sum().as_secs_f64())));
+        s.push_str(&format!("  \"rows_per_s\": {},\n", f(self.rows_per_s)));
+        s.push_str("  \"phases\": {");
+        for (i, p) in PHASES.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{p}\": {}", f(self.phases.get(p).as_secs_f64())));
+        }
+        s.push_str("},\n  \"variants\": {");
+        for (i, (name, rps)) in self.variants.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{name}\": {}", f(*rps)));
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Prometheus exposition of the same numbers (passes
+    /// [`crate::obs::prom::check_exposition`]); the CI job diffs
+    /// `metrics-check --sum pallas_profile_rows_per_second` output
+    /// against the committed baseline.
+    pub fn to_prom(&self) -> String {
+        let mut w = crate::obs::prom::PromWriter::new();
+        w.header(
+            "pallas_profile_rows_per_second",
+            "End-to-end rows/sec of the standardized profile workload.",
+            "gauge",
+        );
+        w.sample("pallas_profile_rows_per_second", &[], self.rows_per_s);
+        w.header(
+            "pallas_profile_phase_seconds",
+            "Wall seconds per lifecycle phase of the profile workload.",
+            "gauge",
+        );
+        for p in PHASES {
+            w.sample(
+                "pallas_profile_phase_seconds",
+                &[("phase", p)],
+                self.phases.get(p).as_secs_f64(),
+            );
+        }
+        w.header(
+            "pallas_profile_variant_rows_per_second",
+            "One-pass fit rows/sec per SVM variant on the profile workload.",
+            "gauge",
+        );
+        for &(name, rps) in &self.variants {
+            w.sample("pallas_profile_variant_rows_per_second", &[("variant", name)], rps);
+        }
+        w.finish()
+    }
+}
+
+/// Outcome of a baseline comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Gate {
+    Ok,
+    /// Regressed past the warn threshold: `(key, current, baseline)`.
+    Warn(Vec<(String, f64, f64)>),
+    /// Regressed past the fail threshold.
+    Fail(Vec<(String, f64, f64)>),
+}
+
+/// Compare higher-is-better keys of a fresh JSON report against a
+/// baseline JSON document. A key regresses when
+/// `current < baseline * (1 - frac)`; keys missing from either side
+/// are ignored (a new key cannot fail old baselines). Dot-paths
+/// (`"variants.streamsvm"`) reach nested objects.
+pub fn gate_against(
+    current: &str,
+    baseline: &str,
+    keys: &[&str],
+    warn_frac: f64,
+    fail_frac: f64,
+) -> Result<Gate, String> {
+    let cur = crate::server::json::Json::parse(current).map_err(|e| format!("current: {e}"))?;
+    let base = crate::server::json::Json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let lookup = |doc: &crate::server::json::Json, path: &str| -> Option<f64> {
+        let mut node = doc.clone();
+        for part in path.split('.') {
+            node = node.get(part)?.clone();
+        }
+        node.as_f64()
+    };
+    let mut warns = Vec::new();
+    let mut fails = Vec::new();
+    for key in keys {
+        let (Some(c), Some(b)) = (lookup(&cur, key), lookup(&base, key)) else {
+            continue;
+        };
+        if !c.is_finite() || !b.is_finite() || b <= 0.0 {
+            continue;
+        }
+        if c < b * (1.0 - fail_frac) {
+            fails.push((key.to_string(), c, b));
+        } else if c < b * (1.0 - warn_frac) {
+            warns.push((key.to_string(), c, b));
+        }
+    }
+    Ok(if !fails.is_empty() {
+        Gate::Fail(fails)
+    } else if !warns.is_empty() {
+        Gate::Warn(warns)
+    } else {
+        Gate::Ok
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ProfileConfig {
+        ProfileConfig { rows: 400, dim: 256, nnz: 8, hash_dim: 64, ..Default::default() }
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_parseable() {
+        let cfg = tiny();
+        let a = gen_libsvm_text(&cfg);
+        let b = gen_libsvm_text(&cfg);
+        assert_eq!(a, b, "generator must be seed-deterministic");
+        let rows: Vec<Example> = FileStream::from_reader(a.as_bytes(), cfg.dim).collect();
+        assert_eq!(rows.len(), cfg.rows);
+        assert!(rows.iter().all(|e| e.y == 1.0 || e.y == -1.0));
+    }
+
+    #[test]
+    fn phase_sum_tracks_total_and_all_phases_run() {
+        let r = run_profile(&tiny());
+        assert_eq!(r.variants.len(), 5);
+        for p in PHASES {
+            assert!(r.phases.get(p) > Duration::ZERO, "phase {p} never ran");
+        }
+        let ratio = r.phases.sum().as_secs_f64() / r.total.as_secs_f64();
+        assert!(ratio <= 1.0 + 1e-9, "phases cannot exceed total, got {ratio}");
+        assert!(ratio >= 0.90, "phase sum only {:.1}% of total", ratio * 100.0);
+        assert!(r.rows_per_s > 0.0);
+    }
+
+    #[test]
+    fn report_json_and_prom_are_well_formed() {
+        let r = run_profile(&tiny());
+        let j = crate::server::json::Json::parse(&r.to_json()).expect("valid JSON");
+        assert_eq!(j.get("rows").and_then(|v| v.as_f64()), Some(400.0));
+        let phases = j.get("phases").unwrap();
+        assert!(phases.get("merge").and_then(|v| v.as_f64()).is_some());
+        let variants = j.get("variants").unwrap();
+        assert!(variants.get("ellipsoid").and_then(|v| v.as_f64()).is_some());
+        let prom = r.to_prom();
+        let fams = crate::obs::prom::check_exposition(&prom).expect("valid exposition");
+        assert_eq!(fams, 3);
+        assert_eq!(
+            crate::obs::prom::sum_metric(&prom, "pallas_profile_rows_per_second"),
+            Some(r.rows_per_s)
+        );
+    }
+
+    #[test]
+    fn gate_warns_then_fails() {
+        let base = r#"{"rows_per_s": 1000.0, "variants": {"streamsvm": 500.0}}"#;
+        let keys = ["rows_per_s", "variants.streamsvm", "missing_key"];
+        let ok = r#"{"rows_per_s": 950.0, "variants": {"streamsvm": 490.0}}"#;
+        assert_eq!(gate_against(ok, base, &keys, 0.3, 0.6).unwrap(), Gate::Ok);
+        let warn = r#"{"rows_per_s": 600.0, "variants": {"streamsvm": 490.0}}"#;
+        match gate_against(warn, base, &keys, 0.3, 0.6).unwrap() {
+            Gate::Warn(w) => assert_eq!(w[0].0, "rows_per_s"),
+            g => panic!("expected warn, got {g:?}"),
+        }
+        let fail = r#"{"rows_per_s": 950.0, "variants": {"streamsvm": 100.0}}"#;
+        match gate_against(fail, base, &keys, 0.3, 0.6).unwrap() {
+            Gate::Fail(f) => assert_eq!(f[0].0, "variants.streamsvm"),
+            g => panic!("expected fail, got {g:?}"),
+        }
+        assert!(gate_against("nope", base, &keys, 0.3, 0.6).is_err());
+    }
+}

@@ -330,6 +330,9 @@ pub fn emit(
         let mut ring = RING.lock().unwrap();
         if ring.len() == RING_CAP {
             ring.pop_front();
+            // Truncation is never silent: the counter feeds
+            // `pallas_obs_events_dropped_total` and the /trace payload.
+            crate::obs::telemetry::OBS_EVENTS_DROPPED.inc();
         }
         ring.push_back(ev);
     }
@@ -351,13 +354,16 @@ pub fn clear_ring() {
 }
 
 /// A monotonic-clock span: measures from construction to drop, then
-/// emits a `Debug` event carrying `span_us`. Inert (no clock read, no
-/// emission) when `Debug` is not enabled at construction time.
+/// emits a `Debug` event carrying `span_us` and/or records a node in
+/// the current thread's span tree (see [`crate::obs::span_tree`]).
+/// Inert (no clock read, no emission) when `Debug` is not enabled and
+/// no trace is bound at construction time.
 pub struct Span {
     start: Option<Instant>,
     target: &'static str,
     name: &'static str,
     fields: Vec<(&'static str, Value)>,
+    tree: Option<crate::obs::span_tree::TreeSpan>,
 }
 
 impl Span {
@@ -375,22 +381,31 @@ impl Drop for Span {
     fn drop(&mut self) {
         if let Some(start) = self.start {
             let us = start.elapsed().as_micros() as u64;
-            emit(
-                Level::Debug,
-                self.target,
-                self.name.to_string(),
-                std::mem::take(&mut self.fields),
-                Some(us),
-            );
+            let fields = std::mem::take(&mut self.fields);
+            let debug = enabled(Level::Debug);
+            if let Some(tree) = self.tree.take() {
+                // Clone the fields only when both sinks want them.
+                if debug {
+                    crate::obs::span_tree::exit(tree, self.target, self.name, us, fields.clone());
+                    emit(Level::Debug, self.target, self.name.to_string(), fields, Some(us));
+                } else {
+                    crate::obs::span_tree::exit(tree, self.target, self.name, us, fields);
+                }
+            } else if debug {
+                emit(Level::Debug, self.target, self.name.to_string(), fields, Some(us));
+            }
         }
     }
 }
 
 /// Open a span (see [`Span`]). Usage: `let _sp = span("svm",
 /// "merge").field("l", len);` — the close event fires when `_sp` drops.
+/// Participates in the current thread's span tree when one is bound
+/// (one relaxed gate load otherwise).
 pub fn span(target: &'static str, name: &'static str) -> Span {
-    let start = if enabled(Level::Debug) { Some(Instant::now()) } else { None };
-    Span { start, target, name, fields: Vec::new() }
+    let tree = crate::obs::span_tree::enter(target, name);
+    let start = if tree.is_some() || enabled(Level::Debug) { Some(Instant::now()) } else { None };
+    Span { start, target, name, fields: Vec::new(), tree }
 }
 
 /// Current sink levels `(stderr, ring)`, for tests and `/trace` headers.

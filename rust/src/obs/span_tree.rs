@@ -1,0 +1,610 @@
+//! Span *trees*: structured, parented timing records with bounded
+//! per-trace buffers and explicit drop accounting.
+//!
+//! [`recorder::span`](crate::obs::recorder::span) gives flat wall-clock
+//! timers; this module upgrades them into a tree. A **trace** is one
+//! bounded buffer of [`SpanRecord`]s sharing a 128-bit trace id (W3C
+//! `traceparent`-compatible). Threads participate through a
+//! thread-local *current-span stack*: while a thread is bound to a
+//! trace, every `recorder::span` it opens becomes a node whose parent
+//! is the span enclosing it on that thread (or the trace root).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Disabled is one relaxed load.** [`enter`] checks the
+//!    [`tracing_on`] gate first; with tracing off there is no
+//!    thread-local access, no clock read, no allocation.
+//! 2. **Bounded everything.** Each trace holds at most its `cap` spans
+//!    — excess spans are counted in [`TraceBuf::dropped`], never
+//!    silently lost. The retained-trace ring ([`retain`]/[`find`]) is
+//!    itself bounded at [`RETAIN_CAP`].
+//! 3. **Two binding modes.** Request threads bind explicitly
+//!    ([`Trace::bind`], RAII-scoped); profiling runs install a
+//!    process-wide fallback ([`set_profile_trace`]) that worker
+//!    threads pick up lazily, so `train --profile-out` sees spans from
+//!    the pipeline and trainer threads it never touches directly.
+//!
+//! Timestamps are [`recorder::now_us`](crate::obs::recorder::now_us)
+//! microseconds (monotonic, process-relative) so span-tree times line
+//! up with the event ring served at `GET /trace`.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::recorder::{now_us, Value};
+
+/// Global tracing gate, independent of the recorder's level gate and
+/// the telemetry gate. Off by default; `serve()` and profiling runs
+/// switch it on.
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+/// The single relaxed load the disabled path pays.
+#[inline]
+pub fn tracing_on() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Enable/disable span-tree tracing process-wide.
+pub fn set_tracing(on: bool) {
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+/// Span buffer bound for request-scoped traces: a request touches a
+/// handful of spans, so this is generous while keeping a hostile
+/// `traceparent` sender from growing memory.
+pub const REQUEST_SPAN_CAP: usize = 256;
+
+/// Span buffer bound for whole-run profiling traces.
+pub const PROFILE_SPAN_CAP: usize = 8192;
+
+/// Retained traces served by `GET /debug/trace/<id>`.
+pub const RETAIN_CAP: usize = 128;
+
+/// One closed span: a node in a trace's tree.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Span id, unique within the process (never 0).
+    pub id: u64,
+    /// Parent span id; the trace root has parent 0.
+    pub parent: u64,
+    /// Subsystem tag (`"server"`, `"svm"`, `"profile"`, ...).
+    pub target: &'static str,
+    pub name: &'static str,
+    /// Monotonic µs (recorder epoch) at span open.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Small per-process thread index (not the OS tid).
+    pub thread: u64,
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+impl SpanRecord {
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(128);
+        s.push_str("{\"id\":");
+        s.push_str(&self.id.to_string());
+        s.push_str(",\"parent\":");
+        s.push_str(&self.parent.to_string());
+        s.push_str(",\"target\":");
+        s.push_str(&crate::obs::prom::json_string(self.target));
+        s.push_str(",\"name\":");
+        s.push_str(&crate::obs::prom::json_string(self.name));
+        s.push_str(",\"start_us\":");
+        s.push_str(&self.start_us.to_string());
+        s.push_str(",\"dur_us\":");
+        s.push_str(&self.dur_us.to_string());
+        s.push_str(",\"thread\":");
+        s.push_str(&self.thread.to_string());
+        if !self.fields.is_empty() {
+            s.push_str(",\"fields\":{");
+            for (i, (k, v)) in self.fields.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&crate::obs::prom::json_string(k));
+                s.push(':');
+                s.push_str(&v.to_json());
+            }
+            s.push('}');
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// The bounded span store inside a trace.
+#[derive(Debug)]
+pub struct TraceBuf {
+    pub spans: Vec<SpanRecord>,
+    /// Spans discarded because the buffer hit its cap. Never silent.
+    pub dropped: u64,
+    cap: usize,
+}
+
+impl TraceBuf {
+    fn push(&mut self, rec: SpanRecord) {
+        if self.spans.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.spans.push(rec);
+        }
+    }
+}
+
+/// Shared trace state: id + root span id + the bounded buffer.
+#[derive(Debug)]
+pub struct TraceShared {
+    id: u128,
+    root: u64,
+    buf: Mutex<TraceBuf>,
+}
+
+impl TraceShared {
+    pub fn id(&self) -> u128 {
+        self.id
+    }
+
+    /// The pre-allocated root span id (children parent to it even
+    /// before the root record itself is pushed at finish time).
+    pub fn root_span(&self) -> u64 {
+        self.root
+    }
+
+    /// `(span count, dropped count)` right now.
+    pub fn len_dropped(&self) -> (usize, u64) {
+        let b = self.buf.lock().unwrap();
+        (b.spans.len(), b.dropped)
+    }
+
+    /// Duration of the root span, if it has been recorded.
+    pub fn root_dur_us(&self) -> Option<u64> {
+        let b = self.buf.lock().unwrap();
+        b.spans.iter().find(|s| s.id == self.root).map(|s| s.dur_us)
+    }
+
+    /// Snapshot the spans (for export / rendering).
+    pub fn snapshot(&self) -> (Vec<SpanRecord>, u64) {
+        let b = self.buf.lock().unwrap();
+        (b.spans.clone(), b.dropped)
+    }
+
+    /// The `/debug/trace/<id>` payload.
+    pub fn to_json(&self) -> String {
+        let (spans, dropped) = self.snapshot();
+        let mut s = String::with_capacity(256 + spans.len() * 96);
+        s.push_str("{\"trace_id\":\"");
+        s.push_str(&fmt_trace_id(self.id));
+        s.push_str("\",\"root\":");
+        s.push_str(&self.root.to_string());
+        s.push_str(",\"dropped\":");
+        s.push_str(&dropped.to_string());
+        if let Some(root) = spans.iter().find(|r| r.id == self.root) {
+            s.push_str(",\"root_dur_us\":");
+            s.push_str(&root.dur_us.to_string());
+        }
+        s.push_str(",\"spans\":[");
+        for (i, r) in spans.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&r.to_json());
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// A handle on a live trace. Clones share the same buffer — a clone
+/// can ride the training queue to the trainer thread and keep
+/// appending spans after the HTTP response has been written.
+#[derive(Clone, Debug)]
+pub struct Trace(Arc<TraceShared>);
+
+impl Trace {
+    /// Start a trace with the given 128-bit id (from a `traceparent`
+    /// header, or [`gen_trace_id`]) and span-buffer bound.
+    pub fn start(id: u128, cap: usize) -> Trace {
+        Trace(Arc::new(TraceShared {
+            id,
+            root: next_span_id(),
+            buf: Mutex::new(TraceBuf { spans: Vec::new(), dropped: 0, cap }),
+        }))
+    }
+
+    pub fn id(&self) -> u128 {
+        self.0.id
+    }
+
+    pub fn root_span(&self) -> u64 {
+        self.0.root
+    }
+
+    pub fn shared(&self) -> &Arc<TraceShared> {
+        &self.0
+    }
+
+    /// Bind the current thread to this trace: until the guard drops,
+    /// every `recorder::span` on this thread records into the tree,
+    /// parented under the innermost open span (or the root). Nested
+    /// binds restore the previous binding on drop.
+    pub fn bind(&self) -> BindGuard {
+        let prev = CURRENT.with(|c| {
+            c.borrow_mut().replace(ThreadCtx {
+                trace: Arc::clone(&self.0),
+                stack: Vec::new(),
+                profile_gen: None,
+            })
+        });
+        BindGuard { prev }
+    }
+
+    /// Record the root span (named + timed by the caller, since the
+    /// request's wall clock starts before the trace object exists).
+    pub fn finish_root(
+        &self,
+        target: &'static str,
+        name: &'static str,
+        start_us: u64,
+        dur_us: u64,
+        fields: Vec<(&'static str, Value)>,
+    ) {
+        self.0.buf.lock().unwrap().push(SpanRecord {
+            id: self.0.root,
+            parent: 0,
+            target,
+            name,
+            start_us,
+            dur_us,
+            thread: thread_index(),
+            fields,
+        });
+    }
+}
+
+// ---- id generation ---------------------------------------------------
+
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+fn next_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// splitmix64: a well-mixed 64-bit permutation (public-domain constants).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Generate a fresh, non-zero 128-bit trace id. Uniqueness comes from
+/// a process-wide counter mixed with the monotonic clock; no OS RNG.
+pub fn gen_trace_id() -> u128 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let hi = splitmix64(n ^ 0x5053_414c_4c41_5321); // "PALLAS!"-ish salt
+    let lo = splitmix64(n.wrapping_add(now_us()).rotate_left(17));
+    let id = ((hi as u128) << 64) | lo as u128;
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// 32 lowercase hex chars, the W3C trace-id wire form.
+pub fn fmt_trace_id(id: u128) -> String {
+    format!("{id:032x}")
+}
+
+/// Parse a 32-hex-char trace id; zero is invalid per W3C.
+pub fn parse_trace_id(s: &str) -> Option<u128> {
+    if s.len() != 32 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let id = u128::from_str_radix(s, 16).ok()?;
+    if id == 0 {
+        None
+    } else {
+        Some(id)
+    }
+}
+
+/// Small per-process thread index (1, 2, ...) — stable for a thread's
+/// lifetime and compact enough for Chrome trace `tid`s.
+pub fn thread_index() -> u64 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+// ---- thread binding --------------------------------------------------
+
+struct ThreadCtx {
+    trace: Arc<TraceShared>,
+    /// Open span ids, innermost last; empty means "parent to root".
+    stack: Vec<u64>,
+    /// `Some(gen)` when this binding was picked up lazily from the
+    /// profile fallback; invalidated when the generation moves on.
+    profile_gen: Option<u64>,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+/// Restores the previous thread binding on drop (see [`Trace::bind`]).
+pub struct BindGuard {
+    prev: Option<ThreadCtx>,
+}
+
+impl Drop for BindGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| {
+            *c.borrow_mut() = self.prev.take();
+        });
+    }
+}
+
+/// The trace the current thread is bound to, if any (used by `/train`
+/// to ship the request's trace across the queue to the trainer).
+pub fn current_trace() -> Option<Trace> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|ctx| Trace(Arc::clone(&ctx.trace))))
+}
+
+// ---- profile fallback ------------------------------------------------
+
+static PROFILE: Mutex<Option<Arc<TraceShared>>> = Mutex::new(None);
+static PROFILE_GEN: AtomicU64 = AtomicU64::new(0);
+
+/// Install (or clear) the process-wide profiling trace. Threads with
+/// no explicit binding lazily attach to it on their next span; bumping
+/// the generation detaches them once it is cleared or replaced.
+pub fn set_profile_trace(t: Option<&Trace>) {
+    *PROFILE.lock().unwrap() = t.map(|t| Arc::clone(&t.0));
+    PROFILE_GEN.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---- span recording (recorder::Span integration) ---------------------
+
+/// A live tree-span handle held inside [`recorder::Span`]. Closing it
+/// ([`exit`]) records the [`SpanRecord`].
+pub struct TreeSpan {
+    trace: Arc<TraceShared>,
+    id: u64,
+    parent: u64,
+    start_us: u64,
+}
+
+/// Open a tree span on the current thread, if tracing is on *and* the
+/// thread is bound (explicitly or via the profile fallback). One
+/// relaxed load when tracing is off.
+pub fn enter(_target: &'static str, _name: &'static str) -> Option<TreeSpan> {
+    if !tracing_on() {
+        return None;
+    }
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        // Lazily (re)attach to the profile trace when unbound or when
+        // holding a stale profile generation.
+        let gen = PROFILE_GEN.load(Ordering::Relaxed);
+        let stale = matches!(&*cur, Some(ctx) if ctx.profile_gen.is_some_and(|g| g != gen));
+        if cur.is_none() || stale {
+            *cur = PROFILE.lock().unwrap().as_ref().map(|arc| ThreadCtx {
+                trace: Arc::clone(arc),
+                stack: Vec::new(),
+                profile_gen: Some(gen),
+            });
+        }
+        let ctx = cur.as_mut()?;
+        let id = next_span_id();
+        let parent = *ctx.stack.last().unwrap_or(&ctx.trace.root);
+        ctx.stack.push(id);
+        Some(TreeSpan { trace: Arc::clone(&ctx.trace), id, parent, start_us: now_us() })
+    })
+}
+
+/// Close a tree span: pop it off the thread stack and record it.
+pub fn exit(
+    span: TreeSpan,
+    target: &'static str,
+    name: &'static str,
+    dur_us: u64,
+    fields: Vec<(&'static str, Value)>,
+) {
+    CURRENT.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            // RAII drop order makes this LIFO; be defensive anyway so a
+            // leaked span cannot poison the stack for its siblings.
+            if let Some(i) = ctx.stack.iter().rposition(|&id| id == span.id) {
+                ctx.stack.truncate(i);
+            }
+        }
+    });
+    span.trace.buf.lock().unwrap().push(SpanRecord {
+        id: span.id,
+        parent: span.parent,
+        target,
+        name,
+        start_us: span.start_us,
+        dur_us,
+        thread: thread_index(),
+        fields,
+    });
+}
+
+// ---- retained traces (tail sampling) ---------------------------------
+
+static RETAINED: Mutex<VecDeque<Arc<TraceShared>>> = Mutex::new(VecDeque::new());
+
+/// Retain a finished trace for `GET /debug/trace/<id>`, evicting the
+/// oldest beyond [`RETAIN_CAP`].
+pub fn retain(t: &Trace) {
+    let mut ring = RETAINED.lock().unwrap();
+    if ring.len() >= RETAIN_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(Arc::clone(&t.0));
+}
+
+/// Look up a retained trace by id.
+pub fn find(id: u128) -> Option<Arc<TraceShared>> {
+    RETAINED.lock().unwrap().iter().find(|t| t.id == id).map(Arc::clone)
+}
+
+/// `(id, span count, root duration)` for every retained trace, oldest
+/// first — the `GET /debug/trace` listing.
+pub fn retained_summaries() -> Vec<(u128, usize, Option<u64>)> {
+    RETAINED
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|t| {
+            let b = t.buf.lock().unwrap();
+            let root = b.spans.iter().find(|s| s.id == t.root).map(|s| s.dur_us);
+            (t.id, b.spans.len(), root)
+        })
+        .collect()
+}
+
+/// Drop all retained traces (tests).
+pub fn clear_retained() {
+    RETAINED.lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_roundtrip_and_reject_garbage() {
+        let id = gen_trace_id();
+        let s = fmt_trace_id(id);
+        assert_eq!(s.len(), 32);
+        assert_eq!(parse_trace_id(&s), Some(id));
+        assert_eq!(parse_trace_id(&"0".repeat(32)), None, "zero id is invalid");
+        assert_eq!(parse_trace_id("abc"), None);
+        assert_eq!(parse_trace_id(&"g".repeat(32)), None);
+        assert_ne!(gen_trace_id(), gen_trace_id());
+    }
+
+    #[test]
+    fn bound_thread_builds_a_parented_tree() {
+        let _g = crate::obs::recorder::test_lock();
+        set_tracing(true);
+        let t = Trace::start(gen_trace_id(), 64);
+        {
+            let _b = t.bind();
+            {
+                let outer = enter("test", "outer").expect("bound + on");
+                {
+                    let inner = enter("test", "inner").unwrap();
+                    assert_eq!(inner.parent, outer.id);
+                    exit(inner, "test", "inner", 1, vec![]);
+                }
+                let outer_id = outer.id;
+                assert_eq!(outer.parent, t.root_span());
+                exit(outer, "test", "outer", 2, vec![("k", Value::U64(9))]);
+                // After exiting, a new span parents back to the root.
+                let next = enter("test", "next").unwrap();
+                assert_eq!(next.parent, t.root_span());
+                assert_ne!(next.parent, outer_id);
+                exit(next, "test", "next", 0, vec![]);
+            }
+        }
+        t.finish_root("test", "req", 0, 10, vec![]);
+        let (spans, dropped) = t.shared().snapshot();
+        assert_eq!(dropped, 0);
+        assert_eq!(spans.len(), 4);
+        set_tracing(false);
+        // Unbound + off: enter is None.
+        assert!(enter("test", "x").is_none());
+    }
+
+    #[test]
+    fn span_cap_drops_are_counted() {
+        let _g = crate::obs::recorder::test_lock();
+        set_tracing(true);
+        let t = Trace::start(gen_trace_id(), 4);
+        {
+            let _b = t.bind();
+            for _ in 0..10 {
+                let s = enter("test", "s").unwrap();
+                exit(s, "test", "s", 0, vec![]);
+            }
+        }
+        let (spans, dropped) = t.shared().snapshot();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(dropped, 6);
+        set_tracing(false);
+    }
+
+    #[test]
+    fn profile_fallback_attaches_and_detaches_worker_threads() {
+        let _g = crate::obs::recorder::test_lock();
+        set_tracing(true);
+        let t = Trace::start(gen_trace_id(), 64);
+        set_profile_trace(Some(&t));
+        let root = t.root_span();
+        std::thread::spawn(move || {
+            let s = enter("test", "worker").expect("profile fallback binds");
+            assert_eq!(s.parent, root);
+            exit(s, "test", "worker", 3, vec![]);
+        })
+        .join()
+        .unwrap();
+        set_profile_trace(None);
+        // This thread never bound explicitly; after the generation
+        // bump it must not attach to the dead profile trace.
+        assert!(enter("test", "after").is_none());
+        let (spans, _) = t.shared().snapshot();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "worker");
+        set_tracing(false);
+    }
+
+    #[test]
+    fn retained_ring_is_bounded_and_searchable() {
+        let _g = crate::obs::recorder::test_lock();
+        clear_retained();
+        let mut ids = Vec::new();
+        for _ in 0..(RETAIN_CAP + 5) {
+            let t = Trace::start(gen_trace_id(), 8);
+            t.finish_root("test", "r", 0, 1, vec![]);
+            retain(&t);
+            ids.push(t.id());
+        }
+        assert_eq!(retained_summaries().len(), RETAIN_CAP);
+        assert!(find(ids[0]).is_none(), "oldest evicted");
+        let last = find(*ids.last().unwrap()).expect("newest retained");
+        assert_eq!(last.root_dur_us(), Some(1));
+        clear_retained();
+    }
+
+    #[test]
+    fn trace_json_is_parseable_and_carries_drop_count() {
+        let _g = crate::obs::recorder::test_lock();
+        set_tracing(true);
+        let t = Trace::start(gen_trace_id(), 1);
+        {
+            let _b = t.bind();
+            for _ in 0..3 {
+                let s = enter("test", "s").unwrap();
+                exit(s, "test", "s", 0, vec![("n", Value::U64(1))]);
+            }
+        }
+        set_tracing(false);
+        let j = crate::server::json::Json::parse(&t.shared().to_json()).expect("valid JSON");
+        assert_eq!(
+            j.get("trace_id").and_then(|v| v.as_str()),
+            Some(fmt_trace_id(t.id()).as_str())
+        );
+        assert_eq!(j.get("dropped").and_then(|v| v.as_f64()), Some(2.0));
+        let spans = j.get("spans").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(spans.len(), 1);
+    }
+}

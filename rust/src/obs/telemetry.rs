@@ -139,6 +139,14 @@ pub static CHECKPOINT_SAVES: Counter = Counter::new(
     "pallas_checkpoint_saves_total",
     "Periodic checkpoint saves.",
 );
+/// Events evicted from the recorder ring (oldest-first truncation).
+/// Bumped unconditionally at the drop site — it *is* the visibility
+/// for a silently-truncating buffer, so it cannot hide behind the
+/// telemetry gate.
+pub static OBS_EVENTS_DROPPED: Counter = Counter::new(
+    "pallas_obs_events_dropped_total",
+    "Events dropped from the bounded /trace ring buffer.",
+);
 
 /// Current ball radius `R` (max over balls for multiball).
 pub static RADIUS: Gauge = Gauge::new(
@@ -172,7 +180,7 @@ pub static BALLS: Gauge = Gauge::new(
 );
 
 /// Every registered counter, in exposition order.
-pub fn counters() -> [&'static Counter; 9] {
+pub fn counters() -> [&'static Counter; 10] {
     [
         &EXAMPLES,
         &UPDATES,
@@ -183,6 +191,7 @@ pub fn counters() -> [&'static Counter; 9] {
         &SKETCH_BYTES,
         &SKETCH_WRITE_NS,
         &CHECKPOINT_SAVES,
+        &OBS_EVENTS_DROPPED,
     ]
 }
 

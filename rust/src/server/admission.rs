@@ -58,10 +58,11 @@ pub enum Endpoint {
     Stats,
     Metrics,
     Trace,
+    DebugTrace,
 }
 
 impl Endpoint {
-    pub const ALL: [Endpoint; 7] = [
+    pub const ALL: [Endpoint; 8] = [
         Endpoint::Predict,
         Endpoint::PredictBatch,
         Endpoint::Train,
@@ -69,6 +70,7 @@ impl Endpoint {
         Endpoint::Stats,
         Endpoint::Metrics,
         Endpoint::Trace,
+        Endpoint::DebugTrace,
     ];
 
     pub fn name(self) -> &'static str {
@@ -80,6 +82,7 @@ impl Endpoint {
             Endpoint::Stats => "stats",
             Endpoint::Metrics => "metrics",
             Endpoint::Trace => "trace",
+            Endpoint::DebugTrace => "debug_trace",
         }
     }
 
@@ -92,6 +95,7 @@ impl Endpoint {
             Endpoint::Stats => 4,
             Endpoint::Metrics => 5,
             Endpoint::Trace => 6,
+            Endpoint::DebugTrace => 7,
         }
     }
 }
@@ -156,7 +160,7 @@ impl StreamProgress {
 /// Shared, thread-safe stats registry for the whole server.
 #[derive(Default)]
 pub struct ServerStats {
-    per: [Mutex<EndpointStats>; 7],
+    per: [Mutex<EndpointStats>; 8],
     /// Connections handed to the handler pool.
     pub conns_accepted: AtomicU64,
     /// Connections shed at the acceptor (handler pool + queue full).

@@ -256,13 +256,32 @@ pub fn write_response<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_ext(w, status, content_type, body, keep_alive, &[])
+}
+
+/// [`write_response`] plus arbitrary extra headers (`traceparent`,
+/// `x-pallas-dur-us`). Extra names/values must be pre-sanitized — this
+/// writer does not reject CR/LF (all call sites pass literals or
+/// formatted numerics).
+pub fn write_response_ext<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         status_text(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     )?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)
 }
 
@@ -274,12 +293,71 @@ pub fn write_request<W: Write>(
     host: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_request_ext(w, method, path, host, body, &[])
+}
+
+/// [`write_request`] plus arbitrary extra headers (the loadgen client
+/// and the integration tests use it to send `traceparent`).
+pub fn write_request_ext<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    host: &str,
+    body: &[u8],
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
     write!(
         w,
-        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
         body.len(),
     )?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)
+}
+
+// ---- W3C trace context ------------------------------------------------
+
+/// A parsed `traceparent` header (W3C Trace Context, version 00):
+/// `00-<32 hex trace-id>-<16 hex parent-id>-<2 hex flags>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceParent {
+    pub trace_id: u128,
+    pub parent_id: u64,
+    pub flags: u8,
+}
+
+/// Strict parse of a `traceparent` value. Rejects the all-zero
+/// trace-id/parent-id and the reserved version `ff`, accepts future
+/// versions with the 00 layout (per spec §4.3).
+pub fn parse_traceparent(s: &str) -> Option<TraceParent> {
+    let s = s.trim();
+    let mut parts = s.splitn(4, '-');
+    let (ver, tid, pid, flags) = (parts.next()?, parts.next()?, parts.next()?, parts.next()?);
+    let all_hex = |p: &str| p.bytes().all(|b| b.is_ascii_hexdigit());
+    if ver.len() != 2 || !all_hex(ver) || ver.eq_ignore_ascii_case("ff") {
+        return None;
+    }
+    if tid.len() != 32 || pid.len() != 16 || flags.len() != 2 || !all_hex(flags) {
+        return None;
+    }
+    let trace_id = crate::obs::span_tree::parse_trace_id(tid)?;
+    if !all_hex(pid) {
+        return None;
+    }
+    let parent_id = u64::from_str_radix(pid, 16).ok()?;
+    if parent_id == 0 {
+        return None;
+    }
+    let flags = u8::from_str_radix(flags, 16).ok()?;
+    Some(TraceParent { trace_id, parent_id, flags })
+}
+
+/// Render a version-00 `traceparent` with the sampled flag set.
+pub fn format_traceparent(trace_id: u128, span_id: u64) -> String {
+    format!("00-{trace_id:032x}-{span_id:016x}-01")
 }
 
 #[cfg(test)]
@@ -377,6 +455,47 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/train");
         assert_eq!(req.body, b"{\"y\":1}");
+    }
+
+    #[test]
+    fn ext_writers_carry_extra_headers() {
+        let mut out = Vec::new();
+        let extra = [("x-pallas-dur-us", "42".to_string()), ("traceparent", "t".to_string())];
+        write_response_ext(&mut out, 200, "application/json", b"{}", true, &extra).unwrap();
+        let resp = read_response(&mut BufReader::new(&out[..]), &Limits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(resp.header("X-Pallas-Dur-Us"), Some("42"));
+        assert_eq!(resp.header("traceparent"), Some("t"));
+        assert_eq!(resp.body, b"{}");
+
+        let mut out = Vec::new();
+        write_request_ext(&mut out, "GET", "/x", "h", b"", &extra[..1]).unwrap();
+        let req = parse_req(&out).unwrap().unwrap();
+        assert_eq!(req.header("x-pallas-dur-us"), Some("42"));
+    }
+
+    #[test]
+    fn traceparent_parses_strictly_and_roundtrips() {
+        let tp = parse_traceparent("00-0af7651916cd43dd8448eb211c80319c-b7ad6b7169203331-01")
+            .expect("spec example parses");
+        assert_eq!(tp.trace_id, 0x0af7651916cd43dd8448eb211c80319c);
+        assert_eq!(tp.parent_id, 0xb7ad6b7169203331);
+        assert_eq!(tp.flags, 1);
+        let rendered = format_traceparent(tp.trace_id, tp.parent_id);
+        assert_eq!(parse_traceparent(&rendered), Some(tp));
+
+        // Rejections: zero ids, reserved version, wrong lengths, non-hex.
+        let zeros = format!("00-{}-{}-01", "0".repeat(32), "1".repeat(16));
+        assert!(parse_traceparent(&zeros.replace('1', "0")).is_none());
+        assert!(parse_traceparent(&format!("00-{}-{}-01", "a".repeat(32), "0".repeat(16)))
+            .is_none());
+        assert!(parse_traceparent(&format!("ff-{}-{}-01", "a".repeat(32), "b".repeat(16)))
+            .is_none());
+        assert!(parse_traceparent("00-abc-b7ad6b7169203331-01").is_none());
+        assert!(parse_traceparent(&format!("00-{}-{}-zz", "a".repeat(32), "b".repeat(16)))
+            .is_none());
+        assert!(parse_traceparent("").is_none());
     }
 
     #[test]

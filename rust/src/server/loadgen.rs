@@ -40,6 +40,10 @@ pub struct Outcome {
     /// Server announced it will close the connection (reconnect before
     /// the next request).
     pub closed: bool,
+    /// Server-reported handling time from the `x-pallas-dur-us` response
+    /// header — wire time excluded, the cross-check against client-side
+    /// latency.
+    pub server_dur_us: Option<u64>,
 }
 
 impl LoadClient {
@@ -56,11 +60,25 @@ impl LoadClient {
         Ok(LoadClient { reader, writer: BufWriter::new(stream), host, limits: Limits::default() })
     }
 
-    fn round_trip(&mut self, method: &str, path: &str, body: &[u8]) -> Result<HttpResponse> {
-        http::write_request(&mut self.writer, method, path, &self.host, body)?;
+    /// Send an arbitrary request with extra headers and return the raw
+    /// parsed response (status + headers + body) — the integration
+    /// tests' hook for header-level assertions like `traceparent`
+    /// propagation.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        extra: &[(&str, String)],
+    ) -> Result<HttpResponse> {
+        http::write_request_ext(&mut self.writer, method, path, &self.host, body, extra)?;
         self.writer.flush()?;
         http::read_response(&mut self.reader, &self.limits)?
             .ok_or_else(|| Error::Pipeline("server closed the connection before replying".into()))
+    }
+
+    fn round_trip(&mut self, method: &str, path: &str, body: &[u8]) -> Result<HttpResponse> {
+        self.request(method, path, body, &[])
     }
 
     fn outcome_of(resp: HttpResponse) -> Outcome {
@@ -71,6 +89,7 @@ impl LoadClient {
             score: field("score"),
             version: field("version").map(|v| v as u64),
             closed: resp.connection_close(),
+            server_dur_us: resp.header("x-pallas-dur-us").and_then(|v| v.trim().parse().ok()),
         }
     }
 
@@ -213,6 +232,11 @@ pub struct LoadReport {
     /// threads — shed fast-path replies are excluded, matching the
     /// server's own `/stats` accounting.
     pub latency: LatencyHistogram,
+    /// Server-reported handling time (`x-pallas-dur-us`) of the same ok
+    /// replies. `latency` minus this is time spent on the wire and in
+    /// the accept/admission path — the split that tells an overloaded
+    /// network apart from a slow handler.
+    pub server_latency: LatencyHistogram,
 }
 
 impl LoadReport {
@@ -259,7 +283,8 @@ impl LoadReport {
                 r#"{{"requests":{},"ok":{},"shed":{},"errors":{},"#,
                 r#""predicts":{},"trains":{},"shed_rate":{},"#,
                 r#""wall_s":{},"qps_target":{},"qps_achieved":{},"#,
-                r#""latency_us":{{"mean":{},"p50":{},"p90":{},"p99":{},"max":{}}}}}"#
+                r#""latency_us":{{"mean":{},"p50":{},"p90":{},"p99":{},"max":{}}},"#,
+                r#""server_latency_us":{{"mean":{},"p50":{},"p90":{},"p99":{},"max":{}}}}}"#
             ),
             self.sent,
             self.ok,
@@ -276,6 +301,11 @@ impl LoadReport {
             self.latency.quantile(0.90).as_micros(),
             self.latency.quantile(0.99).as_micros(),
             self.latency.max().as_micros(),
+            self.server_latency.mean().as_micros(),
+            self.server_latency.quantile(0.50).as_micros(),
+            self.server_latency.quantile(0.90).as_micros(),
+            self.server_latency.quantile(0.99).as_micros(),
+            self.server_latency.max().as_micros(),
         )
     }
 
@@ -295,6 +325,7 @@ struct ThreadReport {
     predicts: usize,
     trains: usize,
     latency: LatencyHistogram,
+    server_latency: LatencyHistogram,
 }
 
 /// Drive `cfg.addr` with a mixed `/predict` + `/train` workload drawn
@@ -330,6 +361,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig, examples: &[Example]) -> Result<LoadRepo
         agg.predicts += r.predicts;
         agg.trains += r.trains;
         agg.latency.merge(&r.latency);
+        agg.server_latency.merge(&r.server_latency);
     }
     agg.wall = wall.elapsed();
     Ok(agg)
@@ -350,6 +382,7 @@ fn drive_one(
         predicts: 0,
         trains: 0,
         latency: LatencyHistogram::default(),
+        server_latency: LatencyHistogram::default(),
     };
     let mut rng = Pcg32::new(cfg.seed, 7000 + thread_idx as u64);
     let mut client = LoadClient::connect(cfg.addr.as_str(), cfg.read_timeout).ok();
@@ -398,6 +431,9 @@ fn drive_one(
                 if (200..300).contains(&o.status) && body_ok {
                     rep.ok += 1;
                     rep.latency.record(sent_at.elapsed());
+                    if let Some(us) = o.server_dur_us {
+                        rep.server_latency.record(Duration::from_micros(us));
+                    }
                 } else if o.status == 429 {
                     // counted, but kept out of the latency histogram: the
                     // reject fast-path would make an overloaded server
@@ -444,8 +480,10 @@ mod tests {
         assert_eq!(v.get("shed").unwrap().as_f64(), Some(10.0));
         assert!(v.get("qps_achieved").unwrap().as_f64().unwrap() > 0.0);
         let lat = v.get("latency_us").unwrap();
+        let srv = v.get("server_latency_us").unwrap();
         for k in ["mean", "p50", "p90", "p99", "max"] {
             assert!(lat.get(k).unwrap().as_f64().is_some(), "missing latency key {k}");
+            assert!(srv.get(k).unwrap().as_f64().is_some(), "missing server latency key {k}");
         }
         assert!(!r.summary().is_empty());
     }

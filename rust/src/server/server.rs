@@ -41,6 +41,9 @@ use crate::data::hashing::FeatureHasher;
 use crate::data::Features;
 use crate::error::{Error, Result};
 use crate::obs::prom::{render_histogram_samples, PromWriter};
+use crate::obs::recorder::Value;
+use crate::obs::span_tree;
+use crate::obs::Trace;
 use crate::svm::HashSpec;
 use crate::server::admission::{bounded, Bounded, Endpoint, ServerStats};
 use crate::server::cell::ModelCell;
@@ -51,6 +54,11 @@ use crate::svm::streamsvm::StreamSvm;
 const JSON_CT: &str = "application/json";
 /// Upper bound on `/predict_batch` rows per request.
 pub const MAX_BATCH_ROWS: usize = 4096;
+
+/// A `/train` queue item: the validated example plus the admitting
+/// request's trace (when traced), so the trainer's absorb span lands in
+/// the same tree the client can fetch back at `/debug/trace/<id>`.
+type TrainItem = (Features, f32, Option<Trace>);
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -92,6 +100,11 @@ pub struct ServerConfig {
     /// [`Self::hash`] set the file's indices are unbounded and hashed on
     /// ingest; otherwise out-of-range indices are dropped per row.
     pub train_stream: Option<PathBuf>,
+    /// Tail-sampling threshold: a request slower than this many
+    /// microseconds has its span tree retained for `GET
+    /// /debug/trace/<id>`. Requests carrying a `traceparent` header are
+    /// always retained, whatever their latency.
+    pub trace_slow_us: u64,
 }
 
 impl Default for ServerConfig {
@@ -108,6 +121,7 @@ impl Default for ServerConfig {
             limits: Limits::default(),
             hash: None,
             train_stream: None,
+            trace_slow_us: 10_000,
         }
     }
 }
@@ -116,7 +130,7 @@ impl Default for ServerConfig {
 struct Shared {
     cell: ModelCell,
     stats: ServerStats,
-    train: Bounded<(Features, f32)>,
+    train: Bounded<TrainItem>,
     /// Stops the acceptor and the handler pool (checked between requests).
     shutdown: AtomicBool,
     /// Stops the trainer — set only after the handler pool has joined,
@@ -133,6 +147,8 @@ struct Shared {
     /// A `--train-stream` file feed is configured (drives the `/stats`
     /// `"stream"` object; progress lives in `stats.stream`).
     stream_configured: bool,
+    /// Tail-sampling latency threshold (see [`ServerConfig::trace_slow_us`]).
+    trace_slow_us: u64,
 }
 
 /// A running server; dropping it without [`ServerHandle::shutdown`]
@@ -202,8 +218,11 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
     // Serving turns the training-dynamics telemetry on: `/metrics` must
     // expose live radius/violation-rate gauges while the trainer runs.
     crate::obs::set_telemetry(true);
+    // ... and span-tree tracing, so slow requests tail-sample into the
+    // retained ring behind `GET /debug/trace/<id>`.
+    crate::obs::set_tracing(true);
     crate::obs_info!("server"; addr = addr.to_string(), threads = cfg.threads, republish_every = cfg.republish_every; "listening");
-    let (train_tx, train_rx) = bounded::<(Features, f32)>(cfg.train_queue.max(1));
+    let (train_tx, train_rx) = bounded::<TrainItem>(cfg.train_queue.max(1));
     let shared = Arc::new(Shared {
         cell: ModelCell::new(&model, &cfg.tag),
         stats: ServerStats::default(),
@@ -217,6 +236,7 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
         limits: cfg.limits,
         hasher: cfg.hash.map(FeatureHasher::from_spec),
         stream_configured: stream.is_some(),
+        trace_slow_us: cfg.trace_slow_us,
     });
 
     let (conn_tx, conn_rx) = bounded::<TcpStream>(cfg.conn_queue);
@@ -443,13 +463,55 @@ fn handle_conn(sh: &Arc<Shared>, read_timeout: Duration, stream: TcpStream) {
             }
         };
         let t0 = Instant::now();
+        let start_us = crate::obs::recorder::now_us();
         let keep = !req.wants_close() && !sh.shutdown.load(Ordering::Acquire);
-        let (status, ctype, body, ep) = route(sh, &req);
-        if http::write_response(&mut writer, status, ctype, &body, keep).is_err() {
+        // Trace when the gate is on, or when the client asked with a
+        // `traceparent` header (an explicit ask is honored regardless —
+        // and adopts the client's trace id, so both sides of the wire
+        // agree on what to look up later).
+        let tp = req.header("traceparent").and_then(http::parse_traceparent);
+        let trace = if crate::obs::tracing_on() || tp.is_some() {
+            let id = tp.map(|t| t.trace_id).unwrap_or_else(span_tree::gen_trace_id);
+            Some(Trace::start(id, span_tree::REQUEST_SPAN_CAP))
+        } else {
+            None
+        };
+        let (status, ctype, body, ep) = match &trace {
+            Some(t) => {
+                let _bound = t.bind();
+                route(sh, &req)
+            }
+            None => route(sh, &req),
+        };
+        let dur_us = t0.elapsed().as_micros() as u64;
+        // Server-side duration rides back on every response so clients
+        // (the loadgen) can split wire time from handling time.
+        let mut extra: Vec<(&str, String)> = vec![("x-pallas-dur-us", dur_us.to_string())];
+        if let Some(t) = &trace {
+            extra.push(("traceparent", http::format_traceparent(t.id(), t.root_span())));
+        }
+        if http::write_response_ext(&mut writer, status, ctype, &body, keep, &extra).is_err() {
             return;
         }
         if writer.flush().is_err() {
             return;
+        }
+        if let Some(t) = trace {
+            t.finish_root(
+                "server",
+                ep.map_or("request", Endpoint::name),
+                start_us,
+                dur_us,
+                vec![
+                    ("path", Value::Str(req.path.clone())),
+                    ("status", Value::U64(status as u64)),
+                ],
+            );
+            // Tail sampling: explicit traceparent requests are always
+            // retained, slow ones besides.
+            if tp.is_some() || dur_us >= sh.trace_slow_us {
+                span_tree::retain(&t);
+            }
         }
         if let Some(ep) = ep {
             if (200..300).contains(&status) {
@@ -474,6 +536,17 @@ fn err_body(msg: &str) -> Vec<u8> {
 /// `endpoint = None` for unrouted paths (they are not part of any
 /// endpoint's stats).
 fn route(sh: &Shared, req: &HttpRequest) -> (u16, &'static str, Vec<u8>, Option<Endpoint>) {
+    // `/debug/trace` carries the trace id in the path, so it cannot be
+    // an exact-match arm below.
+    if req.path == "/debug/trace" || req.path.starts_with("/debug/trace/") {
+        if req.method != "GET" {
+            return (405, JSON_CT, err_body("method not allowed for this endpoint"), None);
+        }
+        return match req.path.strip_prefix("/debug/trace/") {
+            Some(id) => debug_trace_get(id),
+            None => (200, JSON_CT, debug_trace_list().into_bytes(), Some(Endpoint::DebugTrace)),
+        };
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/predict") => {
             let (status, body) = handle_predict(sh, &req.body);
@@ -509,6 +582,43 @@ fn route(sh: &Shared, req: &HttpRequest) -> (u16, &'static str, Vec<u8>, Option<
         ) => (405, JSON_CT, err_body("method not allowed for this endpoint"), None),
         _ => (404, JSON_CT, err_body("no such endpoint"), None),
     }
+}
+
+/// `GET /debug/trace/<id>`: one retained span tree, as rendered by
+/// [`TraceShared::to_json`](crate::obs::span_tree::TraceShared::to_json).
+fn debug_trace_get(id_hex: &str) -> (u16, &'static str, Vec<u8>, Option<Endpoint>) {
+    let ep = Some(Endpoint::DebugTrace);
+    let Some(id) = span_tree::parse_trace_id(id_hex) else {
+        return (400, JSON_CT, err_body("trace id must be 32 hex chars"), ep);
+    };
+    match span_tree::find(id) {
+        Some(t) => (200, JSON_CT, t.to_json().into_bytes(), ep),
+        None => (404, JSON_CT, err_body("no retained trace with that id"), ep),
+    }
+}
+
+/// `GET /debug/trace`: the retained-trace listing, oldest first.
+fn debug_trace_list() -> String {
+    let traces = span_tree::retained_summaries();
+    let mut out = String::with_capacity(32 + traces.len() * 72);
+    out.push_str("{\"traces\":[");
+    for (i, (id, spans, root_dur)) in traces.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"trace_id\":\"");
+        out.push_str(&span_tree::fmt_trace_id(*id));
+        out.push_str("\",\"spans\":");
+        out.push_str(&spans.to_string());
+        out.push_str(",\"root_dur_us\":");
+        match root_dur {
+            Some(d) => out.push_str(&d.to_string()),
+            None => out.push_str("null"),
+        }
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
 }
 
 fn parse_body(body: &[u8]) -> Option<Json> {
@@ -686,7 +796,7 @@ fn handle_train(sh: &Shared, body: &[u8]) -> (u16, Vec<u8>) {
         Ok(x) => x,
         Err(e) => return (400, err_body(&e)),
     };
-    match sh.train.try_admit((x, y)) {
+    match sh.train.try_admit((x, y, span_tree::current_trace())) {
         Ok(()) => (
             202,
             format!(r#"{{"accepted":true,"version":{}}}"#, sh.cell.version()).into_bytes(),
@@ -755,6 +865,15 @@ fn stats_json(sh: &Shared) -> String {
 fn metrics_text(sh: &Shared) -> String {
     let mut w = PromWriter::new();
 
+    w.header("pallas_build_info", "Constant 1; build metadata rides on the labels.", "gauge");
+    w.sample(
+        "pallas_build_info",
+        &[
+            ("version", env!("CARGO_PKG_VERSION")),
+            ("features", if cfg!(feature = "pjrt") { "pjrt" } else { "default" }),
+        ],
+        1.0,
+    );
     w.header("pallas_uptime_seconds", "Seconds since the server started.", "gauge");
     w.sample("pallas_uptime_seconds", &[], sh.started.elapsed().as_secs_f64());
     w.header(
@@ -849,11 +968,14 @@ fn metrics_text(sh: &Shared) -> String {
 }
 
 /// The `GET /trace` body: the recorder's ring buffer of recent events
-/// as a JSON array, oldest first.
+/// as a JSON array, oldest first, plus how many events the bounded ring
+/// has dropped since startup (so a gap in the log is never silent).
 fn trace_json() -> String {
     let events = crate::obs::recent_events();
-    let mut out = String::with_capacity(64 + events.len() * 96);
-    out.push_str("{\"events\":[");
+    let mut out = String::with_capacity(96 + events.len() * 96);
+    out.push_str("{\"dropped\":");
+    out.push_str(&crate::obs::telemetry::OBS_EVENTS_DROPPED.get().to_string());
+    out.push_str(",\"events\":[");
     for (i, ev) in events.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -874,7 +996,7 @@ fn trace_json() -> String {
 fn trainer_loop(
     sh: Arc<Shared>,
     mut model: StreamSvm,
-    rx: Receiver<(Features, f32)>,
+    rx: Receiver<TrainItem>,
     republish_every: usize,
     snapshot: Option<PathBuf>,
     mut stream: Option<FileStream<std::fs::File>>,
@@ -887,7 +1009,12 @@ fn trainer_loop(
     // Admitted examples were validated at the protocol boundary, but the
     // fallible entry point keeps a defective example (e.g. a dim change
     // across hot-swap experiments) from panicking the trainer thread.
-    fn absorb(model: &mut StreamSvm, x: Features, y: f32) -> bool {
+    // Queue items carry the admitting request's trace: binding it here
+    // parents the absorb span (and the ball-geometry spans under it)
+    // into the tree the client fetches at `/debug/trace/<id>`.
+    fn absorb(model: &mut StreamSvm, x: Features, y: f32, trace: Option<&Trace>) -> bool {
+        let _bound = trace.map(Trace::bind);
+        let _span = crate::obs::span("server", "train_absorb");
         match model.try_observe(x.view(), y) {
             Ok(_) => true,
             Err(e) => {
@@ -901,8 +1028,8 @@ fn trainer_loop(
             // The handler pool has joined: this drain is exact. The file
             // stream is left wherever it is — its progress (and that it
             // did not finish) stays visible in the stats.
-            while let Ok((x, y)) = rx.try_recv() {
-                if absorb(&mut model, x, y) {
+            while let Ok((x, y, t)) = rx.try_recv() {
+                if absorb(&mut model, x, y, t.as_ref()) {
                     sh.trained.fetch_add(1, Ordering::Relaxed);
                     since_publish += 1;
                 }
@@ -912,8 +1039,8 @@ fn trainer_loop(
         let mut progressed = false;
         // one queued /train example (non-blocking: wire traffic never
         // waits behind the file stream)
-        if let Ok((x, y)) = rx.try_recv() {
-            if absorb(&mut model, x, y) {
+        if let Ok((x, y, t)) = rx.try_recv() {
+            if absorb(&mut model, x, y, t.as_ref()) {
                 sh.trained.fetch_add(1, Ordering::Relaxed);
                 since_publish += 1;
             }
@@ -928,7 +1055,7 @@ fn trainer_loop(
                         Some(h) => h.hash_example(&e),
                         None => e,
                     };
-                    if absorb(&mut model, e.x, e.y) {
+                    if absorb(&mut model, e.x, e.y, None) {
                         sh.stats.stream.record_row();
                         since_publish += 1;
                     } else {
@@ -961,8 +1088,8 @@ fn trainer_loop(
         // both sources idle: block briefly on the queue, then re-check
         // the stop flag at the top of the loop
         match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok((x, y)) => {
-                if absorb(&mut model, x, y) {
+            Ok((x, y, t)) => {
+                if absorb(&mut model, x, y, t.as_ref()) {
                     sh.trained.fetch_add(1, Ordering::Relaxed);
                     since_publish += 1;
                 }
@@ -1013,14 +1140,14 @@ mod tests {
         (status, body)
     }
 
-    fn test_shared(train_queue: usize) -> (Arc<Shared>, Receiver<(Features, f32)>) {
+    fn test_shared(train_queue: usize) -> (Arc<Shared>, Receiver<TrainItem>) {
         test_shared_hashed(train_queue, None)
     }
 
     fn test_shared_hashed(
         train_queue: usize,
         hash: Option<HashSpec>,
-    ) -> (Arc<Shared>, Receiver<(Features, f32)>) {
+    ) -> (Arc<Shared>, Receiver<TrainItem>) {
         let model = toy_model();
         let (train_tx, train_rx) = bounded(train_queue);
         let sh = Arc::new(Shared {
@@ -1036,6 +1163,7 @@ mod tests {
             limits: Limits::default(),
             hasher: hash.map(FeatureHasher::from_spec),
             stream_configured: false,
+            trace_slow_us: 10_000,
         });
         (sh, train_rx)
     }
@@ -1118,7 +1246,7 @@ mod tests {
             route_raw(&sh, "POST", "/train", br#"{"idx":[1],"val":[2.0],"y":-1}"#).0,
             202
         );
-        let (x, y) = rx.try_recv().unwrap();
+        let (x, y, _) = rx.try_recv().unwrap();
         assert_eq!(y, -1.0);
         assert_eq!(x.nnz(), 1);
         assert_eq!(x.dense().as_ref(), &[0.0, 2.0]);
@@ -1189,7 +1317,7 @@ mod tests {
             route_raw(&sh, "POST", "/train", br#"{"idx":[7,900000],"val":[1.0,1.0],"y":1}"#).0,
             202
         );
-        let (x, _y) = rx.try_recv().unwrap();
+        let (x, _y, _) = rx.try_recv().unwrap();
         assert_eq!(x.len(), 2);
         assert_eq!(x, h.hash_pairs(&[7, 900000], &[1.0, 1.0]));
         // batch rows hash too
@@ -1318,6 +1446,9 @@ mod tests {
         // latency histogram buckets from the log₂ layout, +Inf included
         assert!(text.contains("pallas_request_latency_seconds_bucket{endpoint=\"predict\",le=\"+Inf\"} 2\n"));
         assert!(text.contains("pallas_request_latency_seconds_count{endpoint=\"predict\"} 2\n"));
+        // build metadata rides an info-style gauge
+        assert!(text.contains("pallas_build_info{version=\""), "{text}");
+        assert!(text.contains(concat!("version=\"", env!("CARGO_PKG_VERSION"), "\"")));
         // hot-swap bookkeeping and the training gauges are exposed
         assert!(text.contains("pallas_model_generation 1\n"));
         assert!(text.contains("pallas_model_publishes_total 0\n"));
@@ -1338,6 +1469,7 @@ mod tests {
         let (status, body) = route_raw(&sh, "GET", "/trace", b"");
         assert_eq!(status, 200);
         let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(v.get("dropped").and_then(|d| d.as_f64()).is_some(), "drop accounting");
         let events = v.get("events").unwrap().as_array().unwrap();
         let ev = events
             .iter()
@@ -1350,6 +1482,49 @@ mod tests {
         );
         crate::obs::configure(Some(crate::obs::Level::Warn), Some(crate::obs::Level::Info));
         crate::obs::recorder::clear_ring();
+    }
+
+    #[test]
+    fn debug_trace_serves_retained_traces() {
+        let _g = crate::obs::recorder::test_lock();
+        span_tree::clear_retained();
+        let (sh, _rx) = test_shared(4);
+        let t = Trace::start(span_tree::gen_trace_id(), 16);
+        t.finish_root("test", "req", 0, 42, vec![]);
+        span_tree::retain(&t);
+        let hex = span_tree::fmt_trace_id(t.id());
+        let (status, body) = route_raw(&sh, "GET", &format!("/debug/trace/{hex}"), b"");
+        assert_eq!(status, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("trace_id").and_then(|x| x.as_str()), Some(hex.as_str()));
+        assert_eq!(v.get("root_dur_us").and_then(|x| x.as_f64()), Some(42.0));
+        // the listing carries the same id
+        let (status, body) = route_raw(&sh, "GET", "/debug/trace", b"");
+        assert_eq!(status, 200);
+        assert!(String::from_utf8(body).unwrap().contains(&hex));
+        // unknown id → 404, malformed id → 400, wrong method → 405
+        let missing = span_tree::fmt_trace_id(span_tree::gen_trace_id());
+        assert_eq!(route_raw(&sh, "GET", &format!("/debug/trace/{missing}"), b"").0, 404);
+        assert_eq!(route_raw(&sh, "GET", "/debug/trace/xyz", b"").0, 400);
+        assert_eq!(route_raw(&sh, "POST", "/debug/trace", b"").0, 405);
+        span_tree::clear_retained();
+    }
+
+    #[test]
+    fn traced_train_ships_the_trace_down_the_queue() {
+        let (sh, rx) = test_shared(4);
+        let t = Trace::start(span_tree::gen_trace_id(), 16);
+        let (status, _) = {
+            let _bound = t.bind();
+            route_raw(&sh, "POST", "/train", br#"{"x":[1,0],"y":1}"#)
+        };
+        assert_eq!(status, 202);
+        let (_x, _y, queued) = rx.try_recv().unwrap();
+        assert_eq!(queued.expect("trace rode the queue").id(), t.id());
+        // an untraced request enqueues None
+        assert_eq!(route_raw(&sh, "POST", "/train", br#"{"x":[0,1],"y":-1}"#).0, 202);
+        let (_x, _y, queued) = rx.try_recv().unwrap();
+        assert!(queued.is_none());
     }
 
     #[test]

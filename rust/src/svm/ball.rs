@@ -262,6 +262,9 @@ impl BallState {
     /// Fold `σ` into `v` and refresh the cached norm (amortized; see the
     /// module docs).
     fn renormalize(&mut self) {
+        // Cold by construction, so the span probe (one relaxed load when
+        // tracing is off) costs nothing relative to the O(D) fold.
+        let _span = crate::obs::span("svm", "sigma_fold").field("dim", self.v.len());
         for vi in self.v.iter_mut() {
             *vi = (*vi as f64 * self.sigma) as f32;
         }

@@ -138,7 +138,12 @@ impl LookaheadSvm {
         let views: Vec<FeaturesView> = self.buf_x.iter().map(|f| f.view()).collect();
         let telemetry = crate::obs::telemetry_on();
         let t0 = if telemetry { Some(std::time::Instant::now()) } else { None };
-        solve_merge_into(ball, &views, &self.buf_y, &self.opts);
+        {
+            // Span-tree node for the Algorithm-2 merge (the hot-loop
+            // phase `train --profile-out` and `/debug/trace` surface).
+            let _span = crate::obs::span("svm", "merge").field("buffered", self.buf_x.len());
+            solve_merge_into(ball, &views, &self.buf_y, &self.opts);
+        }
         if let Some(t0) = t0 {
             crate::obs::telemetry::MERGES.inc();
             crate::obs::telemetry::MERGE_NS.add(t0.elapsed().as_nanos() as u64);

@@ -154,8 +154,14 @@ impl MultiBallSvm {
                     return;
                 }
                 self.balls.push(BallState::init_view(x, y, &self.opts));
-                while self.balls.len() > self.max_balls {
-                    self.collapse_closest_pair();
+                if self.balls.len() > self.max_balls {
+                    // Span-tree node for the rare collapse event — the
+                    // O(balls² · D) step worth seeing on a timeline.
+                    let _span =
+                        crate::obs::span("svm", "ball_collapse").field("balls", self.balls.len());
+                    while self.balls.len() > self.max_balls {
+                        self.collapse_closest_pair();
+                    }
                 }
                 self.tap_telemetry(true);
             }

@@ -1,0 +1,156 @@
+//! Integration: the self-profiling harness and the Chrome-trace export.
+//!
+//! Two halves. A property test drives [`chrome_trace::render_spans`]
+//! with randomized span trees — including the recorded-duration
+//! truncation that makes children overhang their parents — and asserts
+//! every export passes the strict well-formedness + per-track-nesting
+//! checker. An end-to-end test runs the standardized `profile` workload
+//! under a live span tree (the `--profile-out` path), checks the
+//! `BENCH_obs.json` invariants the CI gate relies on (notably: phase
+//! sum within 10% of total wall), and validates the exported trace.
+
+use std::collections::HashMap;
+
+use streamsvm::obs::chrome_trace::{check_chrome_trace, render, render_spans, write_file};
+use streamsvm::obs::profiler::{run_profile, ProfileConfig, PHASES};
+use streamsvm::obs::span_tree::{self, gen_trace_id, SpanRecord, Trace, PROFILE_SPAN_CAP};
+use streamsvm::obs::Value;
+use streamsvm::rng::Pcg32;
+use streamsvm::server::json::Json;
+
+/// Grow a random subtree under `parent` on one thread track: children
+/// open and close sequentially inside the parent's interval, exactly
+/// like the real thread-local span stack records them.
+fn build_tree(
+    rng: &mut Pcg32,
+    recs: &mut Vec<SpanRecord>,
+    next_id: &mut u64,
+    parent: u64,
+    thread: u64,
+    clock: &mut u64,
+    depth: usize,
+) {
+    let kids = rng.below(4);
+    for _ in 0..kids {
+        let id = *next_id;
+        *next_id += 1;
+        *clock += rng.below(3) as u64; // gap before the child opens
+        let start = *clock;
+        if depth < 4 {
+            build_tree(rng, recs, next_id, id, thread, clock, depth + 1);
+        }
+        *clock += rng.below(5) as u64; // tail work inside the child
+        let fields = if rng.below(3) == 0 { vec![("i", Value::U64(id))] } else { vec![] };
+        recs.push(SpanRecord {
+            id,
+            parent,
+            target: "prop",
+            name: "node",
+            start_us: start,
+            dur_us: *clock - start,
+            thread,
+            fields,
+        });
+    }
+}
+
+#[test]
+fn chrome_trace_export_nests_for_randomized_span_trees() {
+    let mut checked = 0usize;
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(0xC0FFEE + seed);
+        let mut recs = Vec::new();
+        let mut next_id = 2u64;
+        let threads = 1 + rng.below(3) as u64;
+        let mut max_end = 0u64;
+        for th in 0..threads {
+            let mut clock = rng.below(4) as u64;
+            build_tree(&mut rng, &mut recs, &mut next_id, 1, th, &mut clock, 0);
+            max_end = max_end.max(clock);
+        }
+        recs.push(SpanRecord {
+            id: 1,
+            parent: 0,
+            target: "prop",
+            name: "root",
+            start_us: 0,
+            dur_us: max_end,
+            thread: 0,
+            fields: vec![],
+        });
+
+        // Simulate the independent µs truncation of each span's recorded
+        // duration: ends move left by up to 1µs, so a child can overhang
+        // its (shrunk) parent — the exact overhang the exporter clamps.
+        let end_of: HashMap<u64, u64> =
+            recs.iter().map(|r| (r.id, r.start_us + r.dur_us)).collect();
+        for r in &mut recs {
+            if r.dur_us > 0 && rng.below(2) == 1 {
+                r.dur_us -= 1;
+            }
+        }
+
+        let json = render_spans(&recs);
+        let n = check_chrome_trace(&json)
+            .unwrap_or_else(|e| panic!("seed {seed}: invalid export: {e}\n{json}"));
+        assert_eq!(n, recs.len(), "seed {seed}: event count");
+        // sanity on the generator itself: parents exist for every span
+        for r in &recs {
+            assert!(r.parent == 0 || end_of.contains_key(&r.parent), "orphan span");
+        }
+        checked += n;
+    }
+    assert!(checked > 100, "generator degenerated: only {checked} events across all seeds");
+}
+
+#[test]
+fn profile_workload_reports_phases_and_exports_a_chrome_trace() {
+    let cfg = ProfileConfig { rows: 400, dim: 256, nnz: 8, hash_dim: 64, ..Default::default() };
+
+    // The `profile --profile-out` path: the whole workload records into
+    // one span tree through the profile fallback.
+    streamsvm::obs::set_tracing(true);
+    let t0 = streamsvm::obs::recorder::now_us();
+    let trace = Trace::start(gen_trace_id(), PROFILE_SPAN_CAP);
+    span_tree::set_profile_trace(Some(&trace));
+    let report = run_profile(&cfg);
+    span_tree::set_profile_trace(None);
+    streamsvm::obs::set_tracing(false);
+    let now = streamsvm::obs::recorder::now_us();
+    trace.finish_root("profile", "run", t0, now.saturating_sub(t0), vec![]);
+
+    // BENCH_obs.json invariants the CI gate keys on.
+    let doc = report.to_json();
+    let j = Json::parse(&doc).unwrap_or_else(|e| panic!("invalid BENCH_obs.json: {e}\n{doc}"));
+    assert_eq!(j.get("rows").and_then(|v| v.as_f64()), Some(400.0));
+    assert!(j.get("rows_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    let phases = j.get("phases").expect("phases object");
+    for p in PHASES {
+        assert!(phases.get(p).and_then(|v| v.as_f64()).unwrap() > 0.0, "phase {p} missing");
+    }
+    let variants = j.get("variants").expect("variants object");
+    for v in ["streamsvm", "lookahead", "kernelized", "ellipsoid", "multiball"] {
+        assert!(variants.get(v).and_then(|x| x.as_f64()).unwrap() > 0.0, "variant {v} missing");
+    }
+    // the acceptance bound: phase sum within 10% of total wall
+    let total = j.get("total_s").and_then(|v| v.as_f64()).unwrap();
+    let sum = j.get("phase_sum_s").and_then(|v| v.as_f64()).unwrap();
+    assert!(sum <= total * 1.000001, "phase sum {sum} exceeds total {total}");
+    assert!(sum >= 0.90 * total, "phase sum {sum} covers <90% of total {total}");
+
+    // The exported trace is well-formed, nested, and carries the run:
+    // root + six phases + the variants group + five variant fits.
+    let json = render(&trace);
+    let n = check_chrome_trace(&json).unwrap_or_else(|e| panic!("invalid chrome trace: {e}"));
+    assert!(n >= 13, "only {n} events exported");
+    for name in ["\"parse\"", "\"merge\"", "\"republish\"", "\"multiball\"", "\"run\""] {
+        assert!(json.contains(name), "export lost {name}");
+    }
+
+    // ... and the file form `--profile-out` writes round-trips.
+    let path = std::env::temp_dir().join(format!("ssvm_profile_{}.json", std::process::id()));
+    write_file(&trace, path.to_str().unwrap()).unwrap();
+    let from_disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(check_chrome_trace(&from_disk).unwrap(), n);
+    std::fs::remove_file(&path).ok();
+}

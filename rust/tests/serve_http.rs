@@ -499,6 +499,101 @@ fn metrics_and_trace_are_served_over_tcp() {
 }
 
 #[test]
+fn traceparent_propagates_and_debug_trace_serves_span_trees() {
+    let cfg = ServerConfig {
+        threads: 4,
+        conn_queue: 16,
+        train_queue: 64,
+        republish_every: 8,
+        read_timeout: Duration::from_secs(2),
+        tag: "traced".into(),
+        ..Default::default()
+    };
+    let handle = serve(trained_model(), cfg).unwrap();
+    let addr = handle.addr();
+    let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+    let body: &[u8] = br#"{"x": [0.5, 0.0, 0.0, 0.0, 0.0, 0.0]}"#;
+
+    // Every response reports its server-side duration, traced or not —
+    // loadgen cross-checks wire latency against this header.
+    let plain = client.request("POST", "/predict", body, &[]).unwrap();
+    assert_eq!(plain.status, 200);
+    let _dur: u64 = plain
+        .header("x-pallas-dur-us")
+        .expect("x-pallas-dur-us on every response")
+        .trim()
+        .parse()
+        .expect("x-pallas-dur-us is numeric");
+
+    // A request carrying a W3C traceparent echoes the same trace id and
+    // is always retained for /debug/trace, regardless of latency.
+    let hex = "4bf92f3577b34da6a3ce929d0e0e4736";
+    let tp = format!("00-{hex}-00f067aa0ba902b7-01");
+    let resp = client.request("POST", "/predict", body, &[("traceparent", tp)]).unwrap();
+    assert_eq!(resp.status, 200);
+    let echoed = resp.header("traceparent").expect("traced reply echoes traceparent");
+    assert!(echoed.contains(hex), "echoed `{echoed}` lost the trace id");
+
+    // ... and the whole span tree round-trips through /debug/trace/<id>.
+    let fetched = client.get_text(&format!("/debug/trace/{hex}")).unwrap();
+    let j = Json::parse(&fetched).unwrap_or_else(|e| panic!("unparseable trace: {e}"));
+    assert_eq!(j.get("trace_id").and_then(|v| v.as_str()), Some(hex));
+    assert!(j.get("root_dur_us").and_then(|v| v.as_f64()).is_some(), "root never finished");
+    let spans = j.get("spans").and_then(|v| v.as_array()).expect("spans array");
+    assert!(!spans.is_empty(), "trace has no spans");
+    let root_id = j.get("root").and_then(|v| v.as_f64()).expect("root id");
+    let root = spans
+        .iter()
+        .find(|s| s.get("id").and_then(|v| v.as_f64()) == Some(root_id))
+        .expect("root span present in the tree");
+    let fields = root.get("fields").expect("root span carries request fields");
+    assert_eq!(fields.get("path").and_then(|v| v.as_str()), Some("/predict"));
+    assert_eq!(fields.get("status").and_then(|v| v.as_f64()), Some(200.0));
+
+    // An unknown-but-valid id is an explicit 404; garbage is a 400.
+    let miss = client
+        .request("GET", &format!("/debug/trace/{}", "f".repeat(32)), b"", &[])
+        .unwrap();
+    assert_eq!(miss.status, 404);
+    let bad = client.request("GET", "/debug/trace/not-hex", b"", &[]).unwrap();
+    assert_eq!(bad.status, 400);
+    drop(client);
+
+    // Concurrent traced load: distinct trace ids never cross-talk, and
+    // each one is retrievable while the others are still in flight.
+    let workers: Vec<_> = (0..4u64)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+                for i in 0..8u64 {
+                    let id = format!("{:032x}", 0xabc0_0000u128 + ((k << 8) | i) as u128 + 1);
+                    let tp = format!("00-{id}-00f067aa0ba902b7-01");
+                    let body = br#"{"x": [0.5, 0.0, 0.0, 0.0, 0.0, 0.0]}"#;
+                    let r = c.request("POST", "/predict", body, &[("traceparent", tp)]).unwrap();
+                    assert_eq!(r.status, 200);
+                    assert!(r.header("traceparent").unwrap().contains(&id));
+                    let t = c.get_text(&format!("/debug/trace/{id}")).unwrap();
+                    let j = Json::parse(&t).unwrap();
+                    assert_eq!(j.get("trace_id").and_then(|v| v.as_str()), Some(id.as_str()));
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // the retained-trace listing at the bare path parses and is bounded
+    let mut client = LoadClient::connect(addr, Duration::from_secs(2)).unwrap();
+    let listing = client.get_text("/debug/trace").unwrap();
+    let j = Json::parse(&listing).unwrap();
+    let traces = j.get("traces").and_then(|v| v.as_array()).expect("traces array");
+    assert!(!traces.is_empty() && traces.len() <= 128, "listing size {}", traces.len());
+    drop(client);
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn sparse_payloads_round_trip_over_the_wire() {
     let cfg = ServerConfig {
         threads: 2,
