@@ -49,6 +49,7 @@ fn pipeline_throughput(ds_name: &str, frac: f64) {
             mode,
             block,
             queue: 4,
+            ..Default::default()
         };
         let train = ds.train.clone();
         // one warm run (compile), one measured run

@@ -134,6 +134,25 @@ mod tests {
     }
 
     #[test]
+    fn parses_variant_flag() {
+        use crate::svm::learner::Variant;
+        let a = parse(&["serve", "--variant", "kernelized"]).unwrap();
+        assert_eq!(a.get("variant", Variant::Ball).unwrap(), Variant::Kernelized);
+        // default when absent
+        let a = parse(&["serve"]).unwrap();
+        assert_eq!(a.get("variant", Variant::Ball).unwrap(), Variant::Ball);
+        // every canonical name round-trips through FromStr
+        for v in Variant::ALL {
+            let a = parse(&["train", &format!("--variant={}", v.name())]).unwrap();
+            assert_eq!(a.get("variant", Variant::Ball).unwrap(), v);
+        }
+        // unknown names surface as a config error naming the flag
+        let a = parse(&["train", "--variant", "quantum"]).unwrap();
+        let err = a.get("variant", Variant::Ball).unwrap_err();
+        assert!(err.to_string().contains("--variant"), "{err}");
+    }
+
+    #[test]
     fn equals_form_error_paths() {
         // empty flag name
         assert!(parse(&["train", "--=5"]).is_err());

@@ -1,48 +1,83 @@
-//! Shape-bucketed batching: turns an example stream into padded blocks
-//! matching the AOT artifact buckets, with a bounded-channel reader
-//! thread for backpressure.
+//! Shape-bucketed batching: turns an example stream into blocks of up
+//! to `b` rows, with a bounded-channel reader thread for backpressure.
+//!
+//! Rows keep their arriving representation — sparse rows stay sparse —
+//! so the pure-Rust pipeline modes run O(nnz) end-to-end. The dense
+//! padded `(b, d_pad)` layout the AOT PJRT entry points expect is
+//! materialized on demand via [`Block::pad`], so only the device paths
+//! pay for padding (the old block dense-padded every row up front,
+//! taxing every mode with the device layout).
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
 
-use crate::data::Example;
+use crate::data::{Example, Features, FeaturesView};
 
-/// One padded block, laid out exactly as the AOT entry points expect:
-/// row-major `(b, d_pad)` features, `y`/`valid` of length `b`. Padding
-/// rows have `valid = 0` and zero features; padding columns are zero.
+/// One block of up to `b` rows, un-padded.
 #[derive(Clone, Debug)]
 pub struct Block {
-    pub x: Vec<f32>,
+    /// Rows in arrival order, in their arriving representation.
+    pub xs: Vec<Features>,
     pub y: Vec<f32>,
-    pub valid: Vec<f32>,
-    /// Real rows in this block (≤ b; the final block may be partial).
-    pub n_real: usize,
-    pub b: usize,
-    pub d_pad: usize,
-    /// Logical feature dimension (≤ d_pad).
+    /// Logical feature dimension.
     pub d: usize,
 }
 
 impl Block {
-    /// Row `i`'s logical features (un-padded view).
-    pub fn row(&self, i: usize) -> &[f32] {
-        &self.x[i * self.d_pad..i * self.d_pad + self.d]
+    /// Real rows in this block (the final block may be partial).
+    pub fn n_real(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Row `i`'s features (O(1); sparse rows stay sparse).
+    pub fn row(&self, i: usize) -> FeaturesView<'_> {
+        self.xs[i].view()
+    }
+
+    /// Materialize the dense padded layout the AOT entry points expect:
+    /// row-major `(b, d_pad)` features, `y`/`valid` of length `b`.
+    /// Padding rows have `valid = 0` and zero features; padding columns
+    /// are zero.
+    pub fn pad(&self, b: usize, d_pad: usize) -> PaddedBlock {
+        assert!(b >= self.xs.len() && d_pad >= self.d, "pad target smaller than block");
+        let mut p = PaddedBlock {
+            x: vec![0.0; b * d_pad],
+            y: vec![0.0; b],
+            valid: vec![0.0; b],
+            b,
+            d_pad,
+        };
+        for (i, row) in self.xs.iter().enumerate() {
+            row.view().write_into(&mut p.x[i * d_pad..i * d_pad + self.d]);
+            p.y[i] = self.y[i];
+            p.valid[i] = 1.0;
+        }
+        p
     }
 }
 
-/// Assemble blocks of `b` rows padded to `d_pad` columns.
+/// The dense padded device layout (see [`Block::pad`]).
+#[derive(Clone, Debug)]
+pub struct PaddedBlock {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub valid: Vec<f32>,
+    pub b: usize,
+    pub d_pad: usize,
+}
+
+/// Assemble blocks of up to `b` rows.
 pub struct Batcher<I: Iterator<Item = Example>> {
     source: I,
     b: usize,
     d: usize,
-    d_pad: usize,
     done: bool,
 }
 
 impl<I: Iterator<Item = Example>> Batcher<I> {
-    pub fn new(source: I, b: usize, d: usize, d_pad: usize) -> Self {
-        assert!(d_pad >= d && b > 0);
-        Batcher { source, b, d, d_pad, done: false }
+    pub fn new(source: I, b: usize, d: usize) -> Self {
+        assert!(b > 0);
+        Batcher { source, b, d, done: false }
     }
 }
 
@@ -53,24 +88,14 @@ impl<I: Iterator<Item = Example>> Iterator for Batcher<I> {
         if self.done {
             return None;
         }
-        let mut block = Block {
-            x: vec![0.0; self.b * self.d_pad],
-            y: vec![0.0; self.b],
-            valid: vec![0.0; self.b],
-            n_real: 0,
-            b: self.b,
-            d_pad: self.d_pad,
-            d: self.d,
-        };
-        for i in 0..self.b {
+        let mut xs = Vec::with_capacity(self.b);
+        let mut y = Vec::with_capacity(self.b);
+        while xs.len() < self.b {
             match self.source.next() {
                 Some(e) => {
                     debug_assert_eq!(e.x.len(), self.d);
-                    e.x.view()
-                        .write_into(&mut block.x[i * self.d_pad..i * self.d_pad + self.d]);
-                    block.y[i] = e.y;
-                    block.valid[i] = 1.0;
-                    block.n_real += 1;
+                    xs.push(e.x);
+                    y.push(e.y);
                 }
                 None => {
                     self.done = true;
@@ -78,10 +103,10 @@ impl<I: Iterator<Item = Example>> Iterator for Batcher<I> {
                 }
             }
         }
-        if block.n_real == 0 {
+        if xs.is_empty() {
             None
         } else {
-            Some(block)
+            Some(Block { xs, y, d: self.d })
         }
     }
 }
@@ -94,7 +119,6 @@ pub fn spawn_reader<I>(
     source: I,
     b: usize,
     d: usize,
-    d_pad: usize,
     queue: usize,
 ) -> (Receiver<Block>, JoinHandle<usize>)
 where
@@ -103,8 +127,8 @@ where
     let (tx, rx) = sync_channel(queue.max(1));
     let handle = std::thread::spawn(move || {
         let mut sent = 0usize;
-        for block in Batcher::new(source, b, d, d_pad) {
-            sent += block.n_real;
+        for block in Batcher::new(source, b, d) {
+            sent += block.n_real();
             if tx.send(block).is_err() {
                 break; // trainer hung up (early stop)
             }
@@ -132,27 +156,49 @@ mod tests {
 
     #[test]
     fn blocks_cover_stream_exactly() {
-        let blocks: Vec<Block> = Batcher::new(exs(10, 3).into_iter(), 4, 3, 5).collect();
+        let blocks: Vec<Block> = Batcher::new(exs(10, 3).into_iter(), 4, 3).collect();
         assert_eq!(blocks.len(), 3);
-        assert_eq!(blocks.iter().map(|b| b.n_real).sum::<usize>(), 10);
-        assert_eq!(blocks[2].n_real, 2);
-        // padding rows are invalid and zeroed
-        assert_eq!(blocks[2].valid[2..], [0.0, 0.0]);
-        assert!(blocks[2].x[2 * 5..].iter().all(|&v| v == 0.0));
+        assert_eq!(blocks.iter().map(|b| b.n_real()).sum::<usize>(), 10);
+        assert_eq!(blocks[2].n_real(), 2);
+        // padding appears only in the on-demand device layout
+        let p = blocks[2].pad(4, 5);
+        assert_eq!(p.valid, [1.0, 1.0, 0.0, 0.0]);
+        assert!(p.x[2 * 5..].iter().all(|&v| v == 0.0));
     }
 
     #[test]
     fn column_padding_zeroed_row_content_preserved() {
-        let blocks: Vec<Block> = Batcher::new(exs(2, 3).into_iter(), 2, 3, 8).collect();
+        let blocks: Vec<Block> = Batcher::new(exs(2, 3).into_iter(), 2, 3).collect();
         let b = &blocks[0];
-        assert_eq!(b.row(0), &[0.0, 1.0, 2.0]);
-        assert_eq!(b.row(1), &[3.0, 4.0, 5.0]);
-        assert!(b.x[3..8].iter().all(|&v| v == 0.0));
+        assert_eq!(b.xs[0].dense().as_ref(), &[0.0, 1.0, 2.0]);
+        assert_eq!(b.xs[1].dense().as_ref(), &[3.0, 4.0, 5.0]);
+        let p = b.pad(2, 8);
+        assert_eq!(&p.x[0..3], &[0.0, 1.0, 2.0]);
+        assert!(p.x[3..8].iter().all(|&v| v == 0.0));
+        assert_eq!(&p.x[8..11], &[3.0, 4.0, 5.0]);
+        assert!(p.x[11..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sparse_rows_keep_their_representation() {
+        let rows = vec![
+            Example::new(Features::sparse(6, vec![1, 4], vec![2.0, -1.0]), 1.0),
+            Example::new(vec![1.0; 6], -1.0),
+        ];
+        let blocks: Vec<Block> = Batcher::new(rows.into_iter(), 4, 6).collect();
+        let b = &blocks[0];
+        assert_eq!(b.n_real(), 2);
+        // the sparse row was not densified by batching
+        assert!(matches!(b.row(0), FeaturesView::Sparse { .. }));
+        assert_eq!(b.xs[0].nnz(), 2);
+        // ... but the device layout densifies it correctly
+        let p = b.pad(4, 8);
+        assert_eq!(&p.x[0..6], &[0.0, 2.0, 0.0, 0.0, -1.0, 0.0]);
     }
 
     #[test]
     fn empty_stream_yields_nothing() {
-        let blocks: Vec<Block> = Batcher::new(exs(0, 2).into_iter(), 4, 2, 2).collect();
+        let blocks: Vec<Block> = Batcher::new(exs(0, 2).into_iter(), 4, 2).collect();
         assert!(blocks.is_empty());
     }
 
@@ -163,24 +209,18 @@ mod tests {
             let d = 1 + rng.below(8);
             let b = 1 + rng.below(16);
             let src = exs(n, d);
-            let blocks: Vec<Block> = Batcher::new(src.clone().into_iter(), b, d, d + rng.below(4)).collect();
+            let blocks: Vec<Block> = Batcher::new(src.clone().into_iter(), b, d).collect();
             let mut recon = Vec::new();
             for blk in &blocks {
-                for i in 0..blk.n_real {
-                    recon.push((blk.row(i).to_vec(), blk.y[i]));
-                }
-                // trailing rows must be invalid
-                for i in blk.n_real..blk.b {
-                    if blk.valid[i] != 0.0 {
-                        return Err("padding row marked valid".into());
-                    }
+                for i in 0..blk.n_real() {
+                    recon.push((blk.xs[i].clone(), blk.y[i]));
                 }
             }
             if recon.len() != n {
                 return Err(format!("{} rows reconstructed of {n}", recon.len()));
             }
             for (e, (x, y)) in src.iter().zip(&recon) {
-                if e.x.dense().as_ref() != x.as_slice() || e.y != *y {
+                if e.x != *x || e.y != *y {
                     return Err("row mismatch".into());
                 }
             }
@@ -190,12 +230,12 @@ mod tests {
 
     #[test]
     fn reader_thread_backpressure_and_total() {
-        let (rx, handle) = spawn_reader(exs(100, 2).into_iter(), 8, 2, 2, 2);
+        let (rx, handle) = spawn_reader(exs(100, 2).into_iter(), 8, 2, 2);
         std::thread::sleep(std::time::Duration::from_millis(20));
         // with queue=2 the reader can be at most ~3 blocks ahead
         let mut total = 0;
         for blk in rx.iter() {
-            total += blk.n_real;
+            total += blk.n_real();
         }
         assert_eq!(total, 100);
         assert_eq!(handle.join().unwrap(), 100);
@@ -203,9 +243,9 @@ mod tests {
 
     #[test]
     fn reader_handles_early_hangup() {
-        let (rx, handle) = spawn_reader(exs(1000, 2).into_iter(), 8, 2, 2, 1);
+        let (rx, handle) = spawn_reader(exs(1000, 2).into_iter(), 8, 2, 1);
         let first = rx.recv().unwrap();
-        assert_eq!(first.n_real, 8);
+        assert_eq!(first.n_real(), 8);
         drop(rx); // trainer aborts
         let sent = handle.join().unwrap();
         assert!(sent < 1000, "reader should stop early, sent {sent}");

@@ -4,21 +4,26 @@
 //!
 //! ```text
 //! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
+//!                    [--variant ball|lookahead|kernelized|ellipsoid|multiball]
 //!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
 //!                    [--sparse true]   (convert the stream to the O(nnz) sparse path)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (signed feature hashing to D)
 //!                    [--trace-out trace.jsonl [--trace-every 1000]]  (training-dynamics JSONL)
 //!                    [--profile-out profile.json]  (Chrome trace for Perfetto / chrome://tracing)
-//! streamsvm serve    --dataset mnist01 [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
+//! streamsvm serve    --dataset mnist01 [--variant ball|lookahead|kernelized|ellipsoid|multiball]
+//!                    [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
 //!                    [--train-stream data.libsvm]  (background-train from a local file)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (hash wire payloads on ingest)
 //!                    [--trace-slow-us 10000]  (tail-sample slower requests into /debug/trace)
 //! streamsvm loadgen  --addr 127.0.0.1:7878 [--dataset mnist01] [--qps 500] [--requests 2000]
 //!                    [--threads 4] [--train-share 0.1] [--out BENCH_serve.json]
-//! streamsvm snapshot --dataset synthA [--at 5000] --out model.meb
-//! streamsvm resume   --from model.meb --dataset synthA [--out model2.meb]
+//! streamsvm snapshot --dataset synthA [--at 5000] [--variant ...] --out model.meb
+//! streamsvm resume   --from model.meb --dataset synthA [--variant ...] [--out model2.meb]
+//!                    (--variant asserts the sketch's recorded variant; resume always
+//!                     replays with the algorithm the provenance names)
 //! streamsvm merge    --inputs a.meb,b.meb,... --out merged.meb [--dataset synthA]
+//!                    [--variant ...]  (asserts every input's recorded variant)
 //! streamsvm table1   [--frac 1.0] [--runs 20]
 //! streamsvm fig2     [--dataset mnist89] [--max-passes 512] [--frac 1.0]
 //! streamsvm fig3     [--dataset mnist89] [--perms 100] [--frac 1.0]
@@ -46,7 +51,7 @@ use std::time::Duration;
 
 use streamsvm::cli::Args;
 use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
-use streamsvm::coordinator::sharded::train_sharded;
+use streamsvm::coordinator::sharded::train_sharded_variant;
 use streamsvm::coordinator::stream::VecStream;
 use streamsvm::data::hashing::{FeatureHasher, HashedStream};
 use streamsvm::data::registry::{load_dataset, load_dataset_sized};
@@ -57,10 +62,10 @@ use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
 use streamsvm::obs::trace::{TracedStream, TraceWriter};
 use streamsvm::runtime::Runtime;
 use streamsvm::server::{run_loadgen, serve, LoadgenConfig, ServerConfig};
-use streamsvm::sketch::checkpoint::{resume_fit, resume_lookahead, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::checkpoint::{resume_learner, CheckpointConfig, Checkpointer};
 use streamsvm::sketch::codec::MebSketch;
 use streamsvm::sketch::merge::merge_sketches;
-use streamsvm::svm::streamsvm::StreamSvm;
+use streamsvm::svm::learner::{AnyLearner, Variant};
 use streamsvm::svm::{HashSpec, SlackMode, TrainOptions};
 
 /// Default hash seed (spells "seed"); override with `--hash-seed`.
@@ -204,7 +209,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     });
 
     // Validate flags up front so no combination silently ignores them.
-    let mode = match args.str("mode", "filter").as_str() {
+    let variant: Variant = args.get("variant", Variant::Ball)?;
+    let device_capable = matches!(variant, Variant::Ball | Variant::Lookahead);
+    let mode = match args.str("mode", if device_capable { "filter" } else { "pure" }).as_str() {
         "filter" => ExecMode::Filter,
         "scan" => ExecMode::Scan,
         "pure" => ExecMode::Pure,
@@ -228,7 +235,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     // ---- sharded path: S parallel one-pass learners, merge-and-reduce
     let fit_span = streamsvm::obs::span("cli", "fit");
     let (model, merges) = if shards > 1 {
-        let rep = train_sharded(stream, dim, shards, train, args.get("queue", 64usize)?)?;
+        let rep =
+            train_sharded_variant(stream, dim, shards, variant, train, args.get("queue", 64usize)?)?;
         let max_r = rep.shard_radii.iter().cloned().fold(0.0f64, f64::max);
         println!(
             "sharded: {} examples over {shards} shards | max shard R={max_r:.4}",
@@ -239,7 +247,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         (rep.model, merges)
     } else {
         // ---- pipeline path, with optional periodic checkpoints
-        let cfg = PipelineConfig { train, mode, block: None, queue: args.get("queue", 4usize)? };
+        let cfg =
+            PipelineConfig { train, mode, variant, block: None, queue: args.get("queue", 4usize)? };
         let mut rt = open_runtime_opt(mode);
         let cfg = if rt.is_none() && mode != ExecMode::Pure {
             PipelineConfig { mode: ExecMode::Pure, ..cfg }
@@ -272,7 +281,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let eval_span = streamsvm::obs::span("cli", "eval");
     let test = eval_split(train.hash, &ds.test);
     println!(
-        "model: R={:.4} supports={} | test acc = {:.2}%",
+        "model: variant={} R={:.4} supports={} | test acc = {:.2}%",
+        model.variant().name(),
         model.radius(),
         model.num_support(),
         accuracy(&model, &test) * 100.0
@@ -291,7 +301,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let out = args.str("out", "model.meb");
         // record the Algorithm-2 merge count so a later `resume` keeps
         // reporting the paper's O(N/L) bound (0 for Algorithm 1)
-        let sk = MebSketch::from_model(&model, &name).with_merges(merges);
+        let sk = MebSketch::from_learner(&model, &name).with_merges(merges);
         sk.write_to(Path::new(&out))?;
         println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
     }
@@ -320,12 +330,14 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
     let train = if args.has("c") { train } else { train.with_c(table1::c_for(&name)) };
     let at: usize = args.get("at", usize::MAX)?;
     let dim = train.hash.map_or(ds.dim, |h| h.dim);
-    let mut model = StreamSvm::new(dim, train);
+    let variant: Variant = args.get("variant", Variant::Ball)?;
+    let mut model = AnyLearner::new(variant, dim, train);
     for e in hashed_stream(train.hash, stream_for(args, &ds)?).take(at) {
         model.observe_view(e.x.view(), e.y);
     }
+    model.finish();
     let out = args.str("out", "model.meb");
-    let sk = MebSketch::from_model(&model, &name);
+    let sk = MebSketch::from_learner(&model, &name);
     sk.write_to(Path::new(&out))?;
     println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
     let test = eval_split(train.hash, &ds.test);
@@ -337,6 +349,18 @@ fn cmd_resume(args: &Args) -> Result<()> {
     let from = args.str("from", "model.meb");
     let sk = MebSketch::read_from(Path::new(&from))?;
     println!("loaded {from}: {}", sk.summary());
+    // --variant is an assertion, not a selection: resume always replays
+    // with the algorithm recorded in the sketch's provenance.
+    if args.has("variant") {
+        let want: Variant = args.get("variant", sk.variant)?;
+        if want != sk.variant {
+            return Err(Error::config(format!(
+                "--variant {want} disagrees with the sketch's recorded variant \
+                 ({}); resume replays with the variant in provenance",
+                sk.variant
+            )));
+        }
+    }
     // Resume always uses the hash space recorded in provenance; explicit
     // flags must agree, never silently re-map the stream into a
     // different space (buckets would be unrelated coordinates).
@@ -355,12 +379,24 @@ fn cmd_resume(args: &Args) -> Result<()> {
         streamsvm::obs_warn!("cli", "sketch was trained on `{}`, resuming on `{name}`", sk.tag);
     }
     let ds = load_dataset_sized(&name, args.get("seed", 42u64)?, args.get("frac", 1.0)?)?;
-    let replay = if sk.ball.is_none() {
-        // empty sketch (no examples absorbed): replay the whole stream
-        // with the sketch's options, at the sketch's dimension when a
-        // hash space fixes it, else at the dataset's dimension
-        let dim = if sk.opts.hash.is_some() { sk.dim } else { ds.dim };
+    let replay = if sk.seen == 0 {
+        // Empty sketch (no examples absorbed): replay the whole stream
+        // with the sketch's options and variant. Ball-summary state is
+        // dimension-free, so an unhashed ball/lookahead sketch adopts
+        // the dataset's dimension; variant state (kernel choice,
+        // ellipsoid axes, ball budget) rides along unchanged and keeps
+        // the sketch's declared dimension.
+        let dim_free = matches!(sk.variant, Variant::Ball | Variant::Lookahead);
+        if !dim_free && sk.opts.hash.is_none() && ds.dim != sk.dim {
+            return Err(Error::config(format!(
+                "sketch dimension {} does not match dataset `{name}` dimension {}",
+                sk.dim, ds.dim
+            )));
+        }
+        let dim = if sk.opts.hash.is_some() || !dim_free { sk.dim } else { ds.dim };
         MebSketch::new(dim, None, 0, sk.opts, sk.tag.clone())
+            .with_variant(sk.variant, sk.extra.clone())
+            .with_merges(sk.merges)
     } else {
         if sk.opts.hash.is_none() && ds.dim != sk.dim {
             return Err(Error::config(format!(
@@ -371,13 +407,13 @@ fn cmd_resume(args: &Args) -> Result<()> {
         sk.clone()
     };
     let stream = hashed_stream(sk.opts.hash, stream_for(args, &ds)?);
-    // Route Algorithm-2 sketches through the lookahead resume so the
-    // merge count restored from provenance survives into `--out`.
-    let (model, merges) = if sk.opts.lookahead > 1 {
-        let m = resume_lookahead(&replay, stream);
-        (m.to_stream_svm(), m.num_merges())
-    } else {
-        (resume_fit(&replay, stream), 0)
+    // Variant-generic resume: the sketch's provenance selects the
+    // algorithm (ball-tagged Algorithm-2 sketches route through the
+    // lookahead path so the merge count survives into `--out`).
+    let model = resume_learner(&replay, stream)?;
+    let merges = match &model {
+        AnyLearner::Lookahead(m) => m.num_merges(),
+        _ => 0,
     };
     let test = eval_split(sk.opts.hash, &ds.test);
     println!(
@@ -390,7 +426,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
     );
     if args.has("out") {
         let out = args.str("out", "model.meb");
-        let sk2 = MebSketch::from_model(&model, &sk.tag).with_merges(merges);
+        let sk2 = MebSketch::from_learner(&model, &sk.tag).with_merges(merges);
         sk2.write_to(Path::new(&out))?;
         println!("wrote {out}: {}", sk2.summary());
     }
@@ -407,6 +443,17 @@ fn cmd_merge(args: &Args) -> Result<()> {
         let sk = MebSketch::read_from(Path::new(p))?;
         println!("  in  {p}: {}", sk.summary());
         sketches.push(sk);
+    }
+    // Like resume: --variant is an assertion against provenance (the
+    // pairwise same-variant gate inside merge_sketches still applies).
+    if args.has("variant") {
+        let want: Variant = args.get("variant", Variant::Ball)?;
+        if let Some(s) = sketches.iter().find(|s| s.variant != want) {
+            return Err(Error::config(format!(
+                "--variant {want} disagrees with input sketch (tag={}, variant={})",
+                s.tag, s.variant
+            )));
+        }
     }
     // Like resume: explicit hash flags must agree with provenance, never
     // be silently dropped.
@@ -460,10 +507,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         TrainOptions::default().with_c(table1::c_for(&name))
     }
     .with_hash(hash);
-    let model = StreamSvm::fit(ds.train.iter(), ds.dim, &train);
+    let variant: Variant = args.get("variant", Variant::Ball)?;
+    let model = AnyLearner::fit(ds.train.iter(), variant, ds.dim, train);
     println!(
-        "trained on {}: dim={} supports={} | test acc = {:.2}%",
+        "trained on {}: variant={} dim={} supports={} | test acc = {:.2}%",
         ds.name,
+        model.variant().name(),
         ds.dim,
         model.num_support(),
         accuracy(&model, &ds.test) * 100.0

@@ -36,6 +36,7 @@ use crate::data::Example;
 use crate::rng::Pcg32;
 use crate::server::cell::ModelCell;
 use crate::svm::ellipsoid::EllipsoidSvm;
+use crate::svm::learner::AnyLearner;
 use crate::svm::kernelfn::Kernel;
 use crate::svm::kernelized::KernelStreamSvm;
 use crate::svm::lookahead::LookaheadSvm;
@@ -182,13 +183,14 @@ pub fn run_profile(cfg: &ProfileConfig) -> ProfileReport {
     });
 
     // update: Algorithm-1 one-pass fit over the hashed stream.
-    let model = timed(&mut ph.update, "update", || {
+    let model: AnyLearner = timed(&mut ph.update, "update", || {
         let mut m = StreamSvm::new(cfg.hash_dim, opts);
         for e in &hashed {
             m.observe_view(e.x.view(), e.y);
         }
         m
-    });
+    })
+    .into();
 
     // distance: score every row against the trained ball via the same
     // snapshot path `/predict` serves from.
@@ -223,62 +225,36 @@ pub fn run_profile(cfg: &ProfileConfig) -> ProfileReport {
     std::hint::black_box(checksum);
 
     // Per-variant one-pass throughput (outside the phased section; the
-    // phase sum is compared against `total`, not against these).
+    // phase sum is compared against `total`, not against these). Every
+    // variant runs through the same [`AnyLearner`] observe/finish
+    // surface the pipeline and server use, so the numbers include the
+    // enum dispatch the production path pays. The label strings are the
+    // *legacy* report keys (`variants.streamsvm` …) pinned by the
+    // committed `BENCH_obs.json` baseline and the CI bench-diff gate —
+    // they intentionally differ from [`crate::svm::learner::Variant`]
+    // names (`ball` …).
     let mut variants = Vec::with_capacity(VARIANTS.len());
     {
         let _sp = crate::obs::span("profile", "variants");
-        let time_fit = |name: &'static str, f: &mut dyn FnMut()| {
+        let learners: [(&'static str, AnyLearner); 5] = [
+            ("streamsvm", StreamSvm::new(cfg.hash_dim, opts).into()),
+            (
+                "lookahead",
+                LookaheadSvm::new(cfg.hash_dim, opts.with_lookahead(cfg.lookahead)).into(),
+            ),
+            ("kernelized", KernelStreamSvm::new(Kernel::Linear, opts).into()),
+            ("ellipsoid", EllipsoidSvm::new(cfg.hash_dim, opts).into()),
+            ("multiball", MultiBallSvm::new(cfg.hash_dim, 4, MergePolicy::NearestBall, opts).into()),
+        ];
+        for (name, mut m) in learners {
             let _sp = crate::obs::span("profile", name);
             let t = Instant::now();
-            f();
-            rows as f64 / t.elapsed().as_secs_f64().max(1e-9)
-        };
-        variants.push((
-            "streamsvm",
-            time_fit("streamsvm", &mut || {
-                let mut m = StreamSvm::new(cfg.hash_dim, opts);
-                for e in &hashed {
-                    m.observe_view(e.x.view(), e.y);
-                }
-            }),
-        ));
-        variants.push((
-            "lookahead",
-            time_fit("lookahead", &mut || {
-                let mut m = LookaheadSvm::new(cfg.hash_dim, opts.with_lookahead(cfg.lookahead));
-                for e in &hashed {
-                    m.observe_view(e.x.view(), e.y);
-                }
-                m.finish();
-            }),
-        ));
-        variants.push((
-            "kernelized",
-            time_fit("kernelized", &mut || {
-                let mut m = KernelStreamSvm::new(Kernel::Linear, opts);
-                for e in &hashed {
-                    m.observe_view(e.x.view(), e.y);
-                }
-            }),
-        ));
-        variants.push((
-            "ellipsoid",
-            time_fit("ellipsoid", &mut || {
-                let mut m = EllipsoidSvm::new(cfg.hash_dim, opts);
-                for e in &hashed {
-                    m.observe_view(e.x.view(), e.y);
-                }
-            }),
-        ));
-        variants.push((
-            "multiball",
-            time_fit("multiball", &mut || {
-                let mut m = MultiBallSvm::new(cfg.hash_dim, 4, MergePolicy::NearestBall, opts);
-                for e in &hashed {
-                    m.observe_view(e.x.view(), e.y);
-                }
-            }),
-        ));
+            for e in &hashed {
+                m.observe_view(e.x.view(), e.y);
+            }
+            m.finish();
+            variants.push((name, rows as f64 / t.elapsed().as_secs_f64().max(1e-9)));
+        }
     }
 
     ProfileReport {

@@ -13,18 +13,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::data::FeaturesView;
-use crate::linalg;
 use crate::sketch::codec::MebSketch;
-use crate::svm::streamsvm::StreamSvm;
+use crate::svm::learner::{AnyLearner, Variant};
 
-/// One immutable published model: the serving weights plus the full
-/// durable sketch (so `/snapshot` serves the same bytes a `.meb` file
-/// would hold) and provenance for `/stats` and response metadata.
+/// One immutable published model: a frozen copy of the learner (so
+/// scoring runs the variant's own decision rule — kernel expansions and
+/// ellipsoid metrics included, not just a dense weight vector) plus the
+/// full durable sketch (so `/snapshot` serves the same bytes a `.meb`
+/// file would hold) and provenance for `/stats` and response metadata.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
-    /// Dense serving weights, always `dim` long (zeros before any data).
-    pub w: Vec<f32>,
+    /// Frozen copy of the learner at publish time; all scoring goes
+    /// through it so every variant serves its exact training-time scores.
+    pub model: AnyLearner,
     pub dim: usize,
+    /// Which algorithm produced this snapshot.
+    pub variant: Variant,
     /// Monotone publish counter; 1 is the snapshot the server started with.
     pub version: u64,
     /// Stream position of the learner when this snapshot was taken.
@@ -36,33 +40,31 @@ pub struct ModelSnapshot {
 }
 
 impl ModelSnapshot {
-    fn build(model: &StreamSvm, tag: &str, version: u64) -> Self {
-        let dim = model.dim();
-        let mut w = model.weights();
-        w.resize(dim, 0.0);
+    fn build(model: &AnyLearner, tag: &str, version: u64) -> Self {
         ModelSnapshot {
-            w,
-            dim,
+            dim: model.dim(),
+            variant: model.variant(),
             version,
             seen: model.examples_seen(),
             radius: model.radius(),
             supports: model.num_support(),
-            sketch: MebSketch::from_model(model, tag),
+            sketch: MebSketch::from_learner(model, tag),
+            model: model.clone(),
         }
     }
 
-    /// Raw margin of `x` against this snapshot's weights. Callers
+    /// Raw margin of `x` against this snapshot's model. Callers
     /// validate dimensions at the protocol boundary; a mismatch here is
     /// a bug, handled as an error response upstream.
     pub fn score(&self, x: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), self.dim);
-        linalg::dot(&self.w, x)
+        self.model.score(x)
     }
 
     /// O(nnz) margin for a sparse request payload (`idx`/`val` pairs,
     /// validated in-range at the protocol boundary).
     pub fn score_sparse(&self, idx: &[u32], val: &[f32]) -> f64 {
-        linalg::sparse_dot(&self.w, idx, val)
+        self.model.score_view(FeaturesView::Sparse { dim: self.dim, idx, val })
     }
 
     /// Margin for either payload shape.
@@ -86,7 +88,7 @@ pub struct ModelCell {
 
 impl ModelCell {
     /// Publish `model` as version 1.
-    pub fn new(model: &StreamSvm, tag: &str) -> Self {
+    pub fn new(model: &AnyLearner, tag: &str) -> Self {
         ModelCell {
             slot: RwLock::new(Arc::new(ModelSnapshot::build(model, tag, 1))),
             version: AtomicU64::new(1),
@@ -111,7 +113,7 @@ impl ModelCell {
     /// Single-publisher: only the trainer thread calls this, so the
     /// version counter advances *after* the swap — [`Self::version`]
     /// never reports a version that is not yet loadable.
-    pub fn publish(&self, model: &StreamSvm, tag: &str) -> u64 {
+    pub fn publish(&self, model: &AnyLearner, tag: &str) -> u64 {
         let version = self.version.load(Ordering::Acquire) + 1;
         let next = Arc::new(ModelSnapshot::build(model, tag, version));
         match self.slot.write() {
@@ -120,7 +122,7 @@ impl ModelCell {
         }
         self.version.store(version, Ordering::Release);
         self.publishes.fetch_add(1, Ordering::Relaxed);
-        crate::obs_debug!("server"; version = version, seen = model.examples_seen(), radius = model.radius(); "published model snapshot");
+        crate::obs_debug!("server"; version = version, variant = model.variant().name(), seen = model.examples_seen(), radius = model.radius(); "published model snapshot");
         version
     }
 
@@ -139,15 +141,17 @@ impl ModelCell {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::svm::kernelfn::Kernel;
+    use crate::svm::streamsvm::StreamSvm;
     use crate::svm::TrainOptions;
 
-    fn toy_model(n: usize) -> StreamSvm {
+    fn toy_model(n: usize) -> AnyLearner {
         let mut m = StreamSvm::new(2, TrainOptions::default());
         for i in 0..n {
             let v = 1.0 + i as f32;
             m.observe(&[v, -v], if i % 2 == 0 { 1.0 } else { -1.0 });
         }
-        m
+        m.into()
     }
 
     #[test]
@@ -157,7 +161,7 @@ mod tests {
         let s1 = cell.load();
         assert_eq!(s1.version, 1);
         assert_eq!(s1.dim, 2);
-        assert_eq!(s1.w.len(), 2);
+        assert_eq!(s1.variant, Variant::Ball);
         assert_eq!(s1.seen, 1);
 
         assert_eq!(cell.publishes(), 0, "construction is not a republish");
@@ -169,7 +173,8 @@ mod tests {
         let s2 = cell.load();
         assert_eq!(s2.version, 2);
         assert_eq!(s2.seen, 20);
-        assert_eq!(s2.w, m2.weights());
+        let probe = [0.7f32, 0.3];
+        assert_eq!(s2.score(&probe).to_bits(), m2.score(&probe).to_bits());
         // the old Arc is still intact for readers that grabbed it
         assert_eq!(s1.version, 1);
         assert_eq!(s1.seen, 1);
@@ -177,10 +182,9 @@ mod tests {
 
     #[test]
     fn empty_model_serves_zero_scores() {
-        let m = StreamSvm::new(3, TrainOptions::default());
+        let m: AnyLearner = StreamSvm::new(3, TrainOptions::default()).into();
         let cell = ModelCell::new(&m, "empty");
         let s = cell.load();
-        assert_eq!(s.w, vec![0.0; 3]);
         assert_eq!(s.score(&[1.0, 2.0, 3.0]), 0.0);
         assert!(s.sketch.ball.is_none());
     }
@@ -193,13 +197,46 @@ mod tests {
         let bytes = s.sketch.encode();
         let back = MebSketch::decode(&bytes).unwrap();
         assert_eq!(back, s.sketch);
-        assert_eq!(back.to_model().weights(), m.weights());
+        let restored = back.to_learner().unwrap();
+        let probe = [0.5f32, -0.25];
+        assert_eq!(restored.score(&probe).to_bits(), m.score(&probe).to_bits());
+    }
+
+    #[test]
+    fn nonlinear_snapshot_scores_with_the_kernel_expansion() {
+        let opts = TrainOptions::default();
+        let mut m = AnyLearner::with_kernel(
+            Variant::Kernelized,
+            2,
+            opts,
+            Kernel::Rbf { gamma: 0.5 },
+        );
+        for i in 0..30 {
+            let v = 0.1 * (1.0 + i as f32);
+            m.try_observe(FeaturesView::Dense(&[v, -v]), if i % 2 == 0 { 1.0 } else { -1.0 })
+                .unwrap();
+        }
+        let cell = ModelCell::new(&m, "rbf");
+        let s = cell.load();
+        assert_eq!(s.variant, Variant::Kernelized);
+        let probe = [0.3f32, 0.6];
+        // dense, sparse, and direct-learner scores all agree bit-for-bit
+        let direct = m.score(&probe);
+        assert_eq!(s.score(&probe).to_bits(), direct.to_bits());
+        assert_eq!(
+            s.score_sparse(&[0, 1], &[0.3, 0.6]).to_bits(),
+            direct.to_bits(),
+            "sparse request path diverged from the kernel expansion"
+        );
+        // the RBF sketch round-trips through the v4 exact-state section
+        let back = MebSketch::decode(&s.sketch.encode()).unwrap();
+        assert_eq!(back.to_learner().unwrap().score(&probe).to_bits(), direct.to_bits());
     }
 
     #[test]
     fn concurrent_readers_never_see_a_torn_model() {
-        // Publish models whose weights satisfy an invariant (w[0] == -w[1]);
-        // a torn read would break it.
+        // Publish models whose weights satisfy an invariant
+        // (score(e0) == -score(e1)); a torn read would break it.
         let cell = std::sync::Arc::new(ModelCell::new(&toy_model(1), "t"));
         let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         let readers: Vec<_> = (0..4)
@@ -216,7 +253,11 @@ mod tests {
                         let sc = s.score(&[1.0, 1.0]);
                         assert!(sc.is_finite());
                         // invariant of every published model below
-                        assert_eq!(s.w[0], -s.w[1], "torn snapshot");
+                        assert_eq!(
+                            s.score(&[1.0, 0.0]),
+                            -s.score(&[0.0, 1.0]),
+                            "torn snapshot"
+                        );
                         reads += 1;
                     }
                     reads

@@ -15,7 +15,8 @@
 //! Consistency story: handlers never touch the learner — they score
 //! against the latest *published* [`ModelCell`] snapshot, so a request
 //! can never observe a half-updated model. The trainer owns the
-//! [`StreamSvm`] exclusively and republishes a complete snapshot every
+//! [`AnyLearner`] exclusively (any of the five variants; `serve
+//! --variant` on the CLI) and republishes a complete snapshot every
 //! `republish_every` absorbed examples (and once more at shutdown), so
 //! accepted `/train` examples are never lost.
 //!
@@ -49,7 +50,7 @@ use crate::server::admission::{bounded, Bounded, Endpoint, ServerStats};
 use crate::server::cell::ModelCell;
 use crate::server::http::{self, HttpRequest, Limits};
 use crate::server::json::{self, Json};
-use crate::svm::streamsvm::StreamSvm;
+use crate::svm::learner::{AnyLearner, Variant};
 
 const JSON_CT: &str = "application/json";
 /// Upper bound on `/predict_batch` rows per request.
@@ -140,6 +141,9 @@ struct Shared {
     trained: AtomicU64,
     started: Instant,
     dim: usize,
+    /// Which algorithm the trainer runs (`serve --variant`); labels the
+    /// `/stats` payload and the `pallas_serve_variant` info gauge.
+    variant: Variant,
     tag: String,
     limits: Limits,
     /// Hash-on-ingest front-end (see [`ServerConfig::hash`]).
@@ -158,14 +162,14 @@ pub struct ServerHandle {
     shared: Arc<Shared>,
     acceptor: Option<JoinHandle<()>>,
     handlers: Vec<JoinHandle<()>>,
-    trainer: Option<JoinHandle<StreamSvm>>,
+    trainer: Option<JoinHandle<AnyLearner>>,
 }
 
 /// Final accounting returned by [`ServerHandle::shutdown`].
 #[derive(Debug)]
 pub struct ServerReport {
     /// The trainer's final model (every accepted `/train` example absorbed).
-    pub model: StreamSvm,
+    pub model: AnyLearner,
     pub trained: u64,
     /// Last published snapshot version.
     pub version: u64,
@@ -179,10 +183,13 @@ pub struct ServerReport {
     pub stream_done: bool,
 }
 
-/// Start serving `model` according to `cfg`. Returns once the listener
-/// is bound and all threads are up; serving continues until
+/// Start serving `model` according to `cfg`. Any learner variant can be
+/// served — pass a concrete learner (the `From` impls convert) or an
+/// [`AnyLearner`] built from `serve --variant`. Returns once the
+/// listener is bound and all threads are up; serving continues until
 /// [`ServerHandle::shutdown`] (or process exit).
-pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
+pub fn serve(model: impl Into<AnyLearner>, cfg: ServerConfig) -> Result<ServerHandle> {
+    let model: AnyLearner = model.into();
     if cfg.threads == 0 {
         return Err(Error::config("server threads must be >= 1"));
     }
@@ -221,7 +228,7 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
     // ... and span-tree tracing, so slow requests tail-sample into the
     // retained ring behind `GET /debug/trace/<id>`.
     crate::obs::set_tracing(true);
-    crate::obs_info!("server"; addr = addr.to_string(), threads = cfg.threads, republish_every = cfg.republish_every; "listening");
+    crate::obs_info!("server"; addr = addr.to_string(), variant = model.variant().name(), threads = cfg.threads, republish_every = cfg.republish_every; "listening");
     let (train_tx, train_rx) = bounded::<TrainItem>(cfg.train_queue.max(1));
     let shared = Arc::new(Shared {
         cell: ModelCell::new(&model, &cfg.tag),
@@ -232,6 +239,7 @@ pub fn serve(model: StreamSvm, cfg: ServerConfig) -> Result<ServerHandle> {
         trained: AtomicU64::new(0),
         started: Instant::now(),
         dim: model.dim(),
+        variant: model.variant(),
         tag: cfg.tag.clone(),
         limits: cfg.limits,
         hasher: cfg.hash.map(FeatureHasher::from_spec),
@@ -819,8 +827,9 @@ fn stats_json(sh: &Shared) -> String {
     };
     let mut out = String::with_capacity(1024);
     out.push_str(&format!(
-        r#"{{"version":{},"generation":{},"republishes":{},"seen":{},"radius":{},"supports":{},"trained":{},"stream":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
+        r#"{{"version":{},"variant":"{}","generation":{},"republishes":{},"seen":{},"radius":{},"supports":{},"trained":{},"stream":{},"hash_dim":{},"uptime_s":{},"conns":{{"accepted":{},"shed":{}}},"endpoints":{{"#,
         snap.version,
+        sh.variant.name(),
         sh.cell.version(),
         sh.cell.publishes(),
         snap.seen,
@@ -876,6 +885,12 @@ fn metrics_text(sh: &Shared) -> String {
     );
     w.header("pallas_uptime_seconds", "Seconds since the server started.", "gauge");
     w.sample("pallas_uptime_seconds", &[], sh.started.elapsed().as_secs_f64());
+    w.header(
+        "pallas_serve_variant",
+        "Constant 1; the served learner variant rides on the label.",
+        "gauge",
+    );
+    w.sample("pallas_serve_variant", &[("variant", sh.variant.name())], 1.0);
     w.header(
         "pallas_model_generation",
         "Version of the currently published model snapshot.",
@@ -995,12 +1010,12 @@ fn trace_json() -> String {
 /// persisted `.meb` reflects the fully-streamed model.
 fn trainer_loop(
     sh: Arc<Shared>,
-    mut model: StreamSvm,
+    mut model: AnyLearner,
     rx: Receiver<TrainItem>,
     republish_every: usize,
     snapshot: Option<PathBuf>,
     mut stream: Option<FileStream<std::fs::File>>,
-) -> StreamSvm {
+) -> AnyLearner {
     let mut since_publish = 0usize;
     // Stream rows the trainer's validated entry point rejected (counted
     // into the live `skipped` stat so `rows + skipped` always accounts
@@ -1012,7 +1027,7 @@ fn trainer_loop(
     // Queue items carry the admitting request's trace: binding it here
     // parents the absorb span (and the ball-geometry spans under it)
     // into the tree the client fetches at `/debug/trace/<id>`.
-    fn absorb(model: &mut StreamSvm, x: Features, y: f32, trace: Option<&Trace>) -> bool {
+    fn absorb(model: &mut AnyLearner, x: Features, y: f32, trace: Option<&Trace>) -> bool {
         let _bound = trace.map(Trace::bind);
         let _span = crate::obs::span("server", "train_absorb");
         match model.try_observe(x.view(), y) {
@@ -1108,7 +1123,7 @@ fn trainer_loop(
     model
 }
 
-fn publish(sh: &Shared, model: &StreamSvm, snapshot: &Option<PathBuf>) {
+fn publish(sh: &Shared, model: &AnyLearner, snapshot: &Option<PathBuf>) {
     sh.cell.publish(model, &sh.tag);
     if let Some(path) = snapshot {
         if let Err(e) = sh.cell.load().sketch.write_to(path) {
@@ -1120,6 +1135,7 @@ fn publish(sh: &Shared, model: &StreamSvm, snapshot: &Option<PathBuf>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::svm::streamsvm::StreamSvm;
     use crate::svm::TrainOptions;
 
     fn toy_model() -> StreamSvm {
@@ -1148,7 +1164,7 @@ mod tests {
         train_queue: usize,
         hash: Option<HashSpec>,
     ) -> (Arc<Shared>, Receiver<TrainItem>) {
-        let model = toy_model();
+        let model = AnyLearner::from(toy_model());
         let (train_tx, train_rx) = bounded(train_queue);
         let sh = Arc::new(Shared {
             cell: ModelCell::new(&model, "t"),
@@ -1159,6 +1175,7 @@ mod tests {
             trained: AtomicU64::new(0),
             started: Instant::now(),
             dim: 2,
+            variant: model.variant(),
             tag: "t".into(),
             limits: Limits::default(),
             hasher: hash.map(FeatureHasher::from_spec),
@@ -1393,6 +1410,7 @@ mod tests {
         assert_eq!(status, 200);
         let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(v.get("version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("variant").and_then(|x| x.as_str()), Some("ball"));
         // no --train-stream configured → explicit null, not a stale object
         assert_eq!(v.get("stream"), Some(&Json::Null));
         let eps = v.get("endpoints").unwrap();
@@ -1408,8 +1426,8 @@ mod tests {
     #[test]
     fn stats_reports_generation_and_republishes() {
         let (sh, _rx) = test_shared(4);
-        sh.cell.publish(&toy_model(), "t");
-        sh.cell.publish(&toy_model(), "t");
+        sh.cell.publish(&AnyLearner::from(toy_model()), "t");
+        sh.cell.publish(&AnyLearner::from(toy_model()), "t");
         let (status, body) = route_raw(&sh, "GET", "/stats", b"");
         assert_eq!(status, 200);
         let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
@@ -1446,8 +1464,9 @@ mod tests {
         // latency histogram buckets from the log₂ layout, +Inf included
         assert!(text.contains("pallas_request_latency_seconds_bucket{endpoint=\"predict\",le=\"+Inf\"} 2\n"));
         assert!(text.contains("pallas_request_latency_seconds_count{endpoint=\"predict\"} 2\n"));
-        // build metadata rides an info-style gauge
+        // build metadata and the served variant ride info-style gauges
         assert!(text.contains("pallas_build_info{version=\""), "{text}");
+        assert!(text.contains("pallas_serve_variant{variant=\"ball\"} 1\n"), "{text}");
         assert!(text.contains(concat!("version=\"", env!("CARGO_PKG_VERSION"), "\"")));
         // hot-swap bookkeeping and the training gauges are exposed
         assert!(text.contains("pallas_model_generation 1\n"));

@@ -19,7 +19,7 @@
 //! merge_iters(u64) · merges(u64) · has_hash(u8) · [hash_seed(u64) ·
 //! hash_dim(u64)] · seen(u64) · dim(u64) · has_ball(u8) ·
 //! [m(u64) · r(f64) · xi2(f64) · sigma(f64) · wnorm2(f64) ·
-//! v(dim × f32)]`.
+//! v(dim × f32)] · variant(u8) · has_extra(u8) · [extra]`.
 //!
 //! Version 2 serializes the ball's *factored* center `w = σ·v` (plus
 //! the cached `‖w‖²`) exactly as the live state holds it, so decode →
@@ -28,19 +28,35 @@
 //! adds two provenance fields: the Algorithm-2 merge count (so a
 //! resumed run reports the paper's O(N/L) bound correctly) and the
 //! feature-hashing spec `(seed, D)` (so resume and merge can refuse
-//! mismatched hash spaces). Version-1 sketches (explicit dense `w`)
-//! and version-2 sketches still decode (`merges = 0`, no hash).
+//! mismatched hash spaces). Version 4 adds *variant* provenance: a tag
+//! naming which of the five learners the sketch was taken from, plus —
+//! for the variants whose live state is more than one ball — an exact
+//! per-variant payload section ([`VariantExtra`]), so `to_learner`
+//! restores a kernelized core set, an ellipsoid metric, or a multiball
+//! list bit-for-bit. The top-level ball stays the variant's *summary*
+//! ball, which is what cross-shard merge aggregates. Version-1 sketches
+//! (explicit dense `w`), version-2 and version-3 sketches still decode
+//! (`merges = 0` / no hash where absent, and always as the `ball`
+//! variant with no extra section).
 
 use std::path::Path;
 
+use crate::data::{Features, FeaturesView};
 use crate::error::{Error, Result};
 use crate::svm::ball::BallState;
+use crate::svm::ellipsoid::EllipsoidSvm;
+use crate::svm::kernelfn::Kernel;
+use crate::svm::kernelized::KernelStreamSvm;
+use crate::svm::learner::{AnyLearner, Variant};
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::multiball::{MergePolicy, MultiBallSvm};
 use crate::svm::streamsvm::StreamSvm;
 use crate::svm::{HashSpec, SlackMode, TrainOptions};
 
-/// Current wire-format version (3 = merge-count + hash provenance;
-/// 2 = lazily-scaled center; 1 = explicit dense `w`; all readable).
-pub const SKETCH_VERSION: u16 = 3;
+/// Current wire-format version (4 = variant tag + per-variant payload;
+/// 3 = merge-count + hash provenance; 2 = lazily-scaled center;
+/// 1 = explicit dense `w`; all readable).
+pub const SKETCH_VERSION: u16 = 4;
 
 const MAGIC: &[u8; 4] = b"MEBS";
 /// Fixed header bytes before the payload.
@@ -67,6 +83,60 @@ pub struct MebSketch {
     /// [`crate::svm::lookahead::LookaheadSvm::from_ball`] so the paper's
     /// O(N/L) merge count survives an interruption.
     pub merges: usize,
+    /// Which learner the sketch was taken from. Pre-v4 sketches decode
+    /// as [`Variant::Ball`]. Resume must agree with this tag; merge
+    /// refuses to fold sketches of different variants.
+    pub variant: Variant,
+    /// Exact live state beyond the summary ball, for the variants that
+    /// carry more than one ball's worth ([`Variant::Kernelized`],
+    /// [`Variant::Ellipsoid`], [`Variant::Multiball`]). `None` for ball
+    /// and lookahead sketches, whose summary ball *is* the whole state.
+    pub extra: Option<VariantExtra>,
+}
+
+/// Per-variant exact state section of a v4 sketch. Every field is
+/// bit-copied from / into the live learner (see each variant's
+/// `from_parts`), so a decoded learner scores and continues training
+/// identically to the one that was encoded.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VariantExtra {
+    /// [`KernelStreamSvm`]: kernel, core set (arriving representation
+    /// preserved — sparse rows stay sparse — with cached `‖x‖²`), signed
+    /// coefficients, and the incrementally-maintained center norm.
+    Kernelized {
+        kernel: Kernel,
+        /// Whether the dimension was pinned (by construction or a first
+        /// example); a pinned model's dimension is the sketch's `dim`.
+        pinned: bool,
+        svs: Vec<(Features, f64)>,
+        alpha: Vec<f64>,
+        feat_norm2: f64,
+        r: f64,
+        xi2: f64,
+    },
+    /// [`EllipsoidSvm`]: the factored center `w = σ·v`, the per-axis
+    /// metric scales, and the cached metric norm (`inv_s2` is
+    /// recomputed bit-identically on decode).
+    Ellipsoid {
+        adapt: bool,
+        v: Vec<f32>,
+        sigma: f64,
+        s: Vec<f64>,
+        wnorm2s: f64,
+        r: f64,
+        xi2: f64,
+        m: usize,
+    },
+    /// [`MultiBallSvm`]: the live ball list plus the merge cache *when
+    /// it was materialized* — scoring switches between the merged ball
+    /// and the max-margin vote on exactly that flag, so the cache state
+    /// must survive the round-trip for scores to stay bit-identical.
+    Multiball {
+        max_balls: usize,
+        policy: MergePolicy,
+        balls: Vec<BallState>,
+        merged: Option<BallState>,
+    },
 }
 
 /// FNV-1a 64-bit — tiny, deterministic, dependency-free integrity check.
@@ -117,6 +187,30 @@ impl<'a> Reader<'a> {
         Ok(f64::from_bits(self.u64(what)?))
     }
 
+    /// `n` consecutive `f32` bit patterns.
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let b = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| Error::sketch(format!("{what} length {n} overflows")))?,
+            what,
+        )?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// `n` consecutive `f64` bit patterns.
+    fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let b = self.take(
+            n.checked_mul(8)
+                .ok_or_else(|| Error::sketch(format!("{what} length {n} overflows")))?,
+            what,
+        )?;
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
     fn done(&self) -> bool {
         self.pos == self.buf.len()
     }
@@ -124,6 +218,213 @@ impl<'a> Reader<'a> {
 
 fn usize_of(v: u64, what: &str) -> Result<usize> {
     usize::try_from(v).map_err(|_| Error::sketch(format!("{what} {v} overflows usize")))
+}
+
+/// Serialize a full factored ball (unlike the top-level summary ball,
+/// these carry their own dimension so the multiball list is
+/// self-describing).
+fn put_ball(p: &mut Vec<u8>, b: &BallState) {
+    p.extend_from_slice(&(b.m as u64).to_le_bytes());
+    p.extend_from_slice(&b.r.to_bits().to_le_bytes());
+    p.extend_from_slice(&b.xi2.to_bits().to_le_bytes());
+    p.extend_from_slice(&b.sigma().to_bits().to_le_bytes());
+    p.extend_from_slice(&b.wnorm2().to_bits().to_le_bytes());
+    p.extend_from_slice(&(b.dim() as u64).to_le_bytes());
+    for &v in b.direction() {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn read_ball(r: &mut Reader<'_>, expect_dim: usize) -> Result<BallState> {
+    let m = usize_of(r.u64("ball m")?, "ball m")?;
+    let rad = r.f64("ball r")?;
+    let xi2 = r.f64("ball xi2")?;
+    let sigma = r.f64("ball sigma")?;
+    let wnorm2 = r.f64("ball wnorm2")?;
+    let dim = usize_of(r.u64("ball dim")?, "ball dim")?;
+    if dim != expect_dim {
+        return Err(Error::sketch(format!(
+            "embedded ball has dimension {dim} but the sketch declares {expect_dim}"
+        )));
+    }
+    let v = r.f32s(dim, "ball weights")?;
+    Ok(BallState::from_scaled(v, sigma, wnorm2, rad, xi2, m))
+}
+
+/// Serialize features *in their arriving representation* (the
+/// kernelized core set keys kernel evaluations off stored non-zeros,
+/// so dense-vs-sparse must survive the round-trip bit-for-bit).
+fn put_features(p: &mut Vec<u8>, f: &Features) {
+    match f.view() {
+        FeaturesView::Dense(xs) => {
+            p.push(0);
+            p.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+            for &x in xs {
+                p.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        FeaturesView::Sparse { dim, idx, val } => {
+            p.push(1);
+            p.extend_from_slice(&(dim as u64).to_le_bytes());
+            p.extend_from_slice(&(idx.len() as u64).to_le_bytes());
+            for &i in idx {
+                p.extend_from_slice(&i.to_le_bytes());
+            }
+            for &x in val {
+                p.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+    }
+}
+
+fn read_features(r: &mut Reader<'_>) -> Result<Features> {
+    match r.u8("features repr")? {
+        0 => {
+            let n = usize_of(r.u64("dense length")?, "dense length")?;
+            Ok(Features::Dense(r.f32s(n, "dense values")?))
+        }
+        1 => {
+            let dim = usize_of(r.u64("sparse dim")?, "sparse dim")?;
+            let nnz = usize_of(r.u64("sparse nnz")?, "sparse nnz")?;
+            if nnz > dim {
+                return Err(Error::sketch(format!("sparse nnz {nnz} exceeds dim {dim}")));
+            }
+            let ib = r.take(
+                nnz.checked_mul(4)
+                    .ok_or_else(|| Error::sketch(format!("sparse nnz {nnz} overflows")))?,
+                "sparse indices",
+            )?;
+            let idx: Vec<u32> = ib
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            // validate before Features::sparse, whose invariants assert
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::sketch("sparse indices are not strictly increasing"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= dim {
+                    return Err(Error::sketch(format!(
+                        "sparse index {last} out of range for dim {dim}"
+                    )));
+                }
+            }
+            let val = r.f32s(nnz, "sparse values")?;
+            Ok(Features::sparse(dim, idx, val))
+        }
+        other => Err(Error::sketch(format!("unknown features repr byte {other}"))),
+    }
+}
+
+fn put_kernel(p: &mut Vec<u8>, k: Kernel) {
+    match k {
+        Kernel::Linear => p.push(0),
+        Kernel::Rbf { gamma } => {
+            p.push(1);
+            p.extend_from_slice(&gamma.to_bits().to_le_bytes());
+        }
+        Kernel::Poly { degree, coef } => {
+            p.push(2);
+            p.extend_from_slice(&degree.to_le_bytes());
+            p.extend_from_slice(&coef.to_bits().to_le_bytes());
+        }
+    }
+}
+
+fn read_kernel(r: &mut Reader<'_>) -> Result<Kernel> {
+    match r.u8("kernel kind")? {
+        0 => Ok(Kernel::Linear),
+        1 => Ok(Kernel::Rbf { gamma: r.f64("rbf gamma")? }),
+        2 => {
+            let degree = r.u32("poly degree")?;
+            let coef = r.f64("poly coef")?;
+            Ok(Kernel::Poly { degree, coef })
+        }
+        other => Err(Error::sketch(format!("unknown kernel kind byte {other}"))),
+    }
+}
+
+/// Decode the per-variant exact-state section of a v4 payload.
+fn read_extra(r: &mut Reader<'_>, variant: Variant, dim: usize) -> Result<VariantExtra> {
+    match variant {
+        Variant::Kernelized => {
+            let kernel = read_kernel(r)?;
+            let pinned = match r.u8("pinned")? {
+                0 => false,
+                1 => true,
+                other => return Err(Error::sketch(format!("bad pinned byte {other}"))),
+            };
+            let feat_norm2 = r.f64("feat_norm2")?;
+            let rad = r.f64("kernelized r")?;
+            let xi2 = r.f64("kernelized xi2")?;
+            let n = usize_of(r.u64("core-set size")?, "core-set size")?;
+            let mut svs = Vec::with_capacity(n.min(1 << 20));
+            let mut alpha = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let x = read_features(r)?;
+                if pinned && x.len() != dim {
+                    return Err(Error::sketch(format!(
+                        "core point has dimension {} but the sketch declares {dim}",
+                        x.len()
+                    )));
+                }
+                let norm2 = r.f64("core norm2")?;
+                svs.push((x, norm2));
+                alpha.push(r.f64("alpha")?);
+            }
+            Ok(VariantExtra::Kernelized { kernel, pinned, svs, alpha, feat_norm2, r: rad, xi2 })
+        }
+        Variant::Ellipsoid => {
+            let adapt = match r.u8("adapt")? {
+                0 => false,
+                1 => true,
+                other => return Err(Error::sketch(format!("bad adapt byte {other}"))),
+            };
+            let sigma = r.f64("ellipsoid sigma")?;
+            let wnorm2s = r.f64("wnorm2s")?;
+            let rad = r.f64("ellipsoid r")?;
+            let xi2 = r.f64("ellipsoid xi2")?;
+            let m = usize_of(r.u64("ellipsoid m")?, "ellipsoid m")?;
+            let v = r.f32s(dim, "ellipsoid direction")?;
+            let s = r.f64s(dim, "ellipsoid axes")?;
+            for (j, &sj) in s.iter().enumerate() {
+                if !(sj > 0.0) || !sj.is_finite() {
+                    return Err(Error::sketch(format!("axis scale s[{j}] = {sj} is not positive")));
+                }
+            }
+            Ok(VariantExtra::Ellipsoid { adapt, v, sigma, s, wnorm2s, r: rad, xi2, m })
+        }
+        Variant::Multiball => {
+            let max_balls = usize_of(r.u64("max_balls")?, "max_balls")?;
+            if max_balls == 0 {
+                return Err(Error::sketch("multiball budget L must be >= 1"));
+            }
+            let policy = match r.u8("merge policy")? {
+                0 => MergePolicy::NearestBall,
+                1 => MergePolicy::NewBallMergeClosest,
+                other => return Err(Error::sketch(format!("unknown merge policy byte {other}"))),
+            };
+            let n = usize_of(r.u64("ball count")?, "ball count")?;
+            if n > max_balls {
+                return Err(Error::sketch(format!(
+                    "multiball sketch holds {n} balls with budget L={max_balls}"
+                )));
+            }
+            let mut balls = Vec::with_capacity(n);
+            for _ in 0..n {
+                balls.push(read_ball(r, dim)?);
+            }
+            let merged = match r.u8("has_merged")? {
+                0 => None,
+                1 => Some(read_ball(r, dim)?),
+                other => return Err(Error::sketch(format!("bad has_merged byte {other}"))),
+            };
+            Ok(VariantExtra::Multiball { max_balls, policy, balls, merged })
+        }
+        v => Err(Error::sketch(format!("{v} sketches carry no exact-state section"))),
+    }
 }
 
 impl MebSketch {
@@ -138,13 +439,29 @@ impl MebSketch {
         if let Some(b) = &ball {
             debug_assert_eq!(b.dim(), dim, "ball/sketch dim mismatch");
         }
-        MebSketch { dim, ball, seen, opts, tag: tag.into(), merges: 0 }
+        MebSketch {
+            dim,
+            ball,
+            seen,
+            opts,
+            tag: tag.into(),
+            merges: 0,
+            variant: Variant::Ball,
+            extra: None,
+        }
     }
 
     /// Record the Algorithm-2 merge count in provenance (builder-style;
     /// Algorithm-1 sketches leave it at 0).
     pub fn with_merges(mut self, merges: usize) -> Self {
         self.merges = merges;
+        self
+    }
+
+    /// Set the variant tag and its exact-state section (builder-style).
+    pub fn with_variant(mut self, variant: Variant, extra: Option<VariantExtra>) -> Self {
+        self.variant = variant;
+        self.extra = extra;
         self
     }
 
@@ -159,15 +476,159 @@ impl MebSketch {
         )
     }
 
+    /// Snapshot any live learner: the top-level ball is the variant's
+    /// *summary* ball (what cross-shard merge aggregates), the variant
+    /// tag + extra section carry the exact state [`Self::to_learner`]
+    /// restores. Lookahead learners snapshot their absorbed ball only —
+    /// call `finish()` first (or snapshot at a buffer-empty position) so
+    /// no buffered survivors are dropped.
+    pub fn from_learner(model: &AnyLearner, tag: impl Into<String>) -> Self {
+        let base = MebSketch::new(
+            model.dim(),
+            model.summary_ball(),
+            model.examples_seen(),
+            *model.options(),
+            tag,
+        );
+        match model {
+            AnyLearner::Ball(_) => base,
+            AnyLearner::Lookahead(m) => base
+                .with_merges(m.num_merges())
+                .with_variant(Variant::Lookahead, None),
+            AnyLearner::Kernelized(m) => base.with_variant(
+                Variant::Kernelized,
+                Some(VariantExtra::Kernelized {
+                    kernel: m.kernel(),
+                    pinned: m.dim().is_some(),
+                    svs: m.support_points().map(|(x, n2)| (x.clone(), n2)).collect(),
+                    alpha: m.coefficients().to_vec(),
+                    feat_norm2: m.feat_norm2(),
+                    r: m.radius(),
+                    xi2: m.xi2(),
+                }),
+            ),
+            AnyLearner::Ellipsoid(m) => base.with_variant(
+                Variant::Ellipsoid,
+                Some(VariantExtra::Ellipsoid {
+                    adapt: m.is_adaptive(),
+                    v: m.direction().to_vec(),
+                    sigma: m.sigma(),
+                    s: m.axes().to_vec(),
+                    wnorm2s: m.wnorm2_scaled(),
+                    r: m.radius(),
+                    xi2: m.xi2(),
+                    m: m.num_support(),
+                }),
+            ),
+            AnyLearner::Multiball(m) => base.with_variant(
+                Variant::Multiball,
+                Some(VariantExtra::Multiball {
+                    max_balls: m.max_balls(),
+                    policy: m.policy(),
+                    balls: m.balls().to_vec(),
+                    merged: m.merged_cached().cloned(),
+                }),
+            ),
+        }
+    }
+
     /// Rebuild the live model. The result is bit-identical to the model
     /// the sketch was taken from: feeding it the remaining stream
     /// reproduces an uninterrupted run exactly.
+    ///
+    /// This is the *ball* view: for a non-ball variant it rebuilds an
+    /// Algorithm-1 learner from the summary ball. Use
+    /// [`Self::to_learner`] to restore the exact variant.
     pub fn to_model(&self) -> StreamSvm {
         let mut model = StreamSvm::new(self.dim, self.opts);
         if let Some(b) = &self.ball {
             model.set_ball(b.clone(), self.seen);
         }
         model
+    }
+
+    /// Rebuild the exact learner the sketch's variant tag names. The
+    /// result scores bit-identically to the learner
+    /// [`Self::from_learner`] encoded, and continues training
+    /// identically. Errors if a kernelized/ellipsoid/multiball sketch
+    /// is missing its exact-state section.
+    pub fn to_learner(&self) -> Result<AnyLearner> {
+        match (self.variant, &self.extra) {
+            (Variant::Ball, _) => Ok(AnyLearner::Ball(self.to_model())),
+            (Variant::Lookahead, _) => Ok(AnyLearner::Lookahead(match &self.ball {
+                Some(b) => LookaheadSvm::from_ball(
+                    self.dim,
+                    self.opts,
+                    b.clone(),
+                    self.seen,
+                    self.merges,
+                ),
+                None => LookaheadSvm::new(self.dim, self.opts),
+            })),
+            (
+                Variant::Kernelized,
+                Some(VariantExtra::Kernelized { kernel, pinned, svs, alpha, feat_norm2, r, xi2 }),
+            ) => {
+                if svs.len() != alpha.len() {
+                    return Err(Error::sketch(format!(
+                        "kernelized sketch has {} core points but {} coefficients",
+                        svs.len(),
+                        alpha.len()
+                    )));
+                }
+                Ok(AnyLearner::Kernelized(KernelStreamSvm::from_parts(
+                    *kernel,
+                    pinned.then_some(self.dim),
+                    svs.clone(),
+                    alpha.clone(),
+                    *feat_norm2,
+                    *r,
+                    *xi2,
+                    self.opts,
+                    self.seen,
+                )))
+            }
+            (
+                Variant::Ellipsoid,
+                Some(VariantExtra::Ellipsoid { adapt, v, sigma, s, wnorm2s, r, xi2, m }),
+            ) => {
+                if v.len() != self.dim || s.len() != self.dim {
+                    return Err(Error::sketch(format!(
+                        "ellipsoid sketch state has dimension {}/{} but the sketch declares {}",
+                        v.len(),
+                        s.len(),
+                        self.dim
+                    )));
+                }
+                Ok(AnyLearner::Ellipsoid(EllipsoidSvm::from_parts(
+                    self.dim, self.opts, *adapt, v.clone(), *sigma, s.clone(), *wnorm2s, *r,
+                    *xi2, *m, self.seen,
+                )))
+            }
+            (
+                Variant::Multiball,
+                Some(VariantExtra::Multiball { max_balls, policy, balls, merged }),
+            ) => {
+                if *max_balls == 0 || balls.len() > *max_balls {
+                    return Err(Error::sketch(format!(
+                        "multiball sketch holds {} balls with budget L={max_balls}",
+                        balls.len()
+                    )));
+                }
+                Ok(AnyLearner::Multiball(MultiBallSvm::from_parts(
+                    self.dim,
+                    *max_balls,
+                    *policy,
+                    self.opts,
+                    balls.clone(),
+                    merged.clone(),
+                    self.seen,
+                )))
+            }
+            (v, _) => Err(Error::sketch(format!(
+                "{v} sketch is missing its exact-state section"
+            ))),
+        }
     }
 
     /// Ball radius (0 for an empty sketch) — convenience for reporting.
@@ -198,8 +659,9 @@ impl MebSketch {
             None => String::new(),
         };
         format!(
-            "tag={} dim={} seen={} supports={} R={:.4} C={} slack={:?}{hash}",
+            "tag={} variant={} dim={} seen={} supports={} R={:.4} C={} slack={:?}{hash}",
             if self.tag.is_empty() { "-" } else { &self.tag },
+            self.variant,
             self.dim,
             self.seen,
             self.num_support(),
@@ -243,6 +705,69 @@ impl MebSketch {
                 p.extend_from_slice(&b.wnorm2().to_bits().to_le_bytes());
                 for &v in b.direction() {
                     p.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+        // v4: variant tag + exact-state section
+        p.push(self.variant.tag());
+        match &self.extra {
+            None => p.push(0),
+            Some(extra) => {
+                p.push(1);
+                match extra {
+                    VariantExtra::Kernelized {
+                        kernel,
+                        pinned,
+                        svs,
+                        alpha,
+                        feat_norm2,
+                        r,
+                        xi2,
+                    } => {
+                        put_kernel(&mut p, *kernel);
+                        p.push(u8::from(*pinned));
+                        p.extend_from_slice(&feat_norm2.to_bits().to_le_bytes());
+                        p.extend_from_slice(&r.to_bits().to_le_bytes());
+                        p.extend_from_slice(&xi2.to_bits().to_le_bytes());
+                        p.extend_from_slice(&(svs.len() as u64).to_le_bytes());
+                        for ((x, norm2), a) in svs.iter().zip(alpha) {
+                            put_features(&mut p, x);
+                            p.extend_from_slice(&norm2.to_bits().to_le_bytes());
+                            p.extend_from_slice(&a.to_bits().to_le_bytes());
+                        }
+                    }
+                    VariantExtra::Ellipsoid { adapt, v, sigma, s, wnorm2s, r, xi2, m } => {
+                        p.push(u8::from(*adapt));
+                        p.extend_from_slice(&sigma.to_bits().to_le_bytes());
+                        p.extend_from_slice(&wnorm2s.to_bits().to_le_bytes());
+                        p.extend_from_slice(&r.to_bits().to_le_bytes());
+                        p.extend_from_slice(&xi2.to_bits().to_le_bytes());
+                        p.extend_from_slice(&(*m as u64).to_le_bytes());
+                        for &x in v {
+                            p.extend_from_slice(&x.to_bits().to_le_bytes());
+                        }
+                        for &x in s {
+                            p.extend_from_slice(&x.to_bits().to_le_bytes());
+                        }
+                    }
+                    VariantExtra::Multiball { max_balls, policy, balls, merged } => {
+                        p.extend_from_slice(&(*max_balls as u64).to_le_bytes());
+                        p.push(match policy {
+                            MergePolicy::NearestBall => 0,
+                            MergePolicy::NewBallMergeClosest => 1,
+                        });
+                        p.extend_from_slice(&(balls.len() as u64).to_le_bytes());
+                        for b in balls {
+                            put_ball(&mut p, b);
+                        }
+                        match merged {
+                            None => p.push(0),
+                            Some(b) => {
+                                p.push(1);
+                                put_ball(&mut p, b);
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -359,11 +884,24 @@ impl MebSketch {
             }
             other => return Err(Error::sketch(format!("bad has_ball byte {other}"))),
         };
+        // v4: variant tag + exact-state section; older sketches are
+        // always Algorithm-1 ball snapshots.
+        let (variant, extra) = if version >= 4 {
+            let variant = Variant::from_tag(r.u8("variant")?)?;
+            let extra = match r.u8("has_extra")? {
+                0 => None,
+                1 => Some(read_extra(&mut r, variant, dim)?),
+                other => return Err(Error::sketch(format!("bad has_extra byte {other}"))),
+            };
+            (variant, extra)
+        } else {
+            (Variant::Ball, None)
+        };
         if !r.done() {
             return Err(Error::sketch("trailing bytes after sketch payload"));
         }
         let opts = TrainOptions { c, slack_mode, lookahead, merge_iters, hash };
-        Ok(MebSketch { dim, ball, seen, opts, tag, merges })
+        Ok(MebSketch { dim, ball, seen, opts, tag, merges, variant, extra })
     }
 
     /// Write atomically: encode to `<path>.tmp`, then rename over `path`,
@@ -637,5 +1175,158 @@ mod tests {
         assert!(h(4, 1).compatible(&h(4, 1)));
         // merge count is provenance, not compatibility
         assert!(a.compatible(&MebSketch::new(4, None, 0, TrainOptions::default(), "m").with_merges(9)));
+    }
+
+    #[test]
+    fn v4_learner_roundtrip_is_bit_exact_per_variant() {
+        let mut rng = crate::rng::Pcg32::seeded(31);
+        let d = 5;
+        let (xs, ys) = gen::labeled_points(&mut rng, 120, d, 1.2, 0.5);
+        let exs: Vec<Example> =
+            xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect();
+        let probes: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let opts = TrainOptions::default().with_c(2.0);
+        for variant in Variant::ALL {
+            let mut m = AnyLearner::new(variant, d, opts);
+            for e in &exs {
+                m.observe_view(e.x.view(), e.y);
+            }
+            // mid-stream snapshot: multiball's merge cache is cold here
+            // (max-vote scoring), lookahead may hold buffered survivors
+            // that the sketch deliberately excludes — scoring must still
+            // agree bit-for-bit because scoring never sees the buffer.
+            let sk = MebSketch::from_learner(&m, variant.name());
+            let back = MebSketch::decode(&sk.encode()).unwrap();
+            assert_eq!(back, sk, "{variant}: decoded sketch differs");
+            assert_eq!(back.variant, variant);
+            let restored = back.to_learner().unwrap();
+            assert_eq!(restored.variant(), variant);
+            assert_eq!(restored.examples_seen(), m.examples_seen(), "{variant}");
+            assert_eq!(restored.radius().to_bits(), m.radius().to_bits(), "{variant}");
+            for p in &probes {
+                assert_eq!(
+                    restored.score(p).to_bits(),
+                    m.score(p).to_bits(),
+                    "{variant}: scores diverged after round-trip"
+                );
+            }
+            // after finish() (multiball materializes its merge cache,
+            // lookahead flushes) a fresh snapshot still round-trips
+            m.finish();
+            let sk2 = MebSketch::from_learner(&m, "finished");
+            let restored = MebSketch::decode(&sk2.encode()).unwrap().to_learner().unwrap();
+            assert_eq!(restored.radius().to_bits(), m.radius().to_bits(), "{variant} finished");
+            for p in &probes {
+                assert_eq!(
+                    restored.score(p).to_bits(),
+                    m.score(p).to_bits(),
+                    "{variant}: finished scores diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v4_nonlinear_kernel_roundtrip_preserves_sparse_core_points() {
+        use crate::svm::kernelfn::Kernel;
+        let mut rng = crate::rng::Pcg32::seeded(33);
+        let d = 6;
+        let (xs, ys) = gen::labeled_points(&mut rng, 90, d, 1.0, 0.4);
+        let opts = TrainOptions::default();
+        let mut m = AnyLearner::with_kernel(
+            Variant::Kernelized,
+            d,
+            opts,
+            Kernel::Rbf { gamma: 0.7 },
+        );
+        for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
+            // alternate representations so the core set holds both
+            if i % 2 == 0 {
+                let f = crate::data::Features::Dense(x.clone()).to_sparse();
+                m.observe_view(f.view(), *y);
+            } else {
+                m.observe_view(crate::data::FeaturesView::Dense(x), *y);
+            }
+        }
+        let sk = MebSketch::from_learner(&m, "rbf");
+        assert!(sk.ball.is_none(), "non-linear kernels have no primal summary ball");
+        assert_eq!(sk.variant, Variant::Kernelized);
+        let back = MebSketch::decode(&sk.encode()).unwrap();
+        assert_eq!(back, sk);
+        let restored = back.to_learner().unwrap();
+        assert_eq!(restored.num_support(), m.num_support());
+        assert_eq!(restored.radius().to_bits(), m.radius().to_bits());
+        for _ in 0..6 {
+            let p: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            assert_eq!(restored.score(&p).to_bits(), m.score(&p).to_bits());
+        }
+    }
+
+    #[test]
+    fn decodes_version3_sketches_as_ball_variant() {
+        // Hand-assemble a v3 payload (merges + hash provenance, no
+        // variant tag) and check it decodes as the ball variant.
+        let v = [0.5f32, 1.0, -0.25];
+        let (sigma, wnorm2) = (1.0f64, 1.3125f64);
+        let (rad, xi2, m, seen, merges) = (1.5f64, 0.125f64, 2usize, 11usize, 4usize);
+        let opts = TrainOptions::default();
+        let mut p: Vec<u8> = Vec::new();
+        p.extend_from_slice(&(2u32).to_le_bytes());
+        p.extend_from_slice(b"v3");
+        p.extend_from_slice(&opts.c.to_bits().to_le_bytes());
+        p.push(1); // Consistent
+        p.extend_from_slice(&(opts.lookahead as u64).to_le_bytes());
+        p.extend_from_slice(&(opts.merge_iters as u64).to_le_bytes());
+        p.extend_from_slice(&(merges as u64).to_le_bytes());
+        p.push(0); // no hash
+        p.extend_from_slice(&(seen as u64).to_le_bytes());
+        p.extend_from_slice(&(v.len() as u64).to_le_bytes());
+        p.push(1); // has_ball
+        p.extend_from_slice(&(m as u64).to_le_bytes());
+        p.extend_from_slice(&rad.to_bits().to_le_bytes());
+        p.extend_from_slice(&xi2.to_bits().to_le_bytes());
+        p.extend_from_slice(&sigma.to_bits().to_le_bytes());
+        p.extend_from_slice(&wnorm2.to_bits().to_le_bytes());
+        for &x in &v {
+            p.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&3u16.to_le_bytes()); // version 3
+        bytes.extend_from_slice(&0u16.to_le_bytes());
+        bytes.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        let sum = fnv1a64(&p);
+        bytes.extend_from_slice(&p);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+
+        let sk = MebSketch::decode(&bytes).unwrap();
+        assert_eq!(sk.tag, "v3");
+        assert_eq!(sk.variant, Variant::Ball);
+        assert!(sk.extra.is_none());
+        assert_eq!(sk.merges, merges);
+        assert_eq!(sk.seen, seen);
+        // re-encoding writes v4 and round-trips
+        let back = MebSketch::decode(&sk.encode()).unwrap();
+        assert_eq!(back, sk);
+        // and the exact learner it restores is the Algorithm-1 model
+        let learner = sk.to_learner().unwrap();
+        assert_eq!(learner.variant(), Variant::Ball);
+        assert_eq!(learner.examples_seen(), seen);
+    }
+
+    #[test]
+    fn variant_sketch_without_extra_is_rejected_by_to_learner() {
+        let sk = MebSketch::new(3, None, 0, TrainOptions::default(), "hollow")
+            .with_variant(Variant::Kernelized, None);
+        let err = sk.to_learner().unwrap_err();
+        assert!(err.to_string().contains("exact-state"), "{err}");
+        // ...but ball and lookahead never need one
+        for v in [Variant::Ball, Variant::Lookahead] {
+            let sk = MebSketch::new(3, None, 0, TrainOptions::default(), "ok")
+                .with_variant(v, None);
+            assert_eq!(sk.to_learner().unwrap().variant(), v);
+        }
     }
 }

@@ -54,14 +54,31 @@ pub fn merge_ball_tree(balls: Vec<BallState>) -> Option<BallState> {
 
 /// Merge N sketches into one.
 ///
-/// Validates pairwise compatibility (same dimension and `(C, slack_mode)`
-/// geometry — see [`MebSketch::compatible`]); empty sketches act as merge
-/// identities. `seen` counts add; the merged tag records the lineage.
+/// Validates that every sketch was taken from the *same variant*
+/// (folding, say, an ellipsoid summary into a multiball summary would
+/// silently discard what makes each variant itself — an operator error,
+/// rejected as [`Error::Config`] before any geometry is touched), then
+/// pairwise compatibility (same dimension and `(C, slack_mode)`
+/// geometry — see [`MebSketch::compatible`]); empty sketches act as
+/// merge identities. `seen` counts add; the merged tag records the
+/// lineage. The aggregate is the merge of the inputs' *summary balls*,
+/// so it is always a ball-variant sketch; a non-linear kernelized
+/// sketch has no summary ball and cannot participate.
 pub fn merge_sketches(sketches: &[MebSketch]) -> Result<MebSketch> {
     let first = sketches
         .first()
         .ok_or_else(|| Error::sketch("cannot merge zero sketches"))?;
     for (i, s) in sketches.iter().enumerate().skip(1) {
+        if s.variant != first.variant {
+            // Like the hash-space gate below this is an operator
+            // configuration error (mixed --variant runs), not a corrupt
+            // sketch — and it must fire before any ball is folded.
+            return Err(Error::config(format!(
+                "sketch {i} (tag={}) is a {} sketch but sketch 0 (tag={}) is {}; \
+                 models of different variants cannot be merged",
+                s.tag, s.variant, first.tag, first.variant,
+            )));
+        }
         if s.opts.hash != first.opts.hash {
             // A hash-space mismatch is an operator configuration error
             // (wrong --hash-dim/--hash-seed), not a corrupt sketch:
@@ -88,6 +105,18 @@ pub fn merge_sketches(sketches: &[MebSketch]) -> Result<MebSketch> {
                 first.tag, first.dim, first.opts.c, first.opts.slack_mode,
             )));
         }
+    }
+    if let Some((i, s)) =
+        sketches.iter().enumerate().find(|(_, s)| s.ball.is_none() && s.seen > 0)
+    {
+        // Only a non-linear kernelized learner trains without a primal
+        // summary ball; its core set lives in feature space and has no
+        // closed-form two-ball merge.
+        return Err(Error::sketch(format!(
+            "sketch {i} (tag={}, variant={}) has no summary ball to merge \
+             (non-linear kernels cannot be aggregated in primal space)",
+            s.tag, s.variant,
+        )));
     }
     let seen: usize = sketches.iter().map(|s| s.seen).sum();
     let balls: Vec<BallState> = sketches.iter().filter_map(|s| s.ball.clone()).collect();
@@ -285,6 +314,62 @@ mod tests {
         assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
         // same hash space merges fine
         assert!(merge_sketches(&[hashed(1), hashed(1)]).is_ok());
+    }
+
+    #[test]
+    fn cross_variant_merges_rejected_pairwise() {
+        // Satellite of the StreamLearner refactor: folding sketches of
+        // different variants must fail loudly as a config error (like
+        // the hash-space gate), never emit a garbled model.
+        use crate::data::Example;
+        use crate::svm::learner::{AnyLearner, Variant};
+        let mut rng = Pcg32::seeded(9);
+        let (xs, ys) = gen::labeled_points(&mut rng, 40, 4, 1.0, 0.5);
+        let exs: Vec<Example> =
+            xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect();
+        let opts = TrainOptions::default();
+        let sketches: Vec<MebSketch> = Variant::ALL
+            .into_iter()
+            .map(|v| {
+                let m = AnyLearner::fit(exs.iter(), v, 4, opts);
+                MebSketch::from_learner(&m, v.name())
+            })
+            .collect();
+        for a in &sketches {
+            for b in &sketches {
+                let out = merge_sketches(&[a.clone(), b.clone()]);
+                if a.variant == b.variant {
+                    let merged = out.unwrap();
+                    assert_eq!(merged.seen, 80);
+                    assert_eq!(
+                        merged.variant,
+                        Variant::Ball,
+                        "summary-ball aggregates are ball sketches"
+                    );
+                } else {
+                    let err = out.unwrap_err();
+                    assert!(
+                        matches!(err, Error::Config(_)),
+                        "{} + {}: expected Config, got {err}",
+                        a.variant,
+                        b.variant
+                    );
+                    assert!(err.to_string().contains("variant"), "{err}");
+                }
+            }
+        }
+        // a non-linear kernelized sketch has no summary ball: even a
+        // same-variant merge refuses rather than emit a hollow model
+        use crate::svm::kernelfn::Kernel;
+        let mut rbf =
+            AnyLearner::with_kernel(Variant::Kernelized, 4, opts, Kernel::Rbf { gamma: 0.5 });
+        for e in &exs {
+            rbf.observe_view(e.x.view(), e.y);
+        }
+        let rsk = MebSketch::from_learner(&rbf, "rbf");
+        let err = merge_sketches(&[rsk.clone(), rsk]).unwrap_err();
+        assert!(matches!(err, Error::Sketch(_)), "{err}");
+        assert!(err.to_string().contains("summary ball"), "{err}");
     }
 
     #[test]

@@ -32,9 +32,9 @@
 //! the exactness anchor.
 
 use crate::data::{Example, FeaturesView};
-use crate::error::Result;
 use crate::eval::Classifier;
 use crate::linalg;
+use crate::svm::learner::{StreamLearner, Variant};
 // The fold/renorm schedule is shared with BallState (one source of
 // truth): the isotropic mode's bit-parity with the ball depends on both
 // learners folding σ and re-anchoring the cached norm at the same
@@ -197,15 +197,6 @@ impl EllipsoidSvm {
         }
     }
 
-    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
-    /// wrong-dimension examples, non-finite features and non-±1 labels
-    /// with [`crate::svm::validate_example`]'s errors instead of
-    /// skipping silently.
-    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
-        crate::svm::validate_example(x, y, self.dim)?;
-        Ok(self.observe_view(x, y))
-    }
-
     /// Grow the metric scale of every axis the example touches (its
     /// stored non-zeros — identical for a sparse row and its densified
     /// twin, since `SparseVec::from_dense` drops zeros) to the post-blend
@@ -310,6 +301,50 @@ impl EllipsoidSvm {
         let sum: f64 = self.s.iter().map(|v| v.ln()).sum();
         (sum / self.s.len() as f64).exp()
     }
+
+    /// The lazy scale `σ` on the stored direction (`w = σ·v`).
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// The unscaled center direction `v`.
+    pub fn direction(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// The cached metric norm `‖w‖²_S`.
+    pub fn wnorm2_scaled(&self) -> f64 {
+        self.wnorm2s
+    }
+
+    /// Whether the metric adapts on updates (false = isotropic anchor).
+    pub fn is_adaptive(&self) -> bool {
+        self.adapt
+    }
+
+    /// Rebuild from exact serialized state (the `.meb` v4 decode path).
+    /// `inv_s2` is recomputed as `1/(sⱼ·sⱼ)` — the identical expression
+    /// [`Self::adapt_axis`] caches, so the restored model scores and
+    /// continues training bit-for-bit like the one that was encoded.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        dim: usize,
+        opts: TrainOptions,
+        adapt: bool,
+        v: Vec<f32>,
+        sigma: f64,
+        s: Vec<f64>,
+        wnorm2s: f64,
+        r: f64,
+        xi2: f64,
+        m: usize,
+        seen: usize,
+    ) -> Self {
+        assert_eq!(v.len(), dim, "direction length mismatch");
+        assert_eq!(s.len(), dim, "axis-scale length mismatch");
+        let inv_s2 = s.iter().map(|&sj| 1.0 / (sj * sj)).collect();
+        EllipsoidSvm { v, sigma, s, inv_s2, wnorm2s, r, xi2, m, adapt, opts, dim, seen }
+    }
 }
 
 impl Classifier for EllipsoidSvm {
@@ -327,6 +362,54 @@ impl Classifier for EllipsoidSvm {
                 self.sigma * linalg::sparse_dot_scaled(&self.v, &self.inv_s2, idx, val)
             }
         }
+    }
+}
+
+/// Validated observation (`try_observe`) comes from the trait's default
+/// body — the guard logic lives once, in [`crate::svm::learner`].
+impl StreamLearner for EllipsoidSvm {
+    fn variant(&self) -> Variant {
+        Variant::Ellipsoid
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn options(&self) -> &TrainOptions {
+        &self.opts
+    }
+
+    #[inline]
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        EllipsoidSvm::observe_view(self, x, y)
+    }
+
+    fn radius(&self) -> f64 {
+        self.r
+    }
+
+    fn xi2(&self) -> f64 {
+        self.xi2
+    }
+
+    fn examples_seen(&self) -> usize {
+        self.seen
+    }
+
+    fn num_support(&self) -> usize {
+        self.m
+    }
+
+    /// A ball over the materialized center. Exact for the isotropic
+    /// metric; for the adaptive metric it is the Euclidean summary the
+    /// cross-shard merge tree aggregates (the learned axes are a
+    /// per-shard refinement the ball summary deliberately flattens).
+    fn summary_ball(&self) -> Option<crate::svm::ball::BallState> {
+        if self.m == 0 {
+            return None;
+        }
+        Some(crate::svm::ball::BallState::from_parts(self.weights(), self.r, self.xi2, self.m))
     }
 }
 

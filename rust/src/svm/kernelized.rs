@@ -19,6 +19,7 @@ use crate::data::{Example, Features, FeaturesView};
 use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::kernelfn::Kernel;
+use crate::svm::learner::{StreamLearner, Variant};
 use crate::svm::TrainOptions;
 
 /// One absorbed core-set point: features in their arriving
@@ -60,6 +61,46 @@ impl KernelStreamSvm {
             opts,
             dim: None,
             seen: 0,
+        }
+    }
+
+    /// [`Self::new`] with the dimension pinned up front (the serving /
+    /// pipeline layers know the stream's declared dimension before the
+    /// first example arrives, so wrong-dimension inputs can be rejected
+    /// immediately instead of seeding a mis-sized core set). Observing
+    /// behaves identically to the lazily-pinned path.
+    pub fn with_dim(kernel: Kernel, dim: usize, opts: TrainOptions) -> Self {
+        let mut m = KernelStreamSvm::new(kernel, opts);
+        m.dim = Some(dim);
+        m
+    }
+
+    /// Rebuild from exact serialized state (the `.meb` v4 decode path).
+    /// Fields are bit-copied, so a restored model scores and continues
+    /// training identically to the one that was encoded.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        kernel: Kernel,
+        dim: Option<usize>,
+        svs: Vec<(Features, f64)>,
+        alpha: Vec<f64>,
+        feat_norm2: f64,
+        r: f64,
+        xi2: f64,
+        opts: TrainOptions,
+        seen: usize,
+    ) -> Self {
+        assert_eq!(svs.len(), alpha.len(), "core set / coefficient length mismatch");
+        KernelStreamSvm {
+            kernel,
+            svs: svs.into_iter().map(|(x, norm2)| CorePoint { x, norm2 }).collect(),
+            alpha,
+            feat_norm2,
+            r,
+            xi2,
+            opts,
+            dim,
+            seen,
         }
     }
 
@@ -164,17 +205,6 @@ impl KernelStreamSvm {
         }
     }
 
-    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
-    /// wrong-dimension examples (against the dimension pinned by the
-    /// first example), non-finite features and non-±1 labels with
-    /// [`crate::svm::validate_example`]'s errors instead of skipping
-    /// silently or asserting deep inside a kernel evaluation.
-    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
-        let dim = self.dim.unwrap_or(x.dim());
-        crate::svm::validate_example(x, y, dim)?;
-        Ok(self.observe_view(x, y))
-    }
-
     pub fn fit<'a, I: IntoIterator<Item = &'a Example>>(
         stream: I,
         kernel: Kernel,
@@ -216,11 +246,97 @@ impl KernelStreamSvm {
     pub fn examples_seen(&self) -> usize {
         self.seen
     }
+
+    /// The kernel this model evaluates.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The cached `‖center‖²` in feature space.
+    pub fn feat_norm2(&self) -> f64 {
+        self.feat_norm2
+    }
+
+    /// Core-set points with their cached squared norms, in absorption
+    /// order (what the `.meb` v4 encoder walks).
+    pub fn support_points(&self) -> impl Iterator<Item = (&Features, f64)> {
+        self.svs.iter().map(|sv| (&sv.x, sv.norm2))
+    }
+
+    /// The explicit primal weights `w = Σ αₘ xₘ` — defined only for the
+    /// linear kernel, where the feature map is the identity. `None` for
+    /// non-linear kernels (and before any data for an unpinned model).
+    pub fn linear_weights(&self) -> Option<Vec<f32>> {
+        if self.kernel != Kernel::Linear {
+            return None;
+        }
+        let dim = self.dim?;
+        let mut w = vec![0.0f32; dim];
+        for (sv, &a) in self.svs.iter().zip(&self.alpha) {
+            sv.x.view().axpy_into(&mut w, a as f32);
+        }
+        Some(w)
+    }
+}
+
+/// The trait's default `try_observe` is overridden here: the expected
+/// dimension is pinned lazily by the first example, so until then the
+/// guard validates against the example's own dimension (the guard logic
+/// itself still lives once, in [`crate::svm::validate_example`]).
+impl StreamLearner for KernelStreamSvm {
+    fn variant(&self) -> Variant {
+        Variant::Kernelized
+    }
+
+    /// 0 while the dimension is still unpinned.
+    fn dim(&self) -> usize {
+        self.dim.unwrap_or(0)
+    }
+
+    fn options(&self) -> &TrainOptions {
+        &self.opts
+    }
+
+    #[inline]
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        KernelStreamSvm::observe_view(self, x, y)
+    }
+
+    fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
+        let dim = self.dim.unwrap_or(x.dim());
+        crate::svm::validate_example(x, y, dim)?;
+        Ok(self.observe_view(x, y))
+    }
+
+    fn radius(&self) -> f64 {
+        self.r
+    }
+
+    fn xi2(&self) -> f64 {
+        self.xi2
+    }
+
+    fn examples_seen(&self) -> usize {
+        self.seen
+    }
+
+    fn num_support(&self) -> usize {
+        self.svs.len()
+    }
+
+    /// A primal ball exists only under the linear kernel.
+    fn summary_ball(&self) -> Option<crate::svm::ball::BallState> {
+        let w = self.linear_weights()?;
+        if self.svs.is_empty() {
+            return None;
+        }
+        Some(crate::svm::ball::BallState::from_parts(w, self.r, self.xi2, self.svs.len()))
+    }
 }
 
 impl Classifier for KernelStreamSvm {
     fn score(&self, x: &[f32]) -> f64 {
-        self.score_view(FeaturesView::Dense(x))
+        Classifier::score_view(self, FeaturesView::Dense(x))
     }
 
     fn score_view(&self, x: FeaturesView<'_>) -> f64 {

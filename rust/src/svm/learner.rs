@@ -1,0 +1,559 @@
+//! The variant seam: one trait for the five streaming learners, plus an
+//! enum for static dispatch at layer boundaries.
+//!
+//! Every production layer (server, sketch codec, pipeline, sharded
+//! coordinator, CLI) used to name `StreamSvm` concretely, so only
+//! Algorithm 1 could serve traffic or checkpoint. [`StreamLearner`]
+//! captures the surface they actually need — observe, score, provenance
+//! — with the shared input-validation guard as a default method, and
+//! [`AnyLearner`] packages the five implementations behind one concrete
+//! type *without* virtual dispatch: every method is an inlined `match`,
+//! so the per-example hot path costs a predictable branch, not a vtable
+//! load (the sparse-bench speedup gates hold through this seam).
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::data::FeaturesView;
+use crate::error::{Error, Result};
+use crate::eval::Classifier;
+use crate::svm::ball::BallState;
+use crate::svm::ellipsoid::EllipsoidSvm;
+use crate::svm::kernelfn::Kernel;
+use crate::svm::kernelized::KernelStreamSvm;
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::multiball::{MergePolicy, MultiBallSvm};
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::{validate_example, TrainOptions};
+
+/// Default ball budget when a multiball learner is constructed through
+/// [`AnyLearner::new`] (CLI / server paths that only pick a variant).
+pub const DEFAULT_MAX_BALLS: usize = 8;
+
+/// Which of the paper's algorithm family a learner implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Algorithm 1: single ball, immediate updates.
+    Ball,
+    /// Algorithm 2: lookahead buffer merged in batches.
+    Lookahead,
+    /// §4.2: kernelized MEB over a coreset of support points.
+    Kernelized,
+    /// §6.2: diagonal-metric (ellipsoid) generalization.
+    Ellipsoid,
+    /// §4.3: bounded set of balls with merge policies.
+    Multiball,
+}
+
+impl Variant {
+    /// All variants, in tag order.
+    pub const ALL: [Variant; 5] = [
+        Variant::Ball,
+        Variant::Lookahead,
+        Variant::Kernelized,
+        Variant::Ellipsoid,
+        Variant::Multiball,
+    ];
+
+    /// The canonical CLI / provenance name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Ball => "ball",
+            Variant::Lookahead => "lookahead",
+            Variant::Kernelized => "kernelized",
+            Variant::Ellipsoid => "ellipsoid",
+            Variant::Multiball => "multiball",
+        }
+    }
+
+    /// The `.meb` wire tag (v4 provenance byte). Stable: new variants
+    /// append, existing values never change.
+    pub fn tag(self) -> u8 {
+        match self {
+            Variant::Ball => 0,
+            Variant::Lookahead => 1,
+            Variant::Kernelized => 2,
+            Variant::Ellipsoid => 3,
+            Variant::Multiball => 4,
+        }
+    }
+
+    /// Decode a `.meb` wire tag.
+    pub fn from_tag(t: u8) -> Result<Variant> {
+        Variant::ALL
+            .into_iter()
+            .find(|v| v.tag() == t)
+            .ok_or_else(|| Error::sketch(format!("unknown variant tag {t}")))
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Variant {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Variant> {
+        Variant::ALL.into_iter().find(|v| v.name() == s).ok_or_else(|| {
+            Error::config(format!(
+                "unknown variant `{s}` (expected ball|lookahead|kernelized|ellipsoid|multiball)"
+            ))
+        })
+    }
+}
+
+/// The surface every streaming MEB/SVM variant exposes to the stack.
+///
+/// `try_observe` is the validated entry point the server / pipeline /
+/// CLI layers call; its default body holds the guard logic that used to
+/// be hand-copied into every variant (dimension check → `Error::Config`,
+/// non-finite features and non-±1 labels → `Error::Data`, rejected
+/// examples consume no stream position). `observe_view` is the
+/// pre-validated hot path; each variant additionally skips (never
+/// panics on) non-finite inputs there so raw streams degrade gracefully.
+pub trait StreamLearner: Classifier {
+    /// Which algorithm this learner implements (snapshot provenance).
+    fn variant(&self) -> Variant;
+
+    /// Expected feature dimension. Kernelized learners pin this lazily
+    /// from the first example; see [`KernelStreamSvm`].
+    fn dim(&self) -> usize;
+
+    /// The shared hyperparameters.
+    fn options(&self) -> &TrainOptions;
+
+    /// Feed one pre-validated example. Returns `true` when the example
+    /// changed (or was buffered into) the model, `false` when it was
+    /// already enclosed or skipped.
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool;
+
+    /// Validate then observe: the layer-boundary entry point. Rejected
+    /// examples consume no stream position.
+    fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
+        validate_example(x, y, StreamLearner::dim(self))?;
+        Ok(self.observe_view(x, y))
+    }
+
+    /// Decision value for one example (same contract as
+    /// [`Classifier::score_view`]; provided so generic layers need only
+    /// this trait in scope).
+    fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        Classifier::score_view(self, x)
+    }
+
+    /// Current enclosing radius (0 before the first example; for
+    /// multiball, the largest live ball).
+    fn radius(&self) -> f64;
+
+    /// Current slack mass ξ² (the σ² floor before the first example).
+    fn xi2(&self) -> f64;
+
+    /// Examples consumed from the stream (including enclosed/skipped).
+    fn examples_seen(&self) -> usize;
+
+    /// Points absorbed into the model (coreset / center mass).
+    fn num_support(&self) -> usize;
+
+    /// Finalize any deferred state (flush lookahead buffers, fold
+    /// multiball covers). Idempotent; a no-op for most variants.
+    fn finish(&mut self) {}
+
+    /// A single-ball summary of the current model, when one exists:
+    /// this is what the sharded coordinator's merge tree aggregates, so
+    /// cross-shard merging stays agnostic to the per-shard learner.
+    /// `None` when the model cannot be summarized by one ball (a
+    /// non-linear kernelized learner, or an empty model).
+    fn summary_ball(&self) -> Option<BallState>;
+}
+
+/// One of the five learners, statically dispatched. Every method is an
+/// inlined `match` over the variants — no `dyn`, no allocation — so the
+/// layers can hold "some learner" without taxing the per-example path.
+#[derive(Clone, Debug)]
+pub enum AnyLearner {
+    Ball(StreamSvm),
+    Lookahead(LookaheadSvm),
+    Kernelized(KernelStreamSvm),
+    Ellipsoid(EllipsoidSvm),
+    Multiball(MultiBallSvm),
+}
+
+macro_rules! dispatch {
+    ($self:expr, $m:pat => $body:expr) => {
+        match $self {
+            AnyLearner::Ball($m) => $body,
+            AnyLearner::Lookahead($m) => $body,
+            AnyLearner::Kernelized($m) => $body,
+            AnyLearner::Ellipsoid($m) => $body,
+            AnyLearner::Multiball($m) => $body,
+        }
+    };
+}
+
+impl AnyLearner {
+    /// Construct a fresh learner of `variant` with default shape knobs
+    /// (linear kernel, [`DEFAULT_MAX_BALLS`] / nearest-ball policy).
+    pub fn new(variant: Variant, dim: usize, opts: TrainOptions) -> AnyLearner {
+        AnyLearner::with_kernel(variant, dim, opts, Kernel::Linear)
+    }
+
+    /// [`AnyLearner::new`] with an explicit kernel for the kernelized
+    /// variant (ignored by the linear variants).
+    pub fn with_kernel(
+        variant: Variant,
+        dim: usize,
+        opts: TrainOptions,
+        kernel: Kernel,
+    ) -> AnyLearner {
+        match variant {
+            Variant::Ball => AnyLearner::Ball(StreamSvm::new(dim, opts)),
+            Variant::Lookahead => {
+                let opts =
+                    if opts.lookahead > 1 { opts } else { opts.with_lookahead(8) };
+                AnyLearner::Lookahead(LookaheadSvm::new(dim, opts))
+            }
+            Variant::Kernelized => {
+                AnyLearner::Kernelized(KernelStreamSvm::with_dim(kernel, dim, opts))
+            }
+            Variant::Ellipsoid => AnyLearner::Ellipsoid(EllipsoidSvm::new(dim, opts)),
+            Variant::Multiball => AnyLearner::Multiball(MultiBallSvm::new(
+                dim,
+                DEFAULT_MAX_BALLS,
+                MergePolicy::NearestBall,
+                opts,
+            )),
+        }
+    }
+
+    /// Which algorithm this learner implements.
+    #[inline]
+    pub fn variant(&self) -> Variant {
+        dispatch!(self, m => StreamLearner::variant(m))
+    }
+
+    /// Expected feature dimension (0 for an unpinned kernelized model).
+    #[inline]
+    pub fn dim(&self) -> usize {
+        dispatch!(self, m => StreamLearner::dim(m))
+    }
+
+    /// The shared hyperparameters.
+    #[inline]
+    pub fn options(&self) -> &TrainOptions {
+        dispatch!(self, m => StreamLearner::options(m))
+    }
+
+    /// Feed one pre-validated example; see [`StreamLearner::observe_view`].
+    #[inline]
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        dispatch!(self, m => StreamLearner::observe_view(m, x, y))
+    }
+
+    /// Validate then observe; see [`StreamLearner::try_observe`]. Each
+    /// variant's own override applies (kernelized pins its dimension
+    /// from the first example).
+    #[inline]
+    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
+        dispatch!(self, m => StreamLearner::try_observe(m, x, y))
+    }
+
+    /// Decision value for one example (dense slice).
+    #[inline]
+    pub fn score(&self, x: &[f32]) -> f64 {
+        dispatch!(self, m => Classifier::score(m, x))
+    }
+
+    /// Decision value for one example — O(nnz) for sparse views.
+    #[inline]
+    pub fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        dispatch!(self, m => Classifier::score_view(m, x))
+    }
+
+    /// Current enclosing radius.
+    #[inline]
+    pub fn radius(&self) -> f64 {
+        dispatch!(self, m => StreamLearner::radius(m))
+    }
+
+    /// Current slack mass ξ².
+    #[inline]
+    pub fn xi2(&self) -> f64 {
+        dispatch!(self, m => StreamLearner::xi2(m))
+    }
+
+    /// Examples consumed from the stream.
+    #[inline]
+    pub fn examples_seen(&self) -> usize {
+        dispatch!(self, m => StreamLearner::examples_seen(m))
+    }
+
+    /// Points absorbed into the model.
+    #[inline]
+    pub fn num_support(&self) -> usize {
+        dispatch!(self, m => StreamLearner::num_support(m))
+    }
+
+    /// Finalize deferred state; see [`StreamLearner::finish`].
+    pub fn finish(&mut self) {
+        dispatch!(self, m => StreamLearner::finish(m))
+    }
+
+    /// A single-ball summary, when one exists.
+    pub fn summary_ball(&self) -> Option<BallState> {
+        dispatch!(self, m => StreamLearner::summary_ball(m))
+    }
+
+    /// Dense primal weights, when the model has them (`None` for a
+    /// non-linear kernelized learner).
+    pub fn weights(&self) -> Option<Vec<f32>> {
+        match self {
+            AnyLearner::Ball(m) => Some(m.weights()),
+            AnyLearner::Lookahead(m) => Some(m.weights()),
+            AnyLearner::Kernelized(m) => m.linear_weights(),
+            AnyLearner::Ellipsoid(m) => Some(m.weights()),
+            AnyLearner::Multiball(m) => {
+                Some(m.merged_ball().map(|b| b.weights()).unwrap_or_default())
+            }
+        }
+    }
+
+    /// Train a fresh learner over a stream (validation skipped: the
+    /// stream is trusted, mirroring the per-variant `fit` helpers).
+    pub fn fit<'a, I>(stream: I, variant: Variant, dim: usize, opts: TrainOptions) -> AnyLearner
+    where
+        I: IntoIterator<Item = &'a crate::data::Example>,
+    {
+        let mut m = AnyLearner::new(variant, dim, opts);
+        for e in stream {
+            m.observe_view(e.x.view(), e.y);
+        }
+        m.finish();
+        m
+    }
+}
+
+impl StreamLearner for AnyLearner {
+    fn variant(&self) -> Variant {
+        AnyLearner::variant(self)
+    }
+    fn dim(&self) -> usize {
+        AnyLearner::dim(self)
+    }
+    fn options(&self) -> &TrainOptions {
+        AnyLearner::options(self)
+    }
+    #[inline]
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        AnyLearner::observe_view(self, x, y)
+    }
+    #[inline]
+    fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
+        AnyLearner::try_observe(self, x, y)
+    }
+    fn radius(&self) -> f64 {
+        AnyLearner::radius(self)
+    }
+    fn xi2(&self) -> f64 {
+        AnyLearner::xi2(self)
+    }
+    fn examples_seen(&self) -> usize {
+        AnyLearner::examples_seen(self)
+    }
+    fn num_support(&self) -> usize {
+        AnyLearner::num_support(self)
+    }
+    fn finish(&mut self) {
+        AnyLearner::finish(self)
+    }
+    fn summary_ball(&self) -> Option<BallState> {
+        AnyLearner::summary_ball(self)
+    }
+}
+
+impl Classifier for AnyLearner {
+    #[inline]
+    fn score(&self, x: &[f32]) -> f64 {
+        AnyLearner::score(self, x)
+    }
+    #[inline]
+    fn score_view(&self, x: FeaturesView<'_>) -> f64 {
+        AnyLearner::score_view(self, x)
+    }
+}
+
+impl From<StreamSvm> for AnyLearner {
+    fn from(m: StreamSvm) -> AnyLearner {
+        AnyLearner::Ball(m)
+    }
+}
+impl From<LookaheadSvm> for AnyLearner {
+    fn from(m: LookaheadSvm) -> AnyLearner {
+        AnyLearner::Lookahead(m)
+    }
+}
+impl From<KernelStreamSvm> for AnyLearner {
+    fn from(m: KernelStreamSvm) -> AnyLearner {
+        AnyLearner::Kernelized(m)
+    }
+}
+impl From<EllipsoidSvm> for AnyLearner {
+    fn from(m: EllipsoidSvm) -> AnyLearner {
+        AnyLearner::Ellipsoid(m)
+    }
+}
+impl From<MultiBallSvm> for AnyLearner {
+    fn from(m: MultiBallSvm) -> AnyLearner {
+        AnyLearner::Multiball(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Example;
+    use crate::prop::gen;
+    use crate::rng::Pcg32;
+
+    fn toy(n: usize, d: usize, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, 0.8);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    #[test]
+    fn variant_names_tags_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(v.name().parse::<Variant>().unwrap(), v);
+            assert_eq!(Variant::from_tag(v.tag()).unwrap(), v);
+            assert_eq!(format!("{v}"), v.name());
+        }
+        assert!(matches!("blurred".parse::<Variant>(), Err(Error::Config(_))));
+        assert!(matches!(Variant::from_tag(200), Err(Error::Sketch(_))));
+    }
+
+    #[test]
+    fn any_learner_matches_concrete_per_variant() {
+        let exs = toy(150, 4, 7);
+        let opts = TrainOptions::default();
+        let probe = [0.4f32, -0.2, 0.9, 0.1];
+        for v in Variant::ALL {
+            let mut any = AnyLearner::new(v, 4, opts);
+            for e in &exs {
+                any.try_observe(e.x.view(), e.y).unwrap();
+            }
+            assert_eq!(any.variant(), v);
+            assert_eq!(any.examples_seen(), exs.len());
+            // the concrete twin, driven through its own surface
+            let score = match v {
+                Variant::Ball => {
+                    let mut m = StreamSvm::new(4, opts);
+                    for e in &exs {
+                        m.observe_view(e.x.view(), e.y);
+                    }
+                    assert_eq!(any.radius().to_bits(), m.radius().to_bits());
+                    Classifier::score(&m, &probe)
+                }
+                Variant::Lookahead => {
+                    let mut m = LookaheadSvm::new(4, opts.with_lookahead(8));
+                    for e in &exs {
+                        m.observe_view(e.x.view(), e.y);
+                    }
+                    assert_eq!(any.radius().to_bits(), m.radius().to_bits());
+                    Classifier::score(&m, &probe)
+                }
+                Variant::Kernelized => {
+                    let mut m = KernelStreamSvm::with_dim(Kernel::Linear, 4, opts);
+                    for e in &exs {
+                        m.observe_view(e.x.view(), e.y);
+                    }
+                    assert_eq!(any.radius().to_bits(), m.radius().to_bits());
+                    Classifier::score(&m, &probe)
+                }
+                Variant::Ellipsoid => {
+                    let mut m = EllipsoidSvm::new(4, opts);
+                    for e in &exs {
+                        m.observe_view(e.x.view(), e.y);
+                    }
+                    assert_eq!(any.radius().to_bits(), m.radius().to_bits());
+                    Classifier::score(&m, &probe)
+                }
+                Variant::Multiball => {
+                    let mut m = MultiBallSvm::new(
+                        4,
+                        DEFAULT_MAX_BALLS,
+                        MergePolicy::NearestBall,
+                        opts,
+                    );
+                    for e in &exs {
+                        m.observe_view(e.x.view(), e.y);
+                    }
+                    Classifier::score(&m, &probe)
+                }
+            };
+            assert_eq!(
+                any.score(&probe).to_bits(),
+                score.to_bits(),
+                "score diverged for {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn default_try_observe_rejection_contract() {
+        let opts = TrainOptions::default();
+        for v in Variant::ALL {
+            let mut m = AnyLearner::new(v, 3, opts);
+            // dimension mismatch → Config, and no stream position consumed
+            let err = m
+                .try_observe(crate::data::FeaturesView::Dense(&[1.0, 2.0]), 1.0)
+                .unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{v}: {err}");
+            // non-finite features / bad labels → Data
+            let err = m
+                .try_observe(crate::data::FeaturesView::Dense(&[1.0, f32::NAN, 0.0]), 1.0)
+                .unwrap_err();
+            assert!(matches!(err, Error::Data(_)), "{v}: {err}");
+            let err = m
+                .try_observe(crate::data::FeaturesView::Dense(&[1.0, 2.0, 3.0]), 0.5)
+                .unwrap_err();
+            assert!(matches!(err, Error::Data(_)), "{v}: {err}");
+            assert_eq!(m.examples_seen(), 0, "{v} consumed a rejected example");
+        }
+    }
+
+    #[test]
+    fn kernelized_try_observe_pins_dim_from_first_example() {
+        let opts = TrainOptions::default();
+        let mut m: AnyLearner = KernelStreamSvm::new(Kernel::Linear, opts).into();
+        assert_eq!(m.dim(), 0);
+        m.try_observe(crate::data::FeaturesView::Dense(&[1.0, 2.0]), 1.0).unwrap();
+        assert_eq!(m.dim(), 2);
+        let err =
+            m.try_observe(crate::data::FeaturesView::Dense(&[1.0, 2.0, 3.0]), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+
+    #[test]
+    fn summary_ball_exists_for_linear_variants() {
+        let exs = toy(80, 3, 11);
+        let opts = TrainOptions::default();
+        for v in Variant::ALL {
+            let mut m = AnyLearner::fit(exs.iter(), v, 3, opts);
+            m.finish();
+            let b = m.summary_ball().expect("linear variant has a summary ball");
+            assert!(b.r.is_finite() && b.r >= 0.0, "{v}");
+            assert_eq!(b.dim(), 3, "{v}");
+        }
+        // a non-linear kernelized model has no primal summary
+        let mut rbf: AnyLearner =
+            KernelStreamSvm::with_dim(Kernel::Rbf { gamma: 0.5 }, 3, opts).into();
+        for e in &exs {
+            rbf.observe_view(e.x.view(), e.y);
+        }
+        assert!(rbf.summary_ball().is_none());
+        assert!(rbf.weights().is_none());
+    }
+}

@@ -8,9 +8,9 @@
 //! the closed-form Algorithm-1 update, exactly as the paper notes.
 
 use crate::data::{Example, Features, FeaturesView};
-use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::ball::BallState;
+use crate::svm::learner::{StreamLearner, Variant};
 use crate::svm::meb::solve_merge_into;
 use crate::svm::streamsvm::StreamSvm;
 use crate::svm::TrainOptions;
@@ -68,28 +68,29 @@ impl LookaheadSvm {
         }
     }
 
-    /// Stream one example (Algorithm 2 lines 3–9).
-    pub fn observe(&mut self, x: &[f32], y: f32) {
+    /// Stream one example (Algorithm 2 lines 3–9). Returns `true` when
+    /// the example seeded the ball, was absorbed, or was buffered.
+    pub fn observe(&mut self, x: &[f32], y: f32) -> bool {
         self.observe_view(FeaturesView::Dense(x), y)
     }
 
     /// [`Self::observe`] for a dense-or-sparse feature view: the
     /// enclosure test is O(nnz), and buffered survivors keep their
     /// representation (no densify) for the sparse merge solve.
-    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) {
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
         debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
         let Some(ball) = &mut self.ball else {
             if !x.is_finite() {
                 // keep NaN out of a fresh ball's center
                 debug_assert!(false, "non-finite features in LookaheadSvm::observe");
-                return;
+                return false;
             }
             self.ball = Some(BallState::init_view(x, y, &self.opts));
             if crate::obs::telemetry_on() {
                 crate::obs::telemetry::record_example(true);
             }
-            return;
+            return true;
         };
         let d = ball.distance_view(x, y, &self.opts);
         if !d.is_finite() {
@@ -98,13 +99,13 @@ impl LookaheadSvm {
             // survivor would NaN the merge Gram and the merged center
             // forever (and get persisted into snapshots).
             debug_assert!(false, "non-finite distance in LookaheadSvm::observe (d = {d})");
-            return;
+            return false;
         }
         if d < ball.r {
             if crate::obs::telemetry_on() {
                 crate::obs::telemetry::record_example(false);
             }
-            return; // enclosed: discard
+            return false; // enclosed: discard
         }
         if self.opts.lookahead == 1 {
             // L = 1 degenerates to the closed-form Algorithm-1 update.
@@ -114,7 +115,7 @@ impl LookaheadSvm {
                 crate::obs::telemetry::RADIUS.set(ball.r);
                 crate::obs::telemetry::WNORM.set(ball.wnorm());
             }
-            return;
+            return updated;
         }
         self.buf_x.push(x.to_features());
         self.buf_y.push(y);
@@ -126,6 +127,7 @@ impl LookaheadSvm {
         if self.buf_x.len() == self.opts.lookahead {
             self.flush();
         }
+        true
     }
 
     /// Merge any buffered points into the ball (Algorithm 2 lines 12–14;
@@ -165,16 +167,6 @@ impl LookaheadSvm {
     /// End-of-stream: flush the partial buffer. Idempotent.
     pub fn finish(&mut self) {
         self.flush();
-    }
-
-    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
-    /// wrong-dimension examples, non-finite features and non-±1 labels
-    /// with [`crate::svm::validate_example`]'s errors instead of
-    /// skipping silently.
-    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<()> {
-        crate::svm::validate_example(x, y, self.dim)?;
-        self.observe_view(x, y);
-        Ok(())
     }
 
     /// The equivalent Algorithm-1 view of the current state (ball +
@@ -249,6 +241,54 @@ impl Classifier for LookaheadSvm {
             Some(b) => b.score_view(x),
             None => 0.0,
         }
+    }
+}
+
+/// Validated observation (`try_observe`) comes from the trait's default
+/// body — the guard logic lives once, in [`crate::svm::learner`].
+impl StreamLearner for LookaheadSvm {
+    fn variant(&self) -> Variant {
+        Variant::Lookahead
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn options(&self) -> &TrainOptions {
+        &self.opts
+    }
+
+    #[inline]
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        LookaheadSvm::observe_view(self, x, y)
+    }
+
+    fn radius(&self) -> f64 {
+        LookaheadSvm::radius(self)
+    }
+
+    fn xi2(&self) -> f64 {
+        self.ball.as_ref().map(|b| b.xi2).unwrap_or_else(|| self.opts.s2())
+    }
+
+    fn examples_seen(&self) -> usize {
+        self.seen
+    }
+
+    fn num_support(&self) -> usize {
+        LookaheadSvm::num_support(self)
+    }
+
+    /// Flush the partial lookahead buffer.
+    fn finish(&mut self) {
+        LookaheadSvm::finish(self)
+    }
+
+    /// The current ball; buffered-but-unmerged survivors are not part of
+    /// it, so call [`StreamLearner::finish`] first for a complete summary.
+    fn summary_ball(&self) -> Option<BallState> {
+        self.ball.clone()
     }
 }
 

@@ -18,6 +18,7 @@ pub mod ball;
 pub mod ellipsoid;
 pub mod kernelfn;
 pub mod kernelized;
+pub mod learner;
 pub mod lookahead;
 pub mod meb;
 pub mod multiball;

@@ -14,9 +14,9 @@
 //! and are orthogonal, so `t² = ||w₁−w₂||² + ξ₁² + ξ₂²`.
 
 use crate::data::{Example, FeaturesView};
-use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::ball::BallState;
+use crate::svm::learner::{StreamLearner, Variant};
 use crate::svm::TrainOptions;
 
 /// How to collapse L+1 entities back to L when a new point escapes all
@@ -98,7 +98,9 @@ impl MultiBallSvm {
         }
     }
 
-    pub fn observe(&mut self, x: &[f32], y: f32) {
+    /// Stream one example. Returns `true` when it seeded/updated a ball,
+    /// `false` when it was already enclosed (or skipped as non-finite).
+    pub fn observe(&mut self, x: &[f32], y: f32) -> bool {
         self.observe_view(FeaturesView::Dense(x), y)
     }
 
@@ -111,7 +113,7 @@ impl MultiBallSvm {
     /// indexed into the ball list. Before this guard, a NaN gap could
     /// never beat the `f64::INFINITY` sentinel, so `NearestBall` panicked
     /// at `self.balls[usize::MAX]`.
-    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) {
+    pub fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
         debug_assert_eq!(x.dim(), self.dim);
         self.seen += 1;
         self.merged = None;
@@ -127,7 +129,7 @@ impl MultiBallSvm {
             }
             if d < b.r {
                 self.tap_telemetry(false);
-                return; // discard
+                return false; // discard
             }
             let gap = d - b.r;
             if gap < nearest_gap {
@@ -139,19 +141,20 @@ impl MultiBallSvm {
             // Every distance was non-finite: skip the example rather than
             // index self.balls[usize::MAX] or seed a poisoned new ball.
             debug_assert!(false, "non-finite distances in MultiBallSvm::observe");
-            return;
+            return false;
         }
         match self.policy {
             MergePolicy::NearestBall if !self.balls.is_empty() => {
                 let updated = self.balls[nearest].try_update_view(x, y, &self.opts);
                 self.tap_telemetry(updated);
+                updated
             }
             _ => {
                 if !x.is_finite() {
                     // No existing ball screened the example (the list may
                     // be empty): keep NaN out of a fresh ball's center.
                     debug_assert!(false, "non-finite features in MultiBallSvm::observe");
-                    return;
+                    return false;
                 }
                 self.balls.push(BallState::init_view(x, y, &self.opts));
                 if self.balls.len() > self.max_balls {
@@ -164,6 +167,7 @@ impl MultiBallSvm {
                     }
                 }
                 self.tap_telemetry(true);
+                true
             }
         }
     }
@@ -178,16 +182,6 @@ impl MultiBallSvm {
             let max_r = self.balls.iter().map(|b| b.r).fold(0.0f64, f64::max);
             crate::obs::telemetry::RADIUS.set(max_r);
         }
-    }
-
-    /// Validated [`Self::observe_view`] for untrusted inputs: rejects
-    /// wrong-dimension examples, non-finite features and non-±1 labels
-    /// with [`crate::svm::validate_example`]'s errors instead of
-    /// skipping silently.
-    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<()> {
-        crate::svm::validate_example(x, y, self.dim)?;
-        self.observe_view(x, y);
-        Ok(())
     }
 
     fn collapse_closest_pair(&mut self) {
@@ -251,6 +245,115 @@ impl MultiBallSvm {
 
     pub fn num_support(&self) -> usize {
         self.balls.iter().map(|b| b.m).sum()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The live balls, in creation order.
+    pub fn balls(&self) -> &[BallState] {
+        &self.balls
+    }
+
+    /// The ball budget L.
+    pub fn max_balls(&self) -> usize {
+        self.max_balls
+    }
+
+    pub fn policy(&self) -> MergePolicy {
+        self.policy
+    }
+
+    /// The cached final merged ball, if [`Self::final_ball`] has run
+    /// since the last observation.
+    pub fn merged_cached(&self) -> Option<&BallState> {
+        self.merged.as_ref()
+    }
+
+    /// The fold of all live balls into one, without caching (the `&self`
+    /// twin of [`Self::final_ball`], for summary/serialization paths).
+    pub fn merged_ball(&self) -> Option<BallState> {
+        if let Some(m) = &self.merged {
+            return Some(m.clone());
+        }
+        let mut it = self.balls.iter();
+        let first = it.next()?.clone();
+        Some(it.fold(first, |acc, b| merge_two(&acc, b)))
+    }
+
+    /// Rebuild from exact serialized state (the `.meb` v4 decode path).
+    /// The ball list (and the merge cache, when it was serialized) is
+    /// bit-copied, so a restored model scores and continues training
+    /// identically to the one that was encoded.
+    pub fn from_parts(
+        dim: usize,
+        max_balls: usize,
+        policy: MergePolicy,
+        opts: TrainOptions,
+        balls: Vec<BallState>,
+        merged: Option<BallState>,
+        seen: usize,
+    ) -> Self {
+        assert!(max_balls >= 1);
+        assert!(balls.len() <= max_balls, "more balls than the budget L");
+        MultiBallSvm { balls, max_balls, policy, opts, dim, seen, merged }
+    }
+}
+
+/// Validated observation (`try_observe`) comes from the trait's default
+/// body — the guard logic lives once, in [`crate::svm::learner`].
+impl StreamLearner for MultiBallSvm {
+    fn variant(&self) -> Variant {
+        Variant::Multiball
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn options(&self) -> &TrainOptions {
+        &self.opts
+    }
+
+    #[inline]
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        MultiBallSvm::observe_view(self, x, y)
+    }
+
+    /// The merged radius when finalized, else the largest live radius
+    /// (the same quantity the telemetry gauge reports mid-stream).
+    fn radius(&self) -> f64 {
+        if let Some(m) = &self.merged {
+            return m.r;
+        }
+        self.balls.iter().map(|b| b.r).fold(0.0f64, f64::max)
+    }
+
+    /// The merged slack mass when finalized, else the sum over live
+    /// balls (their slacks live on disjoint stream indices).
+    fn xi2(&self) -> f64 {
+        if let Some(m) = &self.merged {
+            return m.xi2;
+        }
+        self.balls.iter().map(|b| b.xi2).sum()
+    }
+
+    fn examples_seen(&self) -> usize {
+        self.seen
+    }
+
+    fn num_support(&self) -> usize {
+        MultiBallSvm::num_support(self)
+    }
+
+    /// Materialize (and cache) the final merged ball.
+    fn finish(&mut self) {
+        self.final_ball();
+    }
+
+    fn summary_ball(&self) -> Option<BallState> {
+        self.merged_ball()
     }
 }
 

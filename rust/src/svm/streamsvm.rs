@@ -5,9 +5,9 @@
 //! `&[f32]` entry points remain for dense callers.
 
 use crate::data::{Example, FeaturesView};
-use crate::error::Result;
 use crate::eval::Classifier;
 use crate::svm::ball::BallState;
+use crate::svm::learner::{StreamLearner, Variant};
 use crate::svm::TrainOptions;
 
 /// A trained (or in-training) StreamSVM model.
@@ -51,16 +51,6 @@ impl StreamSvm {
             }
         }
         updated
-    }
-
-    /// Validated [`Self::observe_view`] for untrusted inputs (library
-    /// consumers, the serving path): rejects wrong-dimension examples,
-    /// non-finite features and non-±1 labels with
-    /// [`crate::svm::validate_example`]'s errors instead of panicking
-    /// deep inside a `linalg` assert in release builds.
-    pub fn try_observe(&mut self, x: FeaturesView<'_>, y: f32) -> Result<bool> {
-        crate::svm::validate_example(x, y, self.dim)?;
-        Ok(self.observe_view(x, y))
     }
 
     /// Train on a full stream in one pass.
@@ -132,6 +122,47 @@ impl Classifier for StreamSvm {
             Some(b) => b.score_view(x),
             None => 0.0,
         }
+    }
+}
+
+/// Validated observation (`try_observe`) comes from the trait's default
+/// body — the guard logic lives once, in [`crate::svm::learner`].
+impl StreamLearner for StreamSvm {
+    fn variant(&self) -> Variant {
+        Variant::Ball
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn options(&self) -> &TrainOptions {
+        &self.opts
+    }
+
+    #[inline]
+    fn observe_view(&mut self, x: FeaturesView<'_>, y: f32) -> bool {
+        StreamSvm::observe_view(self, x, y)
+    }
+
+    fn radius(&self) -> f64 {
+        StreamSvm::radius(self)
+    }
+
+    fn xi2(&self) -> f64 {
+        self.ball.as_ref().map(|b| b.xi2).unwrap_or_else(|| self.opts.s2())
+    }
+
+    fn examples_seen(&self) -> usize {
+        self.seen
+    }
+
+    fn num_support(&self) -> usize {
+        StreamSvm::num_support(self)
+    }
+
+    fn summary_ball(&self) -> Option<BallState> {
+        self.ball.clone()
     }
 }
 

@@ -119,6 +119,7 @@ fn pipeline_pure_mode_end_to_end_with_permutation() {
         mode: ExecMode::Pure,
         block: Some(128),
         queue: 2,
+        ..Default::default()
     };
     let stream = VecStream::of_train(&ds, Some(11));
     let report = train_stream(None, stream, ds.dim, cfg).unwrap();

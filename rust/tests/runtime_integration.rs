@@ -45,8 +45,8 @@ fn distance_artifact_matches_rust() {
         let d_pad = pad_dim(d);
         let b = rt.train_block(d_pad).expect("train bucket");
         let exs = toy(b, d, 7 + d as u64);
-        let mut blocks = Batcher::new(exs.clone().into_iter(), b, d, d_pad);
-        let block = blocks.next().unwrap();
+        let mut blocks = Batcher::new(exs.clone().into_iter(), b, d);
+        let block = blocks.next().unwrap().pad(b, d_pad);
         let mut rng = Pcg32::seeded(d as u64);
         let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let (xi2, invc) = (0.7f64, 0.5f64);
@@ -70,7 +70,7 @@ fn predict_artifact_matches_rust() {
     let (d, b) = (300usize, 64usize);
     let d_pad = pad_dim(d);
     let exs = toy(b, d, 11);
-    let block = Batcher::new(exs.clone().into_iter(), b, d, d_pad).next().unwrap();
+    let block = Batcher::new(exs.clone().into_iter(), b, d).next().unwrap().pad(b, d_pad);
     let mut rng = Pcg32::seeded(3);
     let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
     let got = rt.predict(&padded(&w, d_pad), &block.x, b, d_pad).unwrap();
@@ -95,7 +95,7 @@ fn update_artifact_matches_algorithm1() {
 
     // rust reference over the block, starting from example 0's init
     let mut ball = BallState::init_view(exs[0].x.view(), exs[0].y, &opts);
-    let block = Batcher::new(exs.clone().into_iter(), b, d, d_pad).next().unwrap();
+    let block = Batcher::new(exs.clone().into_iter(), b, d).next().unwrap().pad(b, d_pad);
     let mut valid = block.valid.clone();
     valid[0] = 0.0; // consumed by init
     let out = rt
@@ -193,8 +193,8 @@ fn pipeline_filter_mode_equals_pure() {
     let base = PipelineConfig {
         train: TrainOptions::default().with_c(2.0),
         queue: 2,
-        block: None,
         mode: ExecMode::Pure,
+        ..Default::default()
     };
     let pure = train_stream(None, exs.clone().into_iter(), d, base).unwrap();
     let filt = train_stream(
@@ -215,7 +215,7 @@ fn pipeline_filter_mode_equals_pure() {
     assert!(filt.metrics.survivors < filt.metrics.examples);
     // and weights agree
     let direct = StreamSvm::fit(exs.iter(), d, &base.train);
-    for (a, b) in filt.model.weights().iter().zip(direct.weights()) {
+    for (a, b) in filt.model.weights().unwrap().iter().zip(direct.weights()) {
         assert!((a - b).abs() < 1e-4, "{a} vs {b}");
     }
 }
@@ -228,8 +228,8 @@ fn pipeline_scan_mode_close_to_pure() {
     let base = PipelineConfig {
         train: TrainOptions::default(),
         queue: 2,
-        block: None,
         mode: ExecMode::Pure,
+        ..Default::default()
     };
     let pure = train_stream(None, exs.clone().into_iter(), d, base).unwrap();
     let scan = train_stream(
@@ -258,8 +258,8 @@ fn pipeline_filter_lookahead_reasonable() {
     let cfg = PipelineConfig {
         train: TrainOptions::default().with_lookahead(10),
         queue: 2,
-        block: None,
         mode: ExecMode::Filter,
+        ..Default::default()
     };
     let report = train_stream(Some(&mut rt), exs.clone().into_iter(), d, cfg).unwrap();
     assert!(report.metrics.merges >= 1, "no on-device merges happened");

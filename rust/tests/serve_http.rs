@@ -593,6 +593,97 @@ fn traceparent_propagates_and_debug_trace_serves_span_trees() {
     handle.shutdown().unwrap();
 }
 
+/// The PR's variant-generic serving criterion: every learner variant
+/// runs the full train + predict + snapshot flow, `/stats` names the
+/// variant, the `.meb` snapshot carries the v4 variant tag, and a
+/// learner restored from those bytes scores *bit-identically* to the
+/// model the server was started with.
+#[test]
+fn every_variant_serves_trains_and_snapshots_bit_identically() {
+    use streamsvm::svm::learner::{AnyLearner, Variant};
+
+    for variant in Variant::ALL {
+        let tag = format!("v-{}", variant.name());
+        let cfg = ServerConfig {
+            threads: 2,
+            conn_queue: 8,
+            train_queue: 64,
+            republish_every: 4,
+            read_timeout: Duration::from_secs(2),
+            tag: tag.clone(),
+            ..Default::default()
+        };
+        // the fit is deterministic, so this local twin is the exact
+        // model the server starts from
+        let opts = TrainOptions::default();
+        let reference = AnyLearner::fit(toy(300, 1).iter(), variant, DIM, opts);
+        let handle = serve(AnyLearner::fit(toy(300, 1).iter(), variant, DIM, opts), cfg).unwrap();
+        let mut client = LoadClient::connect(handle.addr(), Duration::from_secs(2)).unwrap();
+
+        // /stats names the serving variant
+        let stats = client.stats().unwrap();
+        assert_eq!(
+            stats.get("variant").and_then(|v| v.as_str()),
+            Some(variant.name()),
+            "{variant}: /stats variant field"
+        );
+
+        // predict is healthy and matches the local twin
+        let probes = toy(40, 7);
+        for e in &probes {
+            let o = client.predict_features(&e.x).unwrap();
+            assert_eq!(o.status, 200, "{variant}");
+            let got = o.score.expect("score");
+            let want = reference.score(&e.x.dense());
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "{variant}: wire score {got} vs local {want}"
+            );
+        }
+
+        // /snapshot: v4 bytes carry the variant tag and restore a
+        // learner with bit-identical scores (taken before any /train
+        // traffic, so the served model is still the reference fit)
+        let bytes = client.snapshot().unwrap();
+        let sk = MebSketch::decode(&bytes).unwrap();
+        assert_eq!(sk.variant, variant, "snapshot variant tag");
+        assert_eq!(sk.tag, tag);
+        assert_eq!(sk.dim, DIM);
+        let restored = sk.to_learner().unwrap();
+        assert_eq!(restored.variant(), variant);
+        assert_eq!(restored.examples_seen(), reference.examples_seen(), "{variant}");
+        assert_eq!(
+            restored.radius().to_bits(),
+            reference.radius().to_bits(),
+            "{variant}: restored radius not bit-identical"
+        );
+        for e in &probes {
+            let x = e.x.dense();
+            assert_eq!(
+                restored.score(&x).to_bits(),
+                reference.score(&x).to_bits(),
+                "{variant}: restored score not bit-identical"
+            );
+        }
+
+        // /train is absorbed by the same-variant background trainer
+        let mut accepted = 0u64;
+        for e in &toy(30, 8) {
+            let o = client.train_features(&e.x, e.y).unwrap();
+            assert!(o.status == 202 || o.status == 429, "{variant}: train status {}", o.status);
+            if o.status == 202 {
+                accepted += 1;
+            }
+        }
+        drop(client);
+
+        let report = handle.shutdown().unwrap();
+        assert_eq!(report.model.variant(), variant, "trainer switched variants");
+        assert!(report.trained >= accepted, "{variant}: trained {} < {accepted}", report.trained);
+        assert!(report.model.examples_seen() >= 300 + accepted as usize, "{variant}");
+    }
+}
+
 #[test]
 fn sparse_payloads_round_trip_over_the_wire() {
     let cfg = ServerConfig {

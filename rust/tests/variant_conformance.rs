@@ -21,9 +21,11 @@ use streamsvm::data::{Example, Features};
 use streamsvm::eval::Classifier;
 use streamsvm::prop::{check, gen, PropConfig};
 use streamsvm::rng::Pcg32;
+use streamsvm::sketch::codec::MebSketch;
 use streamsvm::svm::ellipsoid::EllipsoidSvm;
 use streamsvm::svm::kernelfn::Kernel;
 use streamsvm::svm::kernelized::KernelStreamSvm;
+use streamsvm::svm::learner::{AnyLearner, StreamLearner, Variant, DEFAULT_MAX_BALLS};
 use streamsvm::svm::lookahead::LookaheadSvm;
 use streamsvm::svm::multiball::{MergePolicy, MultiBallSvm};
 use streamsvm::svm::streamsvm::StreamSvm;
@@ -315,6 +317,204 @@ fn sparse_and_dense_trajectories_agree_across_variants() {
     );
 }
 
+/// The same laws through the unified [`AnyLearner`] surface: enum
+/// dispatch must be a zero-cost veneer. Radius monotonicity holds when
+/// driven generically, and the final state — radius, probe scores,
+/// support count — is *bit-identical* to the concrete variant driven
+/// directly with the identical stream.
+#[test]
+fn any_learner_is_bit_identical_to_direct_variants() {
+    check(
+        "conformance-any-learner",
+        PropConfig { cases: 10, seed: 0xA17E },
+        |rng, _| {
+            let st = gen_stream(rng, 40);
+            // lookahead > 1 so AnyLearner::new keeps it verbatim and the
+            // concrete twin sees the exact same options
+            let opts = TrainOptions::default()
+                .with_c(0.5 + rng.uniform() * 4.0)
+                .with_lookahead(2 + rng.below(5));
+            let n = st.ys.len();
+            let probes: Vec<&[f32]> = st.dense.iter().take(8).map(|v| v.as_slice()).collect();
+            for variant in Variant::ALL {
+                // concrete twin, constructed exactly as AnyLearner::new does
+                let (r_direct, m_direct, s_direct): (f64, usize, Vec<u64>) = match variant {
+                    Variant::Ball => {
+                        let mut m = StreamSvm::new(st.dim, opts);
+                        for i in 0..n {
+                            m.observe_view(st.sparse[i].view(), st.ys[i]);
+                        }
+                        StreamLearner::finish(&mut m);
+                        (
+                            m.radius(),
+                            m.num_support(),
+                            probes.iter().map(|p| Classifier::score(&m, p).to_bits()).collect(),
+                        )
+                    }
+                    Variant::Lookahead => {
+                        let mut m = LookaheadSvm::new(st.dim, opts);
+                        for i in 0..n {
+                            m.observe_view(st.sparse[i].view(), st.ys[i]);
+                        }
+                        m.finish();
+                        (
+                            m.radius(),
+                            m.num_support(),
+                            probes.iter().map(|p| Classifier::score(&m, p).to_bits()).collect(),
+                        )
+                    }
+                    Variant::Kernelized => {
+                        let mut m = KernelStreamSvm::new(Kernel::Linear, opts);
+                        for i in 0..n {
+                            m.observe_view(st.sparse[i].view(), st.ys[i]);
+                        }
+                        StreamLearner::finish(&mut m);
+                        (
+                            m.radius(),
+                            m.num_support(),
+                            probes.iter().map(|p| Classifier::score(&m, p).to_bits()).collect(),
+                        )
+                    }
+                    Variant::Ellipsoid => {
+                        let mut m = EllipsoidSvm::new(st.dim, opts);
+                        for i in 0..n {
+                            m.observe_view(st.sparse[i].view(), st.ys[i]);
+                        }
+                        StreamLearner::finish(&mut m);
+                        (
+                            m.radius(),
+                            m.num_support(),
+                            probes.iter().map(|p| Classifier::score(&m, p).to_bits()).collect(),
+                        )
+                    }
+                    Variant::Multiball => {
+                        let mut m = MultiBallSvm::new(
+                            st.dim,
+                            DEFAULT_MAX_BALLS,
+                            MergePolicy::NearestBall,
+                            opts,
+                        );
+                        for i in 0..n {
+                            m.observe_view(st.sparse[i].view(), st.ys[i]);
+                        }
+                        StreamLearner::finish(&mut m);
+                        (
+                            StreamLearner::radius(&m),
+                            m.num_support(),
+                            probes.iter().map(|p| Classifier::score(&m, p).to_bits()).collect(),
+                        )
+                    }
+                };
+                // generic drive, radius law checked after every example
+                let mut any = AnyLearner::new(variant, st.dim, opts);
+                check_monotone(variant.name(), n, |i| {
+                    any.observe_view(st.sparse[i].view(), st.ys[i]);
+                    any.radius()
+                })?;
+                let before = any.radius();
+                any.finish();
+                if any.radius() < before - 1e-9 {
+                    return Err(format!("{variant}: finish shrank the radius"));
+                }
+                if any.radius().to_bits() != r_direct.to_bits() {
+                    return Err(format!(
+                        "{variant}: AnyLearner R {} != direct {r_direct}",
+                        any.radius()
+                    ));
+                }
+                if any.num_support() != m_direct {
+                    return Err(format!(
+                        "{variant}: AnyLearner M {} != direct {m_direct}",
+                        any.num_support()
+                    ));
+                }
+                for (j, (p, want)) in probes.iter().zip(&s_direct).enumerate() {
+                    if any.score(p).to_bits() != *want {
+                        return Err(format!("{variant}: probe {j} score diverged"));
+                    }
+                }
+                if any.examples_seen() != n {
+                    return Err(format!(
+                        "{variant}: examples_seen {} != {n}",
+                        any.examples_seen()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Serialization is part of the conformance surface: every variant must
+/// survive the v4 `.meb` codec — encode, decode, [`MebSketch::to_learner`]
+/// — with its variant tag intact and *bit-identical* radius and probe
+/// scores (what the serve snapshot/restore flow relies on). The
+/// non-linear RBF kernelized learner rides along: its sketch has no
+/// summary ball, only the exact-state section.
+#[test]
+fn meb_round_trip_restores_every_variant_bit_identically() {
+    check(
+        "conformance-meb-round-trip",
+        PropConfig { cases: 10, seed: 0x0DEC },
+        |rng, _| {
+            let st = gen_stream(rng, 44);
+            let opts = TrainOptions::default()
+                .with_c(0.5 + rng.uniform() * 4.0)
+                .with_lookahead(2 + rng.below(5));
+            let n = st.ys.len();
+            let mut learners: Vec<AnyLearner> =
+                Variant::ALL.iter().map(|&v| AnyLearner::new(v, st.dim, opts)).collect();
+            learners.push(AnyLearner::with_kernel(
+                Variant::Kernelized,
+                st.dim,
+                opts,
+                Kernel::Rbf { gamma: 0.25 },
+            ));
+            for m in &mut learners {
+                for i in 0..n {
+                    m.observe_view(st.sparse[i].view(), st.ys[i]);
+                }
+                m.finish();
+            }
+            for m in &learners {
+                let v = m.variant();
+                let sk = MebSketch::from_learner(m, "conformance");
+                let bytes = sk.encode();
+                let back =
+                    MebSketch::decode(&bytes).map_err(|e| format!("{v}: decode: {e}"))?;
+                if back.variant != v {
+                    return Err(format!("{v}: round-trip variant tag became {}", back.variant));
+                }
+                let restored =
+                    back.to_learner().map_err(|e| format!("{v}: to_learner: {e}"))?;
+                if restored.variant() != v {
+                    return Err(format!("{v}: restored as {}", restored.variant()));
+                }
+                if restored.examples_seen() != m.examples_seen() {
+                    return Err(format!(
+                        "{v}: seen {} != {}",
+                        restored.examples_seen(),
+                        m.examples_seen()
+                    ));
+                }
+                if restored.radius().to_bits() != m.radius().to_bits() {
+                    return Err(format!(
+                        "{v}: restored R {} != {} (not bit-identical)",
+                        restored.radius(),
+                        m.radius()
+                    ));
+                }
+                for (j, x) in st.dense.iter().take(8).enumerate() {
+                    if restored.score(x).to_bits() != m.score(x).to_bits() {
+                        return Err(format!("{v}: probe {j} score diverged after round-trip"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The validated entry points reject malformed input identically across
 /// variants — same error classes, no state consumed (the PR-4
 /// robustness contract, now covering the kernelized and ellipsoid
@@ -375,6 +575,19 @@ fn try_observe_rejections_are_uniform_across_variants() {
     assert!(mb.try_observe(FeaturesView::Dense(&good), 1.0).is_ok());
     assert!(ker.try_observe(FeaturesView::Dense(&good), -1.0).is_ok());
     assert!(ell.try_observe(FeaturesView::Dense(&good), 1.0).is_ok());
+
+    // the identical contract holds through the unified surface
+    for v in Variant::ALL {
+        let mut any = AnyLearner::new(v, 3, opts);
+        any.try_observe(FeaturesView::Dense(&good), 1.0).unwrap();
+        let err = any.try_observe(FeaturesView::Dense(&short), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{v}: wrong-dim gave {err}");
+        let err = any.try_observe(FeaturesView::Dense(&nan), 1.0).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{v}: NaN gave {err}");
+        let err = any.try_observe(FeaturesView::Dense(&good), 0.5).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{v}: bad label gave {err}");
+        assert_eq!(any.examples_seen(), 1, "{v}: rejections consumed stream positions");
+    }
 }
 
 /// End-to-end sanity on a learnable stream: every variant separates the
