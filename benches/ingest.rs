@@ -1,0 +1,175 @@
+//! Parallel-ingest throughput (`BENCH_ingest.json`): the two claims the
+//! chunked-ingest refactor makes, measured end to end on one synthetic
+//! LIBSVM file.
+//!
+//! 1. **Parse**: the chunked byte-level reader ([`FileStream`]'s engine)
+//!    vs the legacy per-line reader ([`LineStream`]) over the same
+//!    bytes, in MB/s. Same tolerant grammar, same `Example` sequence
+//!    (asserted here); the chunked path just never allocates a `String`
+//!    per row.
+//! 2. **Train**: `--workers 4` vs `--workers 1` through
+//!    [`parallel::ingest_file`] — parse *and* Algorithm-1 updates fan
+//!    out across cores, worker balls fold through the Algorithm-2 merge
+//!    tree — in rows/s.
+//!
+//! The full run streams 10M rows (~0.7 GiB on disk, written once to the
+//! temp dir and deleted on exit). `STREAMSVM_BENCH_SMOKE=1` shrinks it
+//! to 200k rows for the CI smoke step; the speedup ratios are the gated
+//! quantities and hold at both sizes. Note the workers ratio needs
+//! actual cores — on a 1-core box it hovers near (or below) 1x, which
+//! is why only CI greps it.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use streamsvm::bench_util::bench;
+use streamsvm::bench_util::Table;
+use streamsvm::coordinator::parallel::{ingest_file, IngestConfig, IngestReport};
+use streamsvm::coordinator::stream::{FileStream, LineStream};
+use streamsvm::rng::Pcg32;
+use streamsvm::server::json::fmt_num;
+
+const DIM: usize = 256;
+const NNZ: usize = 8;
+
+/// Write `rows` deterministic LIBSVM rows (`±1` label, `NNZ` ascending
+/// 1-based indices, short `%.3` values) and return the byte size. Same
+/// grammar `gen-data` emits, so the bench parses exactly what the CLI
+/// paths parse.
+fn write_stream(path: &Path, rows: usize, seed: u64) -> u64 {
+    let f = std::fs::File::create(path).expect("create bench stream");
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+    let mut rng = Pcg32::seeded(seed);
+    let mut line = String::with_capacity(128);
+    for _ in 0..rows {
+        line.clear();
+        let y = rng.label(0.5);
+        line.push_str(if y > 0.0 { "+1" } else { "-1" });
+        let mut idx: Vec<u32> = (0..NNZ).map(|_| 1 + rng.below(DIM) as u32).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        for &i in &idx {
+            let shift = if (i as usize) < DIM / 16 { 0.5 * y } else { 0.0 };
+            let v = (rng.range(-1.0, 1.0) + shift) as f32;
+            line.push_str(&format!(" {i}:{v:.3}"));
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes()).expect("write bench stream");
+    }
+    w.flush().expect("flush bench stream");
+    std::fs::metadata(path).expect("stat bench stream").len()
+}
+
+/// Best-of-`reps` end-to-end ingest rate at a worker count (the report's
+/// wall clock covers read + parse + train + merge).
+fn ingest_best(path: &Path, workers: usize, reps: usize) -> IngestReport {
+    let mut best: Option<IngestReport> = None;
+    let mut best_rate = f64::NEG_INFINITY;
+    for _ in 0..reps {
+        let rep = ingest_file(path, DIM, IngestConfig { workers, ..Default::default() })
+            .expect("ingest run");
+        if rep.rows_per_s() > best_rate {
+            best_rate = rep.rows_per_s();
+            best = Some(rep);
+        }
+    }
+    best.expect("at least one rep")
+}
+
+fn main() {
+    let smoke = std::env::var("STREAMSVM_BENCH_SMOKE").is_ok();
+    let (rows, reps) = if smoke { (200_000, 3) } else { (10_000_000, 3) };
+    let path = PathBuf::from(std::env::temp_dir())
+        .join(format!("streamsvm_ingest_bench_{}.libsvm", std::process::id()));
+    println!("== parallel ingest (rows={rows}, dim={DIM}, nnz={NNZ}, smoke={smoke}) ==");
+    let bytes = write_stream(&path, rows, 42);
+    let mb = bytes as f64 / (1024.0 * 1024.0);
+    println!("stream: {} ({mb:.1} MiB)", path.display());
+
+    // ---- parse: per-line vs chunked over the same bytes. One warmup
+    // pass also faults the file into the page cache so both readers
+    // measure parsing, not cold disk.
+    let line_stats = bench(1, reps, || {
+        let n = LineStream::open(&path, DIM).expect("line open").count();
+        std::hint::black_box(n);
+    });
+    let chunked_stats = bench(1, reps, || {
+        let n = FileStream::open(&path, DIM).expect("chunked open").count();
+        std::hint::black_box(n);
+    });
+    let n_line = LineStream::open(&path, DIM).expect("line open").count();
+    let n_chunked = FileStream::open(&path, DIM).expect("chunked open").count();
+    assert_eq!(n_line, n_chunked, "readers disagree on the row count");
+    assert_eq!(n_chunked, rows, "generator/parser row mismatch");
+    let parse_mb_s_lines = mb / line_stats.p50.as_secs_f64().max(1e-9);
+    let parse_mb_s_chunked = mb / chunked_stats.p50.as_secs_f64().max(1e-9);
+    let parse_speedup = parse_mb_s_chunked / parse_mb_s_lines.max(1e-9);
+
+    // ---- train: 1 vs 4 workers through the parallel driver.
+    let rep1 = ingest_best(&path, 1, reps);
+    let rep4 = ingest_best(&path, 4, reps);
+    assert_eq!(rep1.rows, rows, "workers=1 dropped rows");
+    assert_eq!(rep4.rows, rows, "workers=4 dropped rows");
+    assert_eq!(rep1.skipped, 0, "generator produced malformed rows");
+    assert_eq!(rep4.skipped, 0, "generator produced malformed rows");
+    let (r1, r4) = (rep1.model.radius(), rep4.model.radius());
+    assert!(
+        r1.is_finite() && r4.is_finite() && (r1 - r4).abs() / r1.max(1e-12) < 0.5,
+        "worker counts diverged far beyond merge-tree tolerance: R1={r1} R4={r4}"
+    );
+    let workers1_rows_per_s = rep1.rows_per_s();
+    let workers4_rows_per_s = rep4.rows_per_s();
+    let workers_speedup = workers4_rows_per_s / workers1_rows_per_s.max(1e-9);
+
+    let mut t = Table::new(&["path", "MB/s", "rows/s", "speedup"]);
+    t.row(&[
+        "parse lines".into(),
+        format!("{parse_mb_s_lines:.1}"),
+        format!("{:.0}", rows as f64 / line_stats.p50.as_secs_f64().max(1e-9)),
+        "1.0".into(),
+    ]);
+    t.row(&[
+        "parse chunked".into(),
+        format!("{parse_mb_s_chunked:.1}"),
+        format!("{:.0}", rows as f64 / chunked_stats.p50.as_secs_f64().max(1e-9)),
+        format!("{parse_speedup:.1}"),
+    ]);
+    t.row(&[
+        "ingest workers=1".into(),
+        format!("{:.1}", rep1.mb_per_s()),
+        format!("{workers1_rows_per_s:.0}"),
+        "1.0".into(),
+    ]);
+    t.row(&[
+        "ingest workers=4".into(),
+        format!("{:.1}", rep4.mb_per_s()),
+        format!("{workers4_rows_per_s:.0}"),
+        format!("{workers_speedup:.1}"),
+    ]);
+    t.print();
+    println!(
+        "speedup: {parse_speedup:.1}x parse (chunked vs lines), \
+         {workers_speedup:.1}x ingest (4 vs 1 workers)"
+    );
+
+    let json = format!(
+        concat!(
+            r#"{{"rows":{},"dim":{},"nnz":{},"bytes":{},"#,
+            r#""parse_mb_s_lines":{},"parse_mb_s_chunked":{},"parse_speedup":{},"#,
+            r#""workers1_rows_per_s":{},"workers4_rows_per_s":{},"workers_speedup":{}}}"#
+        ),
+        rows,
+        DIM,
+        NNZ,
+        bytes,
+        fmt_num(parse_mb_s_lines),
+        fmt_num(parse_mb_s_chunked),
+        fmt_num(parse_speedup),
+        fmt_num(workers1_rows_per_s),
+        fmt_num(workers4_rows_per_s),
+        fmt_num(workers_speedup),
+    );
+    std::fs::write(Path::new("BENCH_ingest.json"), &json).expect("write BENCH_ingest.json");
+    println!("wrote BENCH_ingest.json: {json}");
+    let _ = std::fs::remove_file(&path);
+}

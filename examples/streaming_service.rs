@@ -50,6 +50,7 @@ fn main() -> streamsvm::Result<()> {
         mode,
         block: None,
         queue: 4,
+        ..Default::default()
     };
     let stream = VecStream::of_train(&ds, Some(7));
     let report = train_stream(rt.as_mut(), stream, ds.dim, cfg)?;

@@ -21,6 +21,7 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod parallel;
 pub mod pipeline;
 pub mod service;
 pub mod sharded;

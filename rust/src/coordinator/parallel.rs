@@ -1,0 +1,484 @@
+//! Parallel ingest: multicore one-pass training straight from bytes.
+//!
+//! The third layer of the chunked-ingest pipeline. [`ChunkReader`]
+//! (layer 1, `data::chunked`) turns a file into newline-aligned byte
+//! chunks; this driver round-robins those chunks over a bounded channel
+//! to N worker threads, each of which parses its chunks with the
+//! tolerant byte-level row parser and runs Algorithm 1 (any variant,
+//! via [`AnyLearner`]) over the rows it sees. The finished workers'
+//! summary balls fold through the sketch layer's balanced merge tree —
+//! the same aggregation [`super::sharded`] uses, factored into
+//! [`super::sharded::merge_worker_models`] — so the result is one model
+//! whose ball encloses every streamed point.
+//!
+//! ```text
+//!   feeder (this thread)              N workers
+//!   ┌─────────────────┐  bounded     ┌──────────────────────────┐
+//!   │ ChunkReader:    │  channels    │ bytes → parse_row_tolerant│
+//!   │ read + newline  │ ──chunks───▶ │ → AnyLearner (Algorithm 1)│ ×N
+//!   │ alignment       │  round-robin └──────────────────────────┘
+//!   └─────────────────┘                      │ summary balls
+//!                                            ▼
+//!                                   merge_ball_tree → one model
+//! ```
+//!
+//! Contrast with [`super::sharded`]: that coordinator dispatches
+//! *parsed* `Example`s one at a time (one channel send per row), so at
+//! high row rates the dispatch itself becomes the bottleneck. Here a
+//! send moves ~256 KiB of raw bytes and the *parsing* parallelizes too
+//! — the whole ingest cost (syscalls excepted) scales with cores.
+//! [`ingest_stream`] is the same driver for sources that are already
+//! `Example`s (the `train --workers N` pipeline route): rows travel in
+//! blocks instead of byte chunks.
+//!
+//! Accounting: skipped rows bump
+//! [`telemetry::PARSE_SKIPPED`] unconditionally (data loss is never
+//! invisible); chunk/byte/row counters
+//! (`pallas_ingest_chunks/bytes/rows_total`) are gated on
+//! [`telemetry::telemetry_on`] like every other hot-path tap.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use crate::coordinator::metrics::PipelineMetrics;
+use crate::coordinator::sharded::{lookahead_defaulted, merge_worker_models};
+use crate::data::chunked::{self, ChunkReader, Row, DEFAULT_CHUNK_BYTES};
+use crate::data::Example;
+use crate::error::{Error, Result};
+use crate::obs::telemetry;
+use crate::svm::learner::{AnyLearner, Variant};
+use crate::svm::TrainOptions;
+
+/// Parallel-ingest configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestConfig {
+    pub train: TrainOptions,
+    /// Which learner each worker runs (same gate as sharding: the
+    /// variant must expose a summary ball to merge).
+    pub variant: Variant,
+    /// Worker threads. 1 is a valid (sequential) configuration.
+    pub workers: usize,
+    /// Target bytes per chunk ([`DEFAULT_CHUNK_BYTES`] unless tuned
+    /// with `--chunk-kb`). A line longer than this still parses; the
+    /// chunk just grows.
+    pub chunk_bytes: usize,
+    /// Bounded per-worker channel capacity (chunks in flight), the
+    /// backpressure bound on queued memory: at most
+    /// `workers * queue * chunk_bytes` buffered bytes.
+    pub queue: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            train: TrainOptions::default(),
+            variant: Variant::Ball,
+            workers: 1,
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            queue: 4,
+        }
+    }
+}
+
+/// Result of a parallel ingest run.
+#[derive(Debug)]
+pub struct IngestReport {
+    pub model: AnyLearner,
+    /// Rows parsed and trained on (across all workers).
+    pub rows: usize,
+    /// Malformed rows skipped by the tolerant parser.
+    pub skipped: usize,
+    /// Newline-aligned chunks (byte path) or row blocks (stream path)
+    /// dispatched.
+    pub chunks: usize,
+    /// Bytes consumed from the reader (0 on the stream path).
+    pub bytes: u64,
+    /// Per-worker summary-ball radii (pre-merge, for diagnostics).
+    pub worker_radii: Vec<f64>,
+    /// Aggregate over all workers (counters sum); `wall_ns` is the
+    /// end-to-end driver wall clock, dispatch and merge included, so
+    /// [`PipelineMetrics::throughput`] is the true ingest rate.
+    pub metrics: PipelineMetrics,
+}
+
+impl IngestReport {
+    /// End-to-end rows per second.
+    pub fn rows_per_s(&self) -> f64 {
+        self.metrics.throughput()
+    }
+
+    /// End-to-end parse throughput in MB/s (byte path only).
+    pub fn mb_per_s(&self) -> f64 {
+        if self.metrics.wall_ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / (1024.0 * 1024.0) / (self.metrics.wall_ns as f64 * 1e-9)
+        }
+    }
+}
+
+/// One worker's loop on the byte path: parse every line of every chunk
+/// received, feed the learner, count skips.
+fn byte_worker(
+    rx: std::sync::mpsc::Receiver<Vec<u8>>,
+    variant: Variant,
+    dim: usize,
+    opts: TrainOptions,
+) -> (AnyLearner, PipelineMetrics, usize) {
+    let mut model = AnyLearner::new(variant, dim, opts);
+    let mut metrics = PipelineMetrics::default();
+    let mut skipped = 0usize;
+    let wall = Instant::now();
+    for chunk in rx.iter() {
+        metrics.blocks += 1;
+        let mut rows = 0u64;
+        for line in chunked::lines(&chunk) {
+            match chunked::parse_row_tolerant(line, dim) {
+                Row::Ok(e) => {
+                    rows += 1;
+                    metrics.examples += 1;
+                    metrics.survivors += 1; // sequential path: every row checked
+                    if model.observe_view(e.x.view(), e.y) {
+                        metrics.updates += 1;
+                    }
+                }
+                Row::Blank => {}
+                Row::Bad => {
+                    skipped += 1;
+                    // unconditional, like every tolerant-parse skip site
+                    telemetry::PARSE_SKIPPED.inc();
+                }
+            }
+        }
+        if telemetry::telemetry_on() {
+            telemetry::INGEST_ROWS.add(rows);
+        }
+    }
+    model.finish();
+    metrics.wall_ns = wall.elapsed().as_nanos() as u64;
+    (model, metrics, skipped)
+}
+
+/// Train one pass over a LIBSVM byte stream with `cfg.workers` parallel
+/// learners. The feeder (calling thread) only reads and realigns bytes;
+/// parsing and training both happen in the workers.
+pub fn ingest_reader<R: Read>(r: R, dim: usize, cfg: IngestConfig) -> Result<IngestReport> {
+    let workers = cfg.workers.max(1);
+    let opts = lookahead_defaulted(cfg.variant, cfg.train);
+    let variant = cfg.variant;
+    let wall = Instant::now();
+    let mut senders = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = sync_channel::<Vec<u8>>(cfg.queue.max(1));
+        senders.push(tx);
+        handles.push(std::thread::spawn(move || byte_worker(rx, variant, dim, opts)));
+    }
+    let mut reader = ChunkReader::new(r, cfg.chunk_bytes);
+    let mut chunks = 0usize;
+    while let Some(chunk) = reader.next_chunk()? {
+        senders[chunks % workers]
+            .send(chunk)
+            .map_err(|_| Error::Pipeline("ingest worker hung up".into()))?;
+        chunks += 1;
+    }
+    let bytes = reader.bytes_read();
+    drop(senders);
+
+    let mut models = Vec::with_capacity(workers);
+    let mut agg = PipelineMetrics::default();
+    let mut skipped = 0usize;
+    for h in handles {
+        let (model, m, sk) =
+            h.join().map_err(|_| Error::Pipeline("ingest worker panicked".into()))?;
+        agg.merge(&m);
+        skipped += sk;
+        models.push(model);
+    }
+    let rows = agg.examples;
+    let (model, worker_radii) = merge_worker_models(models, dim, variant, opts, rows)?;
+    agg.wall_ns = wall.elapsed().as_nanos() as u64;
+    Ok(IngestReport { model, rows, skipped, chunks, bytes, worker_radii, metrics: agg })
+}
+
+/// [`ingest_reader`] over a file. The [`ChunkReader`] issues its own
+/// chunk-sized reads, so no `BufReader` layer is wanted in between.
+pub fn ingest_file(path: &Path, dim: usize, cfg: IngestConfig) -> Result<IngestReport> {
+    let f = File::open(path)
+        .map_err(|e| Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display()))))?;
+    ingest_reader(f, dim, cfg)
+}
+
+/// The same parallel driver for sources that are already parsed
+/// `Example`s (the `train --workers N` pipeline route): rows round-robin
+/// to the workers in blocks of `block`, the parallel analog of the byte
+/// chunks. Every example is validated against `dim` at dispatch, like
+/// [`super::sharded::train_sharded_variant`].
+pub fn ingest_stream<I>(
+    source: I,
+    dim: usize,
+    cfg: IngestConfig,
+    block: usize,
+) -> Result<IngestReport>
+where
+    I: Iterator<Item = Example>,
+{
+    let workers = cfg.workers.max(1);
+    let opts = lookahead_defaulted(cfg.variant, cfg.train);
+    let variant = cfg.variant;
+    let block = block.max(1);
+    let wall = Instant::now();
+    let mut senders = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = sync_channel::<Vec<Example>>(cfg.queue.max(1));
+        senders.push(tx);
+        handles.push(std::thread::spawn(move || {
+            let mut model = AnyLearner::new(variant, dim, opts);
+            let mut metrics = PipelineMetrics::default();
+            let wall = Instant::now();
+            for blk in rx.iter() {
+                metrics.blocks += 1;
+                if telemetry::telemetry_on() {
+                    telemetry::INGEST_ROWS.add(blk.len() as u64);
+                }
+                for e in blk {
+                    metrics.examples += 1;
+                    metrics.survivors += 1;
+                    if model.observe_view(e.x.view(), e.y) {
+                        metrics.updates += 1;
+                    }
+                }
+            }
+            model.finish();
+            metrics.wall_ns = wall.elapsed().as_nanos() as u64;
+            (model, metrics)
+        }));
+    }
+    let mut buf: Vec<Example> = Vec::with_capacity(block);
+    let mut blocks = 0usize;
+    let mut n = 0usize;
+    for (i, e) in source.enumerate() {
+        if e.dim() != dim {
+            drop(senders); // release workers before bailing out
+            return Err(Error::config(format!(
+                "parallel ingest: example {i} has dimension {} but the stream \
+                 was declared as {dim}",
+                e.dim()
+            )));
+        }
+        n += 1;
+        buf.push(e);
+        if buf.len() >= block {
+            let full = std::mem::replace(&mut buf, Vec::with_capacity(block));
+            senders[blocks % workers]
+                .send(full)
+                .map_err(|_| Error::Pipeline("ingest worker hung up".into()))?;
+            blocks += 1;
+        }
+    }
+    if !buf.is_empty() {
+        senders[blocks % workers]
+            .send(buf)
+            .map_err(|_| Error::Pipeline("ingest worker hung up".into()))?;
+        blocks += 1;
+    }
+    drop(senders);
+
+    let mut models = Vec::with_capacity(workers);
+    let mut agg = PipelineMetrics::default();
+    for h in handles {
+        let (model, m) =
+            h.join().map_err(|_| Error::Pipeline("ingest worker panicked".into()))?;
+        agg.merge(&m);
+        models.push(model);
+    }
+    let (model, worker_radii) = merge_worker_models(models, dim, variant, opts, n)?;
+    agg.wall_ns = wall.elapsed().as_nanos() as u64;
+    Ok(IngestReport {
+        model,
+        rows: n,
+        skipped: 0,
+        chunks: blocks,
+        bytes: 0,
+        worker_radii,
+        metrics: agg,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::accuracy;
+    use crate::prop::gen;
+    use crate::rng::Pcg32;
+    use crate::svm::streamsvm::StreamSvm;
+
+    fn toy(n: usize, d: usize, seed: u64) -> Vec<Example> {
+        let mut rng = Pcg32::seeded(seed);
+        let (xs, ys) = gen::labeled_points(&mut rng, n, d, 1.0, 1.0);
+        xs.into_iter().zip(ys).map(|(x, y)| Example::new(x, y)).collect()
+    }
+
+    /// Render examples as LIBSVM text the way `gen-data` does; `{}` on
+    /// f32 round-trips bit-exactly through the byte parser.
+    fn libsvm_text(exs: &[Example]) -> String {
+        let mut s = String::new();
+        for e in exs {
+            s.push_str(if e.y > 0.0 { "+1" } else { "-1" });
+            for (i, v) in e.x.iter_nonzero() {
+                s.push_str(&format!(" {}:{v}", i + 1));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    #[test]
+    fn single_worker_ingest_matches_direct_fit() {
+        let exs = toy(400, 5, 3);
+        let text = libsvm_text(&exs);
+        let cfg = IngestConfig { chunk_bytes: 97, ..Default::default() };
+        let rep = ingest_reader(text.as_bytes(), 5, cfg).unwrap();
+        assert_eq!(rep.rows, 400);
+        assert_eq!(rep.skipped, 0);
+        assert!(rep.chunks > 1, "chunks = {}", rep.chunks);
+        assert_eq!(rep.bytes, text.len() as u64);
+        // one worker == the sequential pass: the merged single ball is
+        // the worker's own ball, so the model matches a direct fit over
+        // the same parsed (sparse) stream exactly
+        let parsed: Vec<Example> =
+            crate::coordinator::stream::FileStream::from_reader(text.as_bytes(), 5).collect();
+        assert_eq!(parsed.len(), 400);
+        let direct = StreamSvm::fit(parsed.iter(), 5, &TrainOptions::default());
+        assert_eq!(rep.model.weights(), Some(direct.weights()));
+        assert_eq!(rep.model.radius().to_bits(), direct.radius().to_bits());
+    }
+
+    #[test]
+    fn worker_count_invariance_within_merge_tolerance() {
+        let exs = toy(4000, 8, 7);
+        let text = libsvm_text(&exs);
+        let one = ingest_reader(
+            text.as_bytes(),
+            8,
+            IngestConfig { workers: 1, chunk_bytes: 4096, ..Default::default() },
+        )
+        .unwrap();
+        let eight = ingest_reader(
+            text.as_bytes(),
+            8,
+            IngestConfig { workers: 8, chunk_bytes: 4096, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(one.rows, 4000);
+        assert_eq!(eight.rows, 4000);
+        assert_eq!(eight.worker_radii.len(), 8);
+        let (a1, a8) = (accuracy(&one.model, &exs), accuracy(&eight.model, &exs));
+        assert!(a8 > a1 - 0.08, "8 workers {a8:.3} vs 1 worker {a1:.3}");
+        // the merged ball dominates every worker ball
+        let max_r = eight.worker_radii.iter().cloned().fold(0.0f64, f64::max);
+        assert!(eight.model.radius() + 1e-9 >= max_r);
+    }
+
+    #[test]
+    fn malformed_rows_skip_and_count_across_workers() {
+        let exs = toy(200, 4, 11);
+        let mut text = libsvm_text(&exs);
+        text.push_str("not-a-label 1:1\n+1 1:bad\n# comment\n\n+1 1:0.5\n");
+        let before = telemetry::PARSE_SKIPPED.get();
+        let rep = ingest_reader(
+            text.as_bytes(),
+            4,
+            IngestConfig { workers: 3, chunk_bytes: 64, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.rows, 201);
+        assert_eq!(rep.skipped, 2);
+        // unconditional counter moved by at least our skips (other tests
+        // may bump it concurrently, so >= not ==)
+        assert!(telemetry::PARSE_SKIPPED.get() >= before + 2);
+    }
+
+    #[test]
+    fn empty_and_all_bad_inputs_error() {
+        assert!(ingest_reader(&b""[..], 3, IngestConfig::default()).is_err());
+        let rep = ingest_reader(&b"garbage\nmore garbage\n"[..], 3, IngestConfig::default());
+        assert!(rep.is_err(), "rows never parsed: no model to report");
+    }
+
+    #[test]
+    fn stream_path_matches_sharded_semantics() {
+        let exs = toy(1500, 6, 13);
+        let one =
+            ingest_stream(exs.clone().into_iter(), 6, IngestConfig::default(), 64).unwrap();
+        let four = ingest_stream(
+            exs.clone().into_iter(),
+            6,
+            IngestConfig { workers: 4, ..Default::default() },
+            64,
+        )
+        .unwrap();
+        assert_eq!(one.rows, 1500);
+        assert_eq!(four.rows, 1500);
+        assert_eq!(four.chunks, 1500usize.div_ceil(64));
+        let direct = StreamSvm::fit(exs.iter(), 6, &TrainOptions::default());
+        assert_eq!(one.model.weights(), Some(direct.weights()));
+        let (a1, a4) = (accuracy(&one.model, &exs), accuracy(&four.model, &exs));
+        assert!(a4 > a1 - 0.08, "4 workers {a4:.3} vs 1 worker {a1:.3}");
+    }
+
+    #[test]
+    fn stream_path_rejects_dimension_mismatch() {
+        let mut exs = toy(30, 4, 17);
+        exs.insert(20, Example::new(vec![1.0, -1.0], 1.0)); // rogue dim-2 row
+        let err = ingest_stream(
+            exs.into_iter(),
+            4,
+            IngestConfig { workers: 2, ..Default::default() },
+            8,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Config(_)), "{msg}");
+        assert!(msg.contains("example 20") && msg.contains("dimension 2"), "{msg}");
+    }
+
+    #[test]
+    fn lookahead_variant_ingests_with_defaulted_depth() {
+        let exs = toy(600, 5, 19);
+        let text = libsvm_text(&exs);
+        let rep = ingest_reader(
+            text.as_bytes(),
+            5,
+            IngestConfig { variant: Variant::Lookahead, workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.model.variant(), Variant::Lookahead);
+        assert_eq!(rep.rows, 600);
+        assert!(accuracy(&rep.model, &exs) > 0.5);
+    }
+
+    #[test]
+    fn telemetry_counts_chunks_bytes_rows() {
+        let _g = crate::obs::recorder::test_lock();
+        telemetry::reset_all();
+        crate::obs::set_telemetry(true);
+        let exs = toy(300, 4, 23);
+        let text = libsvm_text(&exs);
+        let rep = ingest_reader(
+            text.as_bytes(),
+            4,
+            IngestConfig { workers: 2, chunk_bytes: 512, ..Default::default() },
+        )
+        .unwrap();
+        crate::obs::set_telemetry(false);
+        assert!(telemetry::INGEST_CHUNKS.get() >= rep.chunks as u64);
+        assert!(telemetry::INGEST_BYTES.get() >= rep.bytes);
+        assert!(telemetry::INGEST_ROWS.get() >= rep.rows as u64);
+        telemetry::reset_all();
+    }
+}

@@ -63,6 +63,12 @@ pub struct PipelineConfig {
     pub block: Option<usize>,
     /// Bounded channel capacity (blocks in flight).
     pub queue: usize,
+    /// Parallel workers (`train --workers N`). With `workers > 1` the
+    /// stream routes through [`crate::coordinator::parallel`]: N
+    /// Pure-mode learners train concurrently and their summary balls
+    /// merge through the balanced tree. Requires [`ExecMode::Pure`] and
+    /// no checkpointer.
+    pub workers: usize,
 }
 
 impl Default for PipelineConfig {
@@ -73,6 +79,7 @@ impl Default for PipelineConfig {
             variant: Variant::Ball,
             block: None,
             queue: 4,
+            workers: 1,
         }
     }
 }
@@ -367,6 +374,34 @@ pub fn train_stream_ckpt<I>(
 where
     I: Iterator<Item = Example> + Send + 'static,
 {
+    if cfg.workers > 1 {
+        if cfg.mode != ExecMode::Pure {
+            return Err(Error::config(
+                "--workers > 1 trains in ExecMode::Pure only (each worker runs \
+                 the sequential updater; the PJRT block filter is single-stream)",
+            ));
+        }
+        if ckpt.is_some() {
+            return Err(Error::config(
+                "checkpointing is not supported with --workers > 1 (worker state \
+                 exists only at merge time; use --workers 1, or --out to persist \
+                 the merged model)",
+            ));
+        }
+        let rep = crate::coordinator::parallel::ingest_stream(
+            source,
+            dim,
+            crate::coordinator::parallel::IngestConfig {
+                train: cfg.train,
+                variant: cfg.variant,
+                workers: cfg.workers,
+                chunk_bytes: crate::data::chunked::DEFAULT_CHUNK_BYTES,
+                queue: cfg.queue,
+            },
+            cfg.block.unwrap_or(256),
+        )?;
+        return Ok(PipelineReport { model: rep.model, metrics: rep.metrics });
+    }
     match cfg.variant {
         Variant::Ball | Variant::Lookahead => {
             train_ball_pipeline(runtime, source, dim, cfg, ckpt)
@@ -637,6 +672,62 @@ mod tests {
         assert_eq!(report.metrics.blocks, 7);
         assert!(report.metrics.updates >= 1);
         assert!(report.metrics.wall_ns > 0);
+    }
+
+    #[test]
+    fn multiworker_pipeline_merges_within_tolerance() {
+        use crate::eval::accuracy;
+        let exs = toy(3000, 6, 27);
+        let one = train_stream(
+            None,
+            exs.clone().into_iter(),
+            6,
+            PipelineConfig { mode: ExecMode::Pure, block: Some(64), ..Default::default() },
+        )
+        .unwrap();
+        let four = train_stream(
+            None,
+            exs.clone().into_iter(),
+            6,
+            PipelineConfig {
+                mode: ExecMode::Pure,
+                block: Some(64),
+                workers: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(four.metrics.examples, 3000);
+        let (a1, a4) = (accuracy(&one.model, &exs), accuracy(&four.model, &exs));
+        assert!(a4 > a1 - 0.08, "4 workers {a4:.3} vs 1 worker {a1:.3}");
+    }
+
+    #[test]
+    fn multiworker_rejects_nonpure_and_checkpoints() {
+        use crate::sketch::checkpoint::{CheckpointConfig, Checkpointer};
+        let exs = toy(50, 3, 28);
+        let err = train_stream(
+            None,
+            exs.clone().into_iter(),
+            3,
+            PipelineConfig { mode: ExecMode::Filter, workers: 2, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("ExecMode::Pure"), "{err}");
+        let mut ck = Checkpointer::new(CheckpointConfig {
+            every: 10,
+            path: std::env::temp_dir().join("ssvm_workers_ckpt.meb"),
+            tag: "w".into(),
+        });
+        let err = train_stream_ckpt(
+            None,
+            exs.into_iter(),
+            3,
+            PipelineConfig { mode: ExecMode::Pure, workers: 2, ..Default::default() },
+            Some(&mut ck),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not supported with --workers"), "{err}");
     }
 
     #[test]

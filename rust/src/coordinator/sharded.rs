@@ -92,13 +92,7 @@ where
     I: Iterator<Item = Example>,
 {
     assert!(shards >= 1);
-    // Mirror AnyLearner::new's depth default so the workers' options and
-    // the merged lookahead model agree.
-    let opts = if variant == Variant::Lookahead && opts.lookahead <= 1 {
-        opts.with_lookahead(8)
-    } else {
-        opts
-    };
+    let opts = lookahead_defaulted(variant, opts);
     let mut senders = Vec::with_capacity(shards);
     let mut workers = Vec::with_capacity(shards);
     for _ in 0..shards {
@@ -138,15 +132,48 @@ where
             .map_err(|_| Error::Pipeline("shard worker hung up".into()))?;
     }
     drop(senders);
-    let mut balls: Vec<BallState> = Vec::new();
+    let mut models = Vec::with_capacity(shards);
     let mut agg = PipelineMetrics::default();
     for w in workers {
         let (model, m) =
             w.join().map_err(|_| Error::Pipeline("shard worker panicked".into()))?;
         agg.merge(&m);
+        models.push(model);
+    }
+    let (model, shard_radii) = merge_worker_models(models, dim, variant, opts, n)?;
+    Ok(ShardedReport { model, shard_radii, examples: n, metrics: agg })
+}
+
+/// Mirror `AnyLearner::new`'s lookahead depth default so worker options
+/// and the merged lookahead model agree. Shared by the sharded and
+/// parallel-ingest coordinators.
+pub(crate) fn lookahead_defaulted(variant: Variant, opts: TrainOptions) -> TrainOptions {
+    if variant == Variant::Lookahead && opts.lookahead <= 1 {
+        opts.with_lookahead(8)
+    } else {
+        opts
+    }
+}
+
+/// Fold finished worker models into one aggregate: collect each model's
+/// summary ball (workers that saw zero examples are tolerated — the
+/// stream may be shorter than the worker count), merge through the
+/// balanced tree, and wrap the merged geometry in the variant's
+/// aggregate type. Returns the model and the per-worker radii
+/// (pre-merge, for diagnostics). Shared by the sharded and
+/// parallel-ingest coordinators.
+pub(crate) fn merge_worker_models(
+    models: Vec<AnyLearner>,
+    dim: usize,
+    variant: Variant,
+    opts: TrainOptions,
+    n: usize,
+) -> Result<(AnyLearner, Vec<f64>)> {
+    let mut balls: Vec<BallState> = Vec::new();
+    for model in &models {
         match model.summary_ball() {
             Some(b) => balls.push(b),
-            None if model.examples_seen() == 0 => {} // idle shard (n < shards)
+            None if model.examples_seen() == 0 => {} // idle worker
             None => {
                 return Err(Error::config(format!(
                     "variant {variant} has no summary ball to shard-merge \
@@ -158,7 +185,7 @@ where
     if balls.is_empty() {
         return Err(Error::Pipeline("empty stream".into()));
     }
-    let shard_radii: Vec<f64> = balls.iter().map(|b| b.r).collect();
+    let radii: Vec<f64> = balls.iter().map(|b| b.r).collect();
     let merged = merge_ball_tree(balls).expect("non-empty");
     let model = match variant {
         Variant::Lookahead => {
@@ -170,7 +197,7 @@ where
             AnyLearner::Ball(m)
         }
     };
-    Ok(ShardedReport { model, shard_radii, examples: n, metrics: agg })
+    Ok((model, radii))
 }
 
 /// Merge independently-trained shard sketches into one model — the

@@ -4,7 +4,7 @@
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 
-use crate::data::{Dataset, Example};
+use crate::data::{chunked, Dataset, Example};
 use crate::error::Result;
 use crate::rng::Pcg32;
 
@@ -57,45 +57,44 @@ impl Iterator for VecStream {
 }
 
 /// Lazy one-pass LIBSVM file stream — the genuinely disk-resident case
-/// from the paper's motivation (§1). Lines parse on demand as *sparse*
-/// examples (the file is never materialized or densified), so the
-/// downstream update cost is O(nnz) per row. Dimension must be known up
-/// front (`dim`). This reader is tolerant: out-of-range indices are
-/// dropped, and rows with non-finite labels/values *or malformed tokens*
-/// (`qid:3` fields, garbage, unparsable numbers) are skipped whole and
-/// counted in [`Self::rows_skipped`] — one bad row must never truncate
-/// the rest of a long stream (the strict loaders in
+/// from the paper's motivation (§1). Rides the chunked byte-level
+/// reader ([`chunked::ChunkReader`]): the file is pulled in
+/// newline-aligned buffers and each row parses on demand as a *sparse*
+/// example straight from the bytes (never materialized, densified, or
+/// copied into a per-line `String`), so the downstream update cost is
+/// O(nnz) per row. Dimension must be known up front (`dim`). This
+/// reader is tolerant: out-of-range indices are dropped, and rows with
+/// non-finite labels/values *or malformed tokens* (`qid:3` fields,
+/// garbage, unparsable numbers) are skipped whole and counted in
+/// [`Self::rows_skipped`] — one bad row must never truncate the rest of
+/// a long stream (the strict loaders in
 /// [`crate::data::libsvm_format`] reject instead). Only EOF or an I/O
-/// error ends the stream.
+/// error ends the stream. [`LineStream`] keeps the old per-line
+/// implementation as the reference the parity tests and the ingest
+/// bench compare against.
 pub struct FileStream<R: std::io::Read> {
-    reader: BufReader<R>,
+    chunks: chunked::ChunkReader<R>,
+    /// Current newline-aligned chunk, consumed from `pos`.
+    chunk: Vec<u8>,
+    pos: usize,
     dim: usize,
-    line: String,
-    lineno: usize,
     yielded: usize,
     skipped: usize,
 }
 
 impl FileStream<std::fs::File> {
     pub fn open(path: &Path, dim: usize) -> Result<Self> {
-        Ok(FileStream {
-            reader: BufReader::new(std::fs::File::open(path)?),
-            dim,
-            line: String::new(),
-            lineno: 0,
-            yielded: 0,
-            skipped: 0,
-        })
+        Ok(Self::from_reader(std::fs::File::open(path)?, dim))
     }
 }
 
 impl<R: std::io::Read> FileStream<R> {
     pub fn from_reader(r: R, dim: usize) -> Self {
         FileStream {
-            reader: BufReader::new(r),
+            chunks: chunked::ChunkReader::new(r, chunked::DEFAULT_CHUNK_BYTES),
+            chunk: Vec::new(),
+            pos: 0,
             dim,
-            line: String::new(),
-            lineno: 0,
             yielded: 0,
             skipped: 0,
         }
@@ -108,6 +107,81 @@ impl<R: std::io::Read> FileStream<R> {
     }
 
     /// Rows skipped so far (non-finite labels/values, malformed tokens).
+    pub fn rows_skipped(&self) -> usize {
+        self.skipped
+    }
+}
+
+impl<R: std::io::Read> Iterator for FileStream<R> {
+    type Item = Example;
+
+    fn next(&mut self) -> Option<Example> {
+        loop {
+            if self.pos >= self.chunk.len() {
+                // An I/O error ends the stream, like EOF (`.ok()?`) —
+                // mirroring the legacy per-line reader.
+                self.chunk = self.chunks.next_chunk().ok()??;
+                self.pos = 0;
+            }
+            let rest = &self.chunk[self.pos..];
+            let end = rest.iter().position(|&b| b == b'\n').unwrap_or(rest.len());
+            let line = &rest[..end];
+            self.pos += end + 1;
+            // A malformed or poisoned row must not end the stream: with
+            // `--train-stream` a `None` here would be reported as a
+            // *completed* file while silently dropping every later row.
+            match chunked::parse_row_tolerant(line, self.dim) {
+                chunked::Row::Ok(e) => {
+                    self.yielded += 1;
+                    return Some(e);
+                }
+                chunked::Row::Blank => continue,
+                chunked::Row::Bad => {
+                    self.skipped += 1;
+                    // Unconditional, like OBS_EVENTS_DROPPED: dropped
+                    // training data must stay visible.
+                    crate::obs::telemetry::PARSE_SKIPPED.inc();
+                    continue;
+                }
+            }
+        }
+    }
+}
+
+/// The legacy per-line reader (`BufRead::read_line` + `str::parse`),
+/// semantics-identical to [`FileStream`]. Retained as the comparison
+/// baseline: the parity tests assert chunked == per-line `Example`
+/// sequences on every fixture, and `benches/ingest.rs` measures the
+/// MB/s gap between the two.
+pub struct LineStream<R: std::io::Read> {
+    reader: BufReader<R>,
+    dim: usize,
+    line: String,
+    yielded: usize,
+    skipped: usize,
+}
+
+impl LineStream<std::fs::File> {
+    pub fn open(path: &Path, dim: usize) -> Result<Self> {
+        Ok(Self::from_reader(std::fs::File::open(path)?, dim))
+    }
+}
+
+impl<R: std::io::Read> LineStream<R> {
+    pub fn from_reader(r: R, dim: usize) -> Self {
+        LineStream {
+            reader: BufReader::new(r),
+            dim,
+            line: String::new(),
+            yielded: 0,
+            skipped: 0,
+        }
+    }
+
+    pub fn rows_yielded(&self) -> usize {
+        self.yielded
+    }
+
     pub fn rows_skipped(&self) -> usize {
         self.skipped
     }
@@ -145,13 +219,12 @@ impl<R: std::io::Read> FileStream<R> {
     }
 }
 
-impl<R: std::io::Read> Iterator for FileStream<R> {
+impl<R: std::io::Read> Iterator for LineStream<R> {
     type Item = Example;
 
     fn next(&mut self) -> Option<Example> {
         loop {
             self.line.clear();
-            self.lineno += 1;
             if self.reader.read_line(&mut self.line).ok()? == 0 {
                 return None;
             }
@@ -159,9 +232,6 @@ impl<R: std::io::Read> Iterator for FileStream<R> {
             if t.is_empty() || t.starts_with('#') {
                 continue;
             }
-            // A malformed or poisoned row must not end the stream: with
-            // `--train-stream` a `None` here would be reported as a
-            // *completed* file while silently dropping every later row.
             match self.parse_row(t) {
                 Some(e) => {
                     self.yielded += 1;
@@ -252,6 +322,23 @@ mod tests {
         assert_eq!(got[1].y, -1.0);
         assert_eq!(fs.rows_yielded(), 2);
         assert_eq!(fs.rows_skipped(), 3);
+    }
+
+    #[test]
+    fn chunked_file_stream_matches_line_stream() {
+        // same examples, same counters, across good/bad/blank/comment
+        // rows and both number-grammar paths (fast path + fallback)
+        let text = "+1 1:0.5 3:1.5\n# comment\n-1 2:2.0\n+1 qid:3 1:0.5\nnan 1:1\n\
+                    +1 99:1 1:2\n\n-1 1:1e-3 2:2.5E1\n+1 3:3 1:1 3:9";
+        let mut a = FileStream::from_reader(text.as_bytes(), 3);
+        let mut b = LineStream::from_reader(text.as_bytes(), 3);
+        let ea: Vec<Example> = (&mut a).collect();
+        let eb: Vec<Example> = (&mut b).collect();
+        assert_eq!(ea, eb);
+        assert_eq!(a.rows_yielded(), b.rows_yielded());
+        assert_eq!(a.rows_skipped(), b.rows_skipped());
+        assert_eq!(a.rows_yielded(), 5);
+        assert_eq!(a.rows_skipped(), 2);
     }
 
     #[test]

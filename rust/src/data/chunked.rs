@@ -1,0 +1,670 @@
+//! Chunked byte-level LIBSVM parsing — the zero-allocation ingest path.
+//!
+//! The per-line loaders (`BufRead::lines` / `read_line`) pay, per row: a
+//! `String` allocation, UTF-8 validation, `split_whitespace` iterator
+//! setup, and `str::parse` on every token. At millions of rows/sec that
+//! bookkeeping dominates the actual number crunching. This module reads
+//! the file in fixed-size buffers instead, splits on newline boundaries
+//! ([`ChunkReader`] carries the partial last line over to the next
+//! fill), and parses label/index/value straight from the bytes — the
+//! only per-row heap allocations are the `idx`/`val` vectors that become
+//! the [`SparseVec`](super::SparseVec) itself.
+//!
+//! Number parsing is **bit-exact** with `str::parse`: the common
+//! `[+-]digits[.digits]` spelling takes Clinger's fast path (an integer
+//! mantissa and a power of ten that are both exactly representable make
+//! one IEEE multiply/divide correctly rounded — the same fast path
+//! inside the stdlib's own float parser), and everything else
+//! (exponents, `inf`/`nan` spellings, huge mantissas) falls back to
+//! `str::parse` on the token slice, with zero intermediate copies either
+//! way. The parity tests in `rust/tests/parallel_ingest.rs` pin
+//! chunked == per-line on every `data/` fixture.
+//!
+//! Two row-parse entry points mirror the two ingestion philosophies:
+//!
+//! * [`parse_row_tolerant`] — the [`FileStream`](crate::coordinator::stream::FileStream)
+//!   semantics: malformed/poisoned rows are skipped whole (and counted
+//!   by the caller + [`crate::obs::telemetry::PARSE_SKIPPED`]),
+//!   out-of-range indices are dropped, duplicates dedup. One bad row
+//!   must never truncate a long stream.
+//! * [`parse_row_strict`] — the [`libsvm_format`](super::libsvm_format)
+//!   loader semantics: malformed tokens, 0-based indices, duplicates and
+//!   non-finite numbers are hard [`Error::Data`]s naming the line.
+
+use std::io::Read;
+
+use super::Example;
+use crate::error::{Error, Result};
+
+/// Default chunk size: large enough that per-chunk overhead (one
+/// channel send, one `Vec` allocation) is noise, small enough that a
+/// handful in flight keep cache pressure and queue memory bounded.
+pub const DEFAULT_CHUNK_BYTES: usize = 256 * 1024;
+
+// ---- chunked reading --------------------------------------------------
+
+/// Reads fixed-size buffers from an underlying `Read` and yields them
+/// re-split on newline boundaries: every chunk ends on a `\n` (except
+/// possibly the last, if the file lacks a trailing newline), so a chunk
+/// can be parsed — or shipped to a worker thread — independently.
+pub struct ChunkReader<R: Read> {
+    inner: R,
+    /// Partial last line of the previous fill, prepended to the next.
+    carry: Vec<u8>,
+    chunk_bytes: usize,
+    bytes_read: u64,
+    done: bool,
+}
+
+impl<R: Read> ChunkReader<R> {
+    pub fn new(inner: R, chunk_bytes: usize) -> Self {
+        ChunkReader {
+            inner,
+            carry: Vec::new(),
+            chunk_bytes: chunk_bytes.max(1),
+            bytes_read: 0,
+            done: false,
+        }
+    }
+
+    /// Total bytes consumed from the underlying reader so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    #[inline]
+    fn record(&self, chunk_len: usize) {
+        if crate::obs::telemetry::telemetry_on() {
+            crate::obs::telemetry::INGEST_CHUNKS.inc();
+            crate::obs::telemetry::INGEST_BYTES.add(chunk_len as u64);
+        }
+    }
+
+    /// The next newline-aligned chunk, `Ok(None)` at EOF. A line longer
+    /// than the chunk size is not an error: the buffer grows until its
+    /// newline arrives (the chunk size is a target, not a cap).
+    pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut buf = std::mem::take(&mut self.carry);
+        loop {
+            let start = buf.len();
+            buf.resize(start + self.chunk_bytes, 0);
+            let n = read_full(&mut self.inner, &mut buf[start..])?;
+            buf.truncate(start + n);
+            self.bytes_read += n as u64;
+            if n == 0 {
+                self.done = true;
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                self.record(buf.len());
+                return Ok(Some(buf));
+            }
+            // Split after the last newline; carry the partial tail.
+            match buf.iter().rposition(|&b| b == b'\n') {
+                Some(nl) => {
+                    self.carry = buf[nl + 1..].to_vec();
+                    buf.truncate(nl + 1);
+                    self.record(buf.len());
+                    return Ok(Some(buf));
+                }
+                // No newline in the whole buffer (one very long line):
+                // keep filling until one shows up or EOF.
+                None => continue,
+            }
+        }
+    }
+}
+
+/// `Read::read` until `buf` is full or EOF (plain `read` may return
+/// short counts well before EOF, e.g. on pipes).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+/// Iterate the lines of a newline-aligned chunk (without the `\n`).
+/// `split` yields one empty tail slice after a trailing `\n`, and empty
+/// interior slices are blank rows — both are non-data, so drop empties.
+pub fn lines(chunk: &[u8]) -> impl Iterator<Item = &[u8]> {
+    chunk.split(|&b| b == b'\n').filter(|l| !l.is_empty())
+}
+
+// ---- byte-level number parsing ---------------------------------------
+
+/// ASCII whitespace inside a row (space/tab/CR — `\n` never appears,
+/// chunks are split on it).
+#[inline]
+fn is_space(b: u8) -> bool {
+    b == b' ' || b == b'\t' || b == b'\r'
+}
+
+#[inline]
+fn trim(mut s: &[u8]) -> &[u8] {
+    while let [f, rest @ ..] = s {
+        if is_space(*f) {
+            s = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., l] = s {
+        if is_space(*l) {
+            s = rest;
+        } else {
+            break;
+        }
+    }
+    s
+}
+
+/// Split the decimal grammar `[+-]? digits [. digits]?` into
+/// `(negative, mantissa, frac_len)`; `None` if the token has any other
+/// shape (exponents, inf/nan, stray bytes → caller falls back to
+/// `str::parse`). The mantissa is capped so it stays exact in u64.
+#[inline]
+fn split_decimal(s: &[u8]) -> Option<(bool, u64, u32)> {
+    let (neg, digits) = match s {
+        [b'-', rest @ ..] => (true, rest),
+        [b'+', rest @ ..] => (false, rest),
+        _ => (false, s),
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    let mut m: u64 = 0;
+    let mut frac_len: u32 = 0;
+    let mut seen_dot = false;
+    let mut seen_digit = false;
+    for &b in digits {
+        match b {
+            b'0'..=b'9' => {
+                seen_digit = true;
+                // 19 digits always fit; a 20th could overflow → fallback
+                if m >= u64::MAX / 16 {
+                    return None;
+                }
+                m = m * 10 + (b - b'0') as u64;
+                if seen_dot {
+                    frac_len += 1;
+                }
+            }
+            b'.' if !seen_dot => seen_dot = true,
+            _ => return None,
+        }
+    }
+    if !seen_digit {
+        return None;
+    }
+    Some((neg, m, frac_len))
+}
+
+/// Parse an f32, bit-exact with `str::parse::<f32>`. Clinger fast path:
+/// with `m <= 2^24` and `frac_len <= 10` both `m` and `10^frac_len` are
+/// exact in f32, so the single IEEE divide is correctly rounded — the
+/// same result the stdlib's correctly-rounding parser produces.
+#[inline]
+pub fn parse_f32(s: &[u8]) -> Option<f32> {
+    const POW10: [f32; 11] = [1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10];
+    if let Some((neg, m, frac)) = split_decimal(s) {
+        if m <= (1u64 << 24) && frac <= 10 {
+            let v = m as f32 / POW10[frac as usize];
+            return Some(if neg { -v } else { v });
+        }
+    }
+    std::str::from_utf8(s).ok()?.parse().ok()
+}
+
+/// Parse an f64 (labels), bit-exact with `str::parse::<f64>` by the
+/// same argument at f64 width (`m <= 2^53`, `10^frac <= 10^22`).
+#[inline]
+pub fn parse_f64(s: &[u8]) -> Option<f64> {
+    if let Some((neg, m, frac)) = split_decimal(s) {
+        if m <= (1u64 << 53) && frac <= 22 {
+            let v = m as f64 / pow10_f64(frac);
+            return Some(if neg { -v } else { v });
+        }
+    }
+    std::str::from_utf8(s).ok()?.parse().ok()
+}
+
+#[inline]
+fn pow10_f64(e: u32) -> f64 {
+    // 10^0..10^22 are all exactly representable in f64.
+    const POW10: [f64; 23] = [
+        1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14, 1e15,
+        1e16, 1e17, 1e18, 1e19, 1e20, 1e21, 1e22,
+    ];
+    POW10[e as usize]
+}
+
+/// Parse a u64 index token (`+` prefix allowed, like `str::parse`).
+#[inline]
+pub fn parse_index(s: &[u8]) -> Option<u64> {
+    let digits = match s {
+        [b'+', rest @ ..] => rest,
+        _ => s,
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for &b in digits {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v.checked_mul(10)?.checked_add((b - b'0') as u64)?;
+    }
+    Some(v)
+}
+
+/// Iterate whitespace-separated tokens of a line.
+#[inline]
+fn tokens(line: &[u8]) -> impl Iterator<Item = &[u8]> {
+    line.split(|&b| is_space(b)).filter(|t| !t.is_empty())
+}
+
+// ---- row parsing ------------------------------------------------------
+
+/// Outcome of a tolerant row parse.
+pub enum Row {
+    /// A parsed example.
+    Ok(Example),
+    /// Blank line or `#` comment — not a data row, not a skip.
+    Blank,
+    /// Malformed or poisoned (non-finite) — skip and count.
+    Bad,
+}
+
+/// Tolerant byte-level row parse with [`crate::coordinator::stream::FileStream`]
+/// semantics: labels map to ±1, out-of-range indices (0 or > `dim`) are
+/// dropped, duplicate indices dedup after an unstable sort, any
+/// malformed token or non-finite number poisons the whole row to
+/// [`Row::Bad`].
+pub fn parse_row_tolerant(line: &[u8], dim: usize) -> Row {
+    let t = trim(line);
+    if t.is_empty() || t[0] == b'#' {
+        return Row::Blank;
+    }
+    let mut it = tokens(t);
+    let label = match it.next().and_then(parse_f64) {
+        Some(l) if l.is_finite() => l,
+        _ => return Row::Bad,
+    };
+    let mut idx: Vec<u32> = Vec::new();
+    let mut val: Vec<f32> = Vec::new();
+    let mut sorted = true;
+    for tok in it {
+        let Some(colon) = tok.iter().position(|&b| b == b':') else {
+            return Row::Bad;
+        };
+        let Some(i) = parse_index(&tok[..colon]) else {
+            return Row::Bad;
+        };
+        if i == 0 || i > dim as u64 {
+            continue; // out-of-range: drop the pair, keep the row
+        }
+        let Some(v) = parse_f32(&tok[colon + 1..]) else {
+            return Row::Bad;
+        };
+        if !v.is_finite() {
+            return Row::Bad;
+        }
+        let i = (i - 1) as u32;
+        if let Some(&last) = idx.last() {
+            sorted &= last < i;
+        }
+        idx.push(i);
+        val.push(v);
+    }
+    if !sorted {
+        // Rare path (LIBSVM files are conventionally sorted): fold to
+        // pairs, sort, dedup — allocation only happens here.
+        let mut pairs: Vec<(u32, f32)> = idx.into_iter().zip(val).collect();
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs.dedup_by_key(|&mut (i, _)| i);
+        let (i2, v2): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+        idx = i2;
+        val = v2;
+    }
+    Row::Ok(Example::sparse(dim, idx, val, if label > 0.0 { 1.0 } else { -1.0 }))
+}
+
+/// Outcome of a tolerant *raw* row parse (dimension not yet known).
+pub enum RawRow {
+    /// `(label, sorted deduped pairs)` — 0-based indices.
+    Ok(f64, Vec<(u32, f32)>),
+    /// Blank line or `#` comment.
+    Blank,
+    /// Malformed or poisoned — skip and count.
+    Bad,
+}
+
+/// Tolerant raw row parse for loaders that discover the dimension from
+/// the data ([`super::libsvm_format::load_files`]' training split):
+/// there is no index range to enforce yet, but otherwise the semantics
+/// are [`parse_row_tolerant`]'s — malformed tokens and non-finite
+/// numbers poison the whole row, duplicates dedup after a sort.
+pub fn parse_raw_tolerant(line: &[u8]) -> RawRow {
+    let t = trim(line);
+    if t.is_empty() || t[0] == b'#' {
+        return RawRow::Blank;
+    }
+    let mut it = tokens(t);
+    let label = match it.next().and_then(parse_f64) {
+        Some(l) if l.is_finite() => l,
+        _ => return RawRow::Bad,
+    };
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
+    for tok in it {
+        let Some(colon) = tok.iter().position(|&b| b == b':') else {
+            return RawRow::Bad;
+        };
+        let Some(i) = parse_index(&tok[..colon]) else {
+            return RawRow::Bad;
+        };
+        if i == 0 || i > u32::MAX as u64 {
+            return RawRow::Bad;
+        }
+        let Some(v) = parse_f32(&tok[colon + 1..]) else {
+            return RawRow::Bad;
+        };
+        if !v.is_finite() {
+            return RawRow::Bad;
+        }
+        pairs.push((i as u32 - 1, v));
+    }
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    pairs.dedup_by_key(|&mut (i, _)| i);
+    RawRow::Ok(label, pairs)
+}
+
+/// Strict byte-level row parse with [`super::libsvm_format`] loader
+/// semantics: returns the raw `(label, sorted pairs)` (dimension is
+/// resolved by the caller), `Ok(None)` for blanks/comments, and a
+/// line-numbered [`Error::Data`] for anything malformed.
+pub fn parse_row_strict(line: &[u8], lineno: usize) -> Result<Option<(f64, Vec<(u32, f32)>)>> {
+    let t = trim(line);
+    if t.is_empty() || t[0] == b'#' {
+        return Ok(None);
+    }
+    let mut it = tokens(t);
+    let label_tok = it.next().expect("trimmed non-empty line has a token");
+    let label = parse_f64(label_tok).ok_or_else(|| {
+        Error::data(format!(
+            "line {lineno}: bad label (`{}`)",
+            String::from_utf8_lossy(label_tok)
+        ))
+    })?;
+    if !label.is_finite() {
+        return Err(Error::data(format!("line {lineno}: non-finite label `{label}`")));
+    }
+    let mut pairs: Vec<(u32, f32)> = Vec::new();
+    for tok in it {
+        let colon = tok.iter().position(|&b| b == b':').ok_or_else(|| {
+            Error::data(format!(
+                "line {lineno}: token `{}` lacks `:`",
+                String::from_utf8_lossy(tok)
+            ))
+        })?;
+        let idx = parse_index(&tok[..colon])
+            .filter(|&i| i <= u32::MAX as u64)
+            .ok_or_else(|| {
+                Error::data(format!(
+                    "line {lineno}: bad index (`{}`)",
+                    String::from_utf8_lossy(&tok[..colon])
+                ))
+            })?;
+        if idx == 0 {
+            return Err(Error::data(format!("line {lineno}: LIBSVM indices are 1-based")));
+        }
+        let v = &tok[colon + 1..];
+        let val = parse_f32(v).ok_or_else(|| {
+            Error::data(format!(
+                "line {lineno}: bad value (`{}`)",
+                String::from_utf8_lossy(v)
+            ))
+        })?;
+        if !val.is_finite() {
+            return Err(Error::data(format!(
+                "line {lineno}: non-finite value `{}` at index {idx}",
+                String::from_utf8_lossy(v)
+            )));
+        }
+        pairs.push((idx as u32 - 1, val));
+    }
+    // LIBSVM files are conventionally sorted, but don't rely on it.
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    if pairs.windows(2).any(|w| w[0].0 == w[1].0) {
+        return Err(Error::data(format!("line {lineno}: duplicate feature index")));
+    }
+    Ok(Some((label, pairs)))
+}
+
+/// Strict chunked read of every `(label, pairs)` row plus the max
+/// observed dimension — the byte-level engine behind the
+/// [`super::libsvm_format`] loaders. Line numbers in errors match the
+/// per-line readers exactly (blank lines count, the empty slice after a
+/// chunk's trailing `\n` does not).
+pub fn read_rows<R: Read>(r: R) -> Result<(Vec<(f64, Vec<(u32, f32)>)>, usize)> {
+    let mut cr = ChunkReader::new(r, DEFAULT_CHUNK_BYTES);
+    let mut rows = Vec::new();
+    let mut max_dim = 0usize;
+    let mut lineno = 0usize;
+    while let Some(chunk) = cr.next_chunk()? {
+        let parts: Vec<&[u8]> = chunk.split(|&b| b == b'\n').collect();
+        // A chunk ending in '\n' (every chunk but possibly the last)
+        // contributes an empty tail slice that is an artifact of the
+        // split, not a line.
+        let n_lines = parts.len() - usize::from(chunk.last() == Some(&b'\n'));
+        for line in &parts[..n_lines] {
+            lineno += 1;
+            if let Some((label, pairs)) = parse_row_strict(line, lineno)? {
+                if let Some(&(idx, _)) = pairs.last() {
+                    max_dim = max_dim.max(idx as usize + 1);
+                }
+                rows.push((label, pairs));
+            }
+        }
+    }
+    Ok((rows, max_dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn chunk_reader_aligns_on_newlines() {
+        let text = "aaaa\nbb\ncccccc\ndd"; // no trailing newline
+        for chunk_bytes in 1..=text.len() + 2 {
+            let mut cr = ChunkReader::new(text.as_bytes(), chunk_bytes);
+            let mut chunks = Vec::new();
+            while let Some(c) = cr.next_chunk().unwrap() {
+                chunks.push(c);
+            }
+            // every chunk except the last ends on a newline
+            for c in &chunks[..chunks.len() - 1] {
+                assert_eq!(*c.last().unwrap(), b'\n', "chunk_bytes={chunk_bytes}");
+            }
+            // and concatenation reproduces the input exactly
+            let cat: Vec<u8> = chunks.concat();
+            assert_eq!(cat, text.as_bytes(), "chunk_bytes={chunk_bytes}");
+            assert_eq!(cr.bytes_read(), text.len() as u64);
+        }
+    }
+
+    #[test]
+    fn chunk_reader_survives_lines_longer_than_chunk() {
+        let long = format!("{}\nshort\n", "x".repeat(10_000));
+        let mut cr = ChunkReader::new(long.as_bytes(), 64);
+        let mut cat = Vec::new();
+        while let Some(c) = cr.next_chunk().unwrap() {
+            cat.extend_from_slice(&c);
+        }
+        assert_eq!(cat, long.as_bytes());
+    }
+
+    #[test]
+    fn chunk_reader_empty_input() {
+        let mut cr = ChunkReader::new(&b""[..], 8);
+        assert!(cr.next_chunk().unwrap().is_none());
+        assert!(cr.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn byte_float_parse_is_bit_exact_with_std() {
+        // deterministic random decimal spellings, both widths
+        let mut rng = Pcg32::seeded(0xF1_0A7);
+        for _ in 0..20_000 {
+            let m = rng.below(1_000_000_000) as u64;
+            let frac = rng.below(9);
+            let neg = rng.below(2) == 1;
+            let digits = format!("{m}");
+            let s = if frac == 0 || frac >= digits.len() {
+                format!("{}{digits}", if neg { "-" } else { "" })
+            } else {
+                let (a, b) = digits.split_at(digits.len() - frac);
+                format!("{}{a}.{b}", if neg { "-" } else { "" })
+            };
+            assert_eq!(
+                parse_f32(s.as_bytes()),
+                s.parse::<f32>().ok(),
+                "f32 mismatch on `{s}`"
+            );
+            assert_eq!(
+                parse_f64(s.as_bytes()),
+                s.parse::<f64>().ok(),
+                "f64 mismatch on `{s}`"
+            );
+        }
+        // display-roundtrip spellings (what gen-data writes)
+        let mut rng = Pcg32::seeded(0xF2_0A7);
+        for _ in 0..20_000 {
+            let v = (rng.uniform() * 2.0 - 1.0) as f32;
+            let s = format!("{v}");
+            assert_eq!(parse_f32(s.as_bytes()), Some(v), "roundtrip `{s}`");
+        }
+        // fallback spellings: exponents, specials, signs, dots
+        for s in [
+            "1e-3", "2.5E4", "-1e10", "inf", "-inf", "nan", "NaN", "+0.5", "-0.0", "3.", ".5",
+            "4e40", "0.000000059604645", "16777217", "16777216", "9007199254740993",
+        ] {
+            // bit-compare (NaN != NaN under ==)
+            match (parse_f32(s.as_bytes()), s.parse::<f32>().ok()) {
+                (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "f32 `{s}`"),
+                (a, b) => assert_eq!(a.is_some(), b.is_some(), "f32 `{s}`"),
+            }
+            match (parse_f64(s.as_bytes()), s.parse::<f64>().ok()) {
+                (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "f64 `{s}`"),
+                (a, b) => assert_eq!(a.is_some(), b.is_some(), "f64 `{s}`"),
+            }
+        }
+        // garbage rejects like std
+        for s in ["", "-", "+", ".", "1.2.3", "1,5", "0x10", "a1", "1a"] {
+            assert_eq!(parse_f32(s.as_bytes()).is_some(), s.parse::<f32>().is_ok(), "`{s}`");
+        }
+    }
+
+    #[test]
+    fn index_parse_matches_std() {
+        for s in ["0", "1", "42", "4294967295", "+7", "18446744073709551615"] {
+            assert_eq!(parse_index(s.as_bytes()), s.parse::<u64>().ok(), "`{s}`");
+        }
+        for s in ["", "-1", "1.5", "a", "18446744073709551616"] {
+            assert_eq!(parse_index(s.as_bytes()), s.parse::<u64>().ok(), "`{s}`");
+        }
+    }
+
+    #[test]
+    fn tolerant_row_semantics() {
+        // good row
+        let Row::Ok(e) = parse_row_tolerant(b"+1 1:0.5 3:1.5", 3) else {
+            panic!("good row must parse")
+        };
+        assert_eq!(e.x.dense().as_ref(), &[0.5, 0.0, 1.5]);
+        assert_eq!(e.y, 1.0);
+        // blanks and comments
+        assert!(matches!(parse_row_tolerant(b"", 3), Row::Blank));
+        assert!(matches!(parse_row_tolerant(b"  \t", 3), Row::Blank));
+        assert!(matches!(parse_row_tolerant(b"# comment", 3), Row::Blank));
+        // out-of-range dropped, row kept
+        let Row::Ok(e) = parse_row_tolerant(b"+1 99:1.0 1:2.0", 2) else {
+            panic!()
+        };
+        assert_eq!(e.x.dense().as_ref(), &[2.0, 0.0]);
+        // malformed/poisoned → Bad
+        for bad in [
+            &b"+1 qid:3 1:0.5"[..],
+            b"not-a-label 1:1",
+            b"+1 1:bad",
+            b"+1 1:nan",
+            b"nan 1:1",
+            b"+1 1:inf",
+        ] {
+            assert!(matches!(parse_row_tolerant(bad, 3), Row::Bad));
+        }
+        // unsorted input sorts, duplicates dedup
+        let Row::Ok(e) = parse_row_tolerant(b"-1 3:3 1:1 3:9", 3) else {
+            panic!()
+        };
+        assert_eq!(e.x.iter_nonzero().map(|(i, _)| i).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(e.y, -1.0);
+    }
+
+    #[test]
+    fn strict_row_matches_line_parser_semantics() {
+        assert!(parse_row_strict(b"", 1).unwrap().is_none());
+        assert!(parse_row_strict(b"# c", 1).unwrap().is_none());
+        let (l, p) = parse_row_strict(b"+1 3:3 1:1", 1).unwrap().unwrap();
+        assert_eq!(l, 1.0);
+        assert_eq!(p, vec![(0, 1.0), (2, 3.0)]);
+        for bad in [
+            &b"+1 nocolon"[..],
+            b"+1 0:1",
+            b"notanumber 1:1",
+            b"+1 2:1 2:3",
+            b"+1 1:nan",
+            b"nan 1:1",
+            b"+1 1:4e40",
+        ] {
+            assert!(parse_row_strict(bad, 7).is_err(), "{}", String::from_utf8_lossy(bad));
+        }
+        // errors carry the line number
+        let err = parse_row_strict(b"+1 0:1", 41).unwrap_err();
+        assert!(err.to_string().contains("line 41"), "{err}");
+    }
+
+    #[test]
+    fn chunked_read_rows_spans_chunk_boundaries() {
+        // many rows, forced through tiny chunks so rows straddle fills
+        let mut text = String::new();
+        for i in 1..200u32 {
+            text.push_str(&format!("+1 {i}:0.5 {}:1.25\n", i + 1));
+        }
+        let (rows, max_dim) = read_rows(text.as_bytes()).unwrap();
+        assert_eq!(rows.len(), 199);
+        assert_eq!(max_dim, 200);
+        // and the chunk iterator sees exactly the same rows at any size
+        let mut cr = ChunkReader::new(text.as_bytes(), 37);
+        let mut n = 0;
+        while let Some(c) = cr.next_chunk().unwrap() {
+            for line in lines(&c) {
+                assert!(matches!(parse_row_tolerant(line, 200), Row::Ok(_)));
+                n += 1;
+            }
+        }
+        assert_eq!(n, 199);
+    }
+}

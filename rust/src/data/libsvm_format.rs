@@ -23,7 +23,7 @@
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
 
-use super::{Dataset, Example};
+use super::{chunked, Dataset, Example};
 use crate::error::{Error, Result};
 
 /// Parse one LIBSVM line into `(raw_label, sorted sparse pairs)`.
@@ -77,8 +77,16 @@ fn to_example(label: f64, pairs: Vec<(u32, f32)>, dim: usize) -> Example {
     Example::sparse(dim, idx, val, if label > 0.0 { 1.0 } else { -1.0 })
 }
 
-/// Read raw `(label, pairs)` rows plus the observed dimension.
+/// Read raw `(label, pairs)` rows plus the observed dimension, through
+/// the chunked byte-level parser ([`chunked::read_rows`]).
 fn read_rows<R: Read>(r: R) -> Result<(Vec<(f64, Vec<(u32, f32)>)>, usize)> {
+    chunked::read_rows(r)
+}
+
+/// The legacy per-line strict reader, kept as the reference the parity
+/// tests compare the chunked path against (identical rows, identical
+/// accept/reject decisions on every fixture).
+pub fn read_rows_lines<R: Read>(r: R) -> Result<(Vec<(f64, Vec<(u32, f32)>)>, usize)> {
     let reader = BufReader::new(r);
     let mut rows = Vec::new();
     let mut max_dim = 0usize;
@@ -92,6 +100,41 @@ fn read_rows<R: Read>(r: R) -> Result<(Vec<(f64, Vec<(u32, f32)>)>, usize)> {
         }
     }
     Ok((rows, max_dim))
+}
+
+/// Tolerant chunked read of a training split whose dimension is
+/// discovered from the data: malformed or poisoned rows are skipped
+/// whole and counted (returned, and bumped unconditionally on
+/// [`crate::obs::telemetry::PARSE_SKIPPED`] — the same contract as
+/// [`crate::coordinator::stream::FileStream`]), instead of one stray
+/// `qid:3` field aborting a multi-gigabyte load.
+pub fn read_examples_tolerant<R: Read>(
+    r: R,
+    force_dim: Option<usize>,
+) -> Result<(Vec<Example>, usize)> {
+    let mut cr = chunked::ChunkReader::new(r, chunked::DEFAULT_CHUNK_BYTES);
+    let mut rows: Vec<(f64, Vec<(u32, f32)>)> = Vec::new();
+    let mut max_dim = 0usize;
+    let mut skipped = 0usize;
+    while let Some(chunk) = cr.next_chunk()? {
+        for line in chunked::lines(&chunk) {
+            match chunked::parse_raw_tolerant(line) {
+                chunked::RawRow::Ok(label, pairs) => {
+                    if let Some(&(idx, _)) = pairs.last() {
+                        max_dim = max_dim.max(idx as usize + 1);
+                    }
+                    rows.push((label, pairs));
+                }
+                chunked::RawRow::Blank => {}
+                chunked::RawRow::Bad => {
+                    skipped += 1;
+                    crate::obs::telemetry::PARSE_SKIPPED.inc();
+                }
+            }
+        }
+    }
+    let dim = max_dim.max(force_dim.unwrap_or(0));
+    Ok((rows.into_iter().map(|(l, p)| to_example(l, p, dim)).collect(), skipped))
 }
 
 /// Read all examples from a LIBSVM reader as sparse examples. The
@@ -120,13 +163,28 @@ pub fn read_examples_strict<R: Read>(r: R, dim: usize) -> Result<Vec<Example>> {
 /// Load a train/test pair of LIBSVM files as a [`Dataset`] of sparse
 /// examples. The dataset dimension is `force_dim` (if given) or the
 /// max index of the *training* split; test rows beyond it are rejected.
+///
+/// The *training* split is tolerant, matching [`FileStream`]'s contract
+/// (`crate::coordinator::stream`): malformed rows are skipped whole,
+/// counted on `pallas_parse_skipped_total`, and warned about — they
+/// used to abort the load, which for a large real-world file with one
+/// stray `qid` field meant no training at all. The *test* split stays
+/// strict: a malformed or out-of-dimension test row silently dropped
+/// would change the reported accuracy denominator.
 pub fn load_files(
     name: &str,
     train_path: &Path,
     test_path: &Path,
     force_dim: Option<usize>,
 ) -> Result<Dataset> {
-    let train = read_examples(std::fs::File::open(train_path)?, force_dim)?;
+    let (train, skipped) = read_examples_tolerant(std::fs::File::open(train_path)?, force_dim)?;
+    if skipped > 0 {
+        crate::obs_warn!(
+            "data",
+            "{name}: skipped {skipped} malformed row(s) in {}",
+            train_path.display()
+        );
+    }
     let dim = train.iter().map(|e| e.dim()).max().unwrap_or(force_dim.unwrap_or(0));
     let test = read_examples_strict(std::fs::File::open(test_path)?, dim)?;
     Ok(Dataset::new(name, dim, train, test))
@@ -248,6 +306,55 @@ mod tests {
         let ds = load_files("t", &train_p, &test_p, None).unwrap();
         assert_eq!(ds.dim, 3);
         assert!(ds.train.iter().chain(ds.test.iter()).all(|e| e.dim() == 3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chunked_strict_reader_matches_line_reader() {
+        // identical rows and identical accept/reject decisions
+        let text = "+1 1:0.5 3:1.5\n# c\n\n-1 2:2 4:2.5E1\n+1 3:3 1:1\n0 1:1e-3";
+        assert_eq!(read_rows(text.as_bytes()).unwrap(), read_rows_lines(text.as_bytes()).unwrap());
+        for bad in [
+            "+1 nocolon\n",
+            "+1 0:1\n",
+            "notanumber 1:1\n",
+            "+1 2:1 2:3\n",
+            "+1 1:nan\n",
+            "nan 1:1\n",
+            "+1 1:4e40\n",
+        ] {
+            assert!(read_rows(bad.as_bytes()).is_err(), "chunked must reject `{}`", bad.trim());
+            assert!(read_rows_lines(bad.as_bytes()).is_err(), "legacy must reject `{}`", bad.trim());
+        }
+    }
+
+    #[test]
+    fn tolerant_train_loader_skips_and_counts() {
+        let text = "+1 1:0.5\nnot-a-label 1:1\n+1 qid:3 1:0.5\n-1 2:2.0\n";
+        let before = crate::obs::telemetry::PARSE_SKIPPED.get();
+        let (ex, skipped) = read_examples_tolerant(text.as_bytes(), None).unwrap();
+        assert_eq!(ex.len(), 2);
+        assert_eq!(skipped, 2);
+        assert!(crate::obs::telemetry::PARSE_SKIPPED.get() >= before + 2);
+        assert_eq!(ex[0].x.dense().as_ref(), &[0.5, 0.0]);
+        assert_eq!(ex[1].x.dense().as_ref(), &[0.0, 2.0]);
+        assert_eq!(ex[1].y, -1.0);
+    }
+
+    #[test]
+    fn load_files_tolerates_bad_train_rows_but_keeps_test_strict() {
+        let dir = std::env::temp_dir().join(format!("ssvm_tol_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (train_p, test_p) = (dir.join("b.train"), dir.join("b.test"));
+        // one malformed train row: load must succeed without it
+        std::fs::write(&train_p, "+1 1:1 3:1\ngarbage row\n-1 2:1\n").unwrap();
+        std::fs::write(&test_p, "+1 2:1\n").unwrap();
+        let ds = load_files("t", &train_p, &test_p, None).unwrap();
+        assert_eq!(ds.train.len(), 2);
+        assert_eq!(ds.dim, 3);
+        // a malformed *test* row still aborts the load
+        std::fs::write(&test_p, "+1 0:1\n").unwrap();
+        assert!(load_files("t", &train_p, &test_p, None).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -16,6 +16,7 @@
 
 use std::borrow::Cow;
 
+pub mod chunked;
 pub mod hashing;
 pub mod ijcnn_like;
 pub mod libsvm_format;

@@ -1,22 +1,59 @@
 //! Dense and sparse f32 vector kernels for the Rust-side hot paths.
 //!
-//! The per-example StreamSVM update is O(D) vector work on dense rows;
-//! these helpers are written so LLVM auto-vectorizes them (simple indexed
-//! loops over equal length slices, no bounds checks after the explicit
-//! `assert_eq!`). The `sparse_*` variants take parallel `idx`/`val`
-//! arrays (0-based, strictly increasing indices) and cost O(nnz), which
-//! is what makes the sparse LIBSVM hot path scale with the number of
-//! stored coordinates instead of the ambient dimension.
+//! The per-example StreamSVM update is O(D) vector work on dense rows.
+//! The dense reductions (`dot`/`norm2`/`sqdist_scaled` and their
+//! `_scaled` metric variants) run as explicit 8-lane chunked loops:
+//! eight independent f64 accumulators fed from `chunks_exact(8)` blocks
+//! (no cross-lane dependency, so LLVM turns the inner loop into vector
+//! FMAs), folded in the **pinned pairwise order**
+//! `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, with the `< 8` remainder
+//! accumulated sequentially on top. The order is part of the contract —
+//! results are bit-reproducible run to run and machine to machine, and
+//! for `n < 8` the lanes are all zero so the result is bit-identical to
+//! the plain sequential loop. `dot` and `dot_scaled` share the exact
+//! same lane structure, which is what keeps `dot_scaled` at a unit
+//! metric bit-identical to `dot` (multiplying by exactly 1.0 is exact
+//! per lane) — the isotropic-ellipsoid ≡ `BallState` conformance anchor.
+//!
+//! The elementwise updates (`blend_into`/`axpy`/`scale`) are chunked the
+//! same way for the vectorizer; having no accumulator, their results
+//! are bit-identical to the sequential loop at every length.
+//!
+//! The `sparse_*` variants take parallel `idx`/`val` arrays (0-based,
+//! strictly increasing indices) and cost O(nnz), which is what makes
+//! the sparse LIBSVM hot path scale with the number of stored
+//! coordinates instead of the ambient dimension; their gather patterns
+//! don't vectorize profitably, so they stay sequential.
+
+/// Lane width of the chunked dense reductions.
+const LANES: usize = 8;
+
+/// The pinned lane fold: a balanced pairwise tree, NOT a left fold.
+/// Changing this changes every dense reduction's low bits — it is part
+/// of the bit-reproducibility contract.
+#[inline]
+fn reduce8(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
 
 /// Dot product `<a, b>` in f64 accumulation (streamed sums over hundreds of
 /// f32 terms lose precision fast in f32; the ball geometry is sensitive
-/// near `d ≈ R`).
+/// near `d ≈ R`). 8-lane chunked; bit-identical to the sequential loop
+/// for `n < 8`.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for i in 0..a.len() {
-        acc += a[i] as f64 * b[i] as f64;
+    let mut lanes = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] as f64 * xb[l] as f64;
+        }
+    }
+    let mut acc = reduce8(&lanes);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += *x as f64 * *y as f64;
     }
     acc
 }
@@ -28,44 +65,73 @@ pub fn norm2(a: &[f32]) -> f64 {
 }
 
 /// `||w - y x||^2` without materializing the difference (the inner loop of
-/// Algorithm 1, line 5).
+/// Algorithm 1, line 5). 8-lane chunked like [`dot`].
 #[inline]
 pub fn sqdist_scaled(w: &[f32], x: &[f32], y: f32) -> f64 {
     assert_eq!(w.len(), x.len());
     let y = y as f64;
-    let mut acc = 0.0f64;
-    for i in 0..w.len() {
-        let d = w[i] as f64 - y * x[i] as f64;
+    let mut lanes = [0.0f64; LANES];
+    let mut cw = w.chunks_exact(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (a, b) in cw.by_ref().zip(cx.by_ref()) {
+        for l in 0..LANES {
+            let d = a[l] as f64 - y * b[l] as f64;
+            lanes[l] += d * d;
+        }
+    }
+    let mut acc = reduce8(&lanes);
+    for (a, b) in cw.remainder().iter().zip(cx.remainder()) {
+        let d = *a as f64 - y * *b as f64;
         acc += d * d;
     }
     acc
 }
 
 /// `w += beta * (y x - w)`, i.e. `w = (1-beta) w + beta y x` (Algorithm 1,
-/// line 7).
+/// line 7). Elementwise: chunking changes nothing but the codegen.
 #[inline]
 pub fn blend_into(w: &mut [f32], x: &[f32], y: f32, beta: f32) {
     assert_eq!(w.len(), x.len());
     let omb = 1.0 - beta;
     let by = beta * y;
-    for i in 0..w.len() {
-        w[i] = omb * w[i] + by * x[i];
+    let mut cw = w.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (a, b) in cw.by_ref().zip(cx.by_ref()) {
+        for l in 0..LANES {
+            a[l] = omb * a[l] + by * b[l];
+        }
+    }
+    for (a, b) in cw.into_remainder().iter_mut().zip(cx.remainder()) {
+        *a = omb * *a + by * *b;
     }
 }
 
-/// `a += s * b`.
+/// `a += s * b`. Elementwise, chunked for the vectorizer.
 #[inline]
 pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
     assert_eq!(a.len(), b.len());
-    for i in 0..a.len() {
-        a[i] += s * b[i];
+    let mut ca = a.chunks_exact_mut(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            xa[l] += s * xb[l];
+        }
+    }
+    for (x, y) in ca.into_remainder().iter_mut().zip(cb.remainder()) {
+        *x += s * *y;
     }
 }
 
 /// `a *= s`.
 #[inline]
 pub fn scale(a: &mut [f32], s: f32) {
-    for v in a.iter_mut() {
+    let mut ca = a.chunks_exact_mut(LANES);
+    for c in ca.by_ref() {
+        for v in c {
+            *v *= s;
+        }
+    }
+    for v in ca.into_remainder() {
         *v *= s;
     }
 }
@@ -126,16 +192,26 @@ pub fn sparse_sqdist_scaled(w: &[f32], wnorm2: f64, idx: &[u32], val: &[f32], y:
 
 /// Metric dot `Σ a_i b_i s_i` — the diagonal-metric inner product
 /// `⟨a, b⟩_S` with per-axis weights `s` (the ellipsoid variant passes
-/// `s_i = 1/σ_i²`). With `s ≡ 1.0` this is bit-identical to [`dot`]
-/// (multiplying by exactly 1.0 is exact), which is what lets the
-/// isotropic ellipsoid reproduce `BallState` exactly.
+/// `s_i = 1/σ_i²`). Chunked with the **same** lane structure as [`dot`]:
+/// with `s ≡ 1.0` every lane product `(a·b)·1.0` is exact, so the
+/// result is bit-identical to [`dot`] at every length — which is what
+/// lets the isotropic ellipsoid reproduce `BallState` exactly.
 #[inline]
 pub fn dot_scaled(a: &[f32], b: &[f32], s: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     assert_eq!(a.len(), s.len());
-    let mut acc = 0.0f64;
-    for i in 0..a.len() {
-        acc += a[i] as f64 * b[i] as f64 * s[i];
+    let mut lanes = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    let mut cs = s.chunks_exact(LANES);
+    for ((xa, xb), xs) in ca.by_ref().zip(cb.by_ref()).zip(cs.by_ref()) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] as f64 * xb[l] as f64 * xs[l];
+        }
+    }
+    let mut acc = reduce8(&lanes);
+    for ((x, y), z) in ca.remainder().iter().zip(cb.remainder()).zip(cs.remainder()) {
+        acc += *x as f64 * *y as f64 * *z;
     }
     acc
 }
@@ -313,6 +389,89 @@ mod tests {
         // empty sparse vector is zero
         assert_eq!(sparse_dot_scaled(&w, &s, &[], &[]), 0.0);
         assert_eq!(sparse_norm2_scaled(&s, &[], &[]), 0.0);
+    }
+
+    /// Deterministic pseudo-random f32s in [-1, 1).
+    fn vecs(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::rng::Pcg32::seeded(seed);
+        (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn lane_chunked_reductions_match_naive_at_every_boundary() {
+        // every remainder shape around the 8-lane boundary, plus large
+        for n in (0..=20usize).chain([63, 64, 65, 1000]) {
+            let a = vecs(n, 11 + n as u64);
+            let b = vecs(n, 97 + n as u64);
+            let naive_dot: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let tol = 1e-9 * naive_dot.abs().max(1.0);
+            assert!((dot(&a, &b) - naive_dot).abs() <= tol, "dot n={n}");
+            // n < 8: all lanes zero → bit-identical to the sequential loop
+            if n < 8 {
+                assert_eq!(dot(&a, &b).to_bits(), naive_dot.to_bits(), "n={n}");
+            }
+            let naive_n2: f64 = a.iter().map(|&x| x as f64 * x as f64).sum();
+            assert!((norm2(&a) - naive_n2).abs() <= 1e-9 * naive_n2.max(1.0), "norm2 n={n}");
+            for y in [-1.0f32, 1.0] {
+                let naive_d2: f64 = a
+                    .iter()
+                    .zip(&b)
+                    .map(|(&w, &x)| (w as f64 - y as f64 * x as f64).powi(2))
+                    .sum();
+                let got = sqdist_scaled(&a, &b, y);
+                assert!((got - naive_d2).abs() <= 1e-9 * naive_d2.max(1.0), "sqdist n={n}");
+            }
+            // reductions are deterministic: same input, same bits
+            assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn unit_metric_is_bit_identical_at_every_length() {
+        // the isotropic-ellipsoid ≡ BallState anchor must hold on both
+        // sides of the lane boundary, not just at small dims
+        for n in (0..=20usize).chain([64, 1000]) {
+            let a = vecs(n, 3 + n as u64);
+            let b = vecs(n, 5 + n as u64);
+            let ones = vec![1.0f64; n];
+            assert_eq!(dot_scaled(&a, &b, &ones).to_bits(), dot(&a, &b).to_bits(), "n={n}");
+            assert_eq!(norm2_scaled(&a, &ones).to_bits(), norm2(&a).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn lane_chunked_elementwise_match_naive_exactly() {
+        // no accumulator → chunking must not change a single bit
+        for n in (0..=20usize).chain([64, 1000]) {
+            let base = vecs(n, 23 + n as u64);
+            let x = vecs(n, 41 + n as u64);
+            for (s, y, beta) in [(0.5f32, 1.0f32, 0.25f32), (-2.0, -1.0, 0.75)] {
+                let mut got = base.clone();
+                let mut want = base.clone();
+                axpy(&mut got, s, &x);
+                for i in 0..n {
+                    want[i] += s * x[i];
+                }
+                assert_eq!(got, want, "axpy n={n}");
+
+                let mut got = base.clone();
+                let mut want = base.clone();
+                blend_into(&mut got, &x, y, beta);
+                let (omb, by) = (1.0 - beta, beta * y);
+                for i in 0..n {
+                    want[i] = omb * want[i] + by * x[i];
+                }
+                assert_eq!(got, want, "blend n={n}");
+
+                let mut got = base.clone();
+                let mut want = base.clone();
+                scale(&mut got, s);
+                for v in want.iter_mut() {
+                    *v *= s;
+                }
+                assert_eq!(got, want, "scale n={n}");
+            }
+        }
     }
 
     #[test]

@@ -6,10 +6,14 @@
 //! streamsvm train    --dataset mnist89 [--lookahead 10] [--c 10] [--mode filter|scan|pure]
 //!                    [--variant ball|lookahead|kernelized|ellipsoid|multiball]
 //!                    [--shards 4] [--out model.meb] [--ckpt run.meb --ckpt-every 100000]
+//!                    [--workers 4]  (multicore one-pass ingest; merge-tree fold at the end)
 //!                    [--sparse true]   (convert the stream to the O(nnz) sparse path)
 //!                    [--hash-dim 4096 [--hash-seed 24301]]  (signed feature hashing to D)
 //!                    [--trace-out trace.jsonl [--trace-every 1000]]  (training-dynamics JSONL)
 //!                    [--profile-out profile.json]  (Chrome trace for Perfetto / chrome://tracing)
+//! streamsvm train    --data train.libsvm --dim 784 [--workers 4] [--chunk-kb 256]
+//!                    [--test test.libsvm] [--variant ...] [--out model.meb]
+//!                    (parallel byte-chunk ingest straight off disk; no registry)
 //! streamsvm serve    --dataset mnist01 [--variant ball|lookahead|kernelized|ellipsoid|multiball]
 //!                    [--addr 127.0.0.1:7878] [--threads 8] [--queue 64]
 //!                    [--train-queue 1024] [--republish-every 32] [--snapshot live.meb]
@@ -50,9 +54,11 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use streamsvm::cli::Args;
+use streamsvm::coordinator::parallel::{ingest_file, IngestConfig};
 use streamsvm::coordinator::pipeline::{train_stream_ckpt, ExecMode, PipelineConfig};
 use streamsvm::coordinator::sharded::train_sharded_variant;
 use streamsvm::coordinator::stream::VecStream;
+use streamsvm::data::chunked::DEFAULT_CHUNK_BYTES;
 use streamsvm::data::hashing::{FeatureHasher, HashedStream};
 use streamsvm::data::registry::{load_dataset, load_dataset_sized};
 use streamsvm::data::Example;
@@ -137,9 +143,18 @@ fn open_runtime_opt(mode: ExecMode) -> Option<Runtime> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // --data: parallel byte-chunk ingest straight off disk (no registry).
+    if args.has("data") {
+        return cmd_train_file(args);
+    }
     let name = args.str("dataset", "synthA");
     let frac: f64 = args.get("frac", 1.0)?;
+    let skipped_before = streamsvm::obs::telemetry::PARSE_SKIPPED.get();
     let mut ds = load_dataset_sized(&name, args.get("seed", 42u64)?, frac)?;
+    let skipped = streamsvm::obs::telemetry::PARSE_SKIPPED.get().saturating_sub(skipped_before);
+    if skipped > 0 {
+        println!("data: skipped {skipped} malformed train row(s)");
+    }
     if args.has("sparse") && args.get("sparse", true)? {
         ds.sparsify();
         println!(
@@ -210,8 +225,15 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     // Validate flags up front so no combination silently ignores them.
     let variant: Variant = args.get("variant", Variant::Ball)?;
+    let workers: usize = args.get("workers", 1usize)?;
+    if workers == 0 {
+        return Err(Error::config("--workers must be >= 1"));
+    }
     let device_capable = matches!(variant, Variant::Ball | Variant::Lookahead);
-    let mode = match args.str("mode", if device_capable { "filter" } else { "pure" }).as_str() {
+    // Multiworker ingest runs each worker's sequential updater on a
+    // core, so the pipeline requires ExecMode::Pure; default there.
+    let default_mode = if device_capable && workers == 1 { "filter" } else { "pure" };
+    let mode = match args.str("mode", default_mode).as_str() {
         "filter" => ExecMode::Filter,
         "scan" => ExecMode::Scan,
         "pure" => ExecMode::Pure,
@@ -231,6 +253,17 @@ fn cmd_train(args: &Args) -> Result<()> {
              merge time; use --out to persist the merged model)",
         ));
     }
+    if workers > 1 && shards > 1 {
+        return Err(Error::config(
+            "--workers and --shards are alternative parallel drivers; pick one",
+        ));
+    }
+    if workers > 1 && args.has("ckpt") {
+        return Err(Error::config(
+            "--ckpt is not supported with --workers (worker state exists only at \
+             merge time; use --out to persist the merged model)",
+        ));
+    }
 
     // ---- sharded path: S parallel one-pass learners, merge-and-reduce
     let fit_span = streamsvm::obs::span("cli", "fit");
@@ -247,8 +280,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         (rep.model, merges)
     } else {
         // ---- pipeline path, with optional periodic checkpoints
-        let cfg =
-            PipelineConfig { train, mode, variant, block: None, queue: args.get("queue", 4usize)? };
+        let cfg = PipelineConfig {
+            train,
+            mode,
+            variant,
+            block: None,
+            queue: args.get("queue", 4usize)?,
+            workers,
+        };
         let mut rt = open_runtime_opt(mode);
         let cfg = if rt.is_none() && mode != ExecMode::Pure {
             PipelineConfig { mode: ExecMode::Pure, ..cfg }
@@ -312,6 +351,107 @@ fn cmd_train(args: &Args) -> Result<()> {
         t.finish_root("cli", "train", profile_t0_us, now.saturating_sub(profile_t0_us), vec![]);
         streamsvm::obs::chrome_trace::write_file(&t, &path)?;
         println!("wrote {path} (Chrome trace; load at https://ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+/// `train --data <file>`: one-pass parallel ingest straight off disk.
+/// Newline-aligned byte chunks fan out to `--workers` one-pass learners
+/// whose summary balls fold through the Algorithm-2 merge tree, so
+/// parsing and training both scale with cores. Registry datasets,
+/// hashing, and checkpointing stay on the `--dataset` path.
+fn cmd_train_file(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.str("data", "train.libsvm"));
+    if !args.has("dim") {
+        return Err(Error::config(
+            "--data needs --dim D (a one-pass reader cannot pre-scan the file \
+             to discover the feature dimension)",
+        ));
+    }
+    let dim: usize = args.get("dim", 0usize)?;
+    if dim == 0 {
+        return Err(Error::config("--dim must be >= 1"));
+    }
+    if args.has("hash-dim") || args.has("hash-seed") {
+        return Err(Error::config(
+            "--hash-dim is not supported with --data; hashing on ingest is a \
+             registry-stream feature (use --dataset, or pre-hash the file)",
+        ));
+    }
+    if args.has("ckpt") {
+        return Err(Error::config(
+            "--ckpt is not supported with --data (worker state exists only at \
+             merge time; use --out to persist the merged model)",
+        ));
+    }
+    let workers: usize = args.get("workers", 1usize)?;
+    if workers == 0 {
+        return Err(Error::config("--workers must be >= 1"));
+    }
+    let chunk_kb: usize = args.get("chunk-kb", DEFAULT_CHUNK_BYTES / 1024)?;
+    if chunk_kb == 0 {
+        return Err(Error::config("--chunk-kb must be >= 1"));
+    }
+    let variant: Variant = args.get("variant", Variant::Ball)?;
+    let train = train_opts(args)?;
+    let fit_span = streamsvm::obs::span("cli", "fit");
+    let rep = ingest_file(
+        &path,
+        dim,
+        IngestConfig {
+            train,
+            variant,
+            workers,
+            chunk_bytes: chunk_kb * 1024,
+            queue: args.get("queue", 4usize)?,
+        },
+    )?;
+    drop(fit_span);
+    println!(
+        "ingest: {} rows ({} skipped) | {} chunks, {:.1} MiB | {workers} worker(s)",
+        rep.rows,
+        rep.skipped,
+        rep.chunks,
+        rep.bytes as f64 / (1024.0 * 1024.0),
+    );
+    println!(
+        "ingest rate: {:.0} rows/s, {:.1} MB/s end to end (parse + train + merge)",
+        rep.rows_per_s(),
+        rep.mb_per_s()
+    );
+    let model = rep.model;
+    print!(
+        "model: variant={} R={:.4} supports={}",
+        model.variant().name(),
+        model.radius(),
+        model.num_support()
+    );
+    if args.has("test") {
+        let tpath = args.str("test", "test.libsvm");
+        let f = std::fs::File::open(&tpath)
+            .map_err(|e| Error::Io(std::io::Error::new(e.kind(), format!("{tpath}: {e}"))))?;
+        let (test, test_skipped) =
+            streamsvm::data::libsvm_format::read_examples_tolerant(f, Some(dim))?;
+        if test_skipped > 0 {
+            streamsvm::obs_warn!("cli", "{tpath}: skipped {test_skipped} malformed test row(s)");
+        }
+        // read_examples_tolerant grows the dimension to the max observed
+        // index, so one check on any row catches an out-of-dim test file
+        // before accuracy() would index past the model's weights.
+        if test.first().is_some_and(|e| e.dim() > dim) {
+            return Err(Error::data(format!(
+                "{tpath}: test rows use feature indices beyond --dim {dim}"
+            )));
+        }
+        print!(" | test acc = {:.2}%", accuracy(&model, &test) * 100.0);
+    }
+    println!();
+    if args.has("out") {
+        let out = args.str("out", "model.meb");
+        let tag = path.file_stem().and_then(|s| s.to_str()).unwrap_or("stream");
+        let sk = MebSketch::from_learner(&model, tag);
+        sk.write_to(Path::new(&out))?;
+        println!("wrote {out} ({} bytes): {}", sk.encode().len(), sk.summary());
     }
     Ok(())
 }

@@ -30,7 +30,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::stream::FileStream;
+use crate::coordinator::stream::{FileStream, LineStream};
 use crate::data::hashing::FeatureHasher;
 use crate::data::Example;
 use crate::rng::Pcg32;
@@ -123,6 +123,12 @@ pub struct ProfileReport {
     pub rows_per_s: f64,
     /// `(variant name, one-pass fit rows/sec)` for all five variants.
     pub variants: Vec<(&'static str, f64)>,
+    /// Tolerant-parse throughput (MB/s) of the legacy per-line reader,
+    /// measured outside the phased section like the variant sweep.
+    pub ingest_line_mb_s: f64,
+    /// Same text through the chunked byte-level reader ([`FileStream`]'s
+    /// engine since the chunked-ingest refactor).
+    pub ingest_chunked_mb_s: f64,
 }
 
 /// Deterministic sparse libsvm text: `rows` lines of `nnz` ascending
@@ -257,12 +263,33 @@ pub fn run_profile(cfg: &ProfileConfig) -> ProfileReport {
         }
     }
 
+    // Chunked vs per-line ingest throughput over the same text —
+    // outside the phased section (like the variant sweep) so the
+    // phase-sum-tracks-total invariant is untouched. `benches/ingest.rs`
+    // measures this at scale; these keys track it on the standardized
+    // workload.
+    let mb = text.len() as f64 / (1024.0 * 1024.0);
+    let (ingest_line_mb_s, ingest_chunked_mb_s) = {
+        let _sp = crate::obs::span("profile", "ingest");
+        let t = Instant::now();
+        let n_line = LineStream::from_reader(text.as_bytes(), cfg.dim).count();
+        let line_s = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let n_chunked = FileStream::from_reader(text.as_bytes(), cfg.dim).count();
+        let chunked_s = t.elapsed().as_secs_f64();
+        debug_assert_eq!(n_line, n_chunked);
+        std::hint::black_box((n_line, n_chunked));
+        (mb / line_s.max(1e-9), mb / chunked_s.max(1e-9))
+    };
+
     ProfileReport {
         cfg: *cfg,
         total,
         phases: ph,
         rows_per_s: rows as f64 / total.as_secs_f64().max(1e-9),
         variants,
+        ingest_line_mb_s,
+        ingest_chunked_mb_s,
     }
 }
 
@@ -295,6 +322,12 @@ impl ProfileReport {
             }
             s.push_str(&format!("\"{name}\": {}", f(*rps)));
         }
+        s.push_str("},\n  \"ingest\": {");
+        s.push_str(&format!(
+            "\"line_mb_s\": {}, \"chunked_mb_s\": {}",
+            f(self.ingest_line_mb_s),
+            f(self.ingest_chunked_mb_s)
+        ));
         s.push_str("}\n}\n");
         s
     }
@@ -420,6 +453,7 @@ mod tests {
         assert!(ratio <= 1.0 + 1e-9, "phases cannot exceed total, got {ratio}");
         assert!(ratio >= 0.90, "phase sum only {:.1}% of total", ratio * 100.0);
         assert!(r.rows_per_s > 0.0);
+        assert!(r.ingest_line_mb_s > 0.0 && r.ingest_chunked_mb_s > 0.0);
     }
 
     #[test]
@@ -431,6 +465,8 @@ mod tests {
         assert!(phases.get("merge").and_then(|v| v.as_f64()).is_some());
         let variants = j.get("variants").unwrap();
         assert!(variants.get("ellipsoid").and_then(|v| v.as_f64()).is_some());
+        let ingest = j.get("ingest").unwrap();
+        assert!(ingest.get("chunked_mb_s").and_then(|v| v.as_f64()).is_some());
         let prom = r.to_prom();
         let fams = crate::obs::prom::check_exposition(&prom).expect("valid exposition");
         assert_eq!(fams, 3);

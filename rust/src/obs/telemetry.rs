@@ -147,6 +147,29 @@ pub static OBS_EVENTS_DROPPED: Counter = Counter::new(
     "pallas_obs_events_dropped_total",
     "Events dropped from the bounded /trace ring buffer.",
 );
+/// Rows skipped by the tolerant parsers (malformed tokens, non-finite
+/// numbers). Bumped unconditionally at the skip sites, like
+/// [`OBS_EVENTS_DROPPED`] — it *is* the visibility for silently dropped
+/// training data, so it cannot hide behind the telemetry gate.
+pub static PARSE_SKIPPED: Counter = Counter::new(
+    "pallas_parse_skipped_total",
+    "Rows skipped by the tolerant LIBSVM parsers (malformed/non-finite).",
+);
+/// Newline-aligned chunks dispatched by the chunked ingest path.
+pub static INGEST_CHUNKS: Counter = Counter::new(
+    "pallas_ingest_chunks_total",
+    "Newline-aligned chunks read by the chunked ingest path.",
+);
+/// Bytes consumed by the chunked ingest path.
+pub static INGEST_BYTES: Counter = Counter::new(
+    "pallas_ingest_bytes_total",
+    "Bytes consumed by the chunked ingest path.",
+);
+/// Rows parsed and dispatched by the parallel ingest driver.
+pub static INGEST_ROWS: Counter = Counter::new(
+    "pallas_ingest_rows_total",
+    "Rows parsed by the parallel ingest driver.",
+);
 
 /// Current ball radius `R` (max over balls for multiball).
 pub static RADIUS: Gauge = Gauge::new(
@@ -180,7 +203,7 @@ pub static BALLS: Gauge = Gauge::new(
 );
 
 /// Every registered counter, in exposition order.
-pub fn counters() -> [&'static Counter; 10] {
+pub fn counters() -> [&'static Counter; 14] {
     [
         &EXAMPLES,
         &UPDATES,
@@ -192,6 +215,10 @@ pub fn counters() -> [&'static Counter; 10] {
         &SKETCH_WRITE_NS,
         &CHECKPOINT_SAVES,
         &OBS_EVENTS_DROPPED,
+        &PARSE_SKIPPED,
+        &INGEST_CHUNKS,
+        &INGEST_BYTES,
+        &INGEST_ROWS,
     ]
 }
 

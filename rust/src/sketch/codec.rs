@@ -412,7 +412,10 @@ fn read_extra(r: &mut Reader<'_>, variant: Variant, dim: usize) -> Result<Varian
                     "multiball sketch holds {n} balls with budget L={max_balls}"
                 )));
             }
-            let mut balls = Vec::with_capacity(n);
+            // cap the pre-allocation: `n` is attacker-controlled in a
+            // corrupted sketch, and a huge reserve aborts before the
+            // truncation check inside `read_ball` can error
+            let mut balls = Vec::with_capacity(n.min(1 << 20));
             for _ in 0..n {
                 balls.push(read_ball(r, dim)?);
             }
@@ -805,7 +808,12 @@ impl MebSketch {
         }
         let payload_len =
             usize_of(u64::from_le_bytes(bytes[8..16].try_into().unwrap()), "payload length")?;
-        let expect = HEADER_LEN + payload_len + CHECKSUM_LEN;
+        let expect = HEADER_LEN
+            .checked_add(payload_len)
+            .and_then(|v| v.checked_add(CHECKSUM_LEN))
+            .ok_or_else(|| {
+                Error::sketch(format!("payload length {payload_len} overflows the sketch size"))
+            })?;
         if bytes.len() != expect {
             return Err(Error::sketch(format!(
                 "length mismatch: header promises {expect} bytes, got {}",
