@@ -1,0 +1,316 @@
+//! Structure-aware case generators: grammar-driven *valid* seeds for
+//! each fuzz target, so coverage reaches past the first reject.
+//!
+//! A purely random byte string dies at `read_line` / `MAGIC` / the
+//! first `{`; these generators produce well-formed HTTP messages, JSON
+//! documents and `.meb` sketch frames (every codec version), which the
+//! mutator then corrupts. The `.meb` seeds include one trained v4
+//! sketch per variant — each exercises its own exact-state section —
+//! plus hand-assembled v1/v2/v3 legacy frames, mirroring what the codec
+//! corruption suite (PR 9) used before it migrated into this harness.
+
+use std::sync::OnceLock;
+
+use crate::data::FeaturesView;
+use crate::rng::Pcg32;
+use crate::sketch::codec::{fnv1a64, MebSketch, CHECKSUM_LEN, HEADER_LEN};
+use crate::svm::learner::{AnyLearner, Variant};
+use crate::svm::TrainOptions;
+
+/// A grammar-valid HTTP/1.1 message: mostly requests against the
+/// serving endpoints (correct `Content-Length`, occasional duplicates —
+/// same and conflicting — `Expect: 100-continue`, traceparent headers),
+/// sometimes a response, so both parser halves see structured input.
+pub fn http_message(rng: &mut Pcg32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(256);
+    let body = http_body(rng);
+    if rng.below(4) == 0 {
+        // response shape
+        let status = [200u16, 204, 400, 404, 429, 500][rng.below(6)];
+        out.extend_from_slice(format!("HTTP/1.1 {status} X\r\n").as_bytes());
+    } else {
+        let method = ["GET", "POST", "PUT", "DELETE", "HEAD", "PATCH"][rng.below(6)];
+        let path = [
+            "/predict",
+            "/predict_batch",
+            "/train",
+            "/stats",
+            "/metrics",
+            "/snapshot",
+            "/trace",
+            "/debug/trace/4bf92f3577b34da6a3ce929d0e0e4736",
+            "/a/b%20c?x=1&y=2",
+        ][rng.below(9)];
+        out.extend_from_slice(format!("{method} {path} HTTP/1.1\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"Host: 127.0.0.1:7878\r\n");
+    if rng.below(3) == 0 {
+        out.extend_from_slice(b"Content-Type: application/json\r\n");
+    }
+    if rng.below(4) == 0 {
+        out.extend_from_slice(
+            b"traceparent: 00-4bf92f3577b34da6a3ce929d0e0e4736-00f067aa0ba902b7-01\r\n",
+        );
+    }
+    if rng.below(6) == 0 {
+        out.extend_from_slice(b"Expect: 100-continue\r\n");
+    }
+    if rng.below(5) == 0 {
+        out.extend_from_slice(format!("X-Junk: {}\r\n", rng.next_u32()).as_bytes());
+    }
+    // content-length: usually correct, sometimes wrong, sometimes
+    // duplicated (same value, or the conflicting request-smuggling shape)
+    let declared = match rng.below(8) {
+        0 => body.len() + 1 + rng.below(64),
+        _ => body.len(),
+    };
+    out.extend_from_slice(format!("Content-Length: {declared}\r\n").as_bytes());
+    match rng.below(6) {
+        0 => out.extend_from_slice(format!("content-length: {declared}\r\n").as_bytes()),
+        1 => out
+            .extend_from_slice(format!("Content-Length: {}\r\n", declared + 1).as_bytes()),
+        _ => {}
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(&body);
+    out
+}
+
+fn http_body(rng: &mut Pcg32) -> Vec<u8> {
+    match rng.below(4) {
+        0 => Vec::new(),
+        1 => json_doc(rng),
+        2 => (0..rng.below(64)).map(|_| rng.next_u32() as u8).collect(),
+        _ => br#"{"x":[0.5,-1.2]}"#.to_vec(),
+    }
+}
+
+/// A grammar-valid JSON document (objects, arrays, strings with escapes,
+/// numbers including the overflow-exponent forms the parser must reject
+/// gracefully, literals), with occasional pathological nesting that
+/// crosses the parser's depth cap.
+pub fn json_doc(rng: &mut Pcg32) -> Vec<u8> {
+    let mut s = String::with_capacity(128);
+    if rng.below(12) == 0 {
+        // deep nesting: crosses MAX_DEPTH, must error (never overflow)
+        let depth = 40 + rng.below(80);
+        s.push_str(&"[".repeat(depth));
+        s.push('1');
+        s.push_str(&"]".repeat(depth));
+    } else {
+        json_value(rng, 0, &mut s);
+    }
+    s.into_bytes()
+}
+
+fn json_value(rng: &mut Pcg32, depth: usize, out: &mut String) {
+    let pick = if depth >= 5 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => out.push_str(["null", "true", "false"][rng.below(3)]),
+        1 => out.push_str(&json_number(rng)),
+        2 | 3 => {
+            out.push('"');
+            out.push_str(&json_string_body(rng));
+            out.push('"');
+        }
+        4 => {
+            out.push('[');
+            let n = rng.below(5);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                json_value(rng, depth + 1, out);
+            }
+            out.push(']');
+        }
+        _ => {
+            out.push('{');
+            let n = rng.below(4);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                out.push_str(&json_string_body(rng));
+                out.push_str("\":");
+                json_value(rng, depth + 1, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn json_number(rng: &mut Pcg32) -> String {
+    match rng.below(6) {
+        0 => format!("{}", rng.next_u32() as i64 - (u32::MAX / 2) as i64),
+        1 => crate::server::json::fmt_num(rng.normal() * 100.0),
+        2 => "0".into(),
+        3 => ["3.5e-2", "2E4", "-0.0", "1e308", "123456789.125"][rng.below(5)].into(),
+        // the overflow / boundary forms the satellite fix must reject
+        // or normalize without panicking
+        _ => ["1e999", "-1e999", "1e-999", "9e18", "-9007199254740993"][rng.below(5)].into(),
+    }
+}
+
+fn json_string_body(rng: &mut Pcg32) -> String {
+    let mut s = String::new();
+    for _ in 0..rng.below(8) {
+        match rng.below(8) {
+            0 => s.push_str("\\n"),
+            1 => s.push_str("\\\""),
+            2 => s.push_str("\\\\"),
+            3 => s.push_str("\\u00e9"),
+            4 => s.push('é'),
+            5 => s.push('字'),
+            _ => s.push((b'a' + rng.below(26) as u8) as char),
+        }
+    }
+    s
+}
+
+/// Frame a payload as sketch version `v` (the envelope every version
+/// shares: magic, version, flags, length, payload, FNV-1a checksum).
+pub fn frame_meb(version: u16, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+    out.extend_from_slice(b"MEBS");
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out
+}
+
+/// Hand-assemble a v1/v2/v3 payload (the legacy layouts `decode` still
+/// reads; v2+ adds the factored center, v3 merges + hash provenance).
+pub fn legacy_meb(version: u16) -> Vec<u8> {
+    let w = [1.5f32, -2.0, 0.5];
+    let mut p: Vec<u8> = Vec::new();
+    p.extend_from_slice(&(2u32).to_le_bytes());
+    p.extend_from_slice(b"vx");
+    p.extend_from_slice(&1.0f64.to_bits().to_le_bytes()); // c
+    p.push(1); // SlackMode::Consistent
+    p.extend_from_slice(&1u64.to_le_bytes()); // lookahead
+    p.extend_from_slice(&60u64.to_le_bytes()); // merge_iters
+    if version >= 3 {
+        p.extend_from_slice(&4u64.to_le_bytes()); // merges
+        p.push(0); // no hash
+    }
+    p.extend_from_slice(&17u64.to_le_bytes()); // seen
+    p.extend_from_slice(&(w.len() as u64).to_le_bytes()); // dim
+    p.push(1); // has_ball
+    p.extend_from_slice(&5u64.to_le_bytes()); // m
+    p.extend_from_slice(&2.5f64.to_bits().to_le_bytes()); // r
+    p.extend_from_slice(&0.25f64.to_bits().to_le_bytes()); // xi2
+    if version >= 2 {
+        p.extend_from_slice(&0.5f64.to_bits().to_le_bytes()); // sigma
+        p.extend_from_slice(&1.5625f64.to_bits().to_le_bytes()); // wnorm2
+    }
+    for &v in &w {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    frame_meb(version, &p)
+}
+
+/// The valid `.meb` seed pool: one trained v4 sketch per variant (each
+/// exercises its own exact-state section) plus the three legacy
+/// layouts. Built once — training is deterministic, so the pool is
+/// identical across runs.
+pub fn meb_bases() -> &'static [Vec<u8>] {
+    static BASES: OnceLock<Vec<Vec<u8>>> = OnceLock::new();
+    BASES.get_or_init(|| {
+        let mut rng = Pcg32::seeded(0xC0_22);
+        let d = 4;
+        let mut bases: Vec<Vec<u8>> = Variant::ALL
+            .into_iter()
+            .map(|variant| {
+                let mut m = AnyLearner::new(variant, d, TrainOptions::default());
+                for _ in 0..60 {
+                    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    let y = if x[0] + x[1] >= 0.0 { 1.0 } else { -1.0 };
+                    m.observe_view(FeaturesView::Dense(&x), y);
+                }
+                m.finish();
+                MebSketch::from_learner(&m, variant.name()).encode()
+            })
+            .collect();
+        bases.extend([legacy_meb(1), legacy_meb(2), legacy_meb(3)]);
+        bases
+    })
+}
+
+/// One valid `.meb` frame drawn from the seed pool.
+pub fn meb_frame(rng: &mut Pcg32) -> Vec<u8> {
+    let bases = meb_bases();
+    bases[rng.below(bases.len())].clone()
+}
+
+/// Recompute the FNV-1a checksum over the (possibly corrupted) payload
+/// so the mutation survives the integrity gate and `decode` reaches its
+/// structural checks. Uses the buffer's *actual* geometry, not the
+/// header's promise — a mutated length field keeps disagreeing, which
+/// is the point of those mutations.
+pub fn fix_meb_checksum(bytes: &mut [u8]) {
+    if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
+        return;
+    }
+    let payload_end = bytes.len() - CHECKSUM_LEN;
+    let sum = fnv1a64(&bytes[HEADER_LEN..payload_end]);
+    bytes[payload_end..].copy_from_slice(&sum.to_le_bytes());
+}
+
+/// A raw entropy tape for the invariants target: decoded by
+/// [`crate::fuzz::laws::stream_case_from_tape`] into a runnable stream,
+/// so chunk-removal minimization maps to dropping examples.
+pub fn invariants_tape(rng: &mut Pcg32) -> Vec<u8> {
+    let n = 4 + rng.below(400);
+    (0..n).map(|_| rng.next_u32() as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json::Json;
+
+    #[test]
+    fn json_seeds_parse_or_reject_gracefully() {
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..200 {
+            let doc = json_doc(&mut rng);
+            let s = String::from_utf8(doc).expect("generator emits UTF-8");
+            // overflow numbers and deep nesting are rejected with an
+            // error; everything else parses
+            let _ = Json::parse(&s);
+        }
+    }
+
+    #[test]
+    fn meb_seed_pool_is_valid_and_stable() {
+        let bases = meb_bases();
+        assert_eq!(bases.len(), Variant::ALL.len() + 3);
+        for (i, b) in bases.iter().enumerate() {
+            assert!(MebSketch::decode(b).is_ok(), "base {i} must decode");
+        }
+        // deterministic across calls (OnceLock) and across processes
+        // (seeded training): spot-check a stable prefix
+        assert_eq!(&bases[0][..4], b"MEBS");
+    }
+
+    #[test]
+    fn checksum_fixup_revalidates_a_corrupted_frame() {
+        let mut f = legacy_meb(3);
+        assert!(MebSketch::decode(&f).is_ok());
+        // corrupt one payload byte: checksum now rejects it
+        let at = HEADER_LEN + 5;
+        f[at] ^= 0xFF;
+        let before = MebSketch::decode(&f).unwrap_err().to_string();
+        assert!(before.contains("checksum"), "{before}");
+        // recompute: decode proceeds to the structural layer (Ok or a
+        // structural error, but no longer a checksum mismatch)
+        fix_meb_checksum(&mut f);
+        if let Err(e) = MebSketch::decode(&f) {
+            assert!(!e.to_string().contains("checksum mismatch"), "{e}");
+        }
+    }
+}

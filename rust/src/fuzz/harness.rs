@@ -1,0 +1,362 @@
+//! The fuzz harness: N seeded cases per target, each checked against
+//! the target's property under `catch_unwind`.
+//!
+//! Targets and their properties:
+//!
+//! * `http` — the hand-rolled HTTP/1.1 reader parses the bytes as a
+//!   request and as a response. `Ok` and `Err` are both acceptable;
+//!   a panic is a failure (`Error`-not-abort).
+//! * `json` — the minimal JSON parser parses the (lossily decoded)
+//!   bytes. On `Ok`, every number must be finite and the value must
+//!   survive a serialize → re-parse round trip unchanged; a reject is
+//!   fine, a panic is a failure.
+//! * `codec` — `.meb` `decode` over mutated frames of every version
+//!   (the PR-9 corruption suite, generalized): `Err` is fine; on `Ok`
+//!   the sketch must re-encode/re-decode to a byte-identical frame.
+//! * `invariants` — the conformance laws of [`crate::fuzz::laws`] run
+//!   over a stream decoded from the case bytes, for all five variants
+//!   through `AnyLearner`; any law violation is a failure.
+//!
+//! On failure the case is greedily minimized and persisted under
+//! `<persist_dir>/<target>/` ([`crate::fuzz::persist`]); persisted
+//! cases replay **first** on the next run.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::str::FromStr;
+
+use crate::error::{Error, Result};
+use crate::fuzz::mutate::Mutator;
+use crate::fuzz::{gen, laws, persist};
+use crate::rng::Pcg32;
+use crate::server::http;
+use crate::server::json::{escape, fmt_num, Json};
+use crate::sketch::codec::MebSketch;
+
+/// Stop minimizing/persisting after this many failures in one run (the
+/// run keeps counting, but a systemically broken property should not
+/// pay the minimization cost thousands of times).
+const MAX_PERSISTED: usize = 8;
+
+/// A fuzzable subsystem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    Http,
+    Json,
+    Codec,
+    Invariants,
+}
+
+impl Target {
+    pub const ALL: [Target; 4] = [Target::Http, Target::Json, Target::Codec, Target::Invariants];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Http => "http",
+            Target::Json => "json",
+            Target::Codec => "codec",
+            Target::Invariants => "invariants",
+        }
+    }
+}
+
+impl std::fmt::Display for Target {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Target {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Target> {
+        Target::ALL.into_iter().find(|t| t.name() == s).ok_or_else(|| {
+            Error::config(format!("unknown fuzz target `{s}` (expected http|json|codec|invariants)"))
+        })
+    }
+}
+
+/// One fuzz run's configuration.
+#[derive(Clone, Debug)]
+pub struct FuzzConfig {
+    /// Generated cases to run (after replaying persisted ones).
+    pub cases: usize,
+    /// Master seed: the whole case stream is a deterministic function
+    /// of `(seed, case index)`.
+    pub seed: u64,
+    /// Failure-persistence root (`<dir>/<target>/case-*.bin`). `None`
+    /// counts failures without persisting.
+    pub persist_dir: Option<PathBuf>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        FuzzConfig { cases: 500, seed: 1, persist_dir: None }
+    }
+}
+
+/// What one run did.
+#[derive(Debug)]
+pub struct FuzzReport {
+    pub target: String,
+    /// Persisted cases replayed (before any generated case).
+    pub replayed: usize,
+    /// Persisted cases that still fail.
+    pub replay_failures: Vec<PathBuf>,
+    /// Generated cases executed.
+    pub executed: usize,
+    /// Generated cases that failed the property.
+    pub failures: usize,
+    /// Newly persisted (minimized) failing cases.
+    pub persisted: Vec<PathBuf>,
+    /// First failure message, for diagnostics.
+    pub sample_failure: Option<String>,
+}
+
+impl FuzzReport {
+    /// No failures, replayed or fresh.
+    pub fn clean(&self) -> bool {
+        self.replay_failures.is_empty() && self.failures == 0
+    }
+}
+
+/// Run one target.
+pub fn run(target: Target, cfg: &FuzzConfig) -> Result<FuzzReport> {
+    match target {
+        Target::Http => run_with(target.name(), cfg, gen::http_message, no_fixup, http_property),
+        Target::Json => run_with(target.name(), cfg, gen::json_doc, no_fixup, json_property),
+        Target::Codec => run_with(target.name(), cfg, gen::meb_frame, codec_fixup, codec_property),
+        Target::Invariants => {
+            run_with(target.name(), cfg, gen::invariants_tape, no_fixup, invariants_property)
+        }
+    }
+}
+
+/// The exact case bytes `run` executes at `index` — exposed so the
+/// determinism tests can pin the stream bit-for-bit.
+pub fn case_bytes(target: Target, seed: u64, index: u64) -> Vec<u8> {
+    match target {
+        Target::Http => build_case(gen::http_message, no_fixup, seed, index),
+        Target::Json => build_case(gen::json_doc, no_fixup, seed, index),
+        Target::Codec => build_case(gen::meb_frame, codec_fixup, seed, index),
+        Target::Invariants => build_case(gen::invariants_tape, no_fixup, seed, index),
+    }
+}
+
+fn build_case(
+    generate: impl Fn(&mut Pcg32) -> Vec<u8>,
+    fixup: impl Fn(&mut Pcg32, &mut Vec<u8>),
+    seed: u64,
+    index: u64,
+) -> Vec<u8> {
+    let mut m = Mutator::for_case(seed, index);
+    let mut case = generate(m.rng());
+    let donor = generate(m.rng());
+    // keep ~1/8 of cases pristine: valid inputs must keep passing too
+    if m.rng().below(8) != 0 {
+        m.mutate(&mut case, &donor);
+    }
+    fixup(m.rng(), &mut case);
+    case
+}
+
+/// The generic engine behind [`run`]: replay persisted cases first,
+/// then generate/mutate/execute `cfg.cases` fresh ones, minimizing and
+/// persisting failures. Public as the test seam — the replay-order and
+/// panic-capture tests drive it with synthetic properties.
+pub fn run_with(
+    name: &str,
+    cfg: &FuzzConfig,
+    generate: impl Fn(&mut Pcg32) -> Vec<u8>,
+    fixup: impl Fn(&mut Pcg32, &mut Vec<u8>),
+    property: impl Fn(&[u8]) -> Result<(), String>,
+) -> Result<FuzzReport> {
+    // silence the default panic hook while the harness probes for
+    // panics; restored before returning
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let report = run_inner(name, cfg, generate, fixup, property);
+    std::panic::set_hook(prev_hook);
+    report
+}
+
+fn run_inner(
+    name: &str,
+    cfg: &FuzzConfig,
+    generate: impl Fn(&mut Pcg32) -> Vec<u8>,
+    fixup: impl Fn(&mut Pcg32, &mut Vec<u8>),
+    property: impl Fn(&[u8]) -> Result<(), String>,
+) -> Result<FuzzReport> {
+    let mut report = FuzzReport {
+        target: name.to_string(),
+        replayed: 0,
+        replay_failures: Vec::new(),
+        executed: 0,
+        failures: 0,
+        persisted: Vec::new(),
+        sample_failure: None,
+    };
+
+    // replay-first: every persisted case runs before any generated one
+    if let Some(root) = &cfg.persist_dir {
+        for (path, bytes) in persist::load_cases(root, name) {
+            report.replayed += 1;
+            if let Err(msg) = check(&property, &bytes) {
+                crate::obs_warn!(
+                    "fuzz";
+                    target = name,
+                    case = path.display().to_string();
+                    "persisted case still fails: {msg}"
+                );
+                report.sample_failure.get_or_insert(msg);
+                report.replay_failures.push(path);
+            }
+        }
+    }
+
+    let mut minimized = 0usize;
+    for index in 0..cfg.cases as u64 {
+        let case = build_case(&generate, &fixup, cfg.seed, index);
+        report.executed += 1;
+        let msg = match check(&property, &case) {
+            Ok(()) => continue,
+            Err(msg) => msg,
+        };
+        report.failures += 1;
+        report.sample_failure.get_or_insert(msg.clone());
+        if minimized >= MAX_PERSISTED {
+            // past the cap a systemically broken property would pay the
+            // minimization cost for every remaining case — stop early
+            break;
+        }
+        minimized += 1;
+        let min = persist::minimize(&case, |b| check(&property, b).is_err());
+        if let Some(root) = &cfg.persist_dir {
+            let path = persist::persist(root, name, &min)?;
+            crate::obs_warn!(
+                "fuzz";
+                target = name,
+                case_index = index,
+                minimized_bytes = min.len();
+                "case {index} failed ({msg}); minimized {} -> {} bytes, persisted {}",
+                case.len(),
+                min.len(),
+                path.display()
+            );
+            // content-hash naming dedupes equal minimized cases
+            if !report.persisted.contains(&path) {
+                report.persisted.push(path);
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Run the property under `catch_unwind`: a panic is a failure with the
+/// panic payload as the message (`Error`-not-abort is the contract).
+fn check(property: &impl Fn(&[u8]) -> Result<(), String>, bytes: &[u8]) -> Result<(), String> {
+    match catch_unwind(AssertUnwindSafe(|| property(bytes))) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(format!("panic: {msg}"))
+        }
+    }
+}
+
+fn no_fixup(_rng: &mut Pcg32, _case: &mut Vec<u8>) {}
+
+/// Half the corrupted `.meb` frames get their checksum recomputed so
+/// the mutation reaches the structural validation layer instead of
+/// dying at the integrity gate.
+fn codec_fixup(rng: &mut Pcg32, case: &mut Vec<u8>) {
+    if rng.below(2) == 0 {
+        gen::fix_meb_checksum(case);
+    }
+}
+
+/// Parser limits for fuzzing: the production shape, with a small body
+/// cap so length-field mutations cannot turn into large allocations.
+fn fuzz_limits() -> http::Limits {
+    http::Limits { max_line: 4096, max_headers: 64, max_body: 1 << 16 }
+}
+
+fn http_property(bytes: &[u8]) -> Result<(), String> {
+    let limits = fuzz_limits();
+    let mut r = std::io::Cursor::new(bytes);
+    let _ = http::read_request(&mut r, &limits);
+    let mut r = std::io::Cursor::new(bytes);
+    let _ = http::read_response(&mut r, &limits);
+    Ok(())
+}
+
+fn json_property(bytes: &[u8]) -> Result<(), String> {
+    let s = String::from_utf8_lossy(bytes);
+    let v = match Json::parse(&s) {
+        Err(_) => return Ok(()), // a clean reject is the expected path
+        Ok(v) => v,
+    };
+    all_numbers_finite(&v)?;
+    let ser = to_json_string(&v);
+    let back = Json::parse(&ser)
+        .map_err(|e| format!("re-parse of serialized accepted value failed: {e} (`{ser}`)"))?;
+    if back != v {
+        return Err(format!("serialize/re-parse round trip changed the value (`{ser}`)"));
+    }
+    Ok(())
+}
+
+/// The parser must never hand a non-finite number to the protocol layer
+/// (the trap `1e999` used to spring).
+fn all_numbers_finite(v: &Json) -> Result<(), String> {
+    match v {
+        Json::Num(n) if !n.is_finite() => Err(format!("parser accepted non-finite number {n}")),
+        Json::Arr(items) => items.iter().try_for_each(all_numbers_finite),
+        Json::Obj(kv) => kv.iter().try_for_each(|(_, v)| all_numbers_finite(v)),
+        _ => Ok(()),
+    }
+}
+
+/// Serialize a parsed value back to text (the round-trip half the
+/// protocol writers don't need, so it lives with the fuzzer).
+fn to_json_string(v: &Json) -> String {
+    match v {
+        Json::Null => "null".into(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) => fmt_num(*n),
+        Json::Str(s) => format!("\"{}\"", escape(s)),
+        Json::Arr(items) => {
+            let inner: Vec<String> = items.iter().map(to_json_string).collect();
+            format!("[{}]", inner.join(","))
+        }
+        Json::Obj(kv) => {
+            let inner: Vec<String> =
+                kv.iter().map(|(k, v)| format!("\"{}\":{}", escape(k), to_json_string(v))).collect();
+            format!("{{{}}}", inner.join(","))
+        }
+    }
+}
+
+fn codec_property(bytes: &[u8]) -> Result<(), String> {
+    let sk = match MebSketch::decode(bytes) {
+        Err(_) => return Ok(()), // a clean reject is the expected path
+        Ok(sk) => sk,
+    };
+    // whatever decode accepted must re-encode/re-decode as a fixpoint
+    let re = sk.encode();
+    let back = MebSketch::decode(&re)
+        .map_err(|e| format!("re-decode of a re-encoded accepted sketch failed: {e}"))?;
+    let re2 = back.encode();
+    if re2 != re {
+        return Err("encode/decode is not a byte-identical fixpoint".into());
+    }
+    Ok(())
+}
+
+fn invariants_property(bytes: &[u8]) -> Result<(), String> {
+    laws::check_tape(bytes)
+}

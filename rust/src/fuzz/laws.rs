@@ -1,0 +1,431 @@
+//! The conformance laws as reusable property functions.
+//!
+//! These are the invariants that make the paper's (1+ε)-MEB guarantee
+//! meaningful — radius monotonicity, convex-coefficient laws, the
+//! reduction anchors tying the kernelized/ellipsoid variants back to
+//! [`BallState`], sparse/dense agreement, codec round-trips, and the
+//! `try_observe` rejection contract. They used to live inline in
+//! `tests/variant_conformance.rs`; factored here so the randomized
+//! fuzz harness (`fuzz --target invariants`) and the conformance test
+//! suite run the *same* code over different case distributions.
+//!
+//! Every law takes a [`StreamCase`] (one logical stream, dense rows plus
+//! their sparse twins) and returns `Err(description)` on violation —
+//! the shape [`crate::prop::check`] and the fuzz harness both consume.
+
+use crate::data::Features;
+use crate::error::Error;
+use crate::eval::Classifier;
+use crate::prop::gen;
+use crate::rng::Pcg32;
+use crate::sketch::codec::MebSketch;
+use crate::svm::ellipsoid::EllipsoidSvm;
+use crate::svm::kernelfn::Kernel;
+use crate::svm::kernelized::KernelStreamSvm;
+use crate::svm::learner::{AnyLearner, StreamLearner, Variant};
+use crate::svm::lookahead::LookaheadSvm;
+use crate::svm::multiball::{MergePolicy, MultiBallSvm};
+use crate::svm::streamsvm::StreamSvm;
+use crate::svm::TrainOptions;
+
+/// One generated conformance stream: dense rows plus their sparse twins.
+pub struct StreamCase {
+    pub dense: Vec<Vec<f32>>,
+    pub sparse: Vec<Features>,
+    pub ys: Vec<f32>,
+    pub dim: usize,
+}
+
+impl StreamCase {
+    /// Build from dense rows + labels (sparse twins derived).
+    pub fn new(dense: Vec<Vec<f32>>, ys: Vec<f32>, dim: usize) -> Self {
+        let sparse = dense.iter().map(|x| Features::Dense(x.clone()).to_sparse()).collect();
+        StreamCase { dense, sparse, ys, dim }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+}
+
+/// Sample a conformance stream from the standard two-Gaussian generator.
+pub fn gen_stream(rng: &mut Pcg32, n: usize) -> StreamCase {
+    let dim = gen::dim(rng);
+    let (dense, ys) = gen::labeled_points(rng, n, dim, 1.2, 0.4);
+    StreamCase::new(dense, ys, dim)
+}
+
+/// Decode a fuzzer byte tape into a stream case plus options. Total:
+/// every byte string decodes to *some* valid case (values are finite by
+/// construction), so byte-level mutation and chunk-removal minimization
+/// always land on runnable streams. Layout: `[dim sel, c sel, lookahead
+/// sel, reserved]` then rows of `1 + 2·dim` bytes (label byte + per-axis
+/// i16/1024 values); a trailing partial row zero-pads.
+pub fn stream_case_from_tape(tape: &[u8]) -> (StreamCase, TrainOptions, usize) {
+    let b = |i: usize| tape.get(i).copied().unwrap_or(0);
+    let dim = 1 + (b(0) as usize) % 12;
+    let c = 0.5 + (b(1) % 16) as f64 * 0.25;
+    let lookahead = 1 + (b(2) as usize) % 6;
+    let opts = TrainOptions::default().with_c(c);
+    let row_bytes = 1 + 2 * dim;
+    let body = if tape.len() > 4 { &tape[4..] } else { &[][..] };
+    let n = body.len().div_ceil(row_bytes).min(96);
+    let mut dense = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for r in 0..n {
+        let at = |k: usize| body.get(r * row_bytes + k).copied().unwrap_or(0);
+        ys.push(if at(0) % 2 == 0 { 1.0 } else { -1.0 });
+        let mut x = Vec::with_capacity(dim);
+        for j in 0..dim {
+            let raw = i16::from_le_bytes([at(1 + 2 * j), at(2 + 2 * j)]);
+            x.push(raw as f32 / 1024.0);
+        }
+        dense.push(x);
+    }
+    (StreamCase::new(dense, ys, dim), opts, lookahead)
+}
+
+/// Drive `step(i)` (observe example `i`, return the current radius) over
+/// the stream, checking radius monotonicity after every example.
+pub fn radius_monotone(
+    name: &str,
+    n: usize,
+    mut step: impl FnMut(usize) -> f64,
+) -> Result<(), String> {
+    let mut prev = 0.0;
+    for i in 0..n {
+        let r = step(i);
+        if !r.is_finite() {
+            return Err(format!("{name}: radius went non-finite at example {i}"));
+        }
+        if r < prev - 1e-9 {
+            return Err(format!("{name}: radius shrank {prev} -> {r} at example {i}"));
+        }
+        prev = r;
+    }
+    Ok(())
+}
+
+/// Radius monotonicity + convex-coefficient laws over every variant,
+/// driven sparse or dense: Algorithm 1 and the lookahead/kernelized/
+/// ellipsoid/multiball variants never shrink the enclosing radius, the
+/// kernelized α stay a signed convex combination (`Σ|α| = 1`, every
+/// `|α| ≤ 1`), the ellipsoid ξ² stays in `(0, s²]`, and the multiball
+/// ball count respects its budget.
+pub fn monotone_and_convex(
+    st: &StreamCase,
+    opts: TrainOptions,
+    use_sparse: bool,
+    lookahead: usize,
+) -> Result<(), String> {
+    let n = st.len();
+    let feed = |i: usize| st.sparse[i].view();
+
+    // Algorithm 1
+    let mut a1 = StreamSvm::new(st.dim, opts);
+    radius_monotone("stream", n, |i| {
+        if use_sparse {
+            a1.observe_view(feed(i), st.ys[i]);
+        } else {
+            a1.observe(&st.dense[i], st.ys[i]);
+        }
+        a1.radius()
+    })?;
+
+    // Algorithm 2 (lookahead): monotone through the merge solves
+    let l = lookahead.max(2);
+    let mut a2 = LookaheadSvm::new(st.dim, opts.with_lookahead(l));
+    radius_monotone("lookahead", n, |i| {
+        if use_sparse {
+            a2.observe_view(feed(i), st.ys[i]);
+        } else {
+            a2.observe(&st.dense[i], st.ys[i]);
+        }
+        a2.radius()
+    })?;
+    let before_finish = a2.radius();
+    a2.finish();
+    if a2.radius() < before_finish - 1e-9 {
+        return Err("lookahead finish shrank the radius".into());
+    }
+
+    // Kernelized (linear): radius + convex coefficients
+    let mut ker = KernelStreamSvm::new(Kernel::Linear, opts);
+    radius_monotone("kernelized", n, |i| {
+        if use_sparse {
+            ker.observe_view(feed(i), st.ys[i]);
+        } else {
+            ker.observe(&st.dense[i], st.ys[i]);
+        }
+        ker.radius()
+    })?;
+    if n > 0 && !ker.coefficients().is_empty() {
+        let sum_abs: f64 = ker.coefficients().iter().map(|a| a.abs()).sum();
+        if (sum_abs - 1.0).abs() > 1e-9 {
+            return Err(format!("kernelized Σ|α| = {sum_abs}"));
+        }
+        if !ker.coefficients().iter().all(|a| a.abs() <= 1.0 + 1e-12) {
+            return Err("kernelized |α| > 1".into());
+        }
+    }
+
+    // Ellipsoid (isotropic metric)
+    let mut ell = EllipsoidSvm::isotropic(st.dim, opts);
+    radius_monotone("ellipsoid", n, |i| {
+        if use_sparse {
+            ell.observe_view(feed(i), st.ys[i]);
+        } else {
+            ell.observe(&st.dense[i], st.ys[i]);
+        }
+        ell.radius()
+    })?;
+    if n > 0 && !(ell.xi2() > 0.0 && ell.xi2() <= opts.s2() + 1e-12) {
+        return Err(format!("ellipsoid ξ² = {} outside (0, s²]", ell.xi2()));
+    }
+
+    // Multiball: bounded ball count, finite merged final ball
+    let budget = 3usize;
+    let mut mb = MultiBallSvm::new(st.dim, budget, MergePolicy::NewBallMergeClosest, opts);
+    for i in 0..n {
+        if use_sparse {
+            mb.observe_view(feed(i), st.ys[i]);
+        } else {
+            mb.observe(&st.dense[i], st.ys[i]);
+        }
+        if mb.num_balls() > budget {
+            return Err(format!("multiball exceeded L: {}", mb.num_balls()));
+        }
+    }
+    if n > 0 {
+        let fb = mb.final_ball().ok_or("multiball produced no final ball")?;
+        if !fb.r.is_finite() || fb.r < 0.0 {
+            return Err(format!("multiball final radius {}", fb.r));
+        }
+        if !fb.weights().iter().all(|w| w.is_finite()) {
+            return Err("multiball final center non-finite".into());
+        }
+    }
+    Ok(())
+}
+
+/// The reduction anchors: linear-kernelized and isotropic-ellipsoid are
+/// Algorithm 1 in different clothes. Same update decisions, same
+/// `(w, R, ξ², M)` to tolerance — sparse and dense inputs both.
+pub fn reduction_anchors(
+    st: &StreamCase,
+    opts: TrainOptions,
+    use_sparse: bool,
+) -> Result<(), String> {
+    let mut ball = StreamSvm::new(st.dim, opts);
+    let mut ker = KernelStreamSvm::new(Kernel::Linear, opts);
+    let mut ell = EllipsoidSvm::isotropic(st.dim, opts);
+    for i in 0..st.len() {
+        let (ub, uk, ue) = if use_sparse {
+            let v = st.sparse[i].view();
+            (
+                ball.observe_view(v, st.ys[i]),
+                ker.observe_view(v, st.ys[i]),
+                ell.observe_view(v, st.ys[i]),
+            )
+        } else {
+            (
+                ball.observe(&st.dense[i], st.ys[i]),
+                ker.observe(&st.dense[i], st.ys[i]),
+                ell.observe(&st.dense[i], st.ys[i]),
+            )
+        };
+        if ub != uk || ub != ue {
+            return Err(format!(
+                "update decisions diverged at example {i}: ball {ub}, kernel {uk}, ellipsoid {ue}"
+            ));
+        }
+    }
+    let b = match ball.ball() {
+        Some(b) => b,
+        None => return Ok(()), // empty / all-skipped stream: nothing to anchor
+    };
+
+    // R
+    let rtol = 1e-6 * b.r.max(1.0);
+    if (ker.radius() - b.r).abs() > rtol {
+        return Err(format!("kernelized R {} vs ball {}", ker.radius(), b.r));
+    }
+    if (ell.radius() - b.r).abs() > 1e-12 * b.r.max(1.0) {
+        return Err(format!("ellipsoid R {} vs ball {}", ell.radius(), b.r));
+    }
+    // ξ² (the kernelized recurrence compounds β through its own float
+    // path — the bound matches R's rather than demanding bit-parity)
+    if (ker.xi2() - b.xi2).abs() > 1e-6 * b.xi2.max(1.0) {
+        return Err(format!("kernelized ξ² {} vs ball {}", ker.xi2(), b.xi2));
+    }
+    if (ell.xi2() - b.xi2).abs() > 1e-12 * b.xi2.max(1.0) {
+        return Err(format!("ellipsoid ξ² {} vs ball {}", ell.xi2(), b.xi2));
+    }
+    // w: the ellipsoid materializes its center; the kernelized center is
+    // probed on the basis vectors (linear kernel ⇒ f(e_j) = w_j exactly).
+    let w = ball.weights();
+    let we = ell.weights();
+    for j in 0..st.dim {
+        if (w[j] - we[j]).abs() > 1e-5 * w[j].abs().max(1.0) {
+            return Err(format!("ellipsoid w[{j}] {} vs ball {}", we[j], w[j]));
+        }
+        let mut e = vec![0.0f32; st.dim];
+        e[j] = 1.0;
+        let wk = ker.score(&e);
+        if (w[j] as f64 - wk).abs() > 1e-4 * (w[j].abs() as f64).max(1.0) {
+            return Err(format!("kernelized w[{j}] {wk} vs ball {}", w[j]));
+        }
+    }
+    // M (support counts agree: decisions were identical)
+    if ball.num_support() != ker.num_support() || ball.num_support() != ell.num_support() {
+        return Err(format!(
+            "M diverged: ball {}, kernel {}, ellipsoid {}",
+            ball.num_support(),
+            ker.num_support(),
+            ell.num_support()
+        ));
+    }
+    Ok(())
+}
+
+/// Sparse and dense physical representations of the same logical stream
+/// must produce tolerance-identical state in every variant, driven
+/// through the unified [`AnyLearner`] surface.
+pub fn sparse_dense_agree(st: &StreamCase, opts: TrainOptions) -> Result<(), String> {
+    for variant in Variant::ALL {
+        let mut md = AnyLearner::new(variant, st.dim, opts);
+        let mut ms = AnyLearner::new(variant, st.dim, opts);
+        for i in 0..st.len() {
+            md.observe_view(crate::data::FeaturesView::Dense(&st.dense[i]), st.ys[i]);
+            ms.observe_view(st.sparse[i].view(), st.ys[i]);
+        }
+        md.finish();
+        ms.finish();
+        let (rd, rs) = (md.radius(), ms.radius());
+        if (rd - rs).abs() > 1e-6 * rd.max(1.0) {
+            return Err(format!("{variant}: R diverged {rd} vs {rs}"));
+        }
+        if md.num_support() != ms.num_support() {
+            return Err(format!(
+                "{variant}: support counts diverged {} vs {}",
+                md.num_support(),
+                ms.num_support()
+            ));
+        }
+        if md.examples_seen() != ms.examples_seen() {
+            return Err(format!("{variant}: examples_seen diverged"));
+        }
+    }
+    Ok(())
+}
+
+/// Generic-drive radius law + finish contract for one variant through
+/// [`AnyLearner`], returning the finished learner for further probing.
+pub fn any_learner_monotone(
+    variant: Variant,
+    st: &StreamCase,
+    opts: TrainOptions,
+) -> Result<AnyLearner, String> {
+    let mut any = AnyLearner::new(variant, st.dim, opts);
+    radius_monotone(variant.name(), st.len(), |i| {
+        any.observe_view(st.sparse[i].view(), st.ys[i]);
+        any.radius()
+    })?;
+    let before = any.radius();
+    any.finish();
+    if any.radius() < before - 1e-9 {
+        return Err(format!("{variant}: finish shrank the radius"));
+    }
+    Ok(any)
+}
+
+/// Serialization is part of the conformance surface: a finished learner
+/// must survive the v4 `.meb` codec — encode, decode,
+/// [`MebSketch::to_learner`] — with its variant tag intact and
+/// *bit-identical* radius and probe scores.
+pub fn meb_round_trip(m: &AnyLearner, st: &StreamCase) -> Result<(), String> {
+    let v = m.variant();
+    let sk = MebSketch::from_learner(m, "conformance");
+    let bytes = sk.encode();
+    let back = MebSketch::decode(&bytes).map_err(|e| format!("{v}: decode: {e}"))?;
+    if back.variant != v {
+        return Err(format!("{v}: round-trip variant tag became {}", back.variant));
+    }
+    let restored = back.to_learner().map_err(|e| format!("{v}: to_learner: {e}"))?;
+    if restored.variant() != v {
+        return Err(format!("{v}: restored as {}", restored.variant()));
+    }
+    if restored.examples_seen() != m.examples_seen() {
+        return Err(format!(
+            "{v}: seen {} != {}",
+            restored.examples_seen(),
+            m.examples_seen()
+        ));
+    }
+    if restored.radius().to_bits() != m.radius().to_bits() {
+        return Err(format!(
+            "{v}: restored R {} != {} (not bit-identical)",
+            restored.radius(),
+            m.radius()
+        ));
+    }
+    for (j, x) in st.dense.iter().take(8).enumerate() {
+        if restored.score(x).to_bits() != m.score(x).to_bits() {
+            return Err(format!("{v}: probe {j} score diverged after round-trip"));
+        }
+    }
+    Ok(())
+}
+
+/// The `try_observe` rejection contract through the unified surface:
+/// wrong dimension is [`Error::Config`], NaN features and non-±1 labels
+/// are [`Error::Data`], and rejected examples consume no stream
+/// position.
+pub fn try_observe_contract(variant: Variant, opts: TrainOptions) -> Result<(), String> {
+    use crate::data::FeaturesView;
+    let good = [1.0f32, -2.0, 0.5];
+    let nan = [1.0f32, f32::NAN, 0.5];
+    let short = [1.0f32, 2.0];
+    let mut any = AnyLearner::new(variant, 3, opts);
+    any.try_observe(FeaturesView::Dense(&good), 1.0)
+        .map_err(|e| format!("{variant}: valid example rejected: {e}"))?;
+    match any.try_observe(FeaturesView::Dense(&short), 1.0) {
+        Err(Error::Config(_)) => {}
+        Err(e) => return Err(format!("{variant}: wrong-dim gave {e}")),
+        Ok(_) => return Err(format!("{variant}: wrong-dim accepted")),
+    }
+    match any.try_observe(FeaturesView::Dense(&nan), 1.0) {
+        Err(Error::Data(_)) => {}
+        Err(e) => return Err(format!("{variant}: NaN gave {e}")),
+        Ok(_) => return Err(format!("{variant}: NaN accepted")),
+    }
+    match any.try_observe(FeaturesView::Dense(&good), 0.5) {
+        Err(Error::Data(_)) => {}
+        Err(e) => return Err(format!("{variant}: bad label gave {e}")),
+        Ok(_) => return Err(format!("{variant}: bad label accepted")),
+    }
+    if any.examples_seen() != 1 {
+        return Err(format!("{variant}: rejections consumed stream positions"));
+    }
+    Ok(())
+}
+
+/// All laws over one decoded fuzz tape: the per-case body of
+/// `fuzz --target invariants`.
+pub fn check_tape(tape: &[u8]) -> Result<(), String> {
+    let (st, opts, lookahead) = stream_case_from_tape(tape);
+    let use_sparse = lookahead % 2 == 0;
+    monotone_and_convex(&st, opts, use_sparse, lookahead)?;
+    reduction_anchors(&st, opts, use_sparse)?;
+    sparse_dense_agree(&st, opts)?;
+    for variant in Variant::ALL {
+        let m = any_learner_monotone(variant, &st, opts.with_lookahead(lookahead))?;
+        meb_round_trip(&m, &st)?;
+        try_observe_contract(variant, opts)?;
+    }
+    Ok(())
+}

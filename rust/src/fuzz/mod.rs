@@ -1,0 +1,34 @@
+//! Structure-aware fuzzing with persisted failing cases (std-only).
+//!
+//! The subsystem has four layers:
+//!
+//! * [`gen`] — structure-aware generators that start from *valid*
+//!   inputs: HTTP/1.1 requests and responses, JSON documents, framed
+//!   `.meb` sketches (every supported wire version), and entropy tapes
+//!   that decode to labeled example streams.
+//! * [`mutate`] — a seeded deterministic mutator (truncation, bit
+//!   flips, splices, little-endian length-field and integer-boundary
+//!   overwrites). A fixed `--seed` reproduces the whole case stream
+//!   bit-for-bit.
+//! * [`harness`] — runs N cases per target against its property
+//!   (never-panics, `Error`-not-abort, codec fixpoint, JSON round
+//!   trip, and the variant-conformance laws of [`laws`]).
+//! * [`persist`] — on failure, greedy chunk-then-byte minimization and
+//!   persistence under `fuzz/failures/<target>/`, created lazily only
+//!   when a failure exists; persisted cases replay first on the next
+//!   run so regressions stay loud.
+//!
+//! Driven by the `fuzz` CLI subcommand:
+//!
+//! ```text
+//! streamsvm fuzz --target json --cases 2000 --seed 7 --persist-dir fuzz/failures
+//! ```
+
+pub mod gen;
+pub mod harness;
+pub mod laws;
+pub mod mutate;
+pub mod persist;
+
+pub use harness::{case_bytes, run, run_with, FuzzConfig, FuzzReport, Target};
+pub use mutate::Mutator;

@@ -1,0 +1,154 @@
+//! Failure persistence with greedy minimization, in the style of the
+//! edr fuzz harness's `failurePersistDir`.
+//!
+//! Semantics:
+//!
+//! * The failures directory is created **lazily, only when a failure
+//!   exists** — a clean run leaves no `fuzz/failures/` behind.
+//! * A failing case is first greedily minimized (chunk removal at
+//!   halving granularities, down to single bytes) while it still
+//!   reproduces the failure, then written under
+//!   `<root>/<target>/case-<fnv1a64 hex>.bin`. Content-hash naming
+//!   dedupes the same minimized case across runs.
+//! * On the next run, every persisted case is **replayed first**,
+//!   before any generated case — a regression stays loud until its
+//!   file is deleted (or the run is pointed at a fresh `--persist-dir`).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::sketch::codec::fnv1a64;
+
+/// Cap on property evaluations during one minimization, so a slow
+/// property on a large case cannot stall the run.
+const MINIMIZE_BUDGET: usize = 2000;
+
+/// Greedily shrink `bytes` while `still_fails` keeps reproducing the
+/// failure: repeated passes of aligned chunk removal, halving the chunk
+/// size down to one byte (ddmin-lite). Returns the smallest failing
+/// case found; `bytes` itself is returned untouched if nothing smaller
+/// still fails.
+pub fn minimize(bytes: &[u8], mut still_fails: impl FnMut(&[u8]) -> bool) -> Vec<u8> {
+    let mut best = bytes.to_vec();
+    let mut evals = 0usize;
+    let mut chunk = (best.len() / 2).max(1);
+    loop {
+        let mut progressed = false;
+        let mut start = 0usize;
+        while start < best.len() {
+            if evals >= MINIMIZE_BUDGET {
+                return best;
+            }
+            let end = (start + chunk).min(best.len());
+            let mut candidate = Vec::with_capacity(best.len() - (end - start));
+            candidate.extend_from_slice(&best[..start]);
+            candidate.extend_from_slice(&best[end..]);
+            evals += 1;
+            if still_fails(&candidate) {
+                best = candidate;
+                progressed = true;
+                // same `start` now addresses the next chunk
+            } else {
+                start = end;
+            }
+        }
+        if !progressed {
+            if chunk == 1 {
+                return best;
+            }
+            chunk = (chunk / 2).max(1);
+        }
+    }
+}
+
+/// Write a (minimized) failing case under `<root>/<target>/`, creating
+/// the directory only now — the lazy-creation contract. Returns the
+/// written path.
+pub fn persist(root: &Path, target: &str, bytes: &[u8]) -> Result<PathBuf> {
+    let dir = root.join(target);
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| Error::Pipeline(format!("fuzz: cannot create {}: {e}", dir.display())))?;
+    let path = dir.join(format!("case-{:016x}.bin", fnv1a64(bytes)));
+    std::fs::write(&path, bytes)
+        .map_err(|e| Error::Pipeline(format!("fuzz: cannot write {}: {e}", path.display())))?;
+    Ok(path)
+}
+
+/// Load every persisted case for `target`, sorted by file name for a
+/// deterministic replay order. An absent directory is an empty list,
+/// not an error (nothing has ever failed).
+pub fn load_cases(root: &Path, target: &str) -> Vec<(PathBuf, Vec<u8>)> {
+    let dir = root.join(target);
+    let Ok(entries) = std::fs::read_dir(&dir) else {
+        return Vec::new();
+    };
+    let mut cases: Vec<(PathBuf, Vec<u8>)> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_file())
+        .filter_map(|p| std::fs::read(&p).ok().map(|b| (p, b)))
+        .collect();
+    cases.sort_by(|a, b| a.0.cmp(&b.0));
+    cases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimize_finds_the_single_failing_byte() {
+        let case: Vec<u8> = (0..200u8).collect();
+        let min = minimize(&case, |b| b.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn minimize_keeps_order_dependent_pairs() {
+        // failure requires the subsequence [3, 9]
+        let case: Vec<u8> = (0..64u8).collect();
+        let fails = |b: &[u8]| {
+            let i3 = b.iter().position(|&x| x == 3);
+            let i9 = b.iter().position(|&x| x == 9);
+            matches!((i3, i9), (Some(a), Some(b)) if a < b)
+        };
+        let min = minimize(&case, fails);
+        assert_eq!(min, vec![3, 9]);
+    }
+
+    #[test]
+    fn minimize_returns_input_when_nothing_smaller_fails() {
+        let case = vec![1u8, 2, 3];
+        let min = minimize(&case, |b| b == [1, 2, 3]);
+        assert_eq!(min, case);
+    }
+
+    #[test]
+    fn persist_creates_dir_lazily_and_load_replays_sorted() {
+        let root =
+            std::env::temp_dir().join(format!("ssvm_fuzz_persist_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        // nothing persisted: no directory, empty load
+        assert!(load_cases(&root, "json").is_empty());
+        assert!(!root.exists(), "load must not create the directory");
+
+        let p1 = persist(&root, "json", b"bb").unwrap();
+        let p2 = persist(&root, "json", b"aa").unwrap();
+        assert!(root.join("json").is_dir());
+        let cases = load_cases(&root, "json");
+        assert_eq!(cases.len(), 2);
+        assert!(cases.windows(2).all(|w| w[0].0 < w[1].0));
+        let loaded: Vec<&[u8]> = cases.iter().map(|(_, b)| b.as_slice()).collect();
+        assert!(loaded.contains(&&b"aa"[..]) && loaded.contains(&&b"bb"[..]));
+
+        // same bytes, same name: re-persisting dedupes
+        let p1b = persist(&root, "json", b"bb").unwrap();
+        assert_eq!(p1, p1b);
+        assert_ne!(p1, p2);
+        assert_eq!(load_cases(&root, "json").len(), 2);
+
+        // other targets stay isolated
+        assert!(load_cases(&root, "http").is_empty());
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

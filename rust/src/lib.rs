@@ -88,6 +88,7 @@ pub mod data;
 pub mod error;
 pub mod eval;
 pub mod exp;
+pub mod fuzz;
 pub mod linalg;
 pub mod obs;
 pub mod prop;

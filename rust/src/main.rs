@@ -41,6 +41,9 @@
 //!                     [--warn-frac 0.5] [--fail-frac 0.8]]
 //! streamsvm bench-diff --file BENCH_x.json --baseline benches/baselines/BENCH_x.json
 //!                    --keys rows_per_s,variants.streamsvm [--warn-frac 0.5] [--fail-frac 0.8]
+//! streamsvm fuzz     [--target http|json|codec|invariants|all] [--cases 500] [--seed 1]
+//!                    [--persist-dir fuzz/failures]  (failing cases are minimized, persisted
+//!                     under <dir>/<target>/, and replayed first on the next run)
 //! streamsvm artifacts
 //! ```
 //!
@@ -68,7 +71,9 @@ use streamsvm::exp::{bounds, fig2, fig3, table1, ExpScale};
 use streamsvm::obs::trace::{TracedStream, TraceWriter};
 use streamsvm::runtime::Runtime;
 use streamsvm::server::{run_loadgen, serve, LoadgenConfig, ServerConfig};
-use streamsvm::sketch::checkpoint::{resume_learner, CheckpointConfig, Checkpointer};
+use streamsvm::sketch::checkpoint::{
+    read_sketch_with_fallback, resume_learner, CheckpointConfig, Checkpointer,
+};
 use streamsvm::sketch::codec::MebSketch;
 use streamsvm::sketch::merge::merge_sketches;
 use streamsvm::svm::learner::{AnyLearner, Variant};
@@ -487,7 +492,9 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
 
 fn cmd_resume(args: &Args) -> Result<()> {
     let from = args.str("from", "model.meb");
-    let sk = MebSketch::read_from(Path::new(&from))?;
+    // tolerate a torn/corrupt live checkpoint by falling back to the
+    // rotated `.prev` snapshot (a warning surfaces the fallback)
+    let sk = read_sketch_with_fallback(Path::new(&from))?;
     println!("loaded {from}: {}", sk.summary());
     // --variant is an assertion, not a selection: resume always replays
     // with the algorithm recorded in the sketch's provenance.
@@ -850,6 +857,53 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     gate_and_report(&current, &base, &keys, args)
 }
 
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use streamsvm::fuzz::{FuzzConfig, Target};
+
+    let which = args.str("target", "all");
+    let targets: Vec<Target> = if which == "all" {
+        Target::ALL.to_vec()
+    } else {
+        vec![which.parse()?]
+    };
+    let cfg = FuzzConfig {
+        cases: args.get("cases", 500)?,
+        seed: args.get("seed", 1)?,
+        persist_dir: Some(PathBuf::from(args.str("persist-dir", "fuzz/failures"))),
+    };
+    let mut dirty = Vec::new();
+    for t in targets {
+        let report = streamsvm::fuzz::run(t, &cfg)?;
+        println!(
+            "fuzz {:<10} replayed {} ({} still failing), executed {}, failed {}, persisted {}",
+            report.target,
+            report.replayed,
+            report.replay_failures.len(),
+            report.executed,
+            report.failures,
+            report.persisted.len()
+        );
+        for p in report.replay_failures.iter().chain(report.persisted.iter()) {
+            println!("  failing case: {}", p.display());
+        }
+        if let Some(msg) = &report.sample_failure {
+            println!("  first failure: {msg}");
+        }
+        if !report.clean() {
+            dirty.push(report.target);
+        }
+    }
+    if dirty.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::Pipeline(format!(
+            "fuzz found failing cases in: {} (cases persisted for replay; \
+             re-run with the same --persist-dir after fixing)",
+            dirty.join(", ")
+        )))
+    }
+}
+
 fn scale_from(args: &Args) -> Result<ExpScale> {
     Ok(ExpScale {
         train_frac: args.get("frac", 1.0)?,
@@ -869,6 +923,7 @@ fn main() -> Result<()> {
         "resume" => cmd_resume(&args)?,
         "merge" => cmd_merge(&args)?,
         "profile" => cmd_profile(&args)?,
+        "fuzz" => cmd_fuzz(&args)?,
         "bench-diff" => cmd_bench_diff(&args)?,
         "table1" => {
             let rows = table1::run(&scale_from(&args)?)?;
@@ -954,7 +1009,7 @@ fn main() -> Result<()> {
             println!("streamsvm — one-pass streaming l2-SVM (IJCAI'09 reproduction)");
             println!(
                 "commands: train serve loadgen snapshot resume merge table1 fig2 \
-                 fig3 bounds gen-data metrics-check profile bench-diff artifacts"
+                 fig3 bounds gen-data metrics-check profile bench-diff fuzz artifacts"
             );
             println!("see README.md for flags (--key value and --key=value)");
         }

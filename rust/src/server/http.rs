@@ -149,12 +149,27 @@ fn read_headers<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Vec<(String, S
 }
 
 /// Declared body length, validated against `max_body`.
+///
+/// Duplicate `Content-Length` headers with *differing* values are the
+/// classic request-smuggling shape (a front proxy framing on one value,
+/// this parser on the other), so they are rejected outright; duplicates
+/// that agree are tolerated per RFC 9110 §8.6.
 fn body_len(headers: &[(String, String)], limits: &Limits) -> Result<usize> {
-    let len: usize = match header_of(headers, "content-length") {
+    let mut declared = headers
+        .iter()
+        .filter(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.as_str());
+    let len: usize = match declared.next() {
         None => 0,
-        Some(v) => v
-            .parse()
-            .map_err(|_| Error::Pipeline(format!("http: bad content-length `{v}`")))?,
+        Some(v) => {
+            if declared.any(|other| other != v) {
+                return Err(Error::Pipeline(
+                    "http: conflicting duplicate content-length headers".into(),
+                ));
+            }
+            v.parse()
+                .map_err(|_| Error::Pipeline(format!("http: bad content-length `{v}`")))?
+        }
     };
     if len > limits.max_body {
         return Err(Error::Pipeline(format!(
@@ -412,6 +427,27 @@ mod tests {
         assert!(parse_req(b"GET /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
         // body shorter than content-length → mid-message close
         assert!(parse_req(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn conflicting_duplicate_content_length_rejected() {
+        // two differing Content-Length lines: the request-smuggling
+        // shape — a proxy framing on one value, us on the other
+        let raw = b"POST /train HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\
+                    Content-Length: 11\r\n\r\n{\"x\":[1,2]}";
+        let err = parse_req(raw).unwrap_err();
+        assert!(err.to_string().contains("conflicting duplicate content-length"), "{err}");
+
+        // case-mixed duplicates still conflict
+        let raw = b"POST /train HTTP/1.1\r\ncontent-length: 11\r\n\
+                    CONTENT-LENGTH: 4\r\n\r\n{\"x\":[1,2]}";
+        assert!(parse_req(raw).is_err());
+
+        // duplicates that agree are tolerated (RFC 9110 §8.6)
+        let raw = b"POST /train HTTP/1.1\r\nContent-Length: 11\r\n\
+                    Content-Length: 11\r\n\r\n{\"x\":[1,2]}";
+        let req = parse_req(raw).unwrap().unwrap();
+        assert_eq!(req.body, b"{\"x\":[1,2]}");
     }
 
     #[test]

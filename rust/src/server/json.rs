@@ -141,7 +141,7 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self, depth: usize) -> Result<Json> {
-        if depth > MAX_DEPTH {
+        if depth >= MAX_DEPTH {
             return Err(Error::data("json: nesting too deep"));
         }
         match self.peek() {
@@ -292,9 +292,21 @@ impl<'a> Parser<'a> {
             return Err(Error::data(format!("json: expected a value at offset {start}")));
         }
         let s = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii");
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| Error::data(format!("json: bad number `{s}`")))
+        // Rust's f64 parser is laxer than RFC 8259: it accepts a leading
+        // `+` ("+1" → 1.0), which JSON forbids.
+        if s.starts_with('+') {
+            return Err(Error::data(format!("json: bad number `{s}` (leading `+`)")));
+        }
+        let v: f64 = s
+            .parse()
+            .map_err(|_| Error::data(format!("json: bad number `{s}`")))?;
+        // Overflowing exponents ("1e999") parse to ±inf; a non-finite
+        // number must never reach the protocol layer, where it would
+        // serialize as `null` or poison a distance computation.
+        if !v.is_finite() {
+            return Err(Error::data(format!("json: number `{s}` overflows f64")));
+        }
+        Ok(Json::Num(v))
     }
 }
 
@@ -397,9 +409,37 @@ mod tests {
     }
 
     #[test]
+    fn number_audit_rejects_lax_forms() {
+        // overflow exponents: Rust's f64 parser yields ±inf, which must
+        // not cross the wire boundary (fuzz target `json` found this)
+        for bad in ["1e999", "-1e999", "1e309", "-1e309"] {
+            let err = Json::parse(bad).unwrap_err();
+            assert!(err.to_string().contains("overflows"), "`{bad}`: {err}");
+        }
+        // leading plus is valid to Rust's parser but not to JSON
+        for bad in ["+1", "+0.5", "[+2]", "{\"a\":+3}"] {
+            assert!(Json::parse(bad).is_err(), "should reject `{bad}`");
+        }
+        // a lone minus (and minus-dot) must not parse
+        for bad in ["-", "[-]", "-.", "{\"a\":-}"] {
+            assert!(Json::parse(bad).is_err(), "should reject `{bad}`");
+        }
+        // tiny exponents underflow to zero, which is finite and fine
+        assert_eq!(Json::parse("1e-999").unwrap(), Json::Num(0.0));
+        // boundary cases stay accepted
+        assert_eq!(Json::parse("1e308").unwrap(), Json::Num(1e308));
+        assert_eq!(Json::parse("-0.0").unwrap(), Json::Num(-0.0));
+    }
+
+    #[test]
     fn depth_bounded() {
         let deep = "[".repeat(200) + &"]".repeat(200);
         assert!(Json::parse(&deep).is_err());
+        // the cap is exact: MAX_DEPTH nested arrays parse, one more errors
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&over).is_err());
     }
 
     #[test]

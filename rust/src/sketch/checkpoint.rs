@@ -9,6 +9,13 @@
 //! leaves the previous checkpoint intact); [`resume_fit`] is the other
 //! half — skip what the sketch already consumed and continue.
 //!
+//! Against *torn* checkpoints — a live file truncated or corrupted
+//! outside the atomic-rename window (full disk, external copy, crash
+//! inside a non-atomic filesystem) — each snapshot first rotates the
+//! previous good file to `<path>.prev`, and
+//! [`read_sketch_with_fallback`] resumes from it with a surfaced
+//! warning when the primary no longer decodes.
+//!
 //! With lookahead (Algorithm 2) the buffered-but-unmerged points are not
 //! part of the ball, so the pipeline only snapshots at buffer-empty
 //! boundaries — the sketch's `seen` is always a stream position whose
@@ -42,6 +49,48 @@ pub struct Checkpointer {
     cfg: CheckpointConfig,
     last_saved: usize,
     saves: usize,
+}
+
+/// Where a checkpoint's previous good snapshot rotates to
+/// (`run.meb` → `run.meb.prev`).
+pub fn prev_snapshot_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".prev");
+    PathBuf::from(os)
+}
+
+/// Rotate the current on-disk snapshot (if any) to its `.prev` twin.
+/// Best-effort: rotation failing must not block the new snapshot.
+fn rotate_prev(path: &Path) {
+    if path.exists() && std::fs::rename(path, prev_snapshot_path(path)).is_err() {
+        crate::obs_warn!("checkpoint", "could not rotate {} to .prev", path.display());
+    }
+}
+
+/// Read the sketch at `path`, falling back to the rotated `.prev`
+/// snapshot when the primary is torn or corrupt (truncated mid-write by
+/// a crash, a full disk, an external copy...). The fallback is
+/// surfaced as a warning, never silent; with no readable `.prev` the
+/// primary's error propagates.
+pub fn read_sketch_with_fallback(path: &Path) -> Result<MebSketch> {
+    let primary_err = match MebSketch::read_from(path) {
+        Ok(sk) => return Ok(sk),
+        Err(e) => e,
+    };
+    let prev = prev_snapshot_path(path);
+    match MebSketch::read_from(&prev) {
+        Ok(sk) => {
+            crate::obs_warn!(
+                "checkpoint";
+                seen = sk.seen,
+                prev = prev.display().to_string();
+                "checkpoint {} is unreadable ({primary_err}); resuming from previous snapshot",
+                path.display()
+            );
+            Ok(sk)
+        }
+        Err(_) => Err(primary_err),
+    }
 }
 
 impl Checkpointer {
@@ -84,6 +133,7 @@ impl Checkpointer {
         debug_assert!(ball.map(|b| b.dim() == dim).unwrap_or(true), "ball/stream dim mismatch");
         let sk = MebSketch::new(dim, ball.cloned(), seen, *opts, self.cfg.tag.clone())
             .with_merges(merges);
+        rotate_prev(&self.cfg.path);
         sk.write_to(&self.cfg.path)?;
         self.last_saved = seen;
         self.saves += 1;
@@ -117,6 +167,7 @@ impl Checkpointer {
     pub fn save_learner(&mut self, model: &AnyLearner) -> Result<()> {
         let seen = model.examples_seen();
         let sk = MebSketch::from_learner(model, self.cfg.tag.clone());
+        rotate_prev(&self.cfg.path);
         sk.write_to(&self.cfg.path)?;
         self.last_saved = seen;
         self.saves += 1;
@@ -155,9 +206,10 @@ pub fn save_model(model: &StreamSvm, tag: &str, path: &Path) -> Result<()> {
     MebSketch::from_model(model, tag).write_to(path)
 }
 
-/// Load the model a sketch file describes.
+/// Load the model a sketch file describes, tolerating a torn primary
+/// snapshot via [`read_sketch_with_fallback`].
 pub fn resume_model(path: &Path) -> Result<StreamSvm> {
-    Ok(MebSketch::read_from(path)?.to_model())
+    Ok(read_sketch_with_fallback(path)?.to_model())
 }
 
 /// Snapshot any learner to `path` (the variant-generic twin of
@@ -432,6 +484,53 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn torn_checkpoint_resumes_from_previous_snapshot() {
+        let dir = std::env::temp_dir().join(format!("ssvm_ckpt_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.meb");
+        let opts = TrainOptions::default();
+        let exs = toy(80, 4, 17);
+        let mut ck = Checkpointer::new(CheckpointConfig {
+            every: 1,
+            path: path.clone(),
+            tag: "torn".into(),
+        });
+
+        // first snapshot at seen=40: no prev exists yet
+        let mut model = StreamSvm::new(4, opts);
+        for e in exs.iter().take(40) {
+            model.observe_view(e.x.view(), e.y);
+        }
+        ck.save(model.ball(), 4, 40, 0, &opts).unwrap();
+        assert!(!prev_snapshot_path(&path).exists());
+
+        // second snapshot at seen=80 rotates the first to .prev
+        for e in exs.iter().skip(40) {
+            model.observe_view(e.x.view(), e.y);
+        }
+        ck.save(model.ball(), 4, 80, 0, &opts).unwrap();
+        assert!(prev_snapshot_path(&path).exists());
+
+        // tear the live checkpoint mid-file (partial write / full disk)
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(MebSketch::read_from(&path).is_err(), "torn file must not decode");
+
+        // tolerant read falls back to the previous good snapshot...
+        let sk = read_sketch_with_fallback(&path).unwrap();
+        assert_eq!(sk.seen, 40);
+        // ...and resuming from it replays to the uninterrupted result
+        let resumed = resume_fit(&sk, exs.clone());
+        let direct = StreamSvm::fit(exs.iter(), 4, &opts);
+        assert!(bit_equal(&resumed, &direct));
+
+        // with the .prev also unreadable, the primary's error surfaces
+        std::fs::write(prev_snapshot_path(&path), b"junk").unwrap();
+        assert!(read_sketch_with_fallback(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

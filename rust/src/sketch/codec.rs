@@ -59,10 +59,11 @@ use crate::svm::{HashSpec, SlackMode, TrainOptions};
 pub const SKETCH_VERSION: u16 = 4;
 
 const MAGIC: &[u8; 4] = b"MEBS";
-/// Fixed header bytes before the payload.
-const HEADER_LEN: usize = 4 + 2 + 2 + 8;
+/// Fixed header bytes before the payload (magic + version + flags + len).
+/// Public so the structure-aware fuzzer can frame and re-frame sketches.
+pub const HEADER_LEN: usize = 4 + 2 + 2 + 8;
 /// Trailing checksum bytes.
-const CHECKSUM_LEN: usize = 8;
+pub const CHECKSUM_LEN: usize = 8;
 
 /// A serializable, mergeable snapshot of one StreamSVM learner.
 #[derive(Clone, Debug, PartialEq)]
@@ -140,7 +141,10 @@ pub enum VariantExtra {
 }
 
 /// FNV-1a 64-bit — tiny, deterministic, dependency-free integrity check.
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// Public so the fuzzer's checksum-recompute-after-corrupt mutations can
+/// carry a corrupted payload past the integrity gate into the structural
+/// validation layer (and so persisted failing cases hash stably).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

@@ -217,141 +217,49 @@ fn incompatible_shard_sketches_rejected() {
     assert!(err.to_string().contains("incompatible"), "{err}");
 }
 
-/// Structure-aware corruption fuzz over every codec version: whatever a
-/// truncated, bit-flipped or length-mutated `.meb` file contains,
-/// `resume`/`merge` inputs must come back as [`Err`] (or a still-valid
-/// [`Ok`]) — never a panic or a runaway allocation. The checksum stops
-/// naive flips, so the interesting cases recompute FNV-1a over the
-/// mutated payload and force `decode` through its structural checks.
+/// Structure-aware corruption fuzz over every codec version, now driven
+/// through the fuzz subsystem ([`streamsvm::fuzz`], the `codec` target):
+/// truncated, bit-flipped, spliced and length-mutated `.meb` frames —
+/// with checksums recomputed on half the cases so mutations reach the
+/// structural validation layer — must come back as [`Err`] (or a
+/// still-valid, re-encodable [`Ok`]), never a panic. This is the PR-9
+/// `corrupted_sketch_bytes_error_never_panic` suite, migrated to the
+/// harness as its first codec target.
 #[test]
-fn corrupted_sketch_bytes_error_never_panic() {
-    use std::panic::{catch_unwind, AssertUnwindSafe};
-    use streamsvm::rng::Pcg32;
-    use streamsvm::svm::learner::{AnyLearner, Variant};
+fn codec_fuzz_target_runs_clean() {
+    use streamsvm::fuzz::{gen, run, FuzzConfig, Target};
 
-    fn fnv1a64(bytes: &[u8]) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        h
-    }
-    const HEADER_LEN: usize = 16;
-    const CHECKSUM_LEN: usize = 8;
-    /// Frame a payload as version `v` (same envelope every version uses).
-    fn frame(version: u16, p: &[u8]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(HEADER_LEN + p.len() + CHECKSUM_LEN);
-        out.extend_from_slice(b"MEBS");
-        out.extend_from_slice(&version.to_le_bytes());
-        out.extend_from_slice(&0u16.to_le_bytes());
-        out.extend_from_slice(&(p.len() as u64).to_le_bytes());
-        out.extend_from_slice(p);
-        out.extend_from_slice(&fnv1a64(p).to_le_bytes());
-        out
-    }
-    /// Hand-assemble a v1/v2/v3 payload (the legacy layouts `decode`
-    /// still reads; v2+ adds the factored center, v3 merges + hash).
-    fn legacy(version: u16) -> Vec<u8> {
-        let w = [1.5f32, -2.0, 0.5];
-        let mut p: Vec<u8> = Vec::new();
-        p.extend_from_slice(&(2u32).to_le_bytes());
-        p.extend_from_slice(b"vx");
-        p.extend_from_slice(&1.0f64.to_bits().to_le_bytes()); // c
-        p.push(1); // SlackMode::Consistent
-        p.extend_from_slice(&1u64.to_le_bytes()); // lookahead
-        p.extend_from_slice(&60u64.to_le_bytes()); // merge_iters
-        if version >= 3 {
-            p.extend_from_slice(&4u64.to_le_bytes()); // merges
-            p.push(0); // no hash
-        }
-        p.extend_from_slice(&17u64.to_le_bytes()); // seen
-        p.extend_from_slice(&(w.len() as u64).to_le_bytes()); // dim
-        p.push(1); // has_ball
-        p.extend_from_slice(&5u64.to_le_bytes()); // m
-        p.extend_from_slice(&2.5f64.to_bits().to_le_bytes()); // r
-        p.extend_from_slice(&0.25f64.to_bits().to_le_bytes()); // xi2
-        if version >= 2 {
-            p.extend_from_slice(&0.5f64.to_bits().to_le_bytes()); // sigma
-            p.extend_from_slice(&1.5625f64.to_bits().to_le_bytes()); // wnorm2
-        }
-        for &v in &w {
-            p.extend_from_slice(&v.to_bits().to_le_bytes());
-        }
-        frame(version, &p)
-    }
+    let dir = tmpdir("fuzz");
+    let cfg = FuzzConfig {
+        cases: 600,
+        seed: 0xC0_22,
+        persist_dir: Some(dir.join("failures")),
+    };
+    let report = run(Target::Codec, &cfg).unwrap();
+    assert_eq!(report.executed, 600);
+    assert!(
+        report.clean(),
+        "codec fuzz found failures: {:?} (first: {:?})",
+        report.persisted,
+        report.sample_failure
+    );
+    // lazy-dir contract: a clean run leaves no failures directory behind
+    assert!(!dir.join("failures").exists());
 
-    // One v4 base per variant (each exercises its own extra section),
-    // plus the three legacy layouts.
-    let mut rng = Pcg32::seeded(0xC0_22);
-    let d = 4;
-    let mut bases: Vec<Vec<u8>> = Variant::ALL
-        .into_iter()
-        .map(|variant| {
-            let mut m = AnyLearner::new(variant, d, TrainOptions::default());
-            for _ in 0..60 {
-                let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-                let y = if x[0] + x[1] >= 0.0 { 1.0 } else { -1.0 };
-                m.observe_view(streamsvm::data::FeaturesView::Dense(&x), y);
-            }
-            m.finish();
-            MebSketch::from_learner(&m, variant.name()).encode()
-        })
-        .collect();
-    bases.extend([legacy(1), legacy(2), legacy(3)]);
-
-    let mut decoded_ok = 0usize;
-    for (bi, good) in bases.iter().enumerate() {
+    // the exhaustive sweeps the harness samples randomly stay pinned
+    // here: every truncation of every base (all five v4 variants plus
+    // the three legacy layouts) is an error, never a panic
+    for (bi, good) in gen::meb_bases().iter().enumerate() {
         assert!(MebSketch::decode(good).is_ok(), "base {bi} must round-trip");
-
-        // every truncation of a valid sketch is an error, never a panic
         for k in 0..good.len() {
-            let r = catch_unwind(AssertUnwindSafe(|| MebSketch::decode(&good[..k])));
-            assert!(r.expect("decode panicked on truncation").is_err(), "base {bi} cut at {k}");
+            assert!(MebSketch::decode(&good[..k]).is_err(), "base {bi} cut at {k}");
         }
-
-        // naive bit flips anywhere in the file: the envelope (magic,
-        // version, length, checksum) rejects nearly all of them; a flip
-        // in the reserved flags word decodes fine — either way, no panic
-        for _ in 0..200 {
-            let mut bad = good.clone();
-            let pos = rng.below(bad.len());
-            bad[pos] ^= 1 << rng.below(8);
-            let r = catch_unwind(AssertUnwindSafe(|| MebSketch::decode(&bad)));
-            r.unwrap_or_else(|_| panic!("decode panicked on bit flip at {pos} (base {bi})"));
-        }
-
-        // structure-aware: mutate payload bytes, then *recompute* the
-        // checksum so decode reaches the structural validation layer
-        // (truncated sections, bad enum bytes, absurd lengths/counts)
-        for case in 0..300 {
-            let mut bad = good.clone();
-            let payload_len = bad.len() - HEADER_LEN - CHECKSUM_LEN;
-            for _ in 0..(1 + rng.below(4)) {
-                let pos = HEADER_LEN + rng.below(payload_len);
-                bad[pos] ^= 1 << rng.below(8);
-            }
-            let sum = fnv1a64(&bad[HEADER_LEN..HEADER_LEN + payload_len]);
-            let cs = bad.len() - CHECKSUM_LEN;
-            bad[cs..].copy_from_slice(&sum.to_le_bytes());
-            let r = catch_unwind(AssertUnwindSafe(|| MebSketch::decode(&bad)));
-            let decoded =
-                r.unwrap_or_else(|_| panic!("decode panicked on case {case} (base {bi})"));
-            if decoded.is_ok() {
-                decoded_ok += 1; // benign flip (e.g. a weight bit) — fine
-            }
-        }
-
         // length-field mutations: the header's promised size must always
         // disagree with the actual buffer (overflow-checked, not added)
         for promised in [0u64, 1, good.len() as u64, u64::MAX, u64::MAX - 7, 1 << 60] {
             let mut bad = good.clone();
             bad[8..16].copy_from_slice(&promised.to_le_bytes());
-            let r = catch_unwind(AssertUnwindSafe(|| MebSketch::decode(&bad)));
-            assert!(
-                r.expect("decode panicked on length mutation").is_err(),
-                "base {bi} promised {promised}"
-            );
+            assert!(MebSketch::decode(&bad).is_err(), "base {bi} promised {promised}");
         }
     }
 
@@ -362,13 +270,9 @@ fn corrupted_sketch_bytes_error_never_panic() {
 
     // the same guarantee through the file path `resume --from`/`merge
     // --inputs` use: a torn write decodes as an error, never a panic
-    let dir = tmpdir("fuzz");
+    let base0 = &gen::meb_bases()[0];
     let torn = dir.join("torn.meb");
-    std::fs::write(&torn, &bases[0][..bases[0].len() / 2]).unwrap();
+    std::fs::write(&torn, &base0[..base0.len() / 2]).unwrap();
     assert!(MebSketch::read_from(&torn).is_err());
     std::fs::remove_dir_all(&dir).ok();
-
-    // sanity: the fuzz actually explored the Ok-or-Err boundary rather
-    // than tripping one early guard every time
-    assert!(decoded_ok < bases.len() * 300, "every mutation decoded Ok?");
 }

@@ -1,0 +1,169 @@
+//! Integration suite for the structure-aware fuzz subsystem: every
+//! shipped target runs clean at a bounded case count, the case stream
+//! is bit-for-bit deterministic under a fixed seed, the failures
+//! directory is created lazily only when a failure exists, and an
+//! injected panic is caught, minimized, persisted, and replayed first
+//! on the next run (the edr `failurePersistDir` semantics).
+
+use std::cell::RefCell;
+
+use streamsvm::fuzz::{case_bytes, persist, run, run_with, FuzzConfig, Target};
+use streamsvm::rng::Pcg32;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ssvm_fuzz_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Every shipped target completes a bounded seeded pass with zero
+/// failures — and a clean run leaves no failures directory behind
+/// (lazy-creation contract).
+#[test]
+fn all_targets_run_clean_and_leave_no_failure_dir() {
+    let root = tmpdir("clean");
+    for (target, cases) in [
+        (Target::Http, 300),
+        (Target::Json, 300),
+        (Target::Codec, 200),
+        (Target::Invariants, 30),
+    ] {
+        let cfg = FuzzConfig { cases, seed: 7, persist_dir: Some(root.clone()) };
+        let report = run(target, &cfg).unwrap();
+        assert_eq!(report.executed, cases, "{target}");
+        assert_eq!(report.replayed, 0, "{target}: nothing persisted yet");
+        assert!(
+            report.clean(),
+            "{target} found failures: {:?} (first: {:?})",
+            report.persisted,
+            report.sample_failure
+        );
+    }
+    assert!(!root.exists(), "clean runs must not create the failures directory");
+}
+
+/// A fixed seed reproduces the whole case stream bit-for-bit, per
+/// target; a different seed diverges; the stream is not constant.
+#[test]
+fn fixed_seed_case_stream_is_bit_identical() {
+    for target in Target::ALL {
+        let mut distinct = std::collections::HashSet::new();
+        let mut diverged = false;
+        for i in 0..40u64 {
+            let a = case_bytes(target, 42, i);
+            let b = case_bytes(target, 42, i);
+            assert_eq!(a, b, "{target}: case {i} diverged under the same seed");
+            diverged |= a != case_bytes(target, 43, i);
+            distinct.insert(a);
+        }
+        assert!(diverged, "{target}: seed does not influence the stream");
+        assert!(distinct.len() > 1, "{target}: case stream is constant");
+    }
+}
+
+/// The acceptance-criteria loop: a deliberately injected panic in the
+/// `json` target's property is caught (no abort), greedily minimized,
+/// persisted under `<root>/json/`, and counted as a failure; on the
+/// next run the persisted case replays and stays loud until fixed;
+/// once fixed, the run is clean again.
+#[test]
+fn injected_panic_is_caught_minimized_persisted_and_replayed() {
+    let root = tmpdir("inject");
+    let gen32 = |rng: &mut Pcg32| (0..32).map(|_| rng.next_u32() as u8).collect::<Vec<u8>>();
+    let no_fixup = |_: &mut Pcg32, _: &mut Vec<u8>| {};
+
+    // run 1: the property panics on every case (the re-introduced bug)
+    let cfg = FuzzConfig { cases: 20, seed: 9, persist_dir: Some(root.clone()) };
+    let report = run_with("json", &cfg, gen32, no_fixup, |_bytes| -> Result<(), String> {
+        panic!("injected bug");
+    })
+    .unwrap();
+    assert!(!report.clean());
+    assert!(report.failures > 0);
+    assert!(report.executed <= 20, "persistence cap stops a systemic failure early");
+    assert!(!report.persisted.is_empty());
+    assert!(
+        report.sample_failure.as_deref().unwrap_or("").contains("injected bug"),
+        "panic payload must surface: {:?}",
+        report.sample_failure
+    );
+    for p in &report.persisted {
+        assert!(p.starts_with(root.join("json")), "{}", p.display());
+        assert!(p.is_file());
+        // everything reproduces the panic, so minimization bottoms out
+        assert_eq!(std::fs::read(p).unwrap(), Vec::<u8>::new());
+    }
+
+    // run 2: bug still present — the persisted case replays FIRST and
+    // stays loud
+    let report = run_with("json", &cfg, gen32, no_fixup, |bytes| -> Result<(), String> {
+        if bytes.is_empty() {
+            panic!("injected bug");
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(report.replayed, 1, "content-hash naming dedupes the minimized case");
+    assert_eq!(report.replay_failures.len(), 1);
+    assert!(!report.clean());
+
+    // run 3: bug fixed — replay passes, fresh cases pass, run is clean
+    let seen = RefCell::new(Vec::<Vec<u8>>::new());
+    let report = run_with("json", &cfg, gen32, no_fixup, |bytes| {
+        seen.borrow_mut().push(bytes.to_vec());
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(report.replayed, 1);
+    assert!(report.replay_failures.is_empty());
+    assert_eq!(report.executed, 20);
+    assert!(report.clean());
+    // replay-first ordering: the persisted (empty, minimized) case ran
+    // before any generated case
+    let seen = seen.into_inner();
+    assert_eq!(seen.len(), 21);
+    assert_eq!(seen[0], Vec::<u8>::new(), "persisted case must replay first");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Replay order across multiple persisted cases is deterministic
+/// (sorted by file name), and persisted cases from one target never
+/// leak into another target's run.
+#[test]
+fn replay_is_sorted_and_target_isolated() {
+    let root = tmpdir("order");
+    let a = persist::persist(&root, "http", b"case-a").unwrap();
+    let b = persist::persist(&root, "http", b"case-b").unwrap();
+    let expect: Vec<Vec<u8>> = {
+        let mut pairs = vec![(a, b"case-a".to_vec()), (b, b"case-b".to_vec())];
+        pairs.sort_by(|x, y| x.0.cmp(&y.0));
+        pairs.into_iter().map(|(_, bytes)| bytes).collect()
+    };
+
+    let seen = RefCell::new(Vec::<Vec<u8>>::new());
+    let cfg = FuzzConfig { cases: 0, seed: 1, persist_dir: Some(root.clone()) };
+    let gen4 = |rng: &mut Pcg32| vec![rng.next_u32() as u8; 4];
+    let no_fixup = |_: &mut Pcg32, _: &mut Vec<u8>| {};
+    let report = run_with("http", &cfg, gen4, no_fixup, |bytes| {
+        seen.borrow_mut().push(bytes.to_vec());
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(report.replayed, 2);
+    assert_eq!(seen.into_inner(), expect);
+
+    // a different target sees none of them
+    let report = run_with("codec", &cfg, gen4, no_fixup, |_| Ok(())).unwrap();
+    assert_eq!(report.replayed, 0);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// `Target` round-trips through its CLI string form.
+#[test]
+fn target_parses_from_cli_strings() {
+    for t in Target::ALL {
+        let back: Target = t.name().parse().unwrap();
+        assert_eq!(back, t);
+    }
+    assert!("bogus".parse::<Target>().is_err());
+}

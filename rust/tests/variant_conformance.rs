@@ -1,27 +1,20 @@
 //! Cross-variant conformance: every StreamSVM variant, one stream, one
 //! set of invariants.
 //!
-//! The paper's guarantees (radius ratio, SV-count bound, one-pass
-//! memory) all rest on the same geometric laws, so every variant —
-//! `StreamSvm` (Algorithm 1), `LookaheadSvm` (Algorithm 2),
-//! `MultiBallSvm` (§4.3), `KernelStreamSvm` (§4.2) and `EllipsoidSvm`
-//! (§6.2) — must agree on them when driven with identical example
-//! streams, sparse and dense alike:
-//!
-//! * **Radius monotonicity** — the enclosing radius never shrinks.
-//! * **Convex-coefficient laws** — the kernelized α stay a signed convex
-//!   combination (`Σ|α| = 1`, every |α| ≤ 1); the explicit centers stay
-//!   finite convex blends (finite w, ξ² ∈ (0, s²]).
-//! * **Reduction anchors** — the linear-kernel `KernelStreamSvm` and the
-//!   isotropic-metric `EllipsoidSvm` are Algorithm 1 in disguise and
-//!   must match `BallState`'s `(w, R, ξ²)` to tolerance, with identical
-//!   update decisions.
+//! The laws themselves — radius monotonicity, convex-coefficient laws,
+//! the reduction anchors, sparse/dense agreement, codec round-trips,
+//! the `try_observe` rejection contract — live in
+//! [`streamsvm::fuzz::laws`] as reusable property functions, shared
+//! with the randomized fuzz harness (`fuzz --target invariants`). This
+//! suite drives them over the seeded two-Gaussian case distribution
+//! and adds the checks that need concrete variant types (bit-identity
+//! against direct construction, RBF kernels, anisotropic metrics).
 
-use streamsvm::data::{Example, Features};
+use streamsvm::data::Example;
 use streamsvm::eval::Classifier;
+use streamsvm::fuzz::laws;
 use streamsvm::prop::{check, gen, PropConfig};
 use streamsvm::rng::Pcg32;
-use streamsvm::sketch::codec::MebSketch;
 use streamsvm::svm::ellipsoid::EllipsoidSvm;
 use streamsvm::svm::kernelfn::Kernel;
 use streamsvm::svm::kernelized::KernelStreamSvm;
@@ -31,137 +24,15 @@ use streamsvm::svm::multiball::{MergePolicy, MultiBallSvm};
 use streamsvm::svm::streamsvm::StreamSvm;
 use streamsvm::svm::TrainOptions;
 
-/// One generated conformance stream: dense rows plus their sparse twins.
-struct Stream {
-    dense: Vec<Vec<f32>>,
-    sparse: Vec<Features>,
-    ys: Vec<f32>,
-    dim: usize,
-}
-
-fn gen_stream(rng: &mut Pcg32, n: usize) -> Stream {
-    let dim = gen::dim(rng);
-    let (dense, ys) = gen::labeled_points(rng, n, dim, 1.2, 0.4);
-    let sparse = dense.iter().map(|x| Features::Dense(x.clone()).to_sparse()).collect();
-    Stream { dense, sparse, ys, dim }
-}
-
-/// Drive `step(i)` (observe example `i`, return the current radius) over
-/// the stream, checking radius monotonicity after every example.
-fn check_monotone(
-    name: &str,
-    n: usize,
-    mut step: impl FnMut(usize) -> f64,
-) -> Result<(), String> {
-    let mut prev = 0.0;
-    for i in 0..n {
-        let r = step(i);
-        if !r.is_finite() {
-            return Err(format!("{name}: radius went non-finite at example {i}"));
-        }
-        if r < prev - 1e-9 {
-            return Err(format!("{name}: radius shrank {prev} -> {r} at example {i}"));
-        }
-        prev = r;
-    }
-    Ok(())
-}
-
 #[test]
 fn all_variants_radius_monotone_and_coefficients_convex() {
     check(
         "conformance-monotone-convex",
         PropConfig { cases: 24, seed: 0xC04F }, // 5 variants × 2 representations per case
         |rng, case| {
-            let st = gen_stream(rng, 48);
-            let use_sparse = case % 2 == 0;
+            let st = laws::gen_stream(rng, 48);
             let opts = TrainOptions::default().with_c(0.5 + rng.uniform() * 4.0);
-            let feed = |i: usize| st.sparse[i].view();
-            let n = st.ys.len();
-
-            // Algorithm 1
-            let mut a1 = StreamSvm::new(st.dim, opts);
-            check_monotone("stream", n, |i| {
-                if use_sparse {
-                    a1.observe_view(feed(i), st.ys[i]);
-                } else {
-                    a1.observe(&st.dense[i], st.ys[i]);
-                }
-                a1.radius()
-            })?;
-
-            // Algorithm 2 (lookahead): monotone through the merge solves
-            let l = 2 + rng.below(6);
-            let mut a2 = LookaheadSvm::new(st.dim, opts.with_lookahead(l));
-            check_monotone("lookahead", n, |i| {
-                if use_sparse {
-                    a2.observe_view(feed(i), st.ys[i]);
-                } else {
-                    a2.observe(&st.dense[i], st.ys[i]);
-                }
-                a2.radius()
-            })?;
-            let before_finish = a2.radius();
-            a2.finish();
-            if a2.radius() < before_finish - 1e-9 {
-                return Err("lookahead finish shrank the radius".into());
-            }
-
-            // Kernelized (linear): radius + convex coefficients
-            let mut ker = KernelStreamSvm::new(Kernel::Linear, opts);
-            check_monotone("kernelized", n, |i| {
-                if use_sparse {
-                    ker.observe_view(feed(i), st.ys[i]);
-                } else {
-                    ker.observe(&st.dense[i], st.ys[i]);
-                }
-                ker.radius()
-            })?;
-            let sum_abs: f64 = ker.coefficients().iter().map(|a| a.abs()).sum();
-            if (sum_abs - 1.0).abs() > 1e-9 {
-                return Err(format!("kernelized Σ|α| = {sum_abs}"));
-            }
-            if !ker.coefficients().iter().all(|a| a.abs() <= 1.0 + 1e-12) {
-                return Err("kernelized |α| > 1".into());
-            }
-
-            // Ellipsoid (isotropic metric)
-            let mut ell = EllipsoidSvm::isotropic(st.dim, opts);
-            check_monotone("ellipsoid", n, |i| {
-                if use_sparse {
-                    ell.observe_view(feed(i), st.ys[i]);
-                } else {
-                    ell.observe(&st.dense[i], st.ys[i]);
-                }
-                ell.radius()
-            })?;
-            if !(ell.xi2() > 0.0 && ell.xi2() <= opts.s2() + 1e-12) {
-                return Err(format!("ellipsoid ξ² = {} outside (0, s²]", ell.xi2()));
-            }
-
-            // Multiball: bounded ball count, finite merged final ball
-            // whose radius dominates nothing smaller than zero (its
-            // per-ball radii are not exposed; the merge-enclosure law is
-            // pinned by the multiball unit suite).
-            let mut mb = MultiBallSvm::new(st.dim, 3, MergePolicy::NewBallMergeClosest, opts);
-            for i in 0..n {
-                if use_sparse {
-                    mb.observe_view(feed(i), st.ys[i]);
-                } else {
-                    mb.observe(&st.dense[i], st.ys[i]);
-                }
-                if mb.num_balls() > 3 {
-                    return Err(format!("multiball exceeded L: {}", mb.num_balls()));
-                }
-            }
-            let fb = mb.final_ball().ok_or("multiball produced no final ball")?;
-            if !fb.r.is_finite() || fb.r < 0.0 {
-                return Err(format!("multiball final radius {}", fb.r));
-            }
-            if !fb.weights().iter().all(|w| w.is_finite()) {
-                return Err("multiball final center non-finite".into());
-            }
-            Ok(())
+            laws::monotone_and_convex(&st, opts, case % 2 == 0, 2 + rng.below(6))
         },
     );
 }
@@ -175,136 +46,49 @@ fn linear_kernelized_and_isotropic_ellipsoid_match_ballstate() {
         "conformance-reduction-anchors",
         PropConfig { cases: 32, seed: 0xBA11 },
         |rng, case| {
-            let st = gen_stream(rng, 56);
-            let use_sparse = case % 2 == 0;
+            let st = laws::gen_stream(rng, 56);
             let opts = TrainOptions::default().with_c(0.5 + rng.uniform() * 4.0);
-            let mut ball = StreamSvm::new(st.dim, opts);
-            let mut ker = KernelStreamSvm::new(Kernel::Linear, opts);
-            let mut ell = EllipsoidSvm::isotropic(st.dim, opts);
-            for i in 0..st.ys.len() {
-                let (ub, uk, ue) = if use_sparse {
-                    let v = st.sparse[i].view();
-                    (
-                        ball.observe_view(v, st.ys[i]),
-                        ker.observe_view(v, st.ys[i]),
-                        ell.observe_view(v, st.ys[i]),
-                    )
-                } else {
-                    (
-                        ball.observe(&st.dense[i], st.ys[i]),
-                        ker.observe(&st.dense[i], st.ys[i]),
-                        ell.observe(&st.dense[i], st.ys[i]),
-                    )
-                };
-                if ub != uk || ub != ue {
-                    return Err(format!(
-                        "update decisions diverged at example {i}: ball {ub}, kernel {uk}, ellipsoid {ue}"
-                    ));
-                }
-            }
-            let b = ball.ball().ok_or("ball never initialized")?;
-
-            // R
-            let rtol = 1e-6 * b.r.max(1.0);
-            if (ker.radius() - b.r).abs() > rtol {
-                return Err(format!("kernelized R {} vs ball {}", ker.radius(), b.r));
-            }
-            if (ell.radius() - b.r).abs() > 1e-12 * b.r.max(1.0) {
-                return Err(format!("ellipsoid R {} vs ball {}", ell.radius(), b.r));
-            }
-            // ξ² (the kernelized recurrence compounds β through its own
-            // float path — numpy mirror puts the worst drift near 2e-9,
-            // so the bound matches R's rather than demanding bit-parity)
-            if (ker.xi2() - b.xi2).abs() > 1e-6 * b.xi2.max(1.0) {
-                return Err(format!("kernelized ξ² {} vs ball {}", ker.xi2(), b.xi2));
-            }
-            if (ell.xi2() - b.xi2).abs() > 1e-12 * b.xi2.max(1.0) {
-                return Err(format!("ellipsoid ξ² {} vs ball {}", ell.xi2(), b.xi2));
-            }
-            // w: the ellipsoid materializes its center; the kernelized
-            // center is probed on the basis vectors (linear kernel ⇒
-            // f(e_j) = w_j exactly).
-            let w = ball.weights();
-            let we = ell.weights();
-            for j in 0..st.dim {
-                if (w[j] - we[j]).abs() > 1e-5 * w[j].abs().max(1.0) {
-                    return Err(format!("ellipsoid w[{j}] {} vs ball {}", we[j], w[j]));
-                }
-                let mut e = vec![0.0f32; st.dim];
-                e[j] = 1.0;
-                let wk = ker.score(&e);
-                if (w[j] as f64 - wk).abs() > 1e-4 * (w[j].abs() as f64).max(1.0) {
-                    return Err(format!("kernelized w[{j}] {wk} vs ball {}", w[j]));
-                }
-            }
-            // M (support counts agree: decisions were identical)
-            if ball.num_support() != ker.num_support()
-                || ball.num_support() != ell.num_support()
-            {
-                return Err(format!(
-                    "M diverged: ball {}, kernel {}, ellipsoid {}",
-                    ball.num_support(),
-                    ker.num_support(),
-                    ell.num_support()
-                ));
-            }
-            Ok(())
+            laws::reduction_anchors(&st, opts, case % 2 == 0)
         },
     );
 }
 
 /// Sparse and dense physical representations of the same logical stream
-/// must produce tolerance-identical state in every variant.
+/// must produce tolerance-identical state in every variant. The shared
+/// law covers all five variants through [`AnyLearner`]; the inline tail
+/// covers what needs concrete types — an RBF kernel and the anisotropic
+/// ellipsoid metric axes.
 #[test]
 fn sparse_and_dense_trajectories_agree_across_variants() {
     check(
         "conformance-sparse-dense",
         PropConfig { cases: 16, seed: 0x5A55 },
         |rng, _| {
-            let st = gen_stream(rng, 48);
+            let st = laws::gen_stream(rng, 48);
             let opts = TrainOptions::default();
-            let n = st.ys.len();
+            laws::sparse_dense_agree(&st, opts)?;
 
-            let mut a1d = StreamSvm::new(st.dim, opts);
-            let mut a1s = StreamSvm::new(st.dim, opts);
-            let la = opts.with_lookahead(4);
-            let mut a2d = LookaheadSvm::new(st.dim, la);
-            let mut a2s = LookaheadSvm::new(st.dim, la);
             let mut kd = KernelStreamSvm::new(Kernel::Rbf { gamma: 0.3 }, opts);
             let mut ks = KernelStreamSvm::new(Kernel::Rbf { gamma: 0.3 }, opts);
             let mut ed = EllipsoidSvm::new(st.dim, opts);
             let mut es = EllipsoidSvm::new(st.dim, opts);
-            for i in 0..n {
+            for i in 0..st.len() {
                 let (x, v, y) = (&st.dense[i], st.sparse[i].view(), st.ys[i]);
-                a1d.observe(x, y);
-                a1s.observe_view(v, y);
-                a2d.observe(x, y);
-                a2s.observe_view(v, y);
                 if kd.observe(x, y) != ks.observe_view(v, y) {
-                    return Err(format!("kernelized decisions diverged at {i}"));
+                    return Err(format!("RBF kernelized decisions diverged at {i}"));
                 }
                 if ed.observe(x, y) != es.observe_view(v, y) {
                     return Err(format!("ellipsoid decisions diverged at {i}"));
                 }
             }
-            a2d.finish();
-            a2s.finish();
-            let pairs: [(&str, f64, f64); 4] = [
-                ("stream", a1d.radius(), a1s.radius()),
-                ("lookahead", a2d.radius(), a2s.radius()),
-                ("kernelized", kd.radius(), ks.radius()),
-                ("ellipsoid", ed.radius(), es.radius()),
-            ];
-            for (name, rd, rs) in pairs {
+            for (name, rd, rs) in
+                [("rbf", kd.radius(), ks.radius()), ("ellipsoid", ed.radius(), es.radius())]
+            {
                 if (rd - rs).abs() > 1e-6 * rd.max(1.0) {
                     return Err(format!("{name}: R diverged {rd} vs {rs}"));
                 }
             }
-            if a1d.num_support() != a1s.num_support()
-                || a2d.num_support() != a2s.num_support()
-                || kd.num_support() != ks.num_support()
-                || ed.num_support() != es.num_support()
-            {
+            if kd.num_support() != ks.num_support() || ed.num_support() != es.num_support() {
                 return Err("support counts diverged between representations".into());
             }
             for (a, b) in ed.axes().iter().zip(es.axes()) {
@@ -319,22 +103,22 @@ fn sparse_and_dense_trajectories_agree_across_variants() {
 
 /// The same laws through the unified [`AnyLearner`] surface: enum
 /// dispatch must be a zero-cost veneer. Radius monotonicity holds when
-/// driven generically, and the final state — radius, probe scores,
-/// support count — is *bit-identical* to the concrete variant driven
-/// directly with the identical stream.
+/// driven generically (the shared law), and the final state — radius,
+/// probe scores, support count — is *bit-identical* to the concrete
+/// variant driven directly with the identical stream.
 #[test]
 fn any_learner_is_bit_identical_to_direct_variants() {
     check(
         "conformance-any-learner",
         PropConfig { cases: 10, seed: 0xA17E },
         |rng, _| {
-            let st = gen_stream(rng, 40);
+            let st = laws::gen_stream(rng, 40);
             // lookahead > 1 so AnyLearner::new keeps it verbatim and the
             // concrete twin sees the exact same options
             let opts = TrainOptions::default()
                 .with_c(0.5 + rng.uniform() * 4.0)
                 .with_lookahead(2 + rng.below(5));
-            let n = st.ys.len();
+            let n = st.len();
             let probes: Vec<&[f32]> = st.dense.iter().take(8).map(|v| v.as_slice()).collect();
             for variant in Variant::ALL {
                 // concrete twin, constructed exactly as AnyLearner::new does
@@ -405,17 +189,8 @@ fn any_learner_is_bit_identical_to_direct_variants() {
                         )
                     }
                 };
-                // generic drive, radius law checked after every example
-                let mut any = AnyLearner::new(variant, st.dim, opts);
-                check_monotone(variant.name(), n, |i| {
-                    any.observe_view(st.sparse[i].view(), st.ys[i]);
-                    any.radius()
-                })?;
-                let before = any.radius();
-                any.finish();
-                if any.radius() < before - 1e-9 {
-                    return Err(format!("{variant}: finish shrank the radius"));
-                }
+                // generic drive via the shared law (monotone + finish)
+                let any = laws::any_learner_monotone(variant, &st, opts)?;
                 if any.radius().to_bits() != r_direct.to_bits() {
                     return Err(format!(
                         "{variant}: AnyLearner R {} != direct {r_direct}",
@@ -446,22 +221,20 @@ fn any_learner_is_bit_identical_to_direct_variants() {
 }
 
 /// Serialization is part of the conformance surface: every variant must
-/// survive the v4 `.meb` codec — encode, decode, [`MebSketch::to_learner`]
-/// — with its variant tag intact and *bit-identical* radius and probe
-/// scores (what the serve snapshot/restore flow relies on). The
-/// non-linear RBF kernelized learner rides along: its sketch has no
-/// summary ball, only the exact-state section.
+/// survive the v4 `.meb` codec with bit-identical radius and probe
+/// scores (the shared [`laws::meb_round_trip`] law). The non-linear RBF
+/// kernelized learner rides along: its sketch has no summary ball, only
+/// the exact-state section.
 #[test]
 fn meb_round_trip_restores_every_variant_bit_identically() {
     check(
         "conformance-meb-round-trip",
         PropConfig { cases: 10, seed: 0x0DEC },
         |rng, _| {
-            let st = gen_stream(rng, 44);
+            let st = laws::gen_stream(rng, 44);
             let opts = TrainOptions::default()
                 .with_c(0.5 + rng.uniform() * 4.0)
                 .with_lookahead(2 + rng.below(5));
-            let n = st.ys.len();
             let mut learners: Vec<AnyLearner> =
                 Variant::ALL.iter().map(|&v| AnyLearner::new(v, st.dim, opts)).collect();
             learners.push(AnyLearner::with_kernel(
@@ -471,44 +244,13 @@ fn meb_round_trip_restores_every_variant_bit_identically() {
                 Kernel::Rbf { gamma: 0.25 },
             ));
             for m in &mut learners {
-                for i in 0..n {
+                for i in 0..st.len() {
                     m.observe_view(st.sparse[i].view(), st.ys[i]);
                 }
                 m.finish();
             }
             for m in &learners {
-                let v = m.variant();
-                let sk = MebSketch::from_learner(m, "conformance");
-                let bytes = sk.encode();
-                let back =
-                    MebSketch::decode(&bytes).map_err(|e| format!("{v}: decode: {e}"))?;
-                if back.variant != v {
-                    return Err(format!("{v}: round-trip variant tag became {}", back.variant));
-                }
-                let restored =
-                    back.to_learner().map_err(|e| format!("{v}: to_learner: {e}"))?;
-                if restored.variant() != v {
-                    return Err(format!("{v}: restored as {}", restored.variant()));
-                }
-                if restored.examples_seen() != m.examples_seen() {
-                    return Err(format!(
-                        "{v}: seen {} != {}",
-                        restored.examples_seen(),
-                        m.examples_seen()
-                    ));
-                }
-                if restored.radius().to_bits() != m.radius().to_bits() {
-                    return Err(format!(
-                        "{v}: restored R {} != {} (not bit-identical)",
-                        restored.radius(),
-                        m.radius()
-                    ));
-                }
-                for (j, x) in st.dense.iter().take(8).enumerate() {
-                    if restored.score(x).to_bits() != m.score(x).to_bits() {
-                        return Err(format!("{v}: probe {j} score diverged after round-trip"));
-                    }
-                }
+                laws::meb_round_trip(m, &st)?;
             }
             Ok(())
         },
@@ -517,19 +259,23 @@ fn meb_round_trip_restores_every_variant_bit_identically() {
 
 /// The validated entry points reject malformed input identically across
 /// variants — same error classes, no state consumed (the PR-4
-/// robustness contract, now covering the kernelized and ellipsoid
-/// variants too).
+/// robustness contract). The unified-surface half is the shared
+/// [`laws::try_observe_contract`]; the concrete-type half stays inline
+/// because the kernelized learner pins its dimension lazily.
 #[test]
 fn try_observe_rejections_are_uniform_across_variants() {
     use streamsvm::data::FeaturesView;
     use streamsvm::error::Error;
 
     let opts = TrainOptions::default();
+    for v in Variant::ALL {
+        laws::try_observe_contract(v, opts).unwrap();
+    }
+
     let good = [1.0f32, -2.0, 0.5];
     let nan = [1.0f32, f32::NAN, 0.5];
     let short = [1.0f32, 2.0];
 
-    // each closure returns (err on wrong-dim, err on NaN, err on bad label)
     let mut a1 = StreamSvm::new(3, opts);
     let mut a2 = LookaheadSvm::new(3, opts.with_lookahead(4));
     let mut mb = MultiBallSvm::new(3, 2, MergePolicy::NearestBall, opts);
@@ -575,19 +321,29 @@ fn try_observe_rejections_are_uniform_across_variants() {
     assert!(mb.try_observe(FeaturesView::Dense(&good), 1.0).is_ok());
     assert!(ker.try_observe(FeaturesView::Dense(&good), -1.0).is_ok());
     assert!(ell.try_observe(FeaturesView::Dense(&good), 1.0).is_ok());
+}
 
-    // the identical contract holds through the unified surface
-    for v in Variant::ALL {
-        let mut any = AnyLearner::new(v, 3, opts);
-        any.try_observe(FeaturesView::Dense(&good), 1.0).unwrap();
-        let err = any.try_observe(FeaturesView::Dense(&short), 1.0).unwrap_err();
-        assert!(matches!(err, Error::Config(_)), "{v}: wrong-dim gave {err}");
-        let err = any.try_observe(FeaturesView::Dense(&nan), 1.0).unwrap_err();
-        assert!(matches!(err, Error::Data(_)), "{v}: NaN gave {err}");
-        let err = any.try_observe(FeaturesView::Dense(&good), 0.5).unwrap_err();
-        assert!(matches!(err, Error::Data(_)), "{v}: bad label gave {err}");
-        assert_eq!(any.examples_seen(), 1, "{v}: rejections consumed stream positions");
+/// The fuzz-tape decoder that feeds `fuzz --target invariants` is total
+/// and deterministic: any byte string decodes to a runnable stream, and
+/// the laws hold over tape-decoded cases exactly as over generated ones.
+#[test]
+fn invariant_laws_hold_over_fuzz_tapes() {
+    let mut rng = Pcg32::seeded(0x7A9E);
+    for case in 0..24 {
+        let n = rng.below(300);
+        let tape: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let (st, _, _) = laws::stream_case_from_tape(&tape);
+        assert!(st.len() <= 96, "tape case {case} overflowed the row cap");
+        laws::check_tape(&tape).unwrap_or_else(|e| panic!("tape case {case}: {e}"));
+        // determinism: the same tape decodes to the same case
+        let (st2, _, _) = laws::stream_case_from_tape(&tape);
+        assert_eq!(st.dense, st2.dense);
+        assert_eq!(st.ys, st2.ys);
     }
+    // the empty tape is a valid (empty) case, laws vacuously hold
+    let (st, _, _) = laws::stream_case_from_tape(&[]);
+    assert!(st.is_empty());
+    laws::check_tape(&[]).unwrap();
 }
 
 /// End-to-end sanity on a learnable stream: every variant separates the
